@@ -1,0 +1,70 @@
+"""Paper Fig. 3: relation between expiry time and executed steps.
+
+The paper interrupts an ESP32 with a hardware timer; we simulate the
+same protocol: a wall-clock deadline interrupts the anytime session (the
+engine advances in single steps and checks the clock — the tightest
+abort granularity the implementation supports), and we record the
+normalized number of executed steps per configured expiry period.
+
+Claim under test: steps executed grow ~linearly with the time budget,
+justifying steps as the unit of progress for the rest of the evaluation.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import build_pipeline
+from repro.core import AnytimeForest, generate_order
+
+
+def run(n_trees: int = 10, depth: int = 10, dataset: str = "adult",
+        n_periods: int = 8, repeats: int = 3, verbose: bool = True):
+    fa, pp, yor, te, yte = build_pipeline(dataset, n_trees, depth)
+    rows = []
+    for order_name in ("backward_squirrel", "depth", "breadth", "random"):
+        af = AnytimeForest(fa, generate_order(order_name, pp, yor))
+        total = af.order.shape[0]
+        # warm up (compile), then calibrate a full run to set expiry periods
+        sess = af.session(te)
+        while sess.remaining:
+            sess.advance(1)
+        sess = af.session(te)
+        t0 = time.perf_counter()
+        while sess.remaining:
+            sess.advance(1)
+        full_t = time.perf_counter() - t0
+        for frac in np.linspace(0.08, 1.1, n_periods):
+            expiry = full_t * frac
+            done = []
+            for _ in range(repeats):
+                sess = af.session(te)
+                t0 = time.perf_counter()
+                while sess.remaining and (time.perf_counter() - t0) < expiry:
+                    sess.advance(1)
+                done.append(sess.pos / total)
+            rows.append({
+                "order": order_name,
+                "expiry_us": expiry * 1e6,
+                "steps_norm": float(np.mean(done)),
+            })
+            if verbose:
+                r = rows[-1]
+                print(f"fig3,{r['order']},{r['expiry_us']:.0f},{r['steps_norm']:.3f}")
+    # linearity check per order (paper: "largely linear relation")
+    out = {"rows": rows}
+    for name in ("backward_squirrel", "depth"):
+        sub = [(r["expiry_us"], r["steps_norm"]) for r in rows
+               if r["order"] == name and 0.005 < r["steps_norm"] < 0.995]
+        if len(sub) >= 3:
+            x, ynorm = np.array(sub).T
+            r = np.corrcoef(x, ynorm)[0, 1]
+            out[f"linearity_r_{name}"] = float(r)
+            if verbose:
+                print(f"fig3,linearity_r,{name},{r:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Fig. 4: step-order generation runtime & mean accuracy vs #trees.
+
+Claims under test (adult, depth 8, trees 2..N):
+  * Optimal Order generation runtime grows exponentially and becomes
+    infeasible quickly (the paper stops at 8 trees);
+  * Backward Squirrel runtime stays polynomial (orders of magnitude
+    lower) with comparable mean accuracy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_pipeline, timed
+from repro.core import engine, orders
+from repro.core.metrics import mean_accuracy
+from repro.core.anytime import AnytimeForest
+
+
+def run(depth: int = 8, max_trees: int = 8, optimal_limit: int = 6,
+        dataset: str = "adult", verbose: bool = True):
+    rows = []
+    for t in range(2, max_trees + 1, 2):
+        fa, pp, yor, te, yte = build_pipeline(dataset, t, depth, n_order=300)
+        ev = orders.StateEvaluator(pp, yor)
+        bwd, dt_b = timed(orders.backward_squirrel, ev)
+        acc_b = mean_accuracy(AnytimeForest(fa, bwd).accuracy_curve(te, yte))
+        row = {"trees": t, "squirrel_s": dt_b, "squirrel_mean_acc": acc_b}
+        if t <= optimal_limit:
+            ev2 = orders.StateEvaluator(pp, yor)
+            try:
+                opt, dt_o = timed(orders.optimal_order, ev2)
+                acc_o = mean_accuracy(AnytimeForest(fa, opt).accuracy_curve(te, yte))
+                row.update({"optimal_s": dt_o, "optimal_mean_acc": acc_o,
+                            "optimal_states": len(ev2._cache)})
+            except (ValueError, MemoryError) as e:
+                row["optimal_s"] = None
+        rows.append(row)
+        if verbose:
+            o = row.get("optimal_s")
+            print(f"fig4,trees={t},squirrel_s={dt_b:.3f},"
+                  f"optimal_s={o if o is None else f'{o:.3f}'},"
+                  f"acc_sq={acc_b:.4f},acc_opt={row.get('optimal_mean_acc', float('nan')):.4f}")
+    # exponential vs polynomial check
+    opt_times = [(r["trees"], r["optimal_s"]) for r in rows if r.get("optimal_s")]
+    sq_times = [(r["trees"], r["squirrel_s"]) for r in rows]
+    out = {"rows": rows}
+    if len(opt_times) >= 2:
+        growth_opt = opt_times[-1][1] / max(opt_times[0][1], 1e-9)
+        growth_sq = sq_times[-1][1] / max(sq_times[0][1], 1e-9)
+        out["optimal_growth"] = growth_opt
+        out["squirrel_growth"] = growth_sq
+        if verbose:
+            print(f"fig4,growth,optimal={growth_opt:.1f}x,squirrel={growth_sq:.1f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

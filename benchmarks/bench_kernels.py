@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On this CPU container the numbers measure the *reference* path and the
+interpret-mode kernel (functional, not performance-representative); on a
+TPU the same harness times the compiled Mosaic kernels.  Derived column
+reports achieved read throughput of the read-out kernel's gathers.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, repeats=5):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    rows = []
+    for B, T, M, C in [(1024, 10, 512, 10), (4096, 20, 2048, 26)]:
+        idx = jnp.asarray(rng.integers(0, M, size=(B, T)), jnp.int32)
+        probs = jnp.asarray(rng.random((T, M, C)), jnp.float32)
+        t_ref = _time(jax.jit(ref.prob_accum_ref), idx, probs)
+        gather_bytes = B * T * C * 4
+        rows.append(("prob_accum_ref", B * T, t_ref * 1e6,
+                     gather_bytes / t_ref / 1e9))
+        if verbose:
+            print(f"kernel,prob_accum_ref,B{B}xT{T}xM{M}xC{C},"
+                  f"{t_ref*1e6:.1f}us,{gather_bytes/t_ref/1e9:.2f}GB/s")
+    for B, F, M in [(1024, 16, 511), (4096, 54, 2047)]:
+        idx1 = jnp.asarray(rng.integers(0, M, size=B), jnp.int32)
+        X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        feature = jnp.asarray(rng.integers(0, F, size=M), jnp.int32)
+        thr = jnp.asarray(rng.normal(size=M), jnp.float32)
+        left = jnp.asarray(rng.integers(0, M, size=M), jnp.int32)
+        right = jnp.asarray(rng.integers(0, M, size=M), jnp.int32)
+        leaf = jnp.asarray(rng.random(M) < 0.3)
+        t_ref = _time(jax.jit(ref.forest_step_ref), idx1, X, feature, thr,
+                      left, right, leaf)
+        rows.append(("forest_step_ref", B, t_ref * 1e6, B / t_ref / 1e6))
+        if verbose:
+            print(f"kernel,forest_step_ref,B{B}xF{F}xM{M},"
+                  f"{t_ref*1e6:.1f}us,{B/t_ref/1e6:.2f}Msteps/s")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

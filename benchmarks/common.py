@@ -1,0 +1,36 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import AnytimeForest, engine, generate_order
+from repro.forest import make_dataset, split_dataset, train_forest
+
+
+def build_pipeline(dataset: str, n_trees: int, depth: int, seed: int = 0,
+                   n_order: int = 500, n_test: int = 500):
+    """dataset -> (forest arrays, path_probs on S_o, y_o, X_t, y_t)."""
+    X, y = make_dataset(dataset, seed=seed)
+    n_classes = int(y.max()) + 1
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=seed)
+    rf = train_forest(tr, ytr, n_classes, n_trees=n_trees, max_depth=depth,
+                      seed=seed)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx[:n_order])
+    return fa, pp, yor[:n_order], te[:n_test], yte[:n_test]
+
+
+def curve_for(fa, pp, yor, te, yte, order_name: str, seed: int = 0):
+    order = generate_order(order_name, pp, yor, seed=seed)
+    return AnytimeForest(fa, order).accuracy_curve(te, yte)
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt

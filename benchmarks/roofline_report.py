@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md roofline tables from dry-run JSON reports.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report reports/dryrun/*.json
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from collections import OrderedDict
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def load(paths):
+    recs = []
+    for p in paths:
+        for g in glob.glob(p):
+            recs.extend(json.load(open(g)))
+    return recs
+
+
+def render(recs, mesh_filter=None, require_unroll=None):
+    seen = OrderedDict()
+    for r in recs:
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        if require_unroll is not None and r.get("unroll", False) != require_unroll:
+            continue
+        key = (r["arch"], r["shape"], r.get("mesh"))
+        seen[key] = r  # later files override earlier (re-runs)
+    lines = [
+        "| arch | shape | mesh | t_compute | t_memory | t_collective | dominant | MODEL/HLO flops | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh), r in seen.items():
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | {mesh} | - | - | - | - | - | SKIP: {r.get('skipped','')[:60]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | {mesh} | - | - | - | - | - | FAIL |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {fmt_s(t['t_compute_s'])} | "
+            f"{fmt_s(t['t_memory_s'])} | {fmt_s(t['t_collective_s'])} | "
+            f"**{t['dominant']}** | {t['useful_flops_ratio']:.2f} | ok |")
+    return "\n".join(lines)
+
+
+def main():
+    paths = sys.argv[1:] or ["reports/dryrun/*.json"]
+    recs = load(paths)
+    print(render(recs))
+
+
+if __name__ == "__main__":
+    main()

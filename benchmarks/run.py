@@ -1,0 +1,72 @@
+"""Benchmark driver: one module per paper figure + kernel micro-bench.
+
+``python -m benchmarks.run [--fast]`` prints CSV-ish lines per benchmark
+and writes reports/bench_results.json.  EXPERIMENTS.md cites these
+numbers; the roofline/dry-run tables come from repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced grids (CI-sized)")
+    ap.add_argument("--out", default="reports/bench_results.json")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_fig3_time_vs_steps, bench_fig4_order_gen_runtime,
+                            bench_fig5_steps_vs_accuracy, bench_fig6_nma,
+                            bench_kernels)
+
+    results = {}
+    t0 = time.perf_counter()
+
+    print("== Fig.3: expiry time vs executed steps ==", flush=True)
+    results["fig3"] = bench_fig3_time_vs_steps.run(
+        n_trees=6 if args.fast else 10, depth=6 if args.fast else 10,
+        n_periods=5 if args.fast else 8, repeats=2 if args.fast else 3)
+
+    print("== Fig.4: order generation runtime ==", flush=True)
+    results["fig4"] = bench_fig4_order_gen_runtime.run(
+        depth=6 if args.fast else 8,
+        max_trees=6 if args.fast else 8,
+        optimal_limit=4 if args.fast else 6)
+
+    print("== Fig.5: steps vs accuracy ==", flush=True)
+    results["fig5"] = bench_fig5_steps_vs_accuracy.run(
+        n_trees=5 if args.fast else 6, depth=5 if args.fast else 6)
+
+    print("== Fig.6: NMA across datasets ==", flush=True)
+    results["fig6"] = bench_fig6_nma.run(
+        datasets=["magic", "letter", "spambase"] if args.fast else None,
+        small=(4, 4) if args.fast else (5, 4),
+        large=(8, 6) if args.fast else (10, 8),
+        seeds=(0,) if args.fast else (0, 1))
+
+    print("== Kernel micro-benchmarks ==", flush=True)
+    results["kernels"] = bench_kernels.run()
+
+    results["total_s"] = time.perf_counter() - t0
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    def default(o):
+        import numpy as np
+        if isinstance(o, (np.floating, np.integer)):
+            return o.item()
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        return str(o)
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, default=default)
+    print(f"bench,total_s,{results['total_s']:.1f}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

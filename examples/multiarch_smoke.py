@@ -1,0 +1,47 @@
+"""Run one forward + one train step + one decode step for EVERY assigned
+architecture (reduced variants) — the ``--arch`` selector demo.
+
+    PYTHONPATH=src python examples/multiarch_smoke.py [--arch qwen3-14b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, transformer_arch_ids
+from repro.configs.shapes import InputShape
+from repro.models import model as MD
+from repro.models import transformer as T
+from repro.training import optimizer as opt_lib
+from repro.training.train import train_step_fn
+
+
+def run_arch(arch: str):
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = MD.init(cfg, key)
+    batch = MD.make_batch(cfg, InputShape("smoke", 32, 2, "train"), key)
+
+    step = jax.jit(train_step_fn(cfg, opt_lib.AdamWConfig(total_steps=10)))
+    opt = opt_lib.init_state(params)
+    params2, opt, metrics = step(params, opt, batch)
+
+    pre = MD.make_batch(cfg, InputShape("p", 16, 2, "prefill"), key)
+    _, _, cache = T.forward(cfg, params, pre, return_cache=True, cache_len=20)
+    dl, _ = T.decode_step(cfg, params, cache, jnp.zeros((2, 1), jnp.int32))
+
+    print(f"{arch:22s} [{cfg.family:6s}] loss={float(metrics['loss']):7.4f} "
+          f"decode_logits={tuple(dl.shape)} "
+          f"params={MD.param_count(MD.build_param_specs(cfg)):,}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    args = ap.parse_args()
+    for arch in ([args.arch] if args.arch else transformer_arch_ids()):
+        run_arch(arch)
+
+
+if __name__ == "__main__":
+    main()

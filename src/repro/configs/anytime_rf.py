@@ -1,0 +1,28 @@
+"""The paper's own model family: anytime random forests.
+
+Default experiment grid mirroring Sec. VI (trees x depth combinations,
+dataset list, seeds); consumed by benchmarks/ and examples/.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestConfig:
+    n_trees: int = 7
+    max_depth: int = 7
+    datasets: tuple = (
+        "adult", "covertype", "letter", "magic", "mnist",
+        "satlog", "sensorless-drive", "spambase", "wearable-body-postures",
+    )
+    seeds: tuple = (0, 1, 2, 3, 4)
+    # small grid (with Optimal Order) and large grid (without), Sec. VI-C
+    small_grid: tuple = tuple((t, d) for t in (4, 5, 6, 7) for d in (4, 5, 6, 7))
+    large_grid: tuple = tuple((t, d) for t in (5, 10, 20) for d in (2, 5, 10, 20))
+
+
+CONFIG = ForestConfig()
+REDUCED = ForestConfig(
+    n_trees=3, max_depth=3,
+    datasets=("magic", "letter"), seeds=(0,),
+    small_grid=((3, 3),), large_grid=((5, 4),),
+)

@@ -1,0 +1,52 @@
+"""Gemma 2 27B [arXiv:2408.00118].
+
+46 layers, d_model 4608, 32 heads (GQA kv=16), head_dim 128, d_ff 36864,
+vocab 256000; local/global alternation + softcaps; the 27B variant scales
+attention by (d_model/num_heads)^-0.5 = 144^-0.5 instead of head_dim^-0.5.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=36_864,
+    vocab_size=256_000,
+    act="gelu",
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    sliding_window=4096,
+    local_global=True,
+    post_attn_norm=True,
+    scale_embeds=True,
+    attn_scale_override=(4608 / 32) ** -0.5,
+    tie_embeddings=True,
+    sharding_profile="fsdp_tp",
+    citation="arXiv:2408.00118",
+)
+
+REDUCED = ModelConfig(
+    name="gemma2-27b-reduced",
+    family="dense",
+    num_layers=2,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=32,
+    d_ff=512,
+    vocab_size=512,
+    act="gelu",
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    sliding_window=16,
+    local_global=True,
+    post_attn_norm=True,
+    scale_embeds=True,
+    attn_scale_override=(256 / 8) ** -0.5,
+    tie_embeddings=True,
+    citation="arXiv:2408.00118",
+)

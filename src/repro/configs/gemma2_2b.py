@@ -1,0 +1,51 @@
+"""Gemma 2 2B [arXiv:2408.00118].
+
+26 layers, d_model 2304, 8 heads (GQA kv=4), head_dim 256, d_ff 9216,
+vocab 256000; alternating local (sliding window 4096) / global layers,
+attention- and final-logit softcaps, GeGLU, extra post-norms.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256_000,
+    act="gelu",
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    sliding_window=4096,
+    local_global=True,
+    post_attn_norm=True,
+    scale_embeds=True,
+    tie_embeddings=True,
+    sharding_profile="tp",
+    shard_kv_heads=False,  # 4 kv heads < model axis: replicate
+    citation="arXiv:2408.00118",
+)
+
+REDUCED = ModelConfig(
+    name="gemma2-2b-reduced",
+    family="dense",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    act="gelu",
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    sliding_window=16,
+    local_global=True,
+    post_attn_norm=True,
+    scale_embeds=True,
+    tie_embeddings=True,
+    citation="arXiv:2408.00118",
+)

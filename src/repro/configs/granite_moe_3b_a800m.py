@@ -1,0 +1,47 @@
+"""Granite-3.0 MoE 3B-A800M [hf:ibm-granite/granite-3.0-1b-a400m-base family].
+
+32 layers, d_model 1536, 24 heads (GQA kv=8), vocab 49155; MoE with 40
+experts, top-8, per-expert d_ff 512.  (The assignment lists "MoE 40e
+top-8"; the bracketed note says 32 experts — we follow the explicit
+config field, 40, and record the discrepancy in DESIGN.md.)
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49_155,
+    num_experts=40,
+    top_k=8,
+    moe_d_ff=512,
+    capacity_factor=1.25,
+    tie_embeddings=True,
+    head_pad_to=32,    # 16-way TP divisibility (§Perf iteration 2)
+    expert_pad_to=48,  # expert-parallel divisibility (§Perf iteration 3)
+    sharding_profile="tp",
+    shard_kv_heads=False,
+    citation="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)
+
+REDUCED = ModelConfig(
+    name="granite-moe-reduced",
+    family="moe",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=64,
+    vocab_size=512,
+    num_experts=4,
+    top_k=2,
+    moe_d_ff=64,
+    tie_embeddings=True,
+    citation="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

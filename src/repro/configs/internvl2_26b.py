@@ -1,0 +1,44 @@
+"""InternVL2-26B [arXiv:2404.16821] — language backbone (InternLM2-20B-ish)
+consuming stub InternViT-6B patch embeddings.
+
+48 layers, d_model 6144, 48 heads (GQA kv=8), head_dim 128, d_ff 16384,
+vocab 92553.  The ViT + MLP projector frontend is a STUB per the task
+spec: ``input_specs()`` provides patch embeddings [B, 1024, 3200]
+(InternViT-6B hidden width); ``vis_proj`` maps them into the LM stream.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16_384,
+    vocab_size=92_553,
+    rope_theta=1_000_000.0,
+    num_patches=1024,
+    vision_embed_dim=3200,
+    tie_embeddings=False,
+    sharding_profile="fsdp_tp",
+    shard_kv_heads=False,  # 8 kv heads < model axis 16: replicate
+    citation="arXiv:2404.16821",
+)
+
+REDUCED = ModelConfig(
+    name="internvl2-26b-reduced",
+    family="vlm",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    num_patches=8,
+    vision_embed_dim=64,
+    tie_embeddings=False,
+    citation="arXiv:2404.16821",
+)

@@ -1,0 +1,45 @@
+"""Mamba2-130M [arXiv:2405.21060] — SSD (state-space duality).
+
+24 layers, d_model 768 (attention-free), vocab 50280, ssm_state N=128,
+d_inner = 2*768 = 1536, head_dim 64 -> 24 SSD heads.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=1,           # unused (attention-free)
+    d_ff=0,
+    vocab_size=50_280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=256,
+    tie_embeddings=True,
+    sharding_profile="tp",
+    citation="arXiv:2405.21060",
+)
+
+REDUCED = ModelConfig(
+    name="mamba2-130m-reduced",
+    family="ssm",
+    num_layers=2,
+    d_model=128,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=1,
+    d_ff=0,
+    vocab_size=512,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=32,      # 8 heads
+    ssm_conv_width=4,
+    ssm_chunk=32,
+    tie_embeddings=True,
+    citation="arXiv:2405.21060",
+)

@@ -1,0 +1,38 @@
+"""OLMo-1B [arXiv:2402.00838].
+
+16 layers, d_model 2048, 16 heads (kv=16), d_ff 8192, vocab 50304;
+non-parametric LayerNorm (no scale/bias) throughout, tied embeddings.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=50_304,
+    norm_type="layernorm_nonparam",
+    act="silu",
+    tie_embeddings=True,
+    sharding_profile="tp",
+    citation="arXiv:2402.00838",
+)
+
+REDUCED = ModelConfig(
+    name="olmo-1b-reduced",
+    family="dense",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    norm_type="layernorm_nonparam",
+    tie_embeddings=True,
+    citation="arXiv:2402.00838",
+)

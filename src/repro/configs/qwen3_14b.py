@@ -1,0 +1,40 @@
+"""Qwen3-14B [hf:Qwen/Qwen3-8B family scaled per assignment].
+
+40 layers, d_model 5120, 40 heads (GQA kv=8), head_dim 128, d_ff 17408,
+vocab 151936; RMSNorm on q/k per head (qk_norm), untied embeddings.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=17_408,
+    vocab_size=151_936,
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    tie_embeddings=False,
+    head_pad_to=48,  # 16-way TP divisibility (SPerf iteration 2)
+    sharding_profile="fsdp_tp",
+    shard_kv_heads=False,  # 8 kv heads < model axis 16: replicate
+    citation="hf:Qwen/Qwen3-8B",
+)
+
+REDUCED = ModelConfig(
+    name="qwen3-14b-reduced",
+    family="dense",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    qk_norm=True,
+    tie_embeddings=False,
+    citation="hf:Qwen/Qwen3-8B",
+)

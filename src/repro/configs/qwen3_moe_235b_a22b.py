@@ -1,0 +1,49 @@
+"""Qwen3-MoE 235B-A22B [hf:Qwen/Qwen3-30B-A3B family scaled per assignment].
+
+94 layers, d_model 4096, 64 heads (GQA kv=4), head_dim 128, vocab 151936;
+MoE with 128 experts, top-8, per-expert d_ff 1536; qk_norm.  The largest
+assigned config (~235B total, ~22B active) — requires the fsdp_tp
+sharding profile to fit v5e HBM.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151_936,
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    num_experts=128,
+    top_k=8,
+    moe_d_ff=1536,
+    capacity_factor=1.25,
+    tie_embeddings=False,
+    moe_constrain_dispatch=False,  # regresses under fsdp_tp (SPerf it.4)
+    sharding_profile="fsdp_tp",
+    shard_kv_heads=False,  # 4 kv heads: replicate
+    citation="hf:Qwen/Qwen3-30B-A3B",
+)
+
+REDUCED = ModelConfig(
+    name="qwen3-moe-reduced",
+    family="moe",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=64,
+    vocab_size=512,
+    qk_norm=True,
+    num_experts=4,
+    top_k=2,
+    moe_d_ff=64,
+    tie_embeddings=False,
+    citation="hf:Qwen/Qwen3-30B-A3B",
+)

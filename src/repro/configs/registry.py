@@ -1,0 +1,53 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module under src/repro/configs/ defines ``CONFIG`` (full assigned
+hyperparameters, citation in ``citation``) and ``REDUCED`` (the smoke-
+test variant: <=2 layers, d_model<=512, <=4 experts, runnable on CPU).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "gemma2_2b",
+    "whisper_medium",
+    "internvl2_26b",
+    "qwen3_14b",
+    "mamba2_130m",
+    "olmo_1b",
+    "zamba2_1p2b",
+    "granite_moe_3b_a800m",
+    "qwen3_moe_235b_a22b",
+    "gemma2_27b",
+    "anytime_rf",  # the paper's own model family (random forests)
+)
+
+# canonical external ids (dashes) -> module names
+_ALIASES = {
+    "gemma2-2b": "gemma2_2b",
+    "whisper-medium": "whisper_medium",
+    "internvl2-26b": "internvl2_26b",
+    "qwen3-14b": "qwen3_14b",
+    "mamba2-130m": "mamba2_130m",
+    "olmo-1b": "olmo_1b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "gemma2-27b": "gemma2_27b",
+    "anytime-rf": "anytime_rf",
+}
+
+
+def normalize(arch: str) -> str:
+    return _ALIASES.get(arch, arch.replace("-", "_").replace(".", "p"))
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize(arch)}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def transformer_arch_ids() -> list[str]:
+    return [a for a in ARCH_IDS if a != "anytime_rf"]

@@ -1,0 +1,49 @@
+"""Zamba2-1.2B [arXiv:2411.15242] — Mamba2 backbone + shared attention.
+
+38 mamba2 layers, d_model 2048, ssm_state 64; one SHARED transformer
+block (32 heads, kv=32, d_ff 8192) applied after every 6 mamba2 layers
+through per-group linear adapters (6 groups + 2 tail mamba layers).
+vocab 32000.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32_000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,      # d_inner 4096 -> 64 heads
+    ssm_conv_width=4,
+    ssm_chunk=256,
+    hybrid_period=6,
+    tie_embeddings=True,
+    sharding_profile="tp",
+    citation="arXiv:2411.15242",
+)
+
+REDUCED = ModelConfig(
+    name="zamba2-1.2b-reduced",
+    family="hybrid",
+    num_layers=5,         # 2 groups of 2 + 1 tail
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=32,
+    ssm_conv_width=4,
+    ssm_chunk=32,
+    hybrid_period=2,
+    tie_embeddings=True,
+    citation="arXiv:2411.15242",
+)

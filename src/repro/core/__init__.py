@@ -1,0 +1,33 @@
+"""Core contribution: anytime random-forest inference with optimized
+step orders ("Jump Like A Squirrel", Biebert et al.).
+
+Public API:
+  AnytimeForest / AnytimeSession  — inference with any step order
+  generate_order / ORDER_NAMES    — every order the paper evaluates
+  StateEvaluator                  — state-accuracy machinery
+  engine                          — jnp reference execution engine
+"""
+from repro.core.anytime import (
+    AnytimeForest,
+    AnytimeSession,
+    AnytimeProgram,
+    ORDER_NAMES,
+    generate_order,
+)
+from repro.core.orders import StateEvaluator, validate_order
+from repro.core import engine, metrics, orders, pruning, qwyc
+
+__all__ = [
+    "AnytimeForest",
+    "AnytimeSession",
+    "AnytimeProgram",
+    "ORDER_NAMES",
+    "generate_order",
+    "StateEvaluator",
+    "validate_order",
+    "engine",
+    "metrics",
+    "orders",
+    "pruning",
+    "qwyc",
+]

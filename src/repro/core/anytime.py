@@ -1,0 +1,193 @@
+"""High-level anytime-inference API.
+
+Two layers:
+
+* :class:`AnytimeForest` — owns a trained forest + a generated step
+  order; one-call evaluation (accuracy curve, NMA) and an interruptible
+  session for production serving.
+
+* :class:`AnytimeProgram` — the generic abstraction the framework uses
+  to apply the paper's scheduling idea beyond forests (e.g. early-exit
+  transformer depth scheduling in ``repro.serving.anytime_depth``): any
+  computation decomposable into discrete *units* with per-state quality
+  estimates can be ordered by the same Optimal/Squirrel machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, orders, pruning, qwyc
+from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
+from repro.forest.forest import ForestArrays
+
+
+class AnytimeProgram(Protocol):
+    """A computation decomposable into schedulable units.
+
+    n_units: number of independent unit chains (trees / ensemble members)
+    unit_steps: steps per chain (tree depth / layers per member)
+    quality_table: [B, n_units, unit_steps+1, C] per-state contribution
+        vectors on a calibration set — exactly the shape
+        engine.compute_path_probs produces for forests, and what the
+        early-exit logit-lens readouts produce for transformers.
+    """
+
+    @property
+    def n_units(self) -> int: ...
+
+    @property
+    def unit_steps(self) -> int: ...
+
+    def quality_table(self) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (contribution vectors [B, U, S+1, C], labels [B])."""
+        ...
+
+
+ORDER_NAMES = (
+    "optimal", "unoptimal", "forward_squirrel", "backward_squirrel",
+    "random",
+    "depth", "breadth",
+    "prune_depth_IE", "prune_breadth_IE",
+    "prune_depth_EA", "prune_breadth_EA",
+    "prune_depth_RE", "prune_breadth_RE",
+    "prune_depth_D", "prune_breadth_D",
+    "qwyc_depth", "qwyc_breadth",
+)
+
+
+def generate_order(
+    name: str,
+    path_probs: np.ndarray,
+    y: np.ndarray,
+    seed: int = 0,
+    state_limit: int = 2_000_000,
+) -> np.ndarray:
+    """Dispatch every step-order generator the paper evaluates by name.
+
+    path_probs/y are computed on the ordering set S_o.
+    """
+    B, T, d1, C = path_probs.shape
+    d = d1 - 1
+    ev = orders.StateEvaluator(path_probs, y)
+    if name == "optimal":
+        return orders.optimal_order(ev, state_limit=state_limit)
+    if name == "unoptimal":
+        return orders.unoptimal_order(ev, state_limit=state_limit)
+    if name == "forward_squirrel":
+        return orders.forward_squirrel(ev)
+    if name == "backward_squirrel":
+        return orders.backward_squirrel(ev)
+    if name == "random":
+        return orders.random_order(T, d, seed=seed)
+    if name == "depth":
+        return orders.depth_order(T, d)
+    if name == "breadth":
+        return orders.breadth_order(T, d)
+    if name.startswith("prune_"):
+        _, variant, metric = name.split("_")
+        seq = pruning.PRUNE_SEQUENCES[metric](path_probs, y)
+        fn = orders.depth_order if variant == "depth" else orders.breadth_order
+        return fn(T, d, seq)
+    if name.startswith("qwyc_"):
+        variant = name.split("_")[1]
+        seq, _ = qwyc.qwyc_seq(path_probs, y)
+        fn = orders.depth_order if variant == "depth" else orders.breadth_order
+        return fn(T, d, seq)
+    raise ValueError(f"unknown order: {name!r}")
+
+
+@dataclasses.dataclass
+class AnytimeForest:
+    """A forest + step order, ready for anytime inference."""
+
+    forest: ForestArrays
+    order: np.ndarray
+    device: engine.DeviceForest = dataclasses.field(init=False)
+
+    def __post_init__(self):
+        assert orders.validate_order(self.order, self.forest.n_trees, self.forest.max_depth)
+        self.device = engine.to_device(self.forest)
+
+    @classmethod
+    def build(
+        cls,
+        forest: ForestArrays,
+        order_name: str,
+        X_order: np.ndarray,
+        y_order: np.ndarray,
+        seed: int = 0,
+    ) -> "AnytimeForest":
+        pp = engine.path_probs_np(forest, X_order)
+        return cls(forest=forest, order=generate_order(order_name, pp, y_order, seed=seed))
+
+    def accuracy_curve(self, X: np.ndarray, y: np.ndarray) -> np.ndarray:
+        """Accuracy after every prefix of the step order on (X, y)."""
+        _, curve = engine.run_order(
+            self.device, jnp.asarray(X), jnp.asarray(self.order), jnp.asarray(y)
+        )
+        return np.asarray(curve)
+
+    def evaluate(self, X: np.ndarray, y: np.ndarray) -> dict[str, float]:
+        curve = self.accuracy_curve(X, y)
+        return {
+            "mean_accuracy": mean_accuracy(curve),
+            "nma": normalized_mean_accuracy(curve),
+            "final_accuracy": float(curve[-1]),
+            "initial_accuracy": float(curve[0]),
+        }
+
+    def session(self, X: np.ndarray) -> "AnytimeSession":
+        return AnytimeSession(self, jnp.asarray(X))
+
+
+class AnytimeSession:
+    """Interruptible inference: advance in chunks, read a prediction at
+    any point — the deployment-facing realization of Sec. V."""
+
+    def __init__(self, af: AnytimeForest, X: jax.Array):
+        self.af = af
+        self.X = X
+        self.idx = engine.init_state(af.device, X.shape[0])
+        self.pos = 0
+        self._order_dev = jnp.asarray(af.order)
+
+        def _advance(idx, start, k):
+            chunk = jax.lax.dynamic_slice_in_dim(self._order_dev, start, k)
+
+            def body(i, tree_id):
+                return engine.tree_step(af.device, self.X, i, tree_id), None
+
+            idx, _ = jax.lax.scan(body, idx, chunk)
+            return idx
+
+        # jit with static chunk length: one compile per distinct k, then
+        # every deadline-loop step is a cached dispatch (the serving loop
+        # calls this thousands of times).
+        self._advance = jax.jit(_advance, static_argnums=(2,))
+
+    @property
+    def total_steps(self) -> int:
+        return int(self.af.order.shape[0])
+
+    @property
+    def remaining(self) -> int:
+        return self.total_steps - self.pos
+
+    def advance(self, k: int) -> int:
+        """Execute up to k more steps; returns steps actually taken."""
+        k = min(k, self.remaining)
+        if k > 0:
+            self.idx = self._advance(self.idx, self.pos, k)
+            self.pos += k
+        return k
+
+    def predict_proba(self) -> np.ndarray:
+        return np.asarray(engine.predict_from_state(self.af.device, self.idx))
+
+    def predict(self) -> np.ndarray:
+        return self.predict_proba().argmax(axis=1)

@@ -1,0 +1,176 @@
+"""Anytime random-forest inference engine (JAX).
+
+Implements Sec. V of the paper: the forest state is an *index array*
+(current node id per tree per sample); inference is a tight loop over a
+precomputed *step order* (array of tree ids), advancing one tree per
+step; a prediction is available after ANY prefix of steps by summing the
+per-node probability vectors addressed by the index array.
+
+Two execution paths:
+  * ``tree_step`` / ``run_order``     — pure jnp (reference, CPU-friendly)
+  * ``repro.kernels.ops``             — Pallas TPU kernels for the two hot
+    spots (batched step, probability accumulation); validated against
+    this module in tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.forest.forest import ForestArrays
+
+
+class DeviceForest(NamedTuple):
+    """jnp mirror of :class:`ForestArrays` (see that class for layout)."""
+
+    feature: jax.Array    # int32   [T, M]
+    threshold: jax.Array  # float32 [T, M]
+    left: jax.Array       # int32   [T, M]
+    right: jax.Array      # int32   [T, M]
+    is_leaf: jax.Array    # bool    [T, M]
+    probs: jax.Array      # float32 [T, M, C]
+
+    @property
+    def n_trees(self) -> int:
+        return self.feature.shape[0]
+
+    @property
+    def n_nodes(self) -> int:
+        return self.feature.shape[1]
+
+    @property
+    def n_classes(self) -> int:
+        return self.probs.shape[2]
+
+
+def to_device(forest: ForestArrays) -> DeviceForest:
+    return DeviceForest(
+        feature=jnp.asarray(forest.feature),
+        threshold=jnp.asarray(forest.threshold),
+        left=jnp.asarray(forest.left),
+        right=jnp.asarray(forest.right),
+        is_leaf=jnp.asarray(forest.is_leaf),
+        probs=jnp.asarray(forest.probs),
+    )
+
+
+def init_state(forest: DeviceForest, batch: int) -> jax.Array:
+    """Index array: every tree starts at its root (node 0)."""
+    return jnp.zeros((batch, forest.n_trees), dtype=jnp.int32)
+
+
+def tree_step(forest: DeviceForest, X: jax.Array, idx: jax.Array, tree_id: jax.Array) -> jax.Array:
+    """Advance ``tree_id`` by one step for every sample.
+
+    idx: int32 [B, T] index array; X: [B, F]. Stepping a tree whose
+    sample already sits in a leaf is a no-op (leaf self-loop).
+    """
+    node = idx[:, tree_id]                                  # [B]
+    f = forest.feature[tree_id, node]                       # [B]
+    thr = forest.threshold[tree_id, node]                   # [B]
+    fv = jnp.take_along_axis(X, f[:, None].astype(jnp.int32), axis=1)[:, 0]
+    go_left = fv <= thr
+    nxt = jnp.where(go_left, forest.left[tree_id, node], forest.right[tree_id, node])
+    nxt = jnp.where(forest.is_leaf[tree_id, node], node, nxt)
+    return idx.at[:, tree_id].set(nxt)
+
+
+def predict_from_state(forest: DeviceForest, idx: jax.Array) -> jax.Array:
+    """Anytime read-out: sum per-node probability vectors over trees.
+
+    idx: [B, T] -> probs [B, C] (unnormalized sum, argmax-equivalent)."""
+    # gather probs[t, idx[b, t]] for all b, t
+    t_ids = jnp.arange(forest.n_trees)[None, :]            # [1, T]
+    vecs = forest.probs[t_ids, idx]                         # [B, T, C]
+    return vecs.sum(axis=1)
+
+
+def run_order(
+    forest: DeviceForest,
+    X: jax.Array,
+    order: jax.Array,
+    y: Optional[jax.Array] = None,
+) -> tuple[jax.Array, Optional[jax.Array]]:
+    """Execute a full step order, returning the final index array and —
+    if labels are given — the per-step accuracy curve (length steps+1,
+    position 0 = prediction from the all-roots state).
+
+    This is the *evaluation* entry point; production serving uses
+    :func:`repro.core.anytime.AnytimeForestSession` which can stop after
+    any prefix.
+    """
+    idx0 = init_state(forest, X.shape[0])
+
+    def acc(idx):
+        pred = jnp.argmax(predict_from_state(forest, idx), axis=1)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+    def body(idx, tree_id):
+        idx = tree_step(forest, X, idx, tree_id)
+        out = acc(idx) if y is not None else jnp.zeros(())
+        return idx, out
+
+    idx_final, accs = jax.lax.scan(body, idx0, order)
+    if y is None:
+        return idx_final, None
+    curve = jnp.concatenate([acc(idx0)[None], accs])
+    return idx_final, curve
+
+
+# ---------------------------------------------------------------------------
+# Path precomputation — the order generators (optimal / squirrel) never
+# re-traverse the forest: for the ordering set S_o they precompute, per
+# sample and tree, the node visited at every depth, then evaluate any
+# state (steps-per-tree vector) with pure gathers.
+# ---------------------------------------------------------------------------
+
+def compute_paths(forest: DeviceForest, X: jax.Array, max_depth: int) -> jax.Array:
+    """[B, T, d+1] node id on each sample's path per tree, clamped at leaves."""
+    B = X.shape[0]
+    T = forest.n_trees
+    idx = jnp.zeros((B, T), dtype=jnp.int32)
+
+    # advance ALL trees one level (vectorized over T)
+    def step_all(idx):
+        t_ids = jnp.arange(T)[None, :]
+        f = forest.feature[t_ids, idx]                     # [B, T]
+        thr = forest.threshold[t_ids, idx]
+        fv = jnp.take_along_axis(X, f.astype(jnp.int32), axis=1)  # [B, T]
+        go_left = fv <= thr
+        nxt = jnp.where(go_left, forest.left[t_ids, idx], forest.right[t_ids, idx])
+        return jnp.where(forest.is_leaf[t_ids, idx], idx, nxt)
+
+    def scan_body(idx, _):
+        nxt = step_all(idx)
+        return nxt, nxt
+
+    _, trail = jax.lax.scan(scan_body, idx, None, length=max_depth)
+    # trail: [d, B, T]
+    paths = jnp.concatenate([idx[None], trail], axis=0)    # [d+1, B, T]
+    return jnp.transpose(paths, (1, 2, 0))                  # [B, T, d+1]
+
+
+def compute_path_probs(forest: DeviceForest, paths: jax.Array) -> jax.Array:
+    """[B, T, d+1, C] probability vector along each path."""
+    t_ids = jnp.arange(forest.n_trees)[None, :, None]
+    return forest.probs[t_ids, paths]
+
+
+def path_probs_np(forest: ForestArrays, X: np.ndarray) -> np.ndarray:
+    """Numpy convenience used by the (offline) order generators."""
+    dev = to_device(forest)
+    paths = compute_paths(dev, jnp.asarray(X), forest.max_depth)
+    return np.asarray(compute_path_probs(dev, paths))
+
+
+def state_accuracy_np(path_probs: np.ndarray, y: np.ndarray, state: np.ndarray) -> float:
+    """Accuracy of one forest state (steps-per-tree vector) on S_o.
+
+    path_probs: [B, T, d+1, C]; state: int [T]."""
+    B, T, _, _ = path_probs.shape
+    vecs = path_probs[np.arange(B)[:, None], np.arange(T)[None, :], state[None, :]]  # [B, T, C]
+    pred = vecs.sum(axis=1).argmax(axis=1)
+    return float(np.mean(pred == y))

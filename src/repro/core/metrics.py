@@ -1,0 +1,28 @@
+"""Anytime-quality metrics (Sec. VI of the paper)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def mean_accuracy(curve: np.ndarray) -> float:
+    """Mean accuracy over all states along an execution, including the
+    initial (all-roots) state — the quantity every order generator
+    maximizes under the paper's uniform-abort-time assumption."""
+    return float(np.mean(curve))
+
+
+def normalized_mean_accuracy(curve: np.ndarray) -> float:
+    """NMA: mean accuracy normalized by the final accuracy ("achieving
+    the final accuracy at every step" scores 1.0).  The paper normalizes
+    the accuracy *sum* by (#steps x final accuracy), which is exactly
+    mean/final; higher is better and configurations of different sizes
+    become comparable."""
+    final = float(curve[-1])
+    if final <= 0:
+        return 0.0
+    return float(np.mean(curve)) / final
+
+
+def auc_steps(curve: np.ndarray) -> float:
+    """Area under the accuracy-vs-steps curve (trapezoid), in steps."""
+    return float(np.trapezoid(curve)) if hasattr(np, "trapezoid") else float(np.trapz(curve))

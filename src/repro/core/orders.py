@@ -1,0 +1,223 @@
+"""Step-order generators (Sec. IV of the paper).
+
+A *step order* is an int array of length T*d over tree ids; executing it
+advances the named tree one level per step.  Every generator here is an
+OFFLINE procedure (run once before inference, on the ordering set S_o)
+and returns a plain numpy array.
+
+Naming follows the paper:
+  depth_order / breadth_order       — intuitive orders (Sec. IV-A)
+  optimal_order                     — Dijkstra over the state graph (IV-B)
+  forward_squirrel / backward_squirrel — greedy heuristics (IV-C)
+  unoptimal_order, random_order     — naive baselines (Sec. VI)
+Tree *sequences* for depth/breadth come from repro.core.pruning /
+repro.core.qwyc.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+def validate_order(order: np.ndarray, n_trees: int, depth: int) -> bool:
+    """An order is valid iff each tree takes exactly ``depth`` steps."""
+    counts = np.bincount(order, minlength=n_trees)
+    return order.shape[0] == n_trees * depth and bool(np.all(counts == depth))
+
+
+def depth_order(n_trees: int, depth: int, tree_seq: Optional[Sequence[int]] = None) -> np.ndarray:
+    """Finish each tree before starting the next (the standard execution)."""
+    seq = np.arange(n_trees) if tree_seq is None else np.asarray(tree_seq)
+    return np.repeat(seq, depth).astype(np.int32)
+
+
+def breadth_order(n_trees: int, depth: int, tree_seq: Optional[Sequence[int]] = None) -> np.ndarray:
+    """Advance every tree one level before going deeper anywhere."""
+    seq = np.arange(n_trees) if tree_seq is None else np.asarray(tree_seq)
+    return np.tile(seq, depth).astype(np.int32)
+
+
+def random_order(n_trees: int, depth: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    order = np.repeat(np.arange(n_trees), depth)
+    rng.shuffle(order)
+    return order.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# State-graph machinery shared by Optimal / Unoptimal / Squirrel.
+#
+# A state is the vector s in {0..d}^T of steps taken per tree.  Its
+# accuracy on S_o is computable from precomputed per-depth path
+# probability vectors (engine.compute_path_probs): gather + sum + argmax.
+# ---------------------------------------------------------------------------
+
+class StateEvaluator:
+    """Incremental state-accuracy evaluation on S_o.
+
+    Holds path_probs [B, T, d+1, C] and exposes:
+      * accuracy(state)            — exact accuracy of a state
+      * candidate_accuracies(S, s, direction) — vectorized accuracy of all
+        T neighbor states reached by one step forward/backward, given the
+        running class-score matrix S = sum_t pp[:, t, s_t].
+    The incremental form is what gives the Squirrel orders their
+    O(d * T^2) state-evaluation count (footnote 1 of the paper).
+    """
+
+    def __init__(self, path_probs: np.ndarray, y: np.ndarray):
+        self.pp = np.ascontiguousarray(path_probs, dtype=np.float32)  # [B, T, d+1, C]
+        self.y = np.asarray(y)
+        self.B, self.T, d1, self.C = self.pp.shape
+        self.depth = d1 - 1
+        self._cache: dict[tuple, float] = {}
+
+    def score_matrix(self, state: np.ndarray) -> np.ndarray:
+        """S[b, c] = sum_t pp[b, t, s_t, c]."""
+        vec = self.pp[np.arange(self.B)[:, None], np.arange(self.T)[None, :], state[None, :]]
+        return vec.sum(axis=1)
+
+    def accuracy_from_scores(self, S: np.ndarray) -> float:
+        return float(np.mean(S.argmax(axis=1) == self.y))
+
+    def accuracy(self, state: np.ndarray) -> float:
+        key = tuple(int(v) for v in state)
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        a = self.accuracy_from_scores(self.score_matrix(state))
+        self._cache[key] = a
+        return a
+
+    def candidate_accuracies(self, S: np.ndarray, state: np.ndarray, forward: bool) -> np.ndarray:
+        """Accuracy of every one-step neighbor; invalid moves -> -inf.
+
+        forward=True  : neighbor s_t -> s_t + 1 (Forward Squirrel)
+        forward=False : neighbor s_t -> s_t - 1 (Backward Squirrel, i.e.
+                        accuracy of the *predecessor* state)."""
+        delta = 1 if forward else -1
+        tgt = state + delta
+        valid = (tgt >= 0) & (tgt <= self.depth)
+        tgt_c = np.clip(tgt, 0, self.depth)
+        b_ix = np.arange(self.B)[:, None]
+        t_ix = np.arange(self.T)[None, :]
+        pp_new = self.pp[b_ix, t_ix, tgt_c[None, :]]          # [B, T, C]
+        pp_old = self.pp[b_ix, t_ix, state[None, :]]          # [B, T, C]
+        cand = S[:, None, :] + (pp_new - pp_old)               # [B, T, C]
+        preds = cand.argmax(axis=2)                            # [B, T]
+        accs = (preds == self.y[:, None]).mean(axis=0)         # [T]
+        return np.where(valid, accs, -np.inf)
+
+    def apply_step(self, S: np.ndarray, state: np.ndarray, tree: int, forward: bool) -> None:
+        """In-place: move tree's depth one step and update S."""
+        delta = 1 if forward else -1
+        b_ix = np.arange(self.B)
+        S += self.pp[b_ix, tree, state[tree] + delta] - self.pp[b_ix, tree, state[tree]]
+        state[tree] += delta
+
+
+# ---------------------------------------------------------------------------
+# Optimal Order (Sec. IV-B): Dijkstra on the (d+1)^T state DAG.
+# ---------------------------------------------------------------------------
+
+def optimal_order(
+    evaluator: StateEvaluator,
+    maximize: bool = True,
+    state_limit: int = 2_000_000,
+) -> np.ndarray:
+    """Dijkstra over the state graph; edge weight into state v is the
+    inaccuracy of v (inverted for the Unoptimal Order).
+
+    The graph is a DAG (levels = total steps taken) but we follow the
+    paper and run Dijkstra; worst case O((d+1)^T log (d+1)^T).  Refuses
+    to run if the state count exceeds ``state_limit``.
+    """
+    T, d = evaluator.T, evaluator.depth
+    n_states = (d + 1) ** T
+    if n_states > state_limit:
+        raise ValueError(
+            f"Optimal Order infeasible: (d+1)^T = {n_states} states exceeds limit "
+            f"{state_limit} — use squirrel orders (the paper's own conclusion)."
+        )
+
+    def weight(state_tuple: tuple) -> float:
+        a = evaluator.accuracy(np.asarray(state_tuple, dtype=np.int64))
+        inacc = 1.0 - a
+        return inacc if maximize else a  # Unoptimal: minimize accuracy sum
+
+    start = (0,) * T
+    goal = (d,) * T
+    dist: dict[tuple, float] = {start: 0.0}
+    prev: dict[tuple, tuple] = {}
+    heap: list[tuple[float, tuple]] = [(0.0, start)]
+    visited: set[tuple] = set()
+    while heap:
+        du, u = heapq.heappop(heap)
+        if u in visited:
+            continue
+        visited.add(u)
+        if u == goal:
+            break
+        for t in range(T):
+            if u[t] >= d:
+                continue
+            v = u[:t] + (u[t] + 1,) + u[t + 1:]
+            nd = du + weight(v)
+            if nd < dist.get(v, np.inf) - 1e-15:
+                dist[v] = nd
+                prev[v] = u
+                heapq.heappush(heap, (nd, v))
+
+    # reconstruct the step order from the predecessor chain
+    order: list[int] = []
+    cur = goal
+    while cur != start:
+        p = prev[cur]
+        stepped = next(i for i in range(T) if cur[i] != p[i])
+        order.append(stepped)
+        cur = p
+    order.reverse()
+    return np.asarray(order, dtype=np.int32)
+
+
+def unoptimal_order(evaluator: StateEvaluator, state_limit: int = 2_000_000) -> np.ndarray:
+    """The accuracy-MINIMIZING order — the paper's lower-bound baseline."""
+    return optimal_order(evaluator, maximize=False, state_limit=state_limit)
+
+
+# ---------------------------------------------------------------------------
+# Squirrel Orders (Sec. IV-C): greedy DFS through the state graph.
+# ---------------------------------------------------------------------------
+
+def forward_squirrel(evaluator: StateEvaluator) -> np.ndarray:
+    """Greedy forward: from the initial state, repeatedly take the single
+    step whose successor state has maximal accuracy on S_o."""
+    T, d = evaluator.T, evaluator.depth
+    state = np.zeros(T, dtype=np.int64)
+    S = evaluator.score_matrix(state)
+    order = np.empty(T * d, dtype=np.int32)
+    for k in range(T * d):
+        accs = evaluator.candidate_accuracies(S, state, forward=True)
+        tree = int(np.argmax(accs))
+        evaluator.apply_step(S, state, tree, forward=True)
+        order[k] = tree
+    return order
+
+
+def backward_squirrel(evaluator: StateEvaluator) -> np.ndarray:
+    """Greedy backward: from the FINAL state, repeatedly undo the step
+    whose *predecessor* state has maximal accuracy; the undone steps,
+    reversed, form the order.  The paper finds this variant the best
+    polynomial heuristic (~94% of Optimal's NMA)."""
+    T, d = evaluator.T, evaluator.depth
+    state = np.full(T, d, dtype=np.int64)
+    S = evaluator.score_matrix(state)
+    rev: list[int] = []
+    for _ in range(T * d):
+        accs = evaluator.candidate_accuracies(S, state, forward=False)
+        tree = int(np.argmax(accs))
+        evaluator.apply_step(S, state, tree, forward=False)
+        rev.append(tree)
+    rev.reverse()
+    return np.asarray(rev, dtype=np.int32)

@@ -1,0 +1,105 @@
+"""Tree sequences derived from ensemble-pruning literature (Sec. IV-A).
+
+The paper repurposes pruning *rankings* as execution sequences: all trees
+are kept, only the order changes.  Implemented metrics:
+
+  individual_error (IE)  — rank by per-tree error on S_o            [15]
+  error_ambiguity  (EA)  — rank by error-ambiguity decomposition     [15]
+  reduced_error    (RE)  — greedy: add tree minimizing subset error  [19]
+  drep             (D)   — greedy diversity-regularized selection    [16]
+
+Each returns a permutation of tree ids; combine with
+orders.depth_order / orders.breadth_order to obtain the paper's
+"Prune Depth Order" / "Prune Breadth Order" variants.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _tree_probs(path_probs: np.ndarray) -> np.ndarray:
+    """Final-depth (leaf) prediction vector per tree: [B, T, C]."""
+    return path_probs[:, :, -1, :]
+
+
+def _tree_preds(path_probs: np.ndarray) -> np.ndarray:
+    return _tree_probs(path_probs).argmax(axis=2)  # [B, T]
+
+
+def individual_error_seq(path_probs: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Rank trees by their own error on S_o (best first)."""
+    preds = _tree_preds(path_probs)
+    err = (preds != y[:, None]).mean(axis=0)  # [T]
+    return np.argsort(err, kind="stable").astype(np.int32)
+
+
+def error_ambiguity_seq(path_probs: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Error-ambiguity decomposition ranking (Jiang et al. [15]).
+
+    score_t = err_t - amb_t where amb_t measures disagreement with the
+    full-ensemble prediction; low score (accurate AND diverse) first.
+    """
+    preds = _tree_preds(path_probs)                          # [B, T]
+    ens = _tree_probs(path_probs).sum(axis=1).argmax(axis=1)  # [B]
+    err = (preds != y[:, None]).mean(axis=0)
+    amb = (preds != ens[:, None]).mean(axis=0)
+    return np.argsort(err - amb, kind="stable").astype(np.int32)
+
+
+def reduced_error_seq(path_probs: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Greedy forward selection minimizing running-ensemble error
+    (Margineantu & Dietterich [19]); selection order = sequence."""
+    probs = _tree_probs(path_probs)                  # [B, T, C]
+    B, T, C = probs.shape
+    remaining = list(range(T))
+    seq: list[int] = []
+    acc_probs = np.zeros((B, C), dtype=np.float64)
+    while remaining:
+        best_t, best_err = -1, np.inf
+        for t in remaining:
+            cand = acc_probs + probs[:, t]
+            err = float(np.mean(cand.argmax(axis=1) != y))
+            if err < best_err - 1e-12:
+                best_err, best_t = err, t
+        seq.append(best_t)
+        acc_probs += probs[:, best_t]
+        remaining.remove(best_t)
+    return np.asarray(seq, dtype=np.int32)
+
+
+def drep_seq(path_probs: np.ndarray, y: np.ndarray, rho: float = 0.4) -> np.ndarray:
+    """DREP (Li et al. [16]): greedily pick, among the rho-fraction of
+    remaining trees most *diverse* w.r.t. the current ensemble, the one
+    minimizing ensemble error.  First tree = lowest individual error."""
+    probs = _tree_probs(path_probs)
+    preds = probs.argmax(axis=2)                     # [B, T]
+    B, T, C = probs.shape
+    err_ind = (preds != y[:, None]).mean(axis=0)
+    first = int(np.argmin(err_ind))
+    seq = [first]
+    remaining = [t for t in range(T) if t != first]
+    acc_probs = probs[:, first].astype(np.float64).copy()
+    while remaining:
+        ens_pred = acc_probs.argmax(axis=1)
+        # diversity = disagreement with current ensemble prediction
+        div = np.array([(preds[:, t] != ens_pred).mean() for t in remaining])
+        k = max(1, int(np.ceil(rho * len(remaining))))
+        cand_ids = [remaining[i] for i in np.argsort(-div, kind="stable")[:k]]
+        best_t, best_err = cand_ids[0], np.inf
+        for t in cand_ids:
+            cand = acc_probs + probs[:, t]
+            err = float(np.mean(cand.argmax(axis=1) != y))
+            if err < best_err - 1e-12:
+                best_err, best_t = err, t
+        seq.append(best_t)
+        acc_probs += probs[:, best_t]
+        remaining.remove(best_t)
+    return np.asarray(seq, dtype=np.int32)
+
+
+PRUNE_SEQUENCES = {
+    "IE": individual_error_seq,
+    "EA": error_ambiguity_seq,
+    "RE": reduced_error_seq,
+    "D": drep_seq,
+}

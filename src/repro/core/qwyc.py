@@ -1,0 +1,51 @@
+"""QWYC ("Quit When You Can", Wang et al. [21]) tree ordering.
+
+QWYC greedily orders an ensemble so that, with per-prefix early-stopping
+thresholds, as many samples as possible can be *decided* after as few
+trees as possible.  Binary classification only (the paper notes the same
+restriction); for non-binary datasets callers fall back to pruning
+sequences.
+
+We implement the ordering component: maintain the set of samples still
+undecided; at each position greedily append the unused tree that
+maximizes the number of samples whose partial margin can no longer flip
+sign given worst-case contributions of the remaining trees.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def qwyc_seq(path_probs: np.ndarray, y: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (tree sequence [T], decision thresholds tau [T]).
+
+    Margin of sample b after prefix P: m_b = sum_{t in P} (p_t(b, 1) - 0.5).
+    A sample is decided after k trees if |m_b| > tau_k where tau_k bounds
+    the maximal total swing of the remaining trees (computed per-prefix
+    from the ordering set, as in QWYC's validation-calibrated variant).
+    """
+    probs = path_probs[:, :, -1, :]           # [B, T, C]
+    B, T, C = probs.shape
+    if C != 2:
+        raise ValueError("QWYC is defined for binary classification only")
+    margin_t = probs[:, :, 1] - 0.5           # [B, T] per-tree signed contribution
+    max_swing = np.abs(margin_t).max(axis=0)  # [T] worst-case |contribution| per tree
+
+    remaining = list(range(T))
+    seq: list[int] = []
+    taus: list[float] = []
+    cum_margin = np.zeros(B, dtype=np.float64)
+    for _ in range(T):
+        best_t, best_decided = remaining[0], -1
+        for t in remaining:
+            cand = cum_margin + margin_t[:, t]
+            rem_after = [u for u in remaining if u != t]
+            tau = float(max_swing[rem_after].sum()) if rem_after else 0.0
+            decided = int(np.sum(np.abs(cand) > tau))
+            if decided > best_decided:
+                best_decided, best_t = decided, t
+        cum_margin += margin_t[:, best_t]
+        remaining.remove(best_t)
+        seq.append(best_t)
+        taus.append(float(max_swing[remaining].sum()) if remaining else 0.0)
+    return np.asarray(seq, dtype=np.int32), np.asarray(taus, dtype=np.float32)

@@ -1,0 +1,119 @@
+"""Synthetic LM data pipeline (offline container: no corpora).
+
+Generates *learnable* token streams so training loss demonstrably
+decreases: a mixture of (a) order-k Markov chains with a fixed random
+transition structure, (b) repeated motif insertion, over a Zipf-ish
+unigram prior.  Deterministic per (seed, step) -> restartable without
+checkpointing the pipeline itself; sharded per data-parallel host via
+``shard_id / num_shards``.
+
+Also provides frontend stubs: random-but-deterministic patch/frame
+embeddings for the VLM/audio architectures (the task's one sanctioned
+stub).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int            # per-shard batch
+    seed: int = 0
+    markov_order: int = 2
+    branching: int = 4         # candidate successors per context
+    motif_len: int = 16
+    motif_rate: float = 0.1
+    shard_id: int = 0
+    num_shards: int = 1
+
+
+class SyntheticLM:
+    """Deterministic synthetic language-model stream."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        root = np.random.default_rng(cfg.seed)
+        V = cfg.vocab_size
+        # Zipf unigram prior
+        ranks = np.arange(1, V + 1)
+        self.unigram = (1.0 / ranks) / np.sum(1.0 / ranks)
+        # hashed Markov structure: successor table per context hash
+        self.n_ctx = 1 << 14
+        self.succ = root.integers(0, V, size=(self.n_ctx, cfg.branching))
+        self.motifs = root.integers(0, V, size=(32, cfg.motif_len))
+
+    def _ctx_hash(self, ctx: np.ndarray) -> np.ndarray:
+        h = np.zeros(ctx.shape[0], dtype=np.uint64)
+        for k in range(ctx.shape[1]):
+            h = h * np.uint64(1000003) + ctx[:, k].astype(np.uint64)
+        return (h % np.uint64(self.n_ctx)).astype(np.int64)
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed * 1_000_003 + step) * cfg.num_shards + cfg.shard_id)
+        B, S, V = cfg.batch_size, cfg.seq_len, cfg.vocab_size
+        seq = np.zeros((B, S + 1), dtype=np.int64)
+        k = cfg.markov_order
+        seq[:, :k] = rng.choice(V, size=(B, k), p=self.unigram)
+        for t in range(k, S + 1):
+            h = self._ctx_hash(seq[:, t - k:t])
+            pick = rng.integers(0, cfg.branching, size=B)
+            nxt = self.succ[h, pick]
+            # occasional unigram noise keeps entropy nonzero
+            noise = rng.random(B) < 0.1
+            nxt = np.where(noise, rng.choice(V, size=B, p=self.unigram), nxt)
+            seq[:, t] = nxt
+        # motif stamping
+        n_motifs = int(B * cfg.motif_rate) + 1
+        for _ in range(n_motifs):
+            b = rng.integers(0, B)
+            pos = rng.integers(0, S + 1 - cfg.motif_len)
+            m = rng.integers(0, len(self.motifs))
+            seq[b, pos:pos + cfg.motif_len] = self.motifs[m]
+        return {
+            "tokens": seq[:, :-1].astype(np.int32),
+            "labels": seq[:, 1:].astype(np.int32),
+            "loss_mask": np.ones((B, S), dtype=np.float32),
+        }
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def frontend_stub(cfg: ModelConfig, batch_size: int, seed: int = 0) -> dict[str, np.ndarray]:
+    """Precomputed embeddings standing in for the ViT / audio-conv
+    frontend (task-sanctioned stub)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    if cfg.family == "vlm":
+        out["image_embeds"] = rng.normal(
+            0, 1, size=(batch_size, cfg.num_patches, cfg.vision_embed_dim)
+        ).astype(np.float32)
+    if cfg.family == "encdec":
+        out["audio_embeds"] = rng.normal(
+            0, 1, size=(batch_size, cfg.encoder_seq, cfg.vision_embed_dim or cfg.d_model)
+        ).astype(np.float32)
+    return out
+
+
+def make_batches(cfg: ModelConfig, seq_len: int, batch_size: int,
+                 seed: int = 0) -> Iterator[dict[str, np.ndarray]]:
+    """Full model-ready batch stream (tokens + frontend stubs)."""
+    text_len = seq_len - (cfg.num_patches if cfg.family == "vlm" else 0)
+    lm = SyntheticLM(DataConfig(cfg.vocab_size, text_len, batch_size, seed=seed))
+    stub = frontend_stub(cfg, batch_size, seed)
+    for batch in lm:
+        batch.update(stub)
+        yield batch

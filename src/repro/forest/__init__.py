@@ -1,0 +1,21 @@
+"""Decision-tree / random-forest substrate.
+
+Array-encoded ("native") trees per Asadi et al. [1] as referenced by the
+paper: the tree topology lives in flat arrays so that a single anytime
+*step* is an indexed load + compare + index update, which is what the
+anytime engine (repro.core.engine) and the Pallas kernels operate on.
+"""
+from repro.forest.cart import train_tree, TreeArrays
+from repro.forest.forest import RandomForest, ForestArrays, train_forest
+from repro.forest.data import make_dataset, DATASETS, split_dataset
+
+__all__ = [
+    "train_tree",
+    "TreeArrays",
+    "RandomForest",
+    "ForestArrays",
+    "train_forest",
+    "make_dataset",
+    "split_dataset",
+    "DATASETS",
+]

@@ -1,0 +1,189 @@
+"""CART decision-tree induction with per-node prediction vectors.
+
+The paper's key enabling observation (Sec. III-C) is that the CART
+algorithm already computes, at *every* node, the empirical class
+distribution of the training samples that reach it.  Standard
+implementations discard these for inner nodes; we retain them so that an
+inference aborted at an inner node can still emit a calibrated
+probability vector.
+
+Trees are emitted as flat arrays (``TreeArrays``) so the anytime engine
+can step through them with pure index arithmetic (no pointers, no
+recursion) — the "native tree" realization of Sec. V.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TreeArrays:
+    """Flat array encoding of one decision tree.
+
+    All arrays are indexed by node id; node 0 is the root.  Leaves carry
+    ``left == right == own id`` (self loop) so that stepping past a leaf
+    is a well-defined no-op — exactly the semantics the anytime step
+    order relies on when a schedule advances a tree whose sample already
+    sits in a leaf.
+    """
+
+    feature: np.ndarray      # int32 [M]   split feature index (leaf: 0)
+    threshold: np.ndarray    # float32 [M] split value          (leaf: 0)
+    left: np.ndarray         # int32 [M]   left child id  (<= goes left)
+    right: np.ndarray        # int32 [M]   right child id
+    is_leaf: np.ndarray      # bool  [M]
+    probs: np.ndarray        # float32 [M, C] per-node class distribution
+    depth: np.ndarray        # int32 [M]   depth of node (root = 0)
+    max_depth: int           # maximum depth this tree was grown to
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.feature.shape[0])
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.probs.shape[1])
+
+    def predict_proba(self, X: np.ndarray, depth_limit: Optional[int] = None) -> np.ndarray:
+        """Reference traversal (numpy).  ``depth_limit`` stops early and
+        returns the inner-node prediction vector — the paper's anytime
+        read-out for a single tree."""
+        limit = self.max_depth if depth_limit is None else depth_limit
+        idx = np.zeros(X.shape[0], dtype=np.int64)
+        for _ in range(limit):
+            f = self.feature[idx]
+            go_left = X[np.arange(X.shape[0]), f] <= self.threshold[idx]
+            nxt = np.where(go_left, self.left[idx], self.right[idx])
+            idx = np.where(self.is_leaf[idx], idx, nxt)
+        return self.probs[idx]
+
+
+def _gini_gain_best_split(
+    X: np.ndarray,
+    y: np.ndarray,
+    n_classes: int,
+    feature_ids: np.ndarray,
+    min_samples_leaf: int,
+) -> Optional[tuple[int, float]]:
+    """Best (feature, threshold) by Gini impurity over candidate features.
+
+    Vectorized over thresholds per feature: sort once, evaluate every
+    midpoint between distinct consecutive values.
+    """
+    n = y.shape[0]
+    best = None
+    best_score = np.inf  # weighted child impurity; lower is better
+    onehot = np.zeros((n, n_classes), dtype=np.float64)
+    onehot[np.arange(n), y] = 1.0
+    for f in feature_ids:
+        xv = X[:, f]
+        order = np.argsort(xv, kind="stable")
+        xs = xv[order]
+        # class counts left of each split position (prefix sums)
+        cum = np.cumsum(onehot[order], axis=0)  # [n, C]
+        total = cum[-1]
+        # candidate split after position i (1-based count i+1 on the left)
+        distinct = xs[1:] != xs[:-1]
+        pos = np.nonzero(distinct)[0]  # split between pos and pos+1
+        if pos.size == 0:
+            continue
+        nl = (pos + 1).astype(np.float64)
+        nr = n - nl
+        valid = (nl >= min_samples_leaf) & (nr >= min_samples_leaf)
+        if not np.any(valid):
+            continue
+        pos = pos[valid]
+        nl = nl[valid]
+        nr = nr[valid]
+        cl = cum[pos]          # [k, C]
+        cr = total[None] - cl  # [k, C]
+        gini_l = 1.0 - np.sum((cl / nl[:, None]) ** 2, axis=1)
+        gini_r = 1.0 - np.sum((cr / nr[:, None]) ** 2, axis=1)
+        score = (nl * gini_l + nr * gini_r) / n
+        k = int(np.argmin(score))
+        if score[k] < best_score - 1e-12:
+            best_score = float(score[k])
+            thr = 0.5 * (xs[pos[k]] + xs[pos[k] + 1])
+            best = (int(f), float(thr))
+    return best
+
+
+def train_tree(
+    X: np.ndarray,
+    y: np.ndarray,
+    n_classes: int,
+    max_depth: int,
+    rng: np.random.Generator,
+    max_features: Optional[int] = None,
+    min_samples_leaf: int = 1,
+    min_samples_split: int = 2,
+) -> TreeArrays:
+    """Grow one CART tree, retaining inner-node class distributions.
+
+    ``max_features`` < n_features gives the random-forest per-node
+    feature subsampling of Breiman [2].
+    """
+    n, n_features = X.shape
+    if max_features is None:
+        max_features = n_features
+    y = y.astype(np.int64)
+
+    feature, threshold, left, right, is_leaf, probs, depth = [], [], [], [], [], [], []
+
+    def node_probs(idxs: np.ndarray) -> np.ndarray:
+        counts = np.bincount(y[idxs], minlength=n_classes).astype(np.float64)
+        return (counts / max(counts.sum(), 1.0)).astype(np.float32)
+
+    def add_node(d: int) -> int:
+        nid = len(feature)
+        feature.append(0)
+        threshold.append(0.0)
+        left.append(nid)
+        right.append(nid)
+        is_leaf.append(True)
+        probs.append(None)
+        depth.append(d)
+        return nid
+
+    # Iterative growth (explicit stack) — avoids recursion limits for
+    # deep trees and keeps node ids in DFS order.
+    root = add_node(0)
+    stack = [(root, np.arange(n), 0)]
+    while stack:
+        nid, idxs, d = stack.pop()
+        probs[nid] = node_probs(idxs)
+        pure = np.all(y[idxs] == y[idxs[0]])
+        if d >= max_depth or idxs.size < min_samples_split or pure:
+            continue
+        feats = rng.choice(n_features, size=min(max_features, n_features), replace=False)
+        split = _gini_gain_best_split(X[idxs], y[idxs], n_classes, feats, min_samples_leaf)
+        if split is None:
+            continue
+        f, thr = split
+        go_left = X[idxs, f] <= thr
+        li, ri = idxs[go_left], idxs[~go_left]
+        if li.size == 0 or ri.size == 0:
+            continue
+        feature[nid] = f
+        threshold[nid] = thr
+        is_leaf[nid] = False
+        lid = add_node(d + 1)
+        rid = add_node(d + 1)
+        left[nid] = lid
+        right[nid] = rid
+        stack.append((lid, li, d + 1))
+        stack.append((rid, ri, d + 1))
+
+    return TreeArrays(
+        feature=np.asarray(feature, dtype=np.int32),
+        threshold=np.asarray(threshold, dtype=np.float32),
+        left=np.asarray(left, dtype=np.int32),
+        right=np.asarray(right, dtype=np.int32),
+        is_leaf=np.asarray(is_leaf, dtype=bool),
+        probs=np.stack(probs).astype(np.float32),
+        depth=np.asarray(depth, dtype=np.int32),
+        max_depth=max_depth,
+    )

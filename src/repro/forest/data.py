@@ -1,0 +1,109 @@
+"""Tabular dataset substrate.
+
+The paper evaluates on 9 UCI datasets.  This container is offline, so we
+provide *statistical stand-ins*: synthetic classification problems whose
+class count, feature count and rough difficulty match each UCI dataset.
+The generator is a self-contained reimplementation of the
+``make_classification`` recipe (Gaussian class clusters on informative
+subspaces + redundant linear mixtures + noise features + label noise) so
+no sklearn dependency is needed.
+
+EXPERIMENTS.md documents this substitution: the paper's *claims* being
+validated (accuracy monotonicity in steps, order rankings, optimal vs
+squirrel gaps) are order-relative properties that transfer to any
+tabular task family; absolute accuracies will differ from the paper's.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    n_classes: int
+    n_features: int
+    n_samples: int
+    n_informative: int
+    class_sep: float
+    label_noise: float
+    binary: bool
+
+
+# Stand-ins matched to the paper's 9 UCI datasets (class counts are the
+# real ones; sample counts are scaled down to keep CI fast).
+DATASETS: dict[str, DatasetSpec] = {
+    "adult": DatasetSpec("adult", 2, 14, 4000, 8, 1.0, 0.15, True),
+    "covertype": DatasetSpec("covertype", 7, 54, 4000, 20, 1.2, 0.05, False),
+    "letter": DatasetSpec("letter", 26, 16, 6000, 12, 1.8, 0.02, False),
+    "magic": DatasetSpec("magic", 2, 10, 4000, 6, 0.9, 0.12, True),
+    "mnist": DatasetSpec("mnist", 10, 64, 5000, 32, 1.5, 0.03, False),
+    "satlog": DatasetSpec("satlog", 6, 36, 3000, 18, 1.3, 0.05, False),
+    "sensorless-drive": DatasetSpec("sensorless-drive", 11, 48, 5000, 24, 1.5, 0.02, False),
+    "spambase": DatasetSpec("spambase", 2, 57, 3000, 20, 1.1, 0.08, True),
+    "wearable-body-postures": DatasetSpec("wearable-body-postures", 5, 17, 4000, 10, 1.2, 0.05, False),
+}
+
+
+def make_dataset(spec: DatasetSpec | str, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Synthesize (X, y) for a dataset spec.
+
+    Each class is a mixture of 2 Gaussian clusters placed on the
+    informative subspace; redundant features are random linear mixtures
+    of informative ones; remaining features are pure noise.  A fraction
+    ``label_noise`` of labels is resampled uniformly.
+    """
+    if isinstance(spec, str):
+        spec = DATASETS[spec]
+    rng = np.random.default_rng(seed)
+    n, f, c = spec.n_samples, spec.n_features, spec.n_classes
+    ninf = min(spec.n_informative, f)
+    clusters_per_class = 2
+    total_clusters = c * clusters_per_class
+    # cluster centers: scaled hypercube corners + jitter
+    centers = rng.normal(0.0, 1.0, size=(total_clusters, ninf))
+    centers *= spec.class_sep * 2.0 / np.maximum(np.linalg.norm(centers, axis=1, keepdims=True), 1e-9) * np.sqrt(ninf)
+    y = rng.integers(0, c, size=n)
+    which_cluster = rng.integers(0, clusters_per_class, size=n)
+    cluster_id = y * clusters_per_class + which_cluster
+    X_inf = centers[cluster_id] + rng.normal(0.0, 1.0, size=(n, ninf))
+    # redundant features = linear mixtures of informative
+    nred = min(max(0, f - ninf), ninf)
+    if nred > 0:
+        B = rng.normal(0.0, 1.0, size=(ninf, nred))
+        X_red = X_inf @ B / np.sqrt(ninf)
+    else:
+        X_red = np.zeros((n, 0))
+    nnoise = f - ninf - nred
+    X_noise = rng.normal(0.0, 1.0, size=(n, nnoise))
+    X = np.concatenate([X_inf, X_red, X_noise], axis=1)
+    # shuffle feature columns so informativeness is not positional
+    perm = rng.permutation(f)
+    X = X[:, perm]
+    # label noise
+    flip = rng.random(n) < spec.label_noise
+    y = np.where(flip, rng.integers(0, c, size=n), y)
+    return X.astype(np.float32), y.astype(np.int64)
+
+
+def split_dataset(
+    X: np.ndarray, y: np.ndarray, seed: int = 0,
+    fractions: tuple[float, float, float] = (0.5, 0.25, 0.25),
+) -> tuple[tuple[np.ndarray, np.ndarray], tuple[np.ndarray, np.ndarray], tuple[np.ndarray, np.ndarray]]:
+    """The paper's three-way split: train (50%) / ordering (25%) / test (25%).
+
+    The ordering set S_o is the third split used *only* to generate step
+    orders (Sec. III-A) — analogous to a validation set.
+    """
+    assert abs(sum(fractions) - 1.0) < 1e-9
+    rng = np.random.default_rng(seed)
+    n = X.shape[0]
+    perm = rng.permutation(n)
+    n_tr = int(n * fractions[0])
+    n_or = int(n * fractions[1])
+    tr = perm[:n_tr]
+    orx = perm[n_tr:n_tr + n_or]
+    te = perm[n_tr + n_or:]
+    return (X[tr], y[tr]), (X[orx], y[orx]), (X[te], y[te])

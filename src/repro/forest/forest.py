@@ -1,0 +1,139 @@
+"""Random forests as padded array ensembles.
+
+``ForestArrays`` pads every member tree to a common node count so the
+whole forest is a dense ``[T, M, ...]`` tensor stack — the layout the
+anytime engine, the Pallas kernels and the order generators all share.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.forest.cart import TreeArrays, train_tree
+
+
+@dataclasses.dataclass
+class ForestArrays:
+    """Dense stacked encoding of a forest of ``T`` trees, ``M`` node slots.
+
+    Padding slots are synthetic leaves (self-loop, uniform probs) that are
+    unreachable from the root; they exist purely so every tree shares the
+    same array shape.
+    """
+
+    feature: np.ndarray    # int32   [T, M]
+    threshold: np.ndarray  # float32 [T, M]
+    left: np.ndarray       # int32   [T, M]
+    right: np.ndarray      # int32   [T, M]
+    is_leaf: np.ndarray    # bool    [T, M]
+    probs: np.ndarray      # float32 [T, M, C]
+    max_depth: int         # forest-wide step budget per tree (d)
+
+    @property
+    def n_trees(self) -> int:
+        return int(self.feature.shape[0])
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.feature.shape[1])
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.probs.shape[2])
+
+    @property
+    def total_steps(self) -> int:
+        """Total anytime steps in a full execution: d steps per tree."""
+        return self.n_trees * self.max_depth
+
+    def reorder(self, tree_order: Sequence[int]) -> "ForestArrays":
+        """Forest with trees permuted — used to turn a tree *sequence*
+        (e.g. a pruning rank) into Depth/Breadth step orders."""
+        o = np.asarray(tree_order)
+        return ForestArrays(
+            feature=self.feature[o],
+            threshold=self.threshold[o],
+            left=self.left[o],
+            right=self.right[o],
+            is_leaf=self.is_leaf[o],
+            probs=self.probs[o],
+            max_depth=self.max_depth,
+        )
+
+
+@dataclasses.dataclass
+class RandomForest:
+    trees: list[TreeArrays]
+    n_classes: int
+    max_depth: int
+
+    @property
+    def n_trees(self) -> int:
+        return len(self.trees)
+
+    def as_arrays(self) -> ForestArrays:
+        T = self.n_trees
+        M = max(t.n_nodes for t in self.trees)
+        C = self.n_classes
+        feature = np.zeros((T, M), dtype=np.int32)
+        threshold = np.zeros((T, M), dtype=np.float32)
+        left = np.tile(np.arange(M, dtype=np.int32), (T, 1))
+        right = left.copy()
+        is_leaf = np.ones((T, M), dtype=bool)
+        probs = np.full((T, M, C), 1.0 / C, dtype=np.float32)
+        for i, t in enumerate(self.trees):
+            m = t.n_nodes
+            feature[i, :m] = t.feature
+            threshold[i, :m] = t.threshold
+            left[i, :m] = t.left
+            right[i, :m] = t.right
+            is_leaf[i, :m] = t.is_leaf
+            probs[i, :m] = t.probs
+        return ForestArrays(feature, threshold, left, right, is_leaf, probs, self.max_depth)
+
+    def predict_proba(self, X: np.ndarray) -> np.ndarray:
+        """Standard (non-anytime) forest prediction: sum of leaf vectors."""
+        acc = np.zeros((X.shape[0], self.n_classes), dtype=np.float64)
+        for t in self.trees:
+            acc += t.predict_proba(X)
+        return (acc / self.n_trees).astype(np.float32)
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return np.argmax(self.predict_proba(X), axis=1)
+
+
+def train_forest(
+    X: np.ndarray,
+    y: np.ndarray,
+    n_classes: int,
+    n_trees: int,
+    max_depth: int,
+    seed: int = 0,
+    max_features: Optional[str | int] = "sqrt",
+    bootstrap: bool = True,
+) -> RandomForest:
+    """Breiman random forest: bootstrap rows + per-node feature subsets.
+
+    Mirrors the sklearn default configuration the paper trains with
+    (``max_features='sqrt'``, bootstrap resampling, Gini splits).
+    """
+    rng = np.random.default_rng(seed)
+    n, n_features = X.shape
+    if max_features == "sqrt":
+        mf = max(1, int(np.sqrt(n_features)))
+    elif max_features is None:
+        mf = n_features
+    else:
+        mf = int(max_features)
+    trees = []
+    for _ in range(n_trees):
+        if bootstrap:
+            rows = rng.integers(0, n, size=n)
+        else:
+            rows = np.arange(n)
+        trees.append(
+            train_tree(X[rows], y[rows], n_classes, max_depth, rng, max_features=mf)
+        )
+    return RandomForest(trees=trees, n_classes=n_classes, max_depth=max_depth)

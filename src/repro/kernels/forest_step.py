@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: batched anytime forest step.
+
+TPU adaptation of the paper's native-tree step (Sec. V).  The CPU/MCU
+algorithm is a pointer chase (load node, compare, jump); a literal port
+would serialize on scalar loads.  On TPU we rethink the step as dense
+linear algebra so it runs on the MXU/VPU:
+
+  * node gather       -> one-hot [Bb, M] x node-table [M] matmuls (MXU)
+  * feature gather    -> one-hot [Bb, F] masked reduction (VPU)
+  * branch select     -> vectorized where
+
+The node table is tiled over the M (node) axis so arbitrarily large
+trees stream through VMEM; gathered per-node scalars accumulate in a
+scratch block (the one-hot has a single nonzero, so partial sums across
+M-tiles compose by addition).  Batch is tiled over the grid's parallel
+axis.
+
+This single-tree-step kernel is the latency-critical inner loop of an
+anytime execution: between two abort checkpoints the engine executes
+`order[k]` steps by calling this kernel once per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# Scratch layout: per-sample gathered node fields, accumulated over M tiles.
+_F_IDX, _THR, _LEFT, _RIGHT, _LEAF = range(5)
+_NFIELDS = 8  # padded to 8 lanes
+
+
+def _forest_step_kernel(
+    idx_ref,        # int32 [Bb, 1]        current node ids
+    x_ref,          # f32   [Bb, F]        feature rows
+    feature_ref,    # f32   [1, Mb]        node split-feature (as f32)
+    threshold_ref,  # f32   [1, Mb]
+    left_ref,       # f32   [1, Mb]
+    right_ref,      # f32   [1, Mb]
+    leaf_ref,       # f32   [1, Mb]
+    out_ref,        # int32 [Bb, 1]
+    acc_ref,        # f32   [Bb, _NFIELDS] scratch accumulator
+    *,
+    block_m: int,
+    n_m_blocks: int,
+):
+    m_blk = pl.program_id(1)
+
+    @pl.when(m_blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = idx_ref[:, 0]                                   # [Bb]
+    m_base = m_blk * block_m
+    m_ids = m_base + jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+    onehot = (idx[:, None] == m_ids).astype(jnp.float32)  # [Bb, Mb]
+
+    # Gather node fields via one-hot contraction (MXU-friendly).
+    fields = jnp.stack(
+        [
+            feature_ref[0, :],
+            threshold_ref[0, :],
+            left_ref[0, :],
+            right_ref[0, :],
+            leaf_ref[0, :],
+        ],
+        axis=1,
+    )  # [Mb, 5]
+    pad = jnp.zeros((fields.shape[0], _NFIELDS - fields.shape[1]), fields.dtype)
+    fields = jnp.concatenate([fields, pad], axis=1)       # [Mb, 8]
+    acc_ref[...] += jax.lax.dot(
+        onehot, fields, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(m_blk == n_m_blocks - 1)
+    def _finish():
+        acc = acc_ref[...]
+        f_idx = acc[:, _F_IDX]                            # [Bb] f32
+        thr = acc[:, _THR]
+        x = x_ref[...]                                    # [Bb, F]
+        f_cols = jax.lax.broadcasted_iota(jnp.float32, x.shape, 1)
+        f_onehot = (f_cols == f_idx[:, None]).astype(jnp.float32)
+        fv = jnp.sum(x * f_onehot, axis=1)                # [Bb]
+        nxt = jnp.where(fv <= thr, acc[:, _LEFT], acc[:, _RIGHT])
+        new = jnp.where(acc[:, _LEAF] > 0.5, idx.astype(jnp.float32), nxt)
+        out_ref[:, 0] = new.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m", "interpret"))
+def forest_step(
+    idx: jax.Array,        # int32 [B]
+    X: jax.Array,          # f32   [B, F]
+    feature: jax.Array,    # int32 [M]
+    threshold: jax.Array,  # f32   [M]
+    left: jax.Array,       # int32 [M]
+    right: jax.Array,      # int32 [M]
+    is_leaf: jax.Array,    # bool  [M]
+    *,
+    block_b: int = 256,
+    block_m: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """One anytime step for one tree over a batch.  See module docstring."""
+    B, F = X.shape
+    M = feature.shape[0]
+    block_b = min(block_b, max(8, B))
+    block_m = min(block_m, M)
+
+    # pad batch and nodes to block multiples
+    Bp = -(-B // block_b) * block_b
+    Mp = -(-M // block_m) * block_m
+    idx_p = jnp.pad(idx, (0, Bp - B)).reshape(Bp, 1)
+    x_p = jnp.pad(X, ((0, Bp - B), (0, 0)))
+    def padm(a, fill=0):
+        return jnp.pad(a.astype(jnp.float32), (0, Mp - M), constant_values=fill).reshape(1, Mp)
+    feat_p = padm(feature)
+    thr_p = padm(threshold)
+    left_p = padm(left)
+    right_p = padm(right)
+    leaf_p = padm(is_leaf.astype(jnp.float32), fill=1.0)  # padding nodes are leaves
+
+    n_b, n_m = Bp // block_b, Mp // block_m
+    out = pl.pallas_call(
+        functools.partial(_forest_step_kernel, block_m=block_m, n_m_blocks=n_m),
+        grid=(n_b, n_m),
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda b, m: (b, 0)),
+            pl.BlockSpec((block_b, F), lambda b, m: (b, 0)),
+            pl.BlockSpec((1, block_m), lambda b, m: (0, m)),
+            pl.BlockSpec((1, block_m), lambda b, m: (0, m)),
+            pl.BlockSpec((1, block_m), lambda b, m: (0, m)),
+            pl.BlockSpec((1, block_m), lambda b, m: (0, m)),
+            pl.BlockSpec((1, block_m), lambda b, m: (0, m)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda b, m: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b, _NFIELDS), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(idx_p, x_p, feat_p, thr_p, left_p, right_p, leaf_p)
+    return out[:B, 0]

@@ -1,0 +1,39 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On a real TPU these dispatch to the compiled Mosaic kernels; on CPU (this
+container) they run in interpret mode, which executes the same kernel
+body element-for-element — the mode the test suite validates against the
+ref.py oracles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.forest_step import forest_step as _forest_step
+from repro.kernels.prob_accum import prob_accum as _prob_accum
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def forest_step(idx, X, feature, threshold, left, right, is_leaf, **kw):
+    """Batched anytime step (see kernels.forest_step)."""
+    interpret = kw.pop("interpret", not _on_tpu())
+    return _forest_step(
+        idx, X, feature, threshold, left, right, is_leaf,
+        interpret=interpret, **kw,
+    )
+
+
+def prob_accum(idx, probs, **kw):
+    """Anytime prediction read-out (see kernels.prob_accum)."""
+    interpret = kw.pop("interpret", not _on_tpu())
+    return _prob_accum(idx, probs, interpret=interpret, **kw)
+
+
+# Re-export oracles so callers can opt into the pure-jnp path explicitly.
+forest_step_ref = ref.forest_step_ref
+prob_accum_ref = ref.prob_accum_ref

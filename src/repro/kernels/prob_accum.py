@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: anytime prediction read-out (probability accumulation).
+
+Computes out[b] = sum_t probs[t, idx[b, t]] — the Sec. III-C combined
+prediction from an index-array state.  This is BOTH the abort-time
+read-out of serving AND the inner loop of order generation (every state
+accuracy the Optimal/Squirrel generators evaluate is one such read-out),
+so it is the throughput hot spot of the paper's offline phase.
+
+TPU mapping: the per-tree gather probs[t, idx[:, t]] becomes a one-hot
+[Bb, M] x probs[t] [M, C] matmul — a pure MXU contraction — accumulated
+over the tree axis on the grid's sequential dimension.  M is tiled as
+well so wide trees stream through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _prob_accum_kernel(
+    idx_ref,    # int32 [Bb, 1]     idx[:, t] column for this grid t
+    probs_ref,  # f32   [1, Mb, C]  probs[t] tile
+    out_ref,    # f32   [Bb, C]
+    *,
+    block_m: int,
+):
+    t = pl.program_id(1)
+    m_blk = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(t == 0, m_blk == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[:, 0]                                    # [Bb]
+    m_base = m_blk * block_m
+    m_ids = m_base + jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+    onehot = (idx[:, None] == m_ids).astype(jnp.float32)   # [Bb, Mb]
+    out_ref[...] += jax.lax.dot(
+        onehot, probs_ref[0], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m", "interpret"))
+def prob_accum(
+    idx: jax.Array,    # int32 [B, T]
+    probs: jax.Array,  # f32   [T, M, C]
+    *,
+    block_b: int = 256,
+    block_m: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Anytime read-out: [B, C] class-score sums over all trees."""
+    B, T = idx.shape
+    _, M, C = probs.shape
+    block_b = min(block_b, max(8, B))
+    block_m = min(block_m, M)
+    Bp = -(-B // block_b) * block_b
+    Mp = -(-M // block_m) * block_m
+    idx_p = jnp.pad(idx, ((0, Bp - B), (0, 0)))
+    probs_p = jnp.pad(probs.astype(jnp.float32), ((0, 0), (0, Mp - M), (0, 0)))
+
+    n_b, n_m = Bp // block_b, Mp // block_m
+    out = pl.pallas_call(
+        functools.partial(_prob_accum_kernel, block_m=block_m),
+        grid=(n_b, T, n_m),
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda b, t, m: (b, t)),
+            pl.BlockSpec((1, block_m, C), lambda b, t, m: (t, m, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, C), lambda b, t, m: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, C), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(idx_p, probs_p)
+    return out[:B]

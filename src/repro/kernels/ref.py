@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated (tests/test_kernels.py) against
+these references across shape/dtype sweeps in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def forest_step_ref(
+    idx: jax.Array,        # int32 [B]   current node of the stepped tree
+    X: jax.Array,          # f32   [B, F]
+    feature: jax.Array,    # int32 [M]
+    threshold: jax.Array,  # f32   [M]
+    left: jax.Array,       # int32 [M]
+    right: jax.Array,      # int32 [M]
+    is_leaf: jax.Array,    # bool/int32 [M]
+) -> jax.Array:
+    """One anytime step of one tree for a batch of samples."""
+    f = feature[idx]                                        # [B]
+    thr = threshold[idx]
+    fv = jnp.take_along_axis(X, f[:, None].astype(jnp.int32), axis=1)[:, 0]
+    nxt = jnp.where(fv <= thr, left[idx], right[idx])
+    return jnp.where(is_leaf[idx].astype(bool), idx, nxt).astype(jnp.int32)
+
+
+def prob_accum_ref(idx: jax.Array, probs: jax.Array) -> jax.Array:
+    """Anytime prediction read-out.
+
+    idx: int32 [B, T]; probs: f32 [T, M, C] -> [B, C]
+    out[b] = sum_t probs[t, idx[b, t]]
+    """
+    T = probs.shape[0]
+    t_ids = jnp.arange(T)[None, :]
+    return probs[t_ids, idx].sum(axis=1)
+
+
+def state_scores_ref(path_probs: jax.Array, state: jax.Array) -> jax.Array:
+    """Order-generation read-out: class scores of one forest state.
+
+    path_probs: f32 [B, T, D1, C]; state: int32 [T] -> [B, C]
+    out[b] = sum_t path_probs[b, t, state[t]]
+    """
+    T = path_probs.shape[1]
+    t_ids = jnp.arange(T)
+    return path_probs[:, t_ids, state].sum(axis=1)

@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).  Everything below is ordinary code.
+
+# Multi-pod dry-run: prove every (architecture x input shape x mesh)
+# combination lowers, SPMD-partitions and compiles on the production
+# meshes, then extract roofline terms from the compiled artifact.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+#   python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --multi-pod
+#   python -m repro.launch.dryrun --all --out reports/dryrun
+#   python -m repro.launch.dryrun --arch ... --mesh 2,4   # CI-sized
+#
+# No arrays are ever allocated: parameters, optimizer state, batches and
+# KV caches enter ``jit(...).lower()`` as sharded ShapeDtypeStructs.
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_config, transformer_arch_ids
+from repro.configs.shapes import SHAPES, InputShape
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline as RL
+from repro.models import model as MD
+from repro.models import transformer as T
+from repro.models.params import abstract_params, shardings_for, ParamSpec
+from repro.serving import engine as SE
+from repro.training import optimizer as opt_lib
+from repro.training.train import train_step_fn, _batch_pspec_tree
+
+
+def _abstract_tree(specs, shardings, dtype_map=None):
+    def mk(s: ParamSpec, sh):
+        dt = dtype_map(s) if dtype_map else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt, sharding=sh)
+    return jax.tree_util.tree_map(
+        mk, specs, shardings, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _abstract_like(tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def lower_combination(arch: str, shape_name: str, mesh: Mesh,
+                      param_dtype=jnp.bfloat16, unroll: bool = False,
+                      cfg_overrides: Optional[dict] = None):
+    """Returns (lowered, chips, meta) for one (arch, shape, mesh)."""
+    cfg = get_config(arch)
+    if unroll:
+        # XLA cost_analysis counts while-loop bodies once; the roofline
+        # pass therefore compiles the depth-unrolled HLO.
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = MD.supports_shape(cfg, shape)
+    if not ok:
+        return None, 0, {"skipped": why}
+
+    specs = MD.build_param_specs(cfg)
+    p_sh = shardings_for(specs, mesh, cfg.sharding_profile, cfg.shard_kv_heads)
+    params_abs = _abstract_tree(specs, p_sh, dtype_map=lambda s: param_dtype)
+    chips = mesh.devices.size
+
+    if shape.kind == "train":
+        ocfg = opt_lib.AdamWConfig()
+        # optimizer m/v in f32, sharded like params
+        m_abs = _abstract_tree(specs, p_sh, dtype_map=lambda s: jnp.float32)
+        opt_abs = opt_lib.AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())),
+            m=m_abs, v=m_abs)
+        batch_specs = MD.input_specs(cfg, shape)
+        b_sh = _batch_pspec_tree(cfg, mesh, batch_specs)
+        batch_abs = _abstract_like(batch_specs, b_sh)
+        step = train_step_fn(cfg, ocfg)
+        opt_sh = opt_lib.AdamWState(step=NamedSharding(mesh, P()), m=p_sh, v=p_sh)
+        jitted = jax.jit(step, in_shardings=(p_sh, opt_sh, b_sh),
+                         out_shardings=(p_sh, opt_sh, None),
+                         donate_argnums=(0, 1))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        return lowered, chips, {"kind": "train"}
+
+    if shape.kind == "prefill":
+        batch_specs = MD.input_specs(cfg, shape)
+        b_sh = _batch_pspec_tree(cfg, mesh, batch_specs)
+        batch_abs = _abstract_like(batch_specs, b_sh)
+        import numpy as np
+        baxes = mesh_lib.batch_axes(mesh)
+        ctx_par = shape.global_batch < int(np.prod([mesh.shape[a] for a in baxes]))
+        c_sh = SE.cache_shardings(cfg, mesh, shape.global_batch, shape.seq_len, ctx_par)
+        fn = SE.prefill_fn(cfg, cache_len=shape.seq_len)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                         out_shardings=(NamedSharding(mesh, P(baxes)), c_sh))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(params_abs, batch_abs)
+        return lowered, chips, {"kind": "prefill"}
+
+    if shape.kind == "decode":
+        import numpy as np
+        baxes = mesh_lib.batch_axes(mesh)
+        n_batch_shards = int(np.prod([mesh.shape[a] for a in baxes]))
+        ctx_par = shape.global_batch < n_batch_shards
+        c_sh = SE.cache_shardings(cfg, mesh, shape.global_batch, shape.seq_len, ctx_par)
+        cache_abs = SE.abstract_cache(cfg, shape.global_batch, shape.seq_len, c_sh)
+        # pos enters as a concrete value inside abstract cache (traced) - fine
+        tok_sh = NamedSharding(mesh, P(baxes) if not ctx_par else P())
+        tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32,
+                                       sharding=tok_sh)
+        fn = SE.decode_fn(cfg)
+        jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, tok_sh),
+                         out_shardings=(tok_sh, c_sh), donate_argnums=(1,))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(params_abs, cache_abs, tok_abs)
+        return lowered, chips, {"kind": "decode", "context_parallel": ctx_par}
+
+    raise ValueError(shape.kind)
+
+
+def run_one(arch: str, shape_name: str, mesh: Mesh, verbose: bool = True,
+            unroll: bool = False,
+            cfg_overrides: Optional[dict] = None) -> dict[str, Any]:
+    t0 = time.perf_counter()
+    result: dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "axes": list(mesh.axis_names),
+        "unroll": unroll,
+    }
+    lowered, chips, meta = lower_combination(arch, shape_name, mesh,
+                                             unroll=unroll,
+                                             cfg_overrides=cfg_overrides)
+    result.update(meta)
+    if lowered is None:
+        result["status"] = "skipped"
+        if verbose:
+            print(f"SKIP  {arch} x {shape_name}: {meta['skipped']}", flush=True)
+        return result
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = RL.memory_analysis_dict(compiled)
+    mf = MD.model_flops(get_config(arch), shape_name)
+    hlo = compiled.as_text()
+    terms = RL.terms_from_compiled(compiled, chips, model_flops=mf, hlo_text=hlo)
+    result.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "roofline": terms.as_dict(),
+    })
+    if verbose:
+        ma = mem.get("temp_size_in_bytes", 0)
+        print(f"OK    {arch} x {shape_name} [{result['mesh']}] "
+              f"flops={terms.flops:.3e} coll={terms.collective_bytes:.3e}B "
+              f"dom={terms.dominant} temp={ma/2**30:.2f}GiB "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)", flush=True)
+        print(f"      memory_analysis: {mem}", flush=True)
+        print(f"      cost_analysis: flops={terms.flops:.4e} "
+              f"bytes={terms.bytes_accessed:.4e}", flush=True)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="override mesh shape, e.g. 2,4 (axes data,model)")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer stacks (accurate roofline counting)")
+    ap.add_argument("--out", default=None, help="directory for JSON reports")
+    args = ap.parse_args()
+
+    def build_mesh(multi_pod: bool) -> Mesh:
+        if args.mesh:
+            dims = tuple(int(x) for x in args.mesh.split(","))
+            axes = ("pod", "data", "model")[-len(dims):]
+            return jax.make_mesh(dims, axes, axis_types=mesh_lib._auto(len(dims)))
+        return mesh_lib.make_production_mesh(multi_pod=multi_pod)
+
+    archs = transformer_arch_ids() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    failures = 0
+    for multi_pod in meshes:
+        mesh = build_mesh(multi_pod)
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    results.append(run_one(arch, shape, mesh, unroll=args.unroll))
+                except Exception as e:  # a failure here is a sharding bug
+                    failures += 1
+                    print(f"FAIL  {arch} x {shape}: {type(e).__name__}: {e}",
+                          flush=True)
+                    results.append({"arch": arch, "shape": shape,
+                                    "status": "fail", "error": str(e)[:2000]})
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        tag = "multipod" if args.multi_pod else ("both" if args.both_meshes else "singlepod")
+        if args.mesh:
+            tag = f"mesh{args.mesh.replace(',', 'x')}"
+        if args.unroll:
+            tag += "_unroll"
+        name = f"{args.out}/dryrun_{tag}"
+        if len(archs) == 1:
+            name += f"_{archs[0]}"
+        if len(shapes) == 1:
+            name += f"_{shapes[0]}"
+        with open(name + ".json", "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {name}.json", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,48 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model"); the
+"pod" axis carries pure data parallelism (params never shard over it),
+so its collectives are exactly the gradient all-reduce crossing the
+inter-pod links — the quantity the multi-pod dry-run must prove lowers.
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over the actually-available devices (tests, examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes that shard the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+def seq_pspec(mesh: Mesh) -> P:
+    """Context-parallel spec: shard a sequence/cache-length dim over the
+    batch axes (used when global_batch < data axis, e.g. long_500k)."""
+    return P(None, batch_axes(mesh))

@@ -1,0 +1,159 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs        / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes        / (chips * HBM_BW)
+  collective = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``;
+collective_bytes is parsed out of the partitioned HLO text (sum of
+result-shape sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (the task-specified formula divides by chips*link_bw).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective op kind.
+
+    Counts each logical collective once: `-start` ops are counted,
+    matching `-done` ops are skipped (same transfer), as is the
+    micro-sync `all-reduce` over empty tuples."""
+    out: dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        for op in COLLECTIVE_OPS:
+            # op token immediately precedes its argument list
+            m = re.search(rf"\b{op}(-start)?\(", rhs)
+            if m is None:
+                continue
+            type_part = rhs[: m.start()]
+            total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_part))
+            out[op] += total
+            break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collective_by_op: dict[str, int]
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat / redundant compute."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_op": self.collective_by_op,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def terms_from_compiled(compiled, chips: int, model_flops: float = 0.0,
+                        hlo_text: Optional[str] = None) -> RooflineTerms:
+    """cost_analysis / HLO text describe the PER-DEVICE partitioned
+    program; the roofline formula wants GLOBAL quantities, so scale by
+    the chip count (model_flops is already global)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * chips
+    nbytes = float(cost.get("bytes accessed", 0.0)) * chips
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = {k: v * chips for k, v in parse_collective_bytes(text).items()}
+    return RooflineTerms(
+        flops=flops,
+        bytes_accessed=nbytes,
+        collective_bytes=float(sum(coll.values())),
+        collective_by_op=coll,
+        chips=chips,
+        model_flops=model_flops,
+    )
+
+
+def memory_analysis_dict(compiled) -> dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:  # backend without memory analysis
+        return {}
+    if ma is None:
+        return {}
+    keys = (
+        "generated_code_size_in_bytes", "argument_size_in_bytes",
+        "output_size_in_bytes", "alias_size_in_bytes",
+        "temp_size_in_bytes", "host_generated_code_size_in_bytes",
+        "host_argument_size_in_bytes", "host_output_size_in_bytes",
+        "host_alias_size_in_bytes", "host_temp_size_in_bytes",
+    )
+    return {k: getattr(ma, k) for k in keys if hasattr(ma, k)}

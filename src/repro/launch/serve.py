@@ -1,0 +1,53 @@
+"""Serving launcher: batched prefill + decode on the host mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
+        --batch 4 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import frontend_stub
+from repro.launch import mesh as mesh_lib
+from repro.models import model as MD
+from repro.serving import engine as SE
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = MD.init(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    toks = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+    extra = {k: jnp.asarray(v) for k, v in
+             frontend_stub(cfg, args.batch, args.seed).items()}
+
+    t0 = time.perf_counter()
+    out = SE.generate(cfg, params, toks, args.max_new,
+                      extra_inputs=extra or None,
+                      temperature=args.temperature, seed=args.seed)
+    dt = time.perf_counter() - t0
+    new_tokens = args.batch * args.max_new
+    print(f"arch={cfg.name} generated {new_tokens} tokens in {dt:.2f}s "
+          f"({new_tokens/dt:.1f} tok/s incl. prefill+compile)")
+    print("sample:", np.asarray(out[0, args.prompt_len:]).tolist())
+
+
+if __name__ == "__main__":
+    main()

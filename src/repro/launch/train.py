@@ -1,0 +1,52 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+        --steps 100 --seq-len 128 --batch-size 8 [--data N --model M]
+
+On a real cluster this process runs per-host under the same entrypoint
+(jax.distributed.initialize picks hosts up from the environment); on
+this container it runs on the host mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.launch import mesh as mesh_lib
+from repro.training.optimizer import AdamWConfig
+from repro.training.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data", type=int, default=0, help="data-axis size")
+    ap.add_argument("--model", type=int, default=1, help="model-axis size")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = mesh_lib.make_host_mesh(
+        data=args.data or len(jax.devices()), model=args.model)
+    print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"params~{cfg.param_count()/1e6:.1f}M")
+    res = train_loop(
+        cfg, steps=args.steps, seq_len=args.seq_len,
+        batch_size=args.batch_size, mesh=mesh,
+        ocfg=AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 4),
+                         total_steps=args.steps),
+        seed=args.seed, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    print(f"final loss {res.losses[-1]:.4f} at {res.steps_per_sec:.2f} steps/s")
+
+
+if __name__ == "__main__":
+    main()

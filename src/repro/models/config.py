@@ -1,0 +1,164 @@
+"""Model configuration schema covering all assigned architecture families.
+
+One frozen dataclass drives every family (dense / moe / ssm / hybrid /
+encdec / vlm); family-specific fields are zero/None when unused.  Each
+``src/repro/configs/<arch>.py`` instantiates one of these with the exact
+assigned hyperparameters and cites its source.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- attention options -------------------------------------------------
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False            # qwen3
+    attn_logit_softcap: Optional[float] = None   # gemma2: 50.0
+    final_logit_softcap: Optional[float] = None  # gemma2: 30.0
+    sliding_window: Optional[int] = None         # gemma2 local layers: 4096
+    local_global: bool = False       # gemma2: alternate local/global layers
+    attn_scale_override: Optional[float] = None  # gemma2-27b uses (d/2H)^-0.5
+
+    # --- norms / mlp --------------------------------------------------------
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm | layernorm_nonparam (olmo)
+    act: str = "silu"                # silu | gelu (gemma)
+    post_attn_norm: bool = False     # gemma2 extra post-norms
+    scale_embeds: bool = False       # gemma2: multiply embeddings by sqrt(D)
+    tie_embeddings: bool = True
+
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden width
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+    moe_groups: int = 32             # dispatch groups (data-local sorting)
+    # Pad the expert count (router logits masked to -inf, zero traffic &
+    # zero gradients for pads) so the expert axis divides the model mesh
+    # axis — §Perf iteration 3 (40 experts on a 16-way axis were fully
+    # REPLICATED otherwise).
+    expert_pad_to: int = 0           # 0 = off
+    # Explicit sharding constraints on the dispatch scatters. Big win for
+    # tp-profile MoE (granite: collective 2.5x down); HURTS fsdp_tp MoE
+    # (qwen3-moe: conflicts with data-sharded expert_ffn weights) — see
+    # EXPERIMENTS.md SPerf iteration 3/4.
+    moe_constrain_dispatch: bool = True
+
+    # --- SSM (mamba2) --------------------------------------------------------
+    ssm_state: int = 0               # N (state dim per head)
+    ssm_expand: int = 2              # d_inner = expand * d_model
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # --- hybrid (zamba2) ------------------------------------------------------
+    hybrid_period: int = 0           # shared attention every N ssm layers
+
+    # --- encoder-decoder (whisper) ---------------------------------------------
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # audio frames after conv frontend (stub)
+
+    # --- vlm (internvl2) ---------------------------------------------------------
+    num_patches: int = 0             # image patch embeddings from the stub ViT
+    vision_embed_dim: int = 0        # stub frontend output width
+
+    # --- anytime (paper technique carried over to transformers) -----------------
+    anytime_exits: bool = False      # per-layer logit-lens early-exit heads
+
+    # --- distribution ---------------------------------------------------------
+    sharding_profile: str = "tp"     # tp | fsdp_tp
+    shard_kv_heads: bool = True      # False -> replicate KV heads across model axis
+    remat: bool = True               # activation checkpointing per block
+    scan_layers: bool = True
+    # Pad query heads (per kv group, masked to zero contribution) so the
+    # head axis divides the model mesh axis — §Perf iteration 2. Real
+    # heads keep their original kv-group assignment; padded heads are
+    # multiplicatively masked before wo so both their output AND their
+    # gradients are exactly zero.
+    head_pad_to: int = 0             # 0 = off; else pad num_heads up to this
+
+    citation: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # derived ---------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def padded_heads(self) -> int:
+        """Query-head count after TP divisibility padding (== num_heads
+        when head_pad_to is 0).  Padding is inserted PER KV GROUP so real
+        heads keep their original kv-head assignment."""
+        if not self.head_pad_to or self.head_pad_to <= self.num_heads:
+            return self.num_heads
+        kh = max(self.num_kv_heads, 1)
+        g_pad = -(-self.head_pad_to // kh)
+        return kh * g_pad
+
+    @property
+    def padded_experts(self) -> int:
+        if not self.expert_pad_to or self.expert_pad_to <= self.num_experts:
+            return self.num_experts
+        return self.expert_pad_to
+
+    @property
+    def attn_scale(self) -> float:
+        if self.attn_scale_override is not None:
+            return self.attn_scale_override
+        return self.head_dim ** -0.5
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (used for roofline 6ND)."""
+        D, V, L = self.d_model, self.vocab_size, self.num_layers
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        n = emb
+        hd = self.head_dim
+        attn = D * self.num_heads * hd + 2 * D * self.num_kv_heads * hd + self.num_heads * hd * D
+        if self.family in ("dense", "vlm"):
+            n += L * (attn + 3 * D * self.d_ff)
+        elif self.family == "moe":
+            n += L * (attn + 3 * D * self.moe_d_ff * self.num_experts + D * self.num_experts)
+        elif self.family == "ssm":
+            di, N, H = self.d_inner, self.ssm_state, self.ssm_heads
+            per = D * (2 * di + 2 * N + H) + di * D + self.ssm_conv_width * (di + 2 * N)
+            n += L * per
+        elif self.family == "hybrid":
+            di, N, H = self.d_inner, self.ssm_state, self.ssm_heads
+            per = D * (2 * di + 2 * N + H) + di * D + self.ssm_conv_width * (di + 2 * N)
+            n += L * per
+            # one shared transformer block + per-group adapters
+            n_groups = L // max(self.hybrid_period, 1)
+            n += attn + 3 * D * self.d_ff + n_groups * D * D
+        elif self.family == "encdec":
+            n += self.encoder_layers * (attn + 2 * D * self.d_ff)
+            n += L * (2 * attn + 2 * D * self.d_ff)  # self + cross attention
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE: top_k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        D, L = self.d_model, self.num_layers
+        dense = self.param_count() - L * 3 * D * self.moe_d_ff * self.num_experts
+        return dense + L * 3 * D * self.moe_d_ff * self.top_k

@@ -1,0 +1,300 @@
+"""Shared neural building blocks for all assigned architectures.
+
+Covers every attention/norm/MLP variant the assigned configs need:
+GQA + RoPE, qk-norm (qwen3), attention-logit softcap (gemma2), sliding
+windows (gemma2 local layers), non-parametric LN (olmo), SwiGLU / GeGLU
+MLPs.  Attention over long sequences uses a chunked online-softmax
+("flash-style") formulation so the [Sq, Sk] score matrix is never
+materialized — mandatory for the 32k-prefill input shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.params import spec
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if w is not None:
+        x = x * (1.0 + w.astype(jnp.float32))  # gemma-style (1 + w)
+    return x.astype(dt)
+
+
+def layernorm_nonparam(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo's non-parametric LayerNorm: no scale, no bias [arXiv:2402.00838]."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, x: jax.Array, w: Optional[jax.Array]) -> jax.Array:
+    if cfg.norm_type == "layernorm_nonparam":
+        return layernorm_nonparam(x)
+    if cfg.norm_type == "layernorm":  # whisper: parametric LN (scale, no bias)
+        y = layernorm_nonparam(x)
+        return y if w is None else (y * (1.0 + w.astype(y.dtype))).astype(x.dtype)
+    return rmsnorm(x, w)
+
+
+def norm_spec(cfg: ModelConfig, *lead):
+    """Param spec for a norm weight (None-shaped for non-parametric)."""
+    if cfg.norm_type == "layernorm_nonparam":
+        return None
+    lead_axes = ("layers",) * len(lead)
+    return spec((*lead, cfg.d_model), (*lead_axes, "embed"), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, ..., head_dim] with positions [..., S] broadcastable.
+
+    NeoX-style half rotation.  positions: [B, S] or [S]."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), dtype=jnp.float32)    # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs           # [..., S, dh/2]
+    # broadcast ang over the head axis: x is [B, S, H, dh]; ang [B, S, dh/2]
+    ang = ang[..., None, :]                                          # [B, S, 1, dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: Optional[int]):
+    """[..., Sq, Sk] additive mask from absolute positions."""
+    m = jnp.zeros(qpos.shape[:-1] + (qpos.shape[-1], kpos.shape[-1]), jnp.float32)
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    valid = k >= 0  # padding slots carry kpos = -1
+    if causal:
+        valid &= k <= q
+    if window is not None:
+        valid &= q - k < window
+    return jnp.where(valid, m, NEG_INF)
+
+
+def _scores(q, k, scale, softcap):
+    # q: [B, Sq, KH, G, dh]  k: [B, Sk, KH, dh] -> [B, KH, G, Sq, Sk]
+    s = jnp.einsum("bqhgd,bshd->bhgqs", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def attention(
+    q: jax.Array,                 # [B, Sq, H, dh]
+    k: jax.Array,                 # [B, Sk, KH, dh]
+    v: jax.Array,                 # [B, Sk, KH, dh]
+    q_positions: jax.Array,       # [B, Sq] absolute positions
+    k_positions: jax.Array,       # [B, Sk] absolute positions (-1 = invalid)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    k_chunk: int = 1024,
+    q_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style attention: O(Sq * dh) memory, never materializes the
+    full score matrix.  Handles GQA natively (no KV repetition)."""
+    B, Sq, H, dh = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, dh)
+
+    k_chunk = min(k_chunk, k.shape[1])
+    q_chunk = min(q_chunk, Sq)
+    # pad seqs to chunk multiples
+    Skp = -(-k.shape[1] // k_chunk) * k_chunk
+    Sqp = -(-Sq // q_chunk) * q_chunk
+    kp = jnp.pad(k, ((0, 0), (0, Skp - k.shape[1]), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - k.shape[1]), (0, 0), (0, 0)))
+    kpos_p = jnp.pad(k_positions, ((0, 0), (0, Skp - k.shape[1])), constant_values=-1)
+    qp = jnp.pad(qg, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0), (0, 0)))
+    qpos_p = jnp.pad(q_positions, ((0, 0), (0, Sqp - Sq)), constant_values=-1)
+
+    nq, nk = Sqp // q_chunk, Skp // k_chunk
+    kc = kp.reshape(B, nk, k_chunk, KH, dh)
+    vc = vp.reshape(B, nk, k_chunk, KH, dh)
+    kposc = kpos_p.reshape(B, nk, k_chunk)
+
+    def q_block(args):
+        qb, qposb = args                     # [B, qc, KH, G, dh], [B, qc]
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            kb, vb, kposb = kv               # [B, kc, KH, dh] ...
+            s = _scores(qb, kb, scale, softcap)                     # [B,KH,G,qc,kc]
+            s = s + _mask(qposb, kposb, causal, window)[:, None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KH, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(kposc, 1, 0)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]                # [B,KH,G,qc,dh]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))                  # [B,qc,KH,G,dh]
+
+    qcs = jnp.moveaxis(qp.reshape(B, nq, q_chunk, KH, G, dh), 1, 0)
+    qposcs = jnp.moveaxis(qpos_p.reshape(B, nq, q_chunk), 1, 0)
+    outs = jax.lax.map(q_block, (qcs, qposcs))                      # [nq,B,qc,KH,G,dh]
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sqp, KH, G, dh)[:, :Sq]
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # [B, 1, H, dh]
+    k_cache: jax.Array,      # [B, S, KH, dh] (RoPE already applied at write)
+    v_cache: jax.Array,      # [B, S, KH, dh]
+    k_positions: jax.Array,  # [B, S] absolute position per slot (-1 invalid)
+    cur_pos: jax.Array,      # [B] position of the query token
+    *,
+    scale: float,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    Memory/compute are linear in S — decode needs no flash machinery."""
+    B, _, H, dh = q.shape
+    KH = k_cache.shape[2]
+    G = H // KH
+    qg = q.reshape(B, 1, KH, G, dh)
+    s = _scores(qg, k_cache, scale, softcap)                 # [B,KH,G,1,S]
+    qpos = cur_pos[:, None]                                   # [B,1]
+    s = s + _mask(qpos, k_positions, True, window)[:, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + norms) and MLP
+# ---------------------------------------------------------------------------
+
+def head_mask(cfg: ModelConfig) -> Optional[jax.Array]:
+    """[H_pad] 0/1 mask over padded query heads (None when unpadded).
+    Layout: heads grouped per kv head; within each group the first
+    num_heads//num_kv_heads are real."""
+    Hp = cfg.padded_heads
+    if Hp == cfg.num_heads:
+        return None
+    KH = max(cfg.num_kv_heads, 1)
+    g_real = cfg.num_heads // KH
+    g_pad = Hp // KH
+    m = (jnp.arange(g_pad) < g_real).astype(jnp.float32)
+    return jnp.tile(m, KH)
+
+
+def attn_param_specs(cfg: ModelConfig, n_layers: Optional[int] = None, layer_axis: bool = True):
+    """Spec dict for one attention block; if layer_axis, stacked over layers."""
+    D, H, KH, dh = cfg.d_model, cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    lead = (n_layers,) if layer_axis else ()
+    la = ("layers",) if layer_axis else ()
+    p = {
+        "wq": spec((*lead, D, H, dh), (*la, "embed_in", "heads", "head_dim")),
+        "wk": spec((*lead, D, KH, dh), (*la, "embed_in", "kv_heads", "head_dim")),
+        "wv": spec((*lead, D, KH, dh), (*la, "embed_in", "kv_heads", "head_dim")),
+        "wo": spec((*lead, H, dh, D), (*la, "heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = spec((*lead, dh), (*la, "head_dim"), init="zeros")
+        p["k_norm"] = spec((*lead, dh), (*la, "head_dim"), init="zeros")
+    return p
+
+
+def mlp_param_specs(cfg: ModelConfig, d_ff: Optional[int] = None,
+                    n_layers: Optional[int] = None, layer_axis: bool = True):
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    lead = (n_layers,) if layer_axis else ()
+    la = ("layers",) if layer_axis else ()
+    return {
+        "w_gate": spec((*lead, D, F), (*la, "embed_in", "ffn")),
+        "w_up": spec((*lead, D, F), (*la, "embed_in", "ffn")),
+        "w_down": spec((*lead, F, D), (*la, "ffn", "embed")),
+    }
+
+
+def qkv_project(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array):
+    """x [B,S,D] -> q [B,S,H,dh], k/v [B,S,KH,dh] with rope + optional qk-norm."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(p, o: jax.Array, cfg: Optional[ModelConfig] = None) -> jax.Array:
+    if cfg is not None:
+        m = head_mask(cfg)
+        if m is not None:  # zero padded heads' output AND their gradients
+            o = o * m[None, None, :, None].astype(o.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def mlp(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * jnp.einsum(
+        "bsd,df->bsf", x, p["w_up"]
+    )
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def final_logits(cfg: ModelConfig, embed: jax.Array, lm_head: Optional[jax.Array],
+                 x: jax.Array) -> jax.Array:
+    """Readout; also reused by the anytime early-exit heads (logit lens)."""
+    if cfg.tie_embeddings or lm_head is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, embed)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, lm_head)
+    if cfg.final_logit_softcap is not None:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

@@ -1,0 +1,184 @@
+"""Parameter specification / initialization / sharding machinery.
+
+Every model declares its parameters as a pytree of :class:`ParamSpec`
+(shape + logical axis names + initializer).  From the same spec tree we
+derive:
+
+  * materialized params        (init, on device)    — training/smoke tests
+  * abstract params            (ShapeDtypeStruct)   — dry-run lowering,
+                                                      zero allocation
+  * NamedShardings per leaf    (logical -> mesh axis rules)
+
+This is the hand-rolled equivalent of flax.linen.partitioning — the
+container has no flax, and the explicit version keeps the
+logical-to-physical mapping inspectable for the roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]   # logical name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, init="scaled", scale=1.0, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def _init_leaf(key: jax.Array, s: ParamSpec) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init == "normal":
+        return (jax.random.normal(key, s.shape) * s.scale).astype(s.dtype)
+    if s.init == "scaled":
+        # fan-in scaled (lecun normal on the second-to-last... use last-but-one dim)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        return (jax.random.normal(key, s.shape) * (s.scale / math.sqrt(fan_in))).astype(s.dtype)
+    raise ValueError(s.init)
+
+
+def init_params(spec_tree, key: jax.Array):
+    """Materialize a spec pytree into parameter arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(spec_tree, shardings=None):
+    """ShapeDtypeStructs (optionally sharded) — the dry-run stand-in."""
+    def mk(s: ParamSpec, sh=None):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+
+    if shardings is None:
+        return jax.tree_util.tree_map(
+            mk, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+        )
+    return jax.tree_util.tree_map(
+        mk, spec_tree, shardings, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> mesh-axis rules.
+#
+# "tp":       Megatron-style tensor parallelism on the "model" mesh axis.
+# "fsdp_tp":  additionally shard the embed (d_model) dim of weight
+#             matrices over the "data" axis (2D / fully-sharded layout) —
+#             required for the >10B assigned configs to fit HBM.
+# In the multi-pod mesh the batch axes are ("pod", "data"); parameters
+# never shard over "pod" (pure data parallelism between pods).
+# ---------------------------------------------------------------------------
+
+TP_RULES: dict[str, Optional[str]] = {
+    "vocab": "model",
+    "embed": None,
+    "embed_in": None,      # input-side d_model dim of weight matrices
+    "ffn": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": "model",
+    "expert_ffn": None,
+    "inner": "model",      # ssm d_inner
+    "ssm_heads": "model",
+    "state": None,
+    "conv": None,
+    "layers": None,
+    "groups": None,
+    "patches": None,
+    "vis_embed": None,
+}
+
+FSDP_TP_RULES = dict(TP_RULES)
+FSDP_TP_RULES.update({
+    "embed": "data",
+    "embed_in": "data",
+    "expert_ffn": "data",  # second shard dim for expert weights
+})
+
+
+def rules_for(profile: str) -> dict[str, Optional[str]]:
+    if profile == "tp":
+        return TP_RULES
+    if profile == "fsdp_tp":
+        return FSDP_TP_RULES
+    raise ValueError(profile)
+
+
+def logical_to_pspec(
+    axes: tuple[Optional[str], ...],
+    rules: dict[str, Optional[str]],
+    mesh: Mesh,
+    shape: Optional[tuple[int, ...]] = None,
+    shard_kv_heads: bool = True,
+) -> P:
+    """Map logical axes to a PartitionSpec, dropping mappings whose mesh
+    axis is absent or whose dimension is too small to usefully shard."""
+    out = []
+    used: set[str] = set()
+    for i, ax in enumerate(axes):
+        tgt = rules.get(ax) if ax is not None else None
+        if ax == "kv_heads" and not shard_kv_heads:
+            tgt = None
+        if tgt is not None and tgt not in mesh.axis_names:
+            tgt = None
+        if tgt is not None and shape is not None:
+            # pjit input shardings require exact divisibility; replicate
+            # otherwise (e.g. 40 heads or a 51865 vocab on a 16-way axis).
+            if shape[i] % mesh.shape[tgt] != 0:
+                tgt = None
+        if tgt is not None and tgt in used:
+            # one mesh axis may appear once per spec: first dim wins
+            # (e.g. MoE [experts, d, ffn]: expert-parallel takes "model").
+            tgt = None
+        if tgt is not None:
+            used.add(tgt)
+        out.append(tgt)
+    return P(*out)
+
+
+def shardings_for(spec_tree, mesh: Mesh, profile: str, shard_kv_heads: bool = True):
+    """NamedSharding pytree matching a spec pytree."""
+    rules = rules_for(profile)
+
+    def mk(s: ParamSpec):
+        ps = logical_to_pspec(s.axes, rules, mesh, s.shape, shard_kv_heads)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map(
+        mk, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a, tree
+    )

@@ -1,0 +1,179 @@
+"""Mamba2 (SSD — state-space duality) layer [arXiv:2405.21060].
+
+TPU adaptation (DESIGN.md §Hardware-adaptation): the CUDA reference
+implements SSD with fused warp-level scans; on TPU we use the paper's own
+*block decomposition* — intra-chunk terms are dense matmuls (MXU) and
+only the O(S / chunk) inter-chunk state passing is a sequential
+``lax.scan``, which is exactly the structure the SSD paper recommends
+for matmul-rich hardware.
+
+Single-group (G=1) B/C variant, scalar-per-head A (the Mamba2 default).
+
+Three entry points:
+  ssd_train   — full-sequence chunked scan (training / prefill)
+  ssd_decode  — single-token recurrence against carried state
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.params import spec
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # [B, W-1, di + 2N]   rolling conv window
+    ssm: jax.Array   # [B, H, dh, N]       recurrent state
+
+
+def ssm_param_specs(cfg: ModelConfig, n_layers: Optional[int] = None, layer_axis: bool = True):
+    D, di, N, H, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_conv_width)
+    lead = (n_layers,) if layer_axis else ()
+    la = ("layers",) if layer_axis else ()
+    return {
+        # projections to [z | x | B | C | dt]
+        "in_proj": spec((*lead, D, 2 * di + 2 * N + H), (*la, "embed_in", "inner")),
+        "conv_w": spec((*lead, W, di + 2 * N), (*la, "conv", "inner")),
+        "conv_b": spec((*lead, di + 2 * N), (*la, "inner"), init="zeros"),
+        "A_log": spec((*lead, H), (*la, "ssm_heads"), init="zeros"),
+        "D": spec((*lead, H), (*la, "ssm_heads"), init="ones"),
+        "dt_bias": spec((*lead, H), (*la, "ssm_heads"), init="zeros"),
+        "norm_w": spec((*lead, di), (*la, "inner"), init="zeros"),
+        "out_proj": spec((*lead, di, D), (*la, "inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:]
+    return z, xBC, dt
+
+
+def _conv_causal(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: xBC [B, S, Ch], w [W, Ch]."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(W):  # W is small (4): unrolled shifts, no gather
+        out = out + pad[:, i: i + xBC.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_train(cfg: ModelConfig, p, x: jax.Array, return_state: bool = False):
+    """Full-sequence SSD. x: [B, S, D] -> [B, S, D] (+ final SSMState
+    when ``return_state``, enabling prefill-then-decode serving)."""
+    B, S, D = x.shape
+    di, N, H, dh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    # largest chunk <= cfg.ssm_chunk that divides S (assigned shapes are
+    # powers of two, so this is cfg.ssm_chunk in production; odd test
+    # lengths degrade gracefully)
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q != 0:
+        Q -= 1
+    nC = S // Q
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC_raw = xBC  # pre-conv activations: the rolling conv window for decode
+    xBC = _conv_causal(xBC, p["conv_w"], p["conv_b"])
+    xi = xBC[..., :di].reshape(B, S, H, dh)
+    Bm = xBC[..., di: di + N]                      # [B, S, N]
+    Cm = xBC[..., di + N:]                         # [B, S, N]
+    dt = jax.nn.softplus(dt + p["dt_bias"])        # [B, S, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))   # [H]
+    dA = dt * A                                     # [B, S, H]
+
+    # chunk everything: [B, nC, Q, ...]
+    def ck(a, extra=()):
+        return a.reshape(B, nC, Q, *extra)
+
+    xi_c = xi.reshape(B, nC, Q, H, dh)
+    B_c = ck(Bm, (N,))
+    C_c = ck(Cm, (N,))
+    dA_c = ck(dt * A, (H,))
+    dt_c = ck(dt, (H,))
+
+    cum = jnp.cumsum(dA_c, axis=2)                 # [B, nC, Q, H] inclusive
+    seg_end = cum[:, :, -1]                        # [B, nC, H] total decay per chunk
+
+    # intra-chunk: Y[i] = sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+    decay = jnp.exp(cum[:, :, :, None] - cum[:, :, None, :, :])      # [B,nC,Qi,Qj,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    decay = jnp.where(causal, decay, 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)                     # [B,nC,Qi,Qj]
+    scores = cb[..., None] * decay                                    # [B,nC,Qi,Qj,H]
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dt_c, xi_c)
+
+    # chunk-local final states: S_loc = sum_j exp(seg_end - cum_j) dt_j B_j x_j^T
+    w = jnp.exp(seg_end[:, :, None] - cum) * dt_c                     # [B,nC,Q,H]
+    S_loc = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", w, B_c, xi_c)        # [B,nC,H,dh,N]
+
+    # inter-chunk scan over nC (sequential, nC = S/Q steps)
+    def scan_body(carry, inp):
+        S_prev = carry                                               # [B,H,dh,N]
+        S_l, g = inp                                                 # g: [B,H] chunk decay
+        S_new = S_prev * jnp.exp(g)[:, :, None, None] + S_l
+        return S_new, S_prev
+
+    S0 = jnp.zeros((B, H, dh, N), jnp.float32)
+    S_final, S_prevs = jax.lax.scan(
+        scan_body, S0,
+        (jnp.moveaxis(S_loc, 1, 0), jnp.moveaxis(seg_end, 1, 0)),
+    )
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                            # [B,nC,H,dh,N]
+
+    # inter-chunk contribution: Y_i += C_i . S_prev * exp(cum_i)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         C_c, S_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, S, H, dh)
+    y = y + xi * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y, p["norm_w"]) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y.astype(x.dtype), p["out_proj"])
+    if not return_state:
+        return out
+    W = cfg.ssm_conv_width
+    state = SSMState(conv=xBC_raw[:, S - (W - 1):], ssm=S_final)
+    return out, state
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    di, N, H, dh, W = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                       cfg.ssm_head_dim, cfg.ssm_conv_width)
+    return SSMState(
+        conv=jnp.zeros((batch, W - 1, di + 2 * N), dtype),
+        ssm=jnp.zeros((batch, H, dh, N), jnp.float32),
+    )
+
+
+def ssd_decode(cfg: ModelConfig, p, x: jax.Array, state: SSMState) -> tuple[jax.Array, SSMState]:
+    """One-token recurrence. x: [B, 1, D] -> ([B, 1, D], new state)."""
+    B = x.shape[0]
+    di, N, H, dh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]        # [B, E]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # rolling conv
+    window = jnp.concatenate([state.conv, xBC[:, None]], axis=1)     # [B, W, Ch]
+    xBC = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv = window[:, 1:]
+    xi = xBC[..., :di].reshape(B, H, dh)
+    Bm = xBC[..., di: di + N]
+    Cm = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt + p["dt_bias"])                          # [B, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                             # [B, H]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, xi)
+    S_new = state.ssm * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm, S_new)                        # [B,H,dh]
+    y = y + xi * p["D"][None, :, None]
+    y = y.reshape(B, di)
+    y = rmsnorm(y, p["norm_w"]) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y.astype(x.dtype), p["out_proj"])[:, None]
+    return out, SSMState(conv=new_conv, ssm=S_new)

@@ -1,0 +1,674 @@
+"""Decoder-stack assembly for every assigned architecture family.
+
+Layers are *scanned* (``jax.lax.scan`` over stacked parameter pytrees) so
+HLO size and compile time are depth-independent — essential for the 94-
+layer qwen3-moe dry-run.  Architectures with heterogeneous layer types
+use structured stacks:
+
+  dense/moe/vlm : one homogeneous stack
+  gemma2        : paired stacks (local sliding-window layer, global layer)
+                  scanned together — which also gives local layers
+                  window-sized ring-buffer KV caches in decode
+  ssm           : one mamba2 stack
+  hybrid        : grouped stacks (N mamba2 layers + one SHARED attention
+                  block, zamba2-style) + tail mamba2 layers
+  encdec        : encoder stack + decoder stack with cross-attention
+
+Three execution modes share the same parameters:
+  train(tokens)           -> logits [B, S, V]
+  prefill(tokens)         -> (last-position logits, KV/SSM cache)
+  decode(token, cache)    -> (logits [B, 1, V], updated cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.params import spec
+
+# =============================================================================
+# parameter specs
+# =============================================================================
+
+def _block_specs(cfg: ModelConfig, n: int, kind: str):
+    """Stacked specs for n layers of a given kind."""
+    p: dict[str, Any] = {}
+    if kind in ("attn_mlp", "attn_moe", "attn_only", "cross"):
+        p["attn"] = L.attn_param_specs(cfg, n)
+        p["ln_attn"] = L.norm_spec(cfg, n)
+        if cfg.post_attn_norm:
+            p["ln_attn_post"] = L.norm_spec(cfg, n)
+    if kind == "cross":
+        p["xattn"] = L.attn_param_specs(cfg, n)
+        p["ln_xattn"] = L.norm_spec(cfg, n)
+    if kind in ("attn_mlp", "cross"):
+        p["mlp"] = L.mlp_param_specs(cfg, n_layers=n)
+        p["ln_mlp"] = L.norm_spec(cfg, n)
+        if cfg.post_attn_norm:
+            p["ln_mlp_post"] = L.norm_spec(cfg, n)
+    if kind == "attn_moe":
+        p["moe"] = M.moe_param_specs(cfg, n)
+        p["ln_mlp"] = L.norm_spec(cfg, n)
+    if kind == "mamba":
+        p["ssm"] = S.ssm_param_specs(cfg, n)
+        p["ln_ssm"] = L.norm_spec(cfg, n)
+    return {k: v for k, v in p.items() if v is not None}
+
+
+def param_specs(cfg: ModelConfig):
+    D, V = cfg.d_model, cfg.vocab_size
+    p: dict[str, Any] = {
+        # N(0, 1/D): unit-variance stream after the sqrt(D) input scale AND
+        # unit-variance logits under tied readout.
+        "embed": spec((V, D), ("vocab", "embed"), scale=D ** -0.5, init="normal"),
+    }
+    fln = L.norm_spec(cfg)
+    if fln is not None:
+        p["final_norm"] = fln
+    if not cfg.tie_embeddings:
+        p["lm_head"] = spec((D, V), ("embed_in", "vocab"))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.local_global:
+            n = cfg.num_layers // 2
+            p["layers_local"] = _block_specs(cfg, n, "attn_mlp")
+            p["layers_global"] = _block_specs(cfg, n, "attn_mlp")
+        else:
+            p["layers"] = _block_specs(cfg, cfg.num_layers, "attn_mlp")
+        if fam == "vlm":
+            p["vis_proj"] = spec((cfg.vision_embed_dim, D), ("vis_embed", "embed"))
+            p["vis_norm"] = L.norm_spec(cfg) or spec((D,), ("embed",), init="zeros")
+    elif fam == "moe":
+        p["layers"] = _block_specs(cfg, cfg.num_layers, "attn_moe")
+    elif fam == "ssm":
+        p["layers"] = _block_specs(cfg, cfg.num_layers, "mamba")
+    elif fam == "hybrid":
+        per = cfg.hybrid_period
+        n_groups = cfg.num_layers // per
+        tail = cfg.num_layers - n_groups * per
+        p["groups"] = _block_specs(cfg, n_groups * per, "mamba")  # reshaped at use
+        if tail:
+            p["tail"] = _block_specs(cfg, tail, "mamba")
+        # one SHARED transformer block (zamba2) + per-group input adapters
+        p["shared_attn"] = L.attn_param_specs(cfg, layer_axis=False)
+        p["shared_ln"] = L.norm_spec(cfg)  # may be None (nonparam)
+        p["shared_mlp"] = L.mlp_param_specs(cfg, layer_axis=False)
+        p["shared_mlp_ln"] = L.norm_spec(cfg)
+        p["group_adapters"] = spec((n_groups, D, D), ("groups", "embed_in", "embed"),
+                                   scale=0.1)
+        p = {k: v for k, v in p.items() if v is not None}
+    elif fam == "encdec":
+        p["enc_layers"] = _block_specs(cfg, cfg.encoder_layers, "attn_mlp")
+        p["enc_final_norm"] = L.norm_spec(cfg) or spec((D,), ("embed",), init="zeros")
+        p["layers"] = _block_specs(cfg, cfg.num_layers, "cross")
+        p["audio_proj"] = spec((cfg.vision_embed_dim or D, D), ("vis_embed", "embed"))
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# =============================================================================
+# caches
+# =============================================================================
+
+class AttnCache(NamedTuple):
+    k: jax.Array   # [n, B, Sc, KH, dh]
+    v: jax.Array   # [n, B, Sc, KH, dh]
+
+
+@dataclasses.dataclass
+class Cache:
+    """Decode-time state for the whole stack.  ``pos`` is the number of
+    tokens already absorbed (uniform across the batch)."""
+    pos: jax.Array                       # int32 scalar
+    attn: dict[str, AttnCache]           # per stack name
+    ssm: dict[str, S.SSMState]           # per stack name (stacked over layers)
+    cross: Optional[AttnCache] = None    # encdec: precomputed encoder K/V
+
+
+def _attn_cache_spec(cfg: ModelConfig, n: int, B: int, Sc: int, dtype):
+    KH, dh = cfg.num_kv_heads, cfg.head_dim
+    z = jnp.zeros((n, B, Sc, KH, dh), dtype)
+    return AttnCache(k=z, v=z)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Cache:
+    attn: dict[str, AttnCache] = {}
+    ssm: dict[str, S.SSMState] = {}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.local_global:
+            n = cfg.num_layers // 2
+            w = min(cfg.sliding_window or max_seq, max_seq)
+            attn["local"] = _attn_cache_spec(cfg, n, batch, w, dtype)
+            attn["global"] = _attn_cache_spec(cfg, n, batch, max_seq, dtype)
+        else:
+            attn["layers"] = _attn_cache_spec(cfg, cfg.num_layers, batch, max_seq, dtype)
+    elif fam == "moe":
+        attn["layers"] = _attn_cache_spec(cfg, cfg.num_layers, batch, max_seq, dtype)
+    elif fam == "ssm":
+        st = S.ssm_init_state(cfg, batch)
+        ssm["layers"] = S.SSMState(
+            conv=jnp.broadcast_to(st.conv, (cfg.num_layers, *st.conv.shape)),
+            ssm=jnp.broadcast_to(st.ssm, (cfg.num_layers, *st.ssm.shape)),
+        )
+    elif fam == "hybrid":
+        per = cfg.hybrid_period
+        n_groups = cfg.num_layers // per
+        tail = cfg.num_layers - n_groups * per
+        st = S.ssm_init_state(cfg, batch)
+        ssm["groups"] = S.SSMState(
+            conv=jnp.broadcast_to(st.conv, (n_groups * per, *st.conv.shape)),
+            ssm=jnp.broadcast_to(st.ssm, (n_groups * per, *st.ssm.shape)),
+        )
+        if tail:
+            ssm["tail"] = S.SSMState(
+                conv=jnp.broadcast_to(st.conv, (tail, *st.conv.shape)),
+                ssm=jnp.broadcast_to(st.ssm, (tail, *st.ssm.shape)),
+            )
+        attn["shared"] = _attn_cache_spec(cfg, n_groups, batch, max_seq, dtype)
+    elif fam == "encdec":
+        attn["layers"] = _attn_cache_spec(cfg, cfg.num_layers, batch, max_seq, dtype)
+        # cross K/V (overwritten at prefill from the encoder output)
+        cross = _attn_cache_spec(cfg, cfg.num_layers, batch, cfg.encoder_seq, dtype)
+        return Cache(pos=jnp.zeros((), jnp.int32), attn=attn, ssm=ssm, cross=cross)
+    return Cache(pos=jnp.zeros((), jnp.int32), attn=attn, ssm=ssm, cross=None)
+
+
+jax.tree_util.register_dataclass(Cache, ["pos", "attn", "ssm", "cross"], [])
+
+
+# =============================================================================
+# blocks
+# =============================================================================
+
+def _norm(cfg, p, name, x):
+    w = p.get(name) if isinstance(p, dict) else None
+    return L.apply_norm(cfg, x, w)
+
+
+def _attn_train(cfg: ModelConfig, p, x, positions, window, causal=True):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = L.qkv_project(cfg, p, x, positions)
+    o = L.attention(
+        q, k, v, positions, positions,
+        scale=cfg.attn_scale, causal=causal, window=window,
+        softcap=cfg.attn_logit_softcap,
+    )
+    return L.attn_out(p, o, cfg), (k, v)
+
+
+def _dense_block(cfg: ModelConfig, lp, x, positions, window):
+    h = _norm(cfg, lp, "ln_attn", x)
+    a, kv = _attn_train(cfg, lp["attn"], h, positions, window)
+    if cfg.post_attn_norm:
+        a = _norm(cfg, lp, "ln_attn_post", a)
+    x = x + a
+    h = _norm(cfg, lp, "ln_mlp", x)
+    m = L.mlp(cfg, lp["mlp"], h)
+    if cfg.post_attn_norm:
+        m = _norm(cfg, lp, "ln_mlp_post", m)
+    return x + m, kv
+
+
+def _moe_block(cfg: ModelConfig, lp, x, positions):
+    h = _norm(cfg, lp, "ln_attn", x)
+    a, kv = _attn_train(cfg, lp["attn"], h, positions, None)
+    x = x + a
+    h = _norm(cfg, lp, "ln_mlp", x)
+    m, aux = M.moe_mlp(cfg, lp["moe"], h)
+    return x + m, kv, aux
+
+
+def _mamba_block(cfg: ModelConfig, lp, x, return_state: bool = False):
+    h = _norm(cfg, lp, "ln_ssm", x)
+    if return_state:
+        y, st = S.ssd_train(cfg, lp["ssm"], h, return_state=True)
+        return x + y, st
+    return x + S.ssd_train(cfg, lp["ssm"], h)
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat:
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def _scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan over stacked layers, or an unrolled python loop when
+    cfg.scan_layers=False.  Unrolling exists for the roofline dry-run:
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count, so accurate FLOP/byte/collective totals need the unrolled HLO
+    (compile time is depth-proportional; production uses scan)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and jax.tree_util.tree_leaves(ys[0]):
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# =============================================================================
+# full-sequence forward (train / prefill) per family
+# =============================================================================
+
+def _embed_inputs(cfg: ModelConfig, params, batch) -> tuple[jax.Array, jax.Array]:
+    """Token (+frontend) embedding. Returns (x [B,S,D], positions [B,S])."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    if cfg.scale_embeds:  # gemma2 only — other archs use raw embeddings
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    if cfg.family == "vlm":
+        vis = jnp.einsum("bpe,ed->bpd", batch["image_embeds"].astype(x.dtype),
+                         params["vis_proj"])
+        vis = L.apply_norm(cfg, vis, params.get("vis_norm"))
+        x = jnp.concatenate([vis, x], axis=1)
+    B, Sx = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(Sx, dtype=jnp.int32)[None], (B, Sx))
+    return x, positions
+
+
+def _run_encoder(cfg: ModelConfig, params, audio_embeds) -> jax.Array:
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    x = jnp.einsum("bse,ed->bsd", audio_embeds, params["audio_proj"])
+    B, Sa = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(Sa, dtype=jnp.int32)[None], (B, Sa))
+
+    def body(x, lp):
+        def blk(x):
+            h = _norm(cfg, lp, "ln_attn", x)
+            a, _ = _attn_train(cfg, lp["attn"], h, pos, None, causal=False)
+            x = x + a
+            h = _norm(cfg, lp, "ln_mlp", x)
+            return x + L.mlp(cfg, lp["mlp"], h)
+        return _maybe_remat(cfg, blk)(x), None
+
+    x, _ = _scan(cfg, body, x, params["enc_layers"])
+    return L.apply_norm(cfg, x, params.get("enc_final_norm"))
+
+
+def forward(cfg: ModelConfig, params, batch, *, return_cache: bool = False,
+            cache_len: Optional[int] = None):
+    """Full-sequence forward.  train: logits over all positions.
+    prefill (return_cache): also builds the decode cache of ``cache_len``."""
+    x, positions = _embed_inputs(cfg, params, batch)
+    B, Sx, D = x.shape
+    aux = {"moe_lb": jnp.zeros(()), "moe_z": jnp.zeros(())}
+    collected: dict[str, AttnCache] = {}
+    collected_ssm: dict[str, S.SSMState] = {}
+    fam = cfg.family
+    enc_out = None
+
+    if fam in ("dense", "vlm") and cfg.local_global:
+        def body(x, lps):
+            lp_l, lp_g = lps
+            def blk(x):
+                x, kv_l = _dense_block(cfg, lp_l, x, positions, cfg.sliding_window)
+                x, kv_g = _dense_block(cfg, lp_g, x, positions, None)
+                return x, (kv_l, kv_g)
+            return _maybe_remat(cfg, blk)(x)
+
+        x, (kv_l, kv_g) = _scan(
+            cfg, body, x, (params["layers_local"], params["layers_global"]))
+        if return_cache:
+            collected["local"] = AttnCache(*kv_l)
+            collected["global"] = AttnCache(*kv_g)
+    elif fam in ("dense", "vlm"):
+        def body(x, lp):
+            def blk(x):
+                return _dense_block(cfg, lp, x, positions, cfg.sliding_window)
+            return _maybe_remat(cfg, blk)(x)
+        x, kv = _scan(cfg, body, x, params["layers"])
+        if return_cache:
+            collected["layers"] = AttnCache(*kv)
+    elif fam == "moe":
+        def body(carry, lp):
+            x, lb, z = carry
+            def blk(x):
+                return _moe_block(cfg, lp, x, positions)
+            x, kv, a = _maybe_remat(cfg, blk)(x)
+            return (x, lb + a.load_balance_loss, z + a.router_z_loss), kv
+        (x, lb, z), kv = _scan(cfg, body, (x, aux["moe_lb"], aux["moe_z"]),
+                               params["layers"])
+        aux = {"moe_lb": lb / cfg.num_layers, "moe_z": z / cfg.num_layers}
+        if return_cache:
+            collected["layers"] = AttnCache(*kv)
+    elif fam == "ssm":
+        def body(x, lp):
+            if return_cache:
+                return _maybe_remat(cfg, lambda x: _mamba_block(cfg, lp, x, True))(x)
+            return _maybe_remat(cfg, lambda x: _mamba_block(cfg, lp, x))(x), None
+        x, sts = _scan(cfg, body, x, params["layers"])
+        if return_cache:
+            collected_ssm["layers"] = sts
+    elif fam == "hybrid":
+        per = cfg.hybrid_period
+        n_groups = cfg.num_layers // per
+        tail = cfg.num_layers - n_groups * per
+        gp = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, per, *a.shape[1:]), params["groups"])
+
+        def group_body(x, inp):
+            glp, adapter = inp
+
+            def blk(x):
+                def inner(x, lp):
+                    if return_cache:
+                        return _mamba_block(cfg, lp, x, True)
+                    return _mamba_block(cfg, lp, x), None
+                x, g_sts = jax.lax.scan(inner, x, glp)
+                # zamba2 shared transformer block with per-group adapter
+                h = L.apply_norm(cfg, x, params.get("shared_ln"))
+                h = jnp.einsum("bsd,de->bse", h, adapter)
+                a, kv = _attn_train(cfg, params["shared_attn"], h, positions, None)
+                x = x + a
+                h = L.apply_norm(cfg, x, params.get("shared_mlp_ln"))
+                return x + L.mlp(cfg, params["shared_mlp"], h), (kv, g_sts)
+            return _maybe_remat(cfg, blk)(x)
+
+        x, (kv, g_sts) = _scan(cfg, group_body, x, (gp, params["group_adapters"]))
+        if return_cache:
+            collected["shared"] = AttnCache(*kv)
+            collected_ssm["groups"] = jax.tree_util.tree_map(
+                lambda a: a.reshape(n_groups * per, *a.shape[2:]), g_sts)
+        if tail:
+            def body(x, lp):
+                if return_cache:
+                    return _mamba_block(cfg, lp, x, True)
+                return _maybe_remat(cfg, lambda x: _mamba_block(cfg, lp, x))(x), None
+            x, t_sts = _scan(cfg, body, x, params["tail"])
+            if return_cache:
+                collected_ssm["tail"] = t_sts
+    elif fam == "encdec":
+        enc_out = _run_encoder(cfg, params, batch["audio_embeds"])
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None], enc_out.shape[:2])
+
+        def body(x, lp):
+            def blk(x):
+                h = _norm(cfg, lp, "ln_attn", x)
+                a, kv = _attn_train(cfg, lp["attn"], h, positions, None)
+                x = x + a
+                h = _norm(cfg, lp, "ln_xattn", x)
+                # cross attention: q from decoder, K/V from encoder output
+                qx = jnp.einsum("bsd,dhk->bshk", h, lp["xattn"]["wq"])
+                kx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+                vx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+                o = L.attention(qx, kx, vx, positions, enc_pos,
+                                scale=cfg.attn_scale, causal=False)
+                x = x + L.attn_out(lp["xattn"], o, cfg)
+                h = _norm(cfg, lp, "ln_mlp", x)
+                return x + L.mlp(cfg, lp["mlp"], h), (kv, (kx, vx))
+            return _maybe_remat(cfg, blk)(x)
+        x, (kv, kv_cross) = _scan(cfg, body, x, params["layers"])
+        if return_cache:
+            collected["layers"] = AttnCache(*kv)
+            collected["__cross__"] = AttnCache(*kv_cross)
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(cfg, x, params.get("final_norm"))
+    logits = L.final_logits(cfg, params["embed"], params.get("lm_head"), x)
+
+    if not return_cache:
+        return logits, aux
+
+    # ---- build decode cache from collected full-seq K/V --------------------
+    cache = init_cache(cfg, B, cache_len or Sx, dtype=x.dtype)
+    pos = jnp.asarray(Sx, jnp.int32)
+    cross = collected.pop("__cross__", None)
+    for name, kv in collected.items():
+        tgt = cache.attn[name]
+        Sc = tgt.k.shape[2]
+        if Sc >= Sx:
+            new = AttnCache(
+                k=jax.lax.dynamic_update_slice_in_dim(tgt.k, kv.k.astype(tgt.k.dtype), 0, axis=2),
+                v=jax.lax.dynamic_update_slice_in_dim(tgt.v, kv.v.astype(tgt.v.dtype), 0, axis=2),
+            )
+        else:  # ring buffer (local sliding-window layers): keep last Sc
+            slots = (jnp.arange(Sx - Sc, Sx)) % Sc
+            new = AttnCache(
+                k=tgt.k.at[:, :, slots].set(kv.k[:, :, Sx - Sc:].astype(tgt.k.dtype)),
+                v=tgt.v.at[:, :, slots].set(kv.v[:, :, Sx - Sc:].astype(tgt.v.dtype)),
+            )
+        cache.attn[name] = new
+    for name, st in collected_ssm.items():
+        cache.ssm[name] = S.SSMState(conv=st.conv.astype(cache.ssm[name].conv.dtype),
+                                     ssm=st.ssm)
+    cache = dataclasses.replace(cache, pos=pos, cross=cross)
+    return logits, aux, cache
+
+
+# =============================================================================
+# anytime early-exit support (the paper's technique on transformers)
+# =============================================================================
+
+def exit_logits(cfg: ModelConfig, params, batch) -> jax.Array:
+    """Per-layer logit-lens readouts at the final position.
+
+    Returns [L+1, B, V]: entry 0 is the embedding-only readout, entry l
+    the readout after layer l (final norm + unembed applied to the
+    intermediate residual) — the transformer analogue of the paper's
+    inner-node prediction vectors (Sec. III-C).  Supported for the
+    homogeneous-stack families (dense/moe without local_global).
+    """
+    if cfg.family not in ("dense", "moe", "ssm", "vlm") or cfg.local_global:
+        raise NotImplementedError("exit_logits: homogeneous stacks only")
+    x, positions = _embed_inputs(cfg, params, batch)
+
+    def body(x, lp):
+        if cfg.family == "ssm":
+            x = _mamba_block(cfg, lp, x)
+        elif cfg.family == "moe":
+            x, _, _ = _moe_block(cfg, lp, x, positions)
+        else:
+            x, _ = _dense_block(cfg, lp, x, positions, cfg.sliding_window)
+        return x, x[:, -1]
+
+    x_fin, hs = jax.lax.scan(body, x, params["layers"])      # hs: [L, B, D]
+    hs = jnp.concatenate([x[None, :, -1], hs], axis=0)        # [L+1, B, D]
+    hs = L.apply_norm(cfg, hs, params.get("final_norm"))
+    return L.final_logits(cfg, params["embed"], params.get("lm_head"), hs)
+
+
+# =============================================================================
+# decode (one token against the cache)
+# =============================================================================
+
+def _cache_positions(pos: jax.Array, Sc: int, ring: bool) -> jax.Array:
+    """Absolute position held by each cache slot (-1 = empty).
+
+    Linear cache: slot i holds position i, valid iff i <= pos (the current
+    token was just written at slot pos).  Ring cache of width Sc: slot i
+    holds the largest p <= pos with p == i (mod Sc)."""
+    i = jnp.arange(Sc, dtype=jnp.int32)
+    if not ring:
+        return jnp.where(i <= pos, i, -1)
+    p = pos - ((pos - i) % Sc)
+    return jnp.where(p >= 0, p, -1)
+
+
+def _attn_decode(cfg: ModelConfig, p, x, kc, vc, pos, window):
+    """One-token attention against one layer's cache slice.
+
+    x: [B, 1, D]; kc/vc: [B, Sc, KH, dh]. Returns (out, new kc, new vc)."""
+    B = x.shape[0]
+    Sc = kc.shape[1]
+    pos_b = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k, v = L.qkv_project(cfg, p, x, pos_b)
+    ring = window is not None and Sc <= window
+    slot = (pos % Sc) if ring else pos
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
+    kpos = jnp.broadcast_to(_cache_positions(pos, Sc, ring)[None], (B, Sc))
+    o = L.decode_attention(
+        q, kc, vc, kpos, jnp.broadcast_to(pos[None], (B,)),
+        scale=cfg.attn_scale, window=window, softcap=cfg.attn_logit_softcap,
+    )
+    return L.attn_out(p, o, cfg), kc, vc
+
+
+def decode_step(cfg: ModelConfig, params, cache: Cache, tokens: jax.Array):
+    """tokens: [B, 1] -> (logits [B, 1, V], updated Cache)."""
+    pos = cache.pos
+    x = params["embed"][tokens]
+    if cfg.scale_embeds:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    B = x.shape[0]
+    pos_b = jnp.broadcast_to(pos[None, None], (B, 1))
+    fam = cfg.family
+    new_attn = dict(cache.attn)
+    new_ssm = dict(cache.ssm)
+
+    if fam in ("dense", "vlm") and cfg.local_global:
+        lc, gc = cache.attn["local"], cache.attn["global"]
+
+        def body(x, inp):
+            lp_l, lp_g, kl, vl, kg, vg = inp
+            h = _norm(cfg, lp_l, "ln_attn", x)
+            a, kl, vl = _attn_decode(cfg, lp_l["attn"], h, kl, vl, pos,
+                                     cfg.sliding_window)
+            if cfg.post_attn_norm:
+                a = _norm(cfg, lp_l, "ln_attn_post", a)
+            x = x + a
+            h = _norm(cfg, lp_l, "ln_mlp", x)
+            m = L.mlp(cfg, lp_l["mlp"], h)
+            if cfg.post_attn_norm:
+                m = _norm(cfg, lp_l, "ln_mlp_post", m)
+            x = x + m
+            h = _norm(cfg, lp_g, "ln_attn", x)
+            a, kg, vg = _attn_decode(cfg, lp_g["attn"], h, kg, vg, pos, None)
+            if cfg.post_attn_norm:
+                a = _norm(cfg, lp_g, "ln_attn_post", a)
+            x = x + a
+            h = _norm(cfg, lp_g, "ln_mlp", x)
+            m = L.mlp(cfg, lp_g["mlp"], h)
+            if cfg.post_attn_norm:
+                m = _norm(cfg, lp_g, "ln_mlp_post", m)
+            return x + m, (kl, vl, kg, vg)
+
+        x, (kl, vl, kg, vg) = _scan(
+            cfg, body, x,
+            (params["layers_local"], params["layers_global"], lc.k, lc.v, gc.k, gc.v))
+        new_attn["local"] = AttnCache(kl, vl)
+        new_attn["global"] = AttnCache(kg, vg)
+    elif fam in ("dense", "vlm", "moe", "encdec"):
+        c = cache.attn["layers"]
+        window = cfg.sliding_window
+
+        def body(x, inp):
+            lp, kc, vc = inp
+            h = _norm(cfg, lp, "ln_attn", x)
+            a, kc, vc = _attn_decode(cfg, lp["attn"], h, kc, vc, pos, window)
+            x = x + a
+            if fam == "moe":
+                h = _norm(cfg, lp, "ln_mlp", x)
+                m, _ = M.moe_mlp(cfg, lp["moe"], h)
+                x = x + m
+            elif fam == "encdec":
+                hx = _norm(cfg, lp, "ln_xattn", x)
+                qx = jnp.einsum("bsd,dhk->bshk", hx, lp["xattn"]["wq"])
+                kx, vx = lp["__cross_k"], lp["__cross_v"]
+                Sa = kx.shape[1]
+                kpos = jnp.broadcast_to(jnp.arange(Sa, dtype=jnp.int32)[None], (B, Sa))
+                o = L.decode_attention(qx, kx, vx, kpos,
+                                       jnp.full((B,), Sa, jnp.int32),
+                                       scale=cfg.attn_scale, window=None,
+                                       softcap=cfg.attn_logit_softcap)
+                x = x + L.attn_out(lp["xattn"], o, cfg)
+                h = _norm(cfg, lp, "ln_mlp", x)
+                x = x + L.mlp(cfg, lp["mlp"], h)
+            else:
+                h = _norm(cfg, lp, "ln_mlp", x)
+                m = L.mlp(cfg, lp["mlp"], h)
+                if cfg.post_attn_norm:
+                    m = _norm(cfg, lp, "ln_mlp_post", m)
+                x = x + m
+            return x, (kc, vc)
+
+        lp_in = dict(params["layers"])
+        if fam == "encdec":
+            lp_in["__cross_k"] = cache.cross.k
+            lp_in["__cross_v"] = cache.cross.v
+        x, (kc, vc) = _scan(cfg, body, x, (lp_in, c.k, c.v))
+        new_attn["layers"] = AttnCache(kc, vc)
+    elif fam == "ssm":
+        st = cache.ssm["layers"]
+
+        def body(x, inp):
+            lp, conv, s = inp
+            h = _norm(cfg, lp, "ln_ssm", x)
+            y, ns = S.ssd_decode(cfg, lp["ssm"], h, S.SSMState(conv, s))
+            return x + y, (ns.conv, ns.ssm)
+
+        x, (conv, s) = _scan(cfg, body, x, (params["layers"], st.conv, st.ssm))
+        new_ssm["layers"] = S.SSMState(conv, s)
+    elif fam == "hybrid":
+        per = cfg.hybrid_period
+        n_groups = cfg.num_layers // per
+        tail = cfg.num_layers - n_groups * per
+        st = cache.ssm["groups"]
+        sh = cache.attn["shared"]
+        gp = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, per, *a.shape[1:]), params["groups"])
+        gst = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, per, *a.shape[1:]), st)
+
+        def group_body(x, inp):
+            glp, gconv, gssm, adapter, kc, vc = inp
+
+            def inner(x, lpst):
+                lp, conv, s = lpst
+                h = _norm(cfg, lp, "ln_ssm", x)
+                y, ns = S.ssd_decode(cfg, lp["ssm"], h, S.SSMState(conv, s))
+                return x + y, (ns.conv, ns.ssm)
+
+            x, (nconv, nssm) = jax.lax.scan(inner, x, (glp, gconv, gssm))
+            h = L.apply_norm(cfg, x, params.get("shared_ln"))
+            h = jnp.einsum("bsd,de->bse", h, adapter)
+            a, kc, vc = _attn_decode(cfg, params["shared_attn"], h, kc, vc, pos, None)
+            x = x + a
+            h = L.apply_norm(cfg, x, params.get("shared_mlp_ln"))
+            x = x + L.mlp(cfg, params["shared_mlp"], h)
+            return x, (nconv, nssm, kc, vc)
+
+        x, (nconv, nssm, kc, vc) = _scan(
+            cfg, group_body, x, (gp, gst.conv, gst.ssm, params["group_adapters"], sh.k, sh.v))
+        new_ssm["groups"] = S.SSMState(
+            conv=nconv.reshape(n_groups * per, *nconv.shape[2:]),
+            ssm=nssm.reshape(n_groups * per, *nssm.shape[2:]))
+        new_attn["shared"] = AttnCache(kc, vc)
+        if tail:
+            tst = cache.ssm["tail"]
+
+            def body(x, inp):
+                lp, conv, s = inp
+                h = _norm(cfg, lp, "ln_ssm", x)
+                y, ns = S.ssd_decode(cfg, lp["ssm"], h, S.SSMState(conv, s))
+                return x + y, (ns.conv, ns.ssm)
+
+            x, (conv, s) = _scan(cfg, body, x, (params["tail"], tst.conv, tst.ssm))
+            new_ssm["tail"] = S.SSMState(conv, s)
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(cfg, x, params.get("final_norm"))
+    logits = L.final_logits(cfg, params["embed"], params.get("lm_head"), x)
+    new_cache = Cache(pos=pos + 1, attn=new_attn, ssm=new_ssm, cross=cache.cross)
+    return logits, new_cache

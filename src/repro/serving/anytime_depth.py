@@ -1,0 +1,167 @@
+"""Anytime-depth transformer inference — the paper's scheduling idea
+generalized beyond random forests.
+
+Mapping (DESIGN.md §Arch-applicability):
+
+  tree            <-> one model of an ensemble (or one layer-group)
+  step in a tree  <-> executing one more layer of that model
+  inner-node prediction vector <-> logit-lens early-exit readout
+                                   (final norm + unembed on the
+                                   intermediate residual)
+  ordering set S_o <-> calibration batch of next-token examples
+
+Under the same uniform-abort-time assumption, the Optimal / Squirrel
+machinery from repro.core.orders applies VERBATIM to the resulting
+quality table: a *step order* decides which ensemble member advances one
+layer next, and at abort the current exit readouts of all members are
+summed — "jumping like a squirrel" between models instead of trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import orders
+from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class EnsembleMember:
+    cfg: ModelConfig
+    params: dict
+
+
+def quality_table(members: Sequence[EnsembleMember], batch: dict,
+                  labels: np.ndarray, top_v: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Build the [B, U, L+1, V] per-state contribution table on a
+    calibration batch — the transformer analogue of engine.path_probs.
+
+    All members must share L (pad shorter members by repeating their
+    final readout, i.e. extra steps are no-ops, like leaf self-loops).
+    """
+    tables = []
+    Lmax = max(m.cfg.num_layers for m in members)
+    for m in members:
+        el = T.exit_logits(m.cfg, m.params, batch)            # [L+1, B, V]
+        el = jax.nn.log_softmax(el.astype(jnp.float32), axis=-1)
+        if m.cfg.num_layers < Lmax:                            # leaf self-loop padding
+            pad = jnp.repeat(el[-1:], Lmax - m.cfg.num_layers, axis=0)
+            el = jnp.concatenate([el, pad], axis=0)
+        tables.append(np.asarray(jnp.transpose(el, (1, 0, 2))))  # [B, L+1, V]
+    pp = np.stack(tables, axis=1)                               # [B, U, L+1, V]
+    if top_v:
+        # restrict to the most frequent label classes to bound the table
+        keep = np.argsort(-np.bincount(labels, minlength=pp.shape[-1]))[:top_v]
+        remap = {int(c): i for i, c in enumerate(keep)}
+        mask = np.isin(labels, keep)
+        pp = pp[mask][..., keep]
+        labels = np.asarray([remap[int(l)] for l in labels[mask]])
+    return pp, labels
+
+
+def generate_depth_order(members: Sequence[EnsembleMember], calib_batch: dict,
+                         labels: np.ndarray, name: str = "backward_squirrel",
+                         top_v: int = 64) -> np.ndarray:
+    """Step order over (member, layer) units via the core generators."""
+    pp, y = quality_table(members, calib_batch, labels, top_v=top_v)
+    ev = orders.StateEvaluator(pp, y)
+    if name == "backward_squirrel":
+        return orders.backward_squirrel(ev)
+    if name == "forward_squirrel":
+        return orders.forward_squirrel(ev)
+    if name == "optimal":
+        return orders.optimal_order(ev)
+    if name == "depth":
+        return orders.depth_order(ev.T, ev.depth)
+    if name == "breadth":
+        return orders.breadth_order(ev.T, ev.depth)
+    raise ValueError(name)
+
+
+class AnytimeEnsembleSession:
+    """Interruptible ensemble inference following a generated step order.
+
+    Each ``advance(k)`` runs k more layer-steps; ``predict()`` sums the
+    current exit readouts — a valid prediction after ANY prefix, exactly
+    like the forest index-array engine of Sec. V.
+    """
+
+    def __init__(self, members: Sequence[EnsembleMember], order: np.ndarray,
+                 batch: dict):
+        self.members = list(members)
+        self.order = np.asarray(order)
+        self.batch = batch
+        x0 = []
+        self._readout = []
+        for m in self.members:
+            x, positions = T._embed_inputs(m.cfg, m.params, batch)
+            x0.append(x)
+            self._readout.append(self._make_readout(m))
+        self.hidden = x0                       # residual stream per member
+        self.depth = [0] * len(self.members)
+        self.positions = [
+            T._embed_inputs(m.cfg, m.params, batch)[1] for m in self.members
+        ]
+        self.pos = 0
+
+    @staticmethod
+    def _make_readout(m: EnsembleMember):
+        def ro(x):
+            h = T.L.apply_norm(m.cfg, x[:, -1:], m.params.get("final_norm"))
+            return T.L.final_logits(m.cfg, m.params["embed"],
+                                    m.params.get("lm_head"), h)[:, 0]
+        return jax.jit(ro)
+
+    def _layer(self, u: int, l: int):
+        m = self.members[u]
+        lp = jax.tree_util.tree_map(lambda a: a[l], m.params["layers"])
+        if m.cfg.family == "ssm":
+            self.hidden[u] = T._mamba_block(m.cfg, lp, self.hidden[u])
+        elif m.cfg.family == "moe":
+            self.hidden[u], _, _ = T._moe_block(m.cfg, lp, self.hidden[u],
+                                                self.positions[u])
+        else:
+            self.hidden[u], _ = T._dense_block(m.cfg, lp, self.hidden[u],
+                                               self.positions[u],
+                                               m.cfg.sliding_window)
+
+    @property
+    def total_steps(self) -> int:
+        return len(self.order)
+
+    def advance(self, k: int) -> int:
+        k = min(k, self.total_steps - self.pos)
+        for _ in range(k):
+            u = int(self.order[self.pos])
+            if self.depth[u] < self.members[u].cfg.num_layers:
+                self._layer(u, self.depth[u])   # no-op past final layer
+            self.depth[u] += 1
+            self.pos += 1
+        return k
+
+    def predict_logprobs(self) -> np.ndarray:
+        acc = None
+        for u, m in enumerate(self.members):
+            lp = jax.nn.log_softmax(
+                self._readout[u](self.hidden[u]).astype(jnp.float32), axis=-1)
+            acc = lp if acc is None else acc + lp
+        return np.asarray(acc)
+
+    def predict(self) -> np.ndarray:
+        return self.predict_logprobs().argmax(axis=-1)
+
+
+def accuracy_curve(members, order, batch, labels) -> np.ndarray:
+    """Next-token accuracy after every step prefix (evaluation helper)."""
+    sess = AnytimeEnsembleSession(members, order, batch)
+    curve = [float(np.mean(sess.predict() == labels))]
+    for _ in range(sess.total_steps):
+        sess.advance(1)
+        curve.append(float(np.mean(sess.predict() == labels)))
+    return np.asarray(curve)

@@ -1,0 +1,150 @@
+"""Serving runtime: sharded prefill + decode step builders and a simple
+batched generation loop.
+
+``make_serve_fns`` produces the jit'd entry points the multi-pod dry-run
+lowers for the prefill/decode input shapes, with cache shardings chosen
+per shape: batch-parallel when global_batch covers the data axes,
+context-parallel (cache length sharded over "data") for long_500k-style
+single-sequence decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import SHAPES, InputShape
+from repro.launch import mesh as mesh_lib
+from repro.models import model as MD
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.params import shardings_for
+
+
+def _axis_ok(mesh: Mesh, axis: str, dim: int) -> Optional[str]:
+    return axis if axis in mesh.axis_names and dim % mesh.shape[axis] == 0 else None
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
+                    context_parallel: bool):
+    """NamedSharding pytree matching init_cache's structure.
+
+    attn k/v [n, B, Sc, KH, dh]: batch over ("pod","data") normally; for
+    context-parallel decode the cache length Sc is sharded over "data"
+    instead.  KV heads shard over "model" when divisible & enabled.
+    ssm     [n, B, H, dh, N]: heads over "model".
+    conv    [n, B, W-1, Ch]:  channels over "model"."""
+    cache_like = jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, seq, dtype=jnp.bfloat16))
+    baxes = mesh_lib.batch_axes(mesh)
+    bshard = baxes if batch % int(np.prod([mesh.shape[a] for a in baxes])) == 0 else None
+    kv_ax = _axis_ok(mesh, "model", cfg.num_kv_heads) if cfg.shard_kv_heads else None
+
+    def mk(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+        spath = "/".join(names)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if "ssm" in spath and leaf.ndim == 5:       # [n,B,H,dh,N]
+            h_ax = _axis_ok(mesh, "model", leaf.shape[2])
+            return NamedSharding(mesh, P(None, bshard, h_ax, None, None))
+        if "ssm" in spath and leaf.ndim == 4:       # conv [n,B,W-1,Ch]
+            c_ax = _axis_ok(mesh, "model", leaf.shape[3])
+            return NamedSharding(mesh, P(None, bshard, None, c_ax))
+        if leaf.ndim == 5:                          # attn kv [n,B,Sc,KH,dh]
+            if context_parallel:
+                seq_ax = _axis_ok(mesh, "data", leaf.shape[2])
+                return NamedSharding(mesh, P(None, None, seq_ax, kv_ax, None))
+            return NamedSharding(mesh, P(None, bshard, None, kv_ax, None))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_like)
+    return jax.tree_util.tree_unflatten(treedef, [mk(p, l) for p, l in flat])
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int, shardings=None):
+    """ShapeDtypeStruct cache for dry-run decode lowering."""
+    cache_like = jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, seq, dtype=jnp.bfloat16))
+    if shardings is None:
+        return cache_like
+    return jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        cache_like, shardings)
+
+
+def prefill_fn(cfg: ModelConfig, cache_len: Optional[int] = None):
+    def prefill(params, batch):
+        logits, aux, cache = T.forward(cfg, params, batch, return_cache=True,
+                                       cache_len=cache_len)
+        return logits[:, -1:], cache
+    return prefill
+
+
+def decode_fn(cfg: ModelConfig):
+    def decode(params, cache, tokens):
+        return T.decode_step(cfg, params, cache, tokens)
+    return decode
+
+
+def make_serve_fns(cfg: ModelConfig, mesh: Mesh, shape: InputShape | str,
+                   donate_cache: bool = True):
+    """(jitted_prefill, jitted_decode, shardings dict) for one input shape."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    specs = MD.build_param_specs(cfg)
+    p_sh = shardings_for(specs, mesh, cfg.sharding_profile, cfg.shard_kv_heads)
+    baxes = mesh_lib.batch_axes(mesh)
+    ctx_par = B < int(np.prod([mesh.shape[a] for a in baxes]))
+    c_sh = cache_shardings(cfg, mesh, B, S, ctx_par)
+    bp = P(baxes) if not ctx_par else P()
+    tok_sh = NamedSharding(mesh, bp)
+
+    in_b = {k: NamedSharding(mesh, P(*(tuple(bp) + (None,) * (len(v.shape) - 1))))
+            for k, v in MD.input_specs(cfg, shape).items()}
+
+    jit_prefill = jax.jit(
+        prefill_fn(cfg, cache_len=S),
+        in_shardings=(p_sh, in_b),
+        out_shardings=(NamedSharding(mesh, bp), c_sh),
+    )
+    jit_decode = jax.jit(
+        decode_fn(cfg),
+        in_shardings=(p_sh, c_sh, tok_sh),
+        out_shardings=(NamedSharding(mesh, bp), c_sh),
+        donate_argnums=(1,) if donate_cache else (),
+    )
+    return jit_prefill, jit_decode, {"params": p_sh, "cache": c_sh, "batch": in_b}
+
+
+def generate(cfg: ModelConfig, params, tokens: jax.Array, max_new_tokens: int,
+             *, extra_inputs: Optional[dict[str, Any]] = None,
+             temperature: float = 0.0, seed: int = 0) -> jax.Array:
+    """Greedy/sampled generation on the host mesh (examples, tests)."""
+    B, S = tokens.shape
+    batch = {"tokens": tokens}
+    if extra_inputs:
+        batch.update(extra_inputs)
+    logits, _, cache = T.forward(cfg, params, batch, return_cache=True,
+                                 cache_len=S + max_new_tokens +
+                                 (cfg.num_patches if cfg.family == "vlm" else 0))
+    key = jax.random.PRNGKey(seed)
+    out = [tokens]
+    last = logits[:, -1]
+    decode = jax.jit(functools.partial(T.decode_step, cfg))
+    for _ in range(max_new_tokens):
+        if temperature > 0:
+            key, k = jax.random.split(key)
+            nxt = jax.random.categorical(k, last / temperature, axis=-1)[:, None]
+        else:
+            nxt = jnp.argmax(last, axis=-1)[:, None]
+        out.append(nxt.astype(tokens.dtype))
+        logits_d, cache = decode(params, cache, nxt.astype(jnp.int32))
+        last = logits_d[:, -1]
+    return jnp.concatenate(out, axis=1)

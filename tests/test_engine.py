@@ -1,0 +1,106 @@
+"""Anytime execution engine: jnp engine vs numpy reference semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, orders
+from repro.forest import train_forest
+
+
+def _forest(n=400, f=8, c=4, trees=5, depth=4, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, f)).astype(np.float32)
+    w = rng.normal(size=(f, c))
+    y = np.argmax(X @ w, axis=1).astype(np.int64)
+    rf = train_forest(X, y, c, n_trees=trees, max_depth=depth, seed=seed)
+    return rf, X, y
+
+
+def test_full_execution_matches_standard_forest():
+    """After ALL steps, the anytime prediction == classic leaf-sum forest."""
+    rf, X, y = _forest()
+    fa = rf.as_arrays()
+    dev = engine.to_device(fa)
+    order = orders.depth_order(fa.n_trees, fa.max_depth)
+    idx, _ = engine.run_order(dev, jnp.asarray(X), jnp.asarray(order))
+    anytime_probs = np.asarray(engine.predict_from_state(dev, idx))
+    classic = rf.predict_proba(X) * rf.n_trees
+    assert np.allclose(anytime_probs, classic, atol=1e-4)
+
+
+def test_order_permutation_invariance_of_final_state():
+    """ANY valid order reaches the same final state (the design-space
+    freedom the paper exploits)."""
+    rf, X, y = _forest(trees=4, depth=3)
+    fa = rf.as_arrays()
+    dev = engine.to_device(fa)
+    finals = []
+    for seed in range(3):
+        order = orders.random_order(fa.n_trees, fa.max_depth, seed=seed)
+        idx, _ = engine.run_order(dev, jnp.asarray(X), jnp.asarray(order))
+        finals.append(np.asarray(idx))
+    assert (finals[0] == finals[1]).all() and (finals[1] == finals[2]).all()
+
+
+def test_leaf_self_loop():
+    """Stepping a tree already at a leaf is a no-op."""
+    rf, X, y = _forest(trees=2, depth=2)
+    fa = rf.as_arrays()
+    dev = engine.to_device(fa)
+    X_d = jnp.asarray(X)
+    idx = engine.init_state(dev, X.shape[0])
+    for _ in range(fa.max_depth + 3):  # overshoot
+        idx = engine.tree_step(dev, X_d, idx, 0)
+    idx2 = engine.tree_step(dev, X_d, idx, 0)
+    assert (np.asarray(idx) == np.asarray(idx2)).all()
+
+
+def test_paths_consistent_with_stepping():
+    rf, X, y = _forest(trees=3, depth=3)
+    fa = rf.as_arrays()
+    dev = engine.to_device(fa)
+    X_d = jnp.asarray(X)
+    paths = np.asarray(engine.compute_paths(dev, X_d, fa.max_depth))
+    idx = engine.init_state(dev, X.shape[0])
+    for d in range(fa.max_depth + 1):
+        assert (np.asarray(idx) == paths[:, :, d]).all()
+        if d < fa.max_depth:
+            for t in range(fa.n_trees):
+                idx = engine.tree_step(dev, X_d, idx, t)
+
+
+def test_accuracy_curve_matches_state_evaluator():
+    """run_order's curve must equal StateEvaluator accuracies along the
+    same trajectory (engine vs order-generator consistency)."""
+    rf, X, y = _forest(trees=3, depth=3)
+    fa = rf.as_arrays()
+    dev = engine.to_device(fa)
+    pp = engine.path_probs_np(fa, X)
+    ev = orders.StateEvaluator(pp, y)
+    order = orders.random_order(fa.n_trees, fa.max_depth, seed=7)
+    _, curve = engine.run_order(dev, jnp.asarray(X), jnp.asarray(order), jnp.asarray(y))
+    curve = np.asarray(curve)
+    state = np.zeros(fa.n_trees, dtype=np.int64)
+    assert curve[0] == pytest.approx(ev.accuracy(state), abs=1e-6)
+    for k, t in enumerate(order):
+        state[t] += 1
+        assert curve[k + 1] == pytest.approx(ev.accuracy(state), abs=1e-6), k
+
+
+def test_session_prefix_equals_run_order():
+    from repro.core import AnytimeForest
+    rf, X, y = _forest(trees=4, depth=3)
+    fa = rf.as_arrays()
+    order = orders.random_order(fa.n_trees, fa.max_depth, seed=1)
+    af = AnytimeForest(fa, order)
+    sess = af.session(X)
+    sess.advance(5)
+    # manual: run first 5 steps
+    dev = engine.to_device(fa)
+    idx = engine.init_state(dev, X.shape[0])
+    for t in order[:5]:
+        idx = engine.tree_step(dev, jnp.asarray(X), idx, int(t))
+    assert (np.asarray(sess.idx) == np.asarray(idx)).all()
+    # abort-time prediction is well-formed
+    pred = sess.predict()
+    assert pred.shape == (X.shape[0],)

@@ -1,0 +1,102 @@
+"""CART / random-forest substrate invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.forest import make_dataset, split_dataset, train_forest
+from repro.forest.cart import train_tree
+
+
+def _toy(n=300, f=6, c=3, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, f)).astype(np.float32)
+    w = rng.normal(size=(f, c))
+    y = np.argmax(X @ w + 0.1 * rng.normal(size=(n, c)), axis=1)
+    return X, y.astype(np.int64)
+
+
+def test_tree_probs_are_distributions():
+    X, y = _toy()
+    t = train_tree(X, y, 3, max_depth=5, rng=np.random.default_rng(0))
+    assert np.allclose(t.probs.sum(axis=1), 1.0, atol=1e-5)
+    assert (t.probs >= 0).all()
+
+
+def test_tree_perfectly_fits_separable_data():
+    # one feature cleanly separates two classes
+    X = np.zeros((100, 3), dtype=np.float32)
+    X[:, 1] = np.linspace(-1, 1, 100)
+    y = (X[:, 1] > 0.0).astype(np.int64)
+    t = train_tree(X, y, 2, max_depth=3, rng=np.random.default_rng(0))
+    pred = t.predict_proba(X).argmax(axis=1)
+    assert (pred == y).all()
+
+
+def test_tree_depth_limit_respected():
+    X, y = _toy()
+    for d in (1, 2, 4):
+        t = train_tree(X, y, 3, max_depth=d, rng=np.random.default_rng(0))
+        assert t.depth.max() <= d
+
+
+def test_deeper_prediction_no_worse_on_train():
+    """The paper's premise: per-step refinement improves (train-set) fit."""
+    X, y = _toy(seed=1)
+    t = train_tree(X, y, 3, max_depth=6, rng=np.random.default_rng(0))
+    accs = [(t.predict_proba(X, depth_limit=d).argmax(1) == y).mean()
+            for d in range(7)]
+    assert accs[-1] >= accs[0]
+    assert accs[-1] > 0.9
+
+
+def test_forest_beats_single_tree():
+    X, y = _toy(n=600, seed=2)
+    (tr, ytr), _, (te, yte) = split_dataset(X, y, seed=0)
+    rf1 = train_forest(tr, ytr, 3, n_trees=1, max_depth=4, seed=0)
+    rf9 = train_forest(tr, ytr, 3, n_trees=9, max_depth=4, seed=0)
+    a1 = (rf1.predict(te) == yte).mean()
+    a9 = (rf9.predict(te) == yte).mean()
+    assert a9 >= a1 - 0.02  # ensembling should not hurt
+
+
+def test_forest_arrays_padding_is_inert():
+    X, y = _toy()
+    rf = train_forest(X, y, 3, n_trees=4, max_depth=4, seed=0)
+    fa = rf.as_arrays()
+    # padded slots are self-looping leaves
+    T, M = fa.feature.shape
+    for t, tree in enumerate(rf.trees):
+        m = tree.n_nodes
+        assert (fa.left[t, m:] == np.arange(m, M)).all()
+        assert fa.is_leaf[t, m:].all()
+
+
+def test_dataset_registry_shapes():
+    from repro.forest.data import DATASETS
+    for name, spec in DATASETS.items():
+        X, y = make_dataset(name, seed=0)
+        assert X.shape == (spec.n_samples, spec.n_features)
+        assert y.min() >= 0 and y.max() < spec.n_classes
+        # every class present
+        assert len(np.unique(y)) == spec.n_classes
+
+
+def test_dataset_learnable():
+    X, y = make_dataset("letter", seed=0)
+    (tr, ytr), _, (te, yte) = split_dataset(X, y, seed=0)
+    rf = train_forest(tr, ytr, 26, n_trees=10, max_depth=10, seed=0)
+    acc = (rf.predict(te) == yte).mean()
+    assert acc > 3.0 / 26  # far above chance
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_trees=st.integers(1, 5), depth=st.integers(1, 4), seed=st.integers(0, 100))
+def test_forest_probs_valid_under_hypothesis(n_trees, depth, seed):
+    X, y = _toy(n=120, seed=seed)
+    rf = train_forest(X, y, 3, n_trees=n_trees, max_depth=depth, seed=seed)
+    fa = rf.as_arrays()
+    assert np.allclose(fa.probs.sum(axis=2), 1.0, atol=1e-4)
+    assert fa.max_depth == depth
+    # children stay in range
+    assert (fa.left >= 0).all() and (fa.left < fa.n_nodes).all()
+    assert (fa.right >= 0).all() and (fa.right < fa.n_nodes).all()

@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine
+from repro.forest import train_forest
+from repro.kernels import ops, ref
+
+
+def _rand_tree_tables(rng, M, F):
+    feature = jnp.asarray(rng.integers(0, F, size=M), jnp.int32)
+    threshold = jnp.asarray(rng.normal(size=M), jnp.float32)
+    left = jnp.asarray(rng.integers(0, M, size=M), jnp.int32)
+    right = jnp.asarray(rng.integers(0, M, size=M), jnp.int32)
+    is_leaf = jnp.asarray(rng.random(M) < 0.3)
+    return feature, threshold, left, right, is_leaf
+
+
+@pytest.mark.parametrize("B,F,M", [(16, 4, 8), (100, 14, 31), (257, 8, 1000),
+                                   (64, 128, 513)])
+@pytest.mark.parametrize("block_b,block_m", [(32, 16), (256, 512)])
+def test_forest_step_matches_ref(B, F, M, block_b, block_m):
+    rng = np.random.default_rng(B * M)
+    idx = jnp.asarray(rng.integers(0, M, size=B), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    tables = _rand_tree_tables(rng, M, F)
+    out = ops.forest_step(idx, X, *tables, block_b=block_b, block_m=block_m)
+    exp = ref.forest_step_ref(idx, X, *tables)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("B,T,M,C", [(16, 2, 8, 2), (100, 5, 31, 7),
+                                     (64, 3, 200, 26), (33, 10, 17, 11)])
+@pytest.mark.parametrize("block_b,block_m", [(32, 16), (256, 512)])
+def test_prob_accum_matches_ref(B, T, M, C, block_b, block_m):
+    rng = np.random.default_rng(B + T + M + C)
+    idx = jnp.asarray(rng.integers(0, M, size=(B, T)), jnp.int32)
+    probs = jnp.asarray(rng.random((T, M, C)), jnp.float32)
+    out = ops.prob_accum(idx, probs, block_b=block_b, block_m=block_m)
+    exp = ref.prob_accum_ref(idx, probs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prob_accum_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 16, size=(32, 3)), jnp.int32)
+    probs = jnp.asarray(rng.random((3, 16, 5)), dtype)
+    out = ops.prob_accum(idx, probs, block_b=16, block_m=8)
+    exp = ref.prob_accum_ref(idx, probs.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_kernel_step_equals_engine_on_real_forest():
+    """End-to-end: kernel stepping reproduces the engine on a trained forest."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(200, 6)).astype(np.float32)
+    y = (X[:, 0] + X[:, 1] > 0).astype(np.int64)
+    rf = train_forest(X, y, 2, n_trees=3, max_depth=4, seed=0)
+    fa = rf.as_arrays()
+    dev = engine.to_device(fa)
+    X_d = jnp.asarray(X)
+    idx_engine = engine.init_state(dev, X.shape[0])
+    idx_kernel = np.zeros((X.shape[0], fa.n_trees), dtype=np.int32)
+    for t in [0, 1, 2, 0, 1, 2, 2, 1, 0, 0, 1, 2]:
+        idx_engine = engine.tree_step(dev, X_d, idx_engine, t)
+        new_col = ops.forest_step(
+            jnp.asarray(idx_kernel[:, t]), X_d,
+            dev.feature[t], dev.threshold[t], dev.left[t], dev.right[t],
+            dev.is_leaf[t], block_b=64, block_m=16)
+        idx_kernel[:, t] = np.asarray(new_col)
+    np.testing.assert_array_equal(idx_kernel, np.asarray(idx_engine))
+    # read-out parity
+    probs_kernel = ops.prob_accum(jnp.asarray(idx_kernel), dev.probs,
+                                  block_b=64, block_m=16)
+    probs_engine = engine.predict_from_state(dev, idx_engine)
+    np.testing.assert_allclose(np.asarray(probs_kernel),
+                               np.asarray(probs_engine), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 70), M=st.integers(2, 90), T=st.integers(1, 6),
+       C=st.integers(2, 12), seed=st.integers(0, 1000))
+def test_prob_accum_hypothesis(B, M, T, C, seed):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, M, size=(B, T)), jnp.int32)
+    probs = jnp.asarray(rng.random((T, M, C)), jnp.float32)
+    out = ops.prob_accum(idx, probs, block_b=32, block_m=32)
+    exp = ref.prob_accum_ref(idx, probs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)

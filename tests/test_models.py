@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests (task deliverable f).
+
+Each assigned arch: instantiate the REDUCED variant (<=2 layers,
+d_model<=512, <=4 experts), run one forward + one train step on CPU,
+assert output shapes and no NaNs; decode-capable archs also run one
+serve (prefill + decode) step.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, transformer_arch_ids
+from repro.configs.shapes import InputShape
+from repro.models import model as MD
+from repro.models import transformer as T
+from repro.training import optimizer as opt_lib
+from repro.training.train import train_step_fn
+
+ARCHS = transformer_arch_ids()
+KEY = jax.random.PRNGKey(0)
+SMOKE = InputShape("smoke", 32, 2, "train")
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch, reduced=True)
+        out[arch] = (cfg, MD.init(cfg, KEY))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(built, arch):
+    cfg, params = built[arch]
+    batch = MD.make_batch(cfg, SMOKE, KEY)
+    logits, aux = T.forward(cfg, params, batch)
+    S_expect = batch["tokens"].shape[1] + (cfg.num_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (SMOKE.global_batch, S_expect, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_updates_and_finite(built, arch):
+    cfg, params = built[arch]
+    batch = MD.make_batch(cfg, SMOKE, KEY)
+    ocfg = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    step = train_step_fn(cfg, ocfg)
+    opt = opt_lib.init_state(params)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(new_opt.step) == 1
+    # at least one leaf changed
+    changed = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(new_params)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_step_shapes(built, arch):
+    cfg, params = built[arch]
+    shp = InputShape("smoke_prefill", 16, 2, "prefill")
+    batch = MD.make_batch(cfg, shp, KEY)
+    logits, _, cache = T.forward(cfg, params, batch, return_cache=True,
+                                 cache_len=24)
+    assert logits.shape[-1] == cfg.vocab_size
+    tok = jnp.zeros((2, 1), jnp.int32)
+    dl, cache2 = T.decode_step(cfg, params, cache, tok)
+    assert dl.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(dl).all())
+    assert int(cache2.pos) == int(cache.pos) + 1
+
+
+def test_reduced_configs_within_limits():
+    for arch in ARCHS:
+        cfg = get_config(arch, reduced=True)
+        assert cfg.num_layers <= 5, arch
+        assert cfg.d_model <= 512, arch
+        if cfg.num_experts:
+            assert cfg.num_experts <= 4, arch
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the exact assigned hyperparameters."""
+    c = get_config("gemma2-2b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (26, 2304, 8, 4, 9216, 256000)
+    c = get_config("qwen3-moe-235b-a22b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.num_experts, c.top_k) == (94, 4096, 64, 4, 128, 8)
+    assert c.qk_norm
+    c = get_config("mamba2-130m")
+    assert (c.num_layers, c.d_model, c.ssm_state) == (24, 768, 128)
+    c = get_config("zamba2-1.2b")
+    assert (c.num_layers, c.d_model, c.ssm_state) == (38, 2048, 64)
+    c = get_config("whisper-medium")
+    assert (c.num_layers, c.encoder_layers, c.d_model, c.vocab_size) == (24, 24, 1024, 51865)
+    c = get_config("internvl2-26b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads) == (48, 6144, 48, 8)
+    c = get_config("gemma2-27b")
+    assert (c.num_layers, c.d_model, c.d_ff) == (46, 4608, 36864)
+    c = get_config("olmo-1b")
+    assert c.norm_type == "layernorm_nonparam"
+
+
+def test_param_count_sane():
+    """Analytic 6ND param counts should be near the nameplate sizes."""
+    approx = {
+        "gemma2-2b": 2.6e9, "gemma2-27b": 27e9, "qwen3-14b": 14e9,
+        "mamba2-130m": 0.13e9, "olmo-1b": 1.2e9, "zamba2-1.2b": 1.2e9,
+        "qwen3-moe-235b-a22b": 235e9,
+    }
+    from repro.models.model import exact_param_count
+    for name, target in approx.items():
+        cfg = get_config(name)
+        n_exact = exact_param_count(cfg)
+        assert 0.4 * target < n_exact < 2.1 * target, (name, n_exact, target)
+        # analytic estimate tracks the exact count
+        assert 0.7 * n_exact < cfg.param_count() < 1.3 * n_exact, name

@@ -1,0 +1,136 @@
+"""Step-order generators: validity, optimality, and paper-claimed ordering."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine, orders, pruning, qwyc
+from repro.core.anytime import ORDER_NAMES, generate_order
+from repro.forest import make_dataset, split_dataset, train_forest
+
+
+def _setup(trees=3, depth=3, dataset="magic", seed=0):
+    X, y = make_dataset(dataset, seed=seed)
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=seed)
+    rf = train_forest(tr[:800], ytr[:800], int(y.max()) + 1,
+                      n_trees=trees, max_depth=depth, seed=seed)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx[:400])
+    return fa, pp, yor[:400]
+
+
+def _mean_acc(ev: orders.StateEvaluator, order: np.ndarray) -> float:
+    state = np.zeros(ev.T, dtype=np.int64)
+    accs = [ev.accuracy(state)]
+    for t in order:
+        state[t] += 1
+        accs.append(ev.accuracy(state))
+    return float(np.mean(accs))
+
+
+@pytest.mark.parametrize("name", ORDER_NAMES)
+def test_every_generator_produces_valid_order(name):
+    fa, pp, y = _setup()
+    order = generate_order(name, pp, y)
+    assert orders.validate_order(order, fa.n_trees, fa.max_depth)
+
+
+def test_optimal_matches_bruteforce_on_tiny_forest():
+    """Exhaustive check: Dijkstra's optimum == best of ALL distinct orders."""
+    fa, pp, y = _setup(trees=2, depth=2)
+    ev = orders.StateEvaluator(pp, y)
+    opt = orders.optimal_order(ev)
+    best = max(
+        _mean_acc(ev, np.asarray(o, dtype=np.int32))
+        for o in set(itertools.permutations([0, 0, 1, 1]))
+    )
+    assert _mean_acc(ev, opt) == pytest.approx(best, abs=1e-9)
+
+
+def test_unoptimal_matches_bruteforce_minimum():
+    fa, pp, y = _setup(trees=2, depth=2)
+    ev = orders.StateEvaluator(pp, y)
+    unopt = orders.unoptimal_order(ev)
+    worst = min(
+        _mean_acc(ev, np.asarray(o, dtype=np.int32))
+        for o in set(itertools.permutations([0, 0, 1, 1]))
+    )
+    assert _mean_acc(ev, unopt) == pytest.approx(worst, abs=1e-9)
+
+
+def test_paper_ordering_on_ordering_set():
+    """Sec. VI: on S_o, optimal >= squirrels >= unoptimal (by construction)."""
+    fa, pp, y = _setup(trees=4, depth=4)
+    ev = orders.StateEvaluator(pp, y)
+    m = {n: _mean_acc(ev, generate_order(n, pp, y))
+         for n in ("optimal", "backward_squirrel", "forward_squirrel",
+                   "random", "unoptimal")}
+    assert m["optimal"] >= m["backward_squirrel"] - 1e-9
+    assert m["optimal"] >= m["forward_squirrel"] - 1e-9
+    assert m["optimal"] >= m["random"] - 1e-9
+    assert m["unoptimal"] <= m["random"] + 1e-9
+    assert m["backward_squirrel"] >= m["unoptimal"]
+
+
+def test_optimal_refuses_infeasible_sizes():
+    fa, pp, y = _setup(trees=3, depth=3)
+    ev = orders.StateEvaluator(pp, y)
+    with pytest.raises(ValueError, match="infeasible"):
+        orders.optimal_order(ev, state_limit=10)
+
+
+def test_squirrel_incremental_matches_full_recompute():
+    """candidate_accuracies' incremental score updates must equal direct
+    state evaluation (the O(d t^2) trick is exact, not approximate)."""
+    fa, pp, y = _setup(trees=3, depth=3)
+    ev = orders.StateEvaluator(pp, y)
+    state = np.array([1, 0, 2], dtype=np.int64)
+    S = ev.score_matrix(state)
+    accs = ev.candidate_accuracies(S, state, forward=True)
+    for t in range(3):
+        nxt = state.copy()
+        nxt[t] += 1
+        if nxt[t] <= ev.depth:
+            assert accs[t] == pytest.approx(ev.accuracy(nxt), abs=1e-6)
+        else:
+            assert accs[t] == -np.inf
+
+
+def test_prune_sequences_are_permutations():
+    fa, pp, y = _setup(trees=5, depth=3)
+    for name, fn in pruning.PRUNE_SEQUENCES.items():
+        seq = fn(pp, y)
+        assert sorted(seq.tolist()) == list(range(5)), name
+
+
+def test_qwyc_binary_only():
+    fa, pp, y = _setup(trees=3, depth=3, dataset="letter")
+    with pytest.raises(ValueError, match="binary"):
+        qwyc.qwyc_seq(pp, y)
+
+
+def test_qwyc_sequence_and_thresholds():
+    fa, pp, y = _setup(trees=5, depth=3, dataset="magic")
+    seq, taus = qwyc.qwyc_seq(pp, y)
+    assert sorted(seq.tolist()) == list(range(5))
+    assert (np.diff(taus) <= 1e-6).all()  # remaining swing shrinks
+    assert taus[-1] == 0.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(trees=st.integers(2, 4), depth=st.integers(1, 3), seed=st.integers(0, 50))
+def test_squirrel_validity_under_hypothesis(trees, depth, seed):
+    rng = np.random.default_rng(seed)
+    B, C = 60, 3
+    pp = rng.random((B, trees, depth + 1, C)).astype(np.float32)
+    y = rng.integers(0, C, size=B)
+    ev = orders.StateEvaluator(pp, y)
+    fwd = orders.forward_squirrel(ev)
+    bwd = orders.backward_squirrel(ev)
+    assert orders.validate_order(fwd, trees, depth)
+    assert orders.validate_order(bwd, trees, depth)
+    if (depth + 1) ** trees <= 2000:
+        opt = orders.optimal_order(ev)
+        assert _mean_acc(ev, opt) >= _mean_acc(ev, fwd) - 1e-9
+        assert _mean_acc(ev, opt) >= _mean_acc(ev, bwd) - 1e-9

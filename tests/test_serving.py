@@ -1,0 +1,104 @@
+"""Serving runtime + anytime-depth scheduling (paper technique on
+transformers) + checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.configs.registry import get_config
+from repro.data.pipeline import make_batches
+from repro.models import model as MD
+from repro.serving import engine as SE
+from repro.serving.anytime_depth import (
+    AnytimeEnsembleSession, EnsembleMember, accuracy_curve,
+    generate_depth_order, quality_table)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_generate_greedy_deterministic():
+    cfg = get_config("olmo_1b", reduced=True)
+    params = MD.init(cfg, KEY)
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 100, (2, 8)), jnp.int32)
+    a = SE.generate(cfg, params, toks, 6)
+    b = SE.generate(cfg, params, toks, 6)
+    assert a.shape == (2, 14)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_generate_matches_forward_argmax():
+    """First generated token == argmax of the full forward logits."""
+    from repro.models import transformer as T
+    cfg = get_config("qwen3_14b", reduced=True)
+    params = MD.init(cfg, KEY)
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, 100, (2, 12)), jnp.int32)
+    out = SE.generate(cfg, params, toks, 1)
+    logits, _ = T.forward(cfg, params, {"tokens": toks})
+    expect = jnp.argmax(logits[:, -1], axis=-1)
+    np.testing.assert_array_equal(np.asarray(out[:, -1]), np.asarray(expect))
+
+
+def _members(cfg, n=2):
+    return [EnsembleMember(cfg, MD.init(cfg, jax.random.PRNGKey(i)))
+            for i in range(n)]
+
+
+def test_quality_table_shape_and_padding():
+    cfg = get_config("olmo_1b", reduced=True)
+    members = _members(cfg)
+    b = next(make_batches(cfg, 16, 4, seed=0))
+    batch = {"tokens": jnp.asarray(b["tokens"])}
+    labels = np.asarray(b["labels"][:, -1])
+    pp, y = quality_table(members, batch, labels)
+    assert pp.shape == (4, 2, cfg.num_layers + 1, cfg.vocab_size)
+    assert np.isfinite(pp).all()
+
+
+def test_anytime_depth_session_full_run_matches_forward():
+    """After all steps, the session's summed readout equals the sum of the
+    members' complete forward readouts (the 'final state' invariant)."""
+    from repro.models import transformer as T
+    cfg = get_config("olmo_1b", reduced=True)
+    members = _members(cfg)
+    b = next(make_batches(cfg, 16, 4, seed=0))
+    batch = {"tokens": jnp.asarray(b["tokens"])}
+    order = np.asarray([0, 1] * cfg.num_layers, dtype=np.int32)
+    sess = AnytimeEnsembleSession(members, order, batch)
+    sess.advance(sess.total_steps)
+    got = sess.predict_logprobs()
+    expect = None
+    for m in members:
+        lg, _ = T.forward(m.cfg, m.params, batch)
+        lp = jax.nn.log_softmax(lg[:, -1].astype(jnp.float32), axis=-1)
+        expect = lp if expect is None else expect + lp
+    np.testing.assert_allclose(got, np.asarray(expect), rtol=1e-4, atol=1e-4)
+
+
+def test_anytime_depth_order_generation():
+    cfg = get_config("olmo_1b", reduced=True)
+    members = _members(cfg)
+    b = next(make_batches(cfg, 16, 8, seed=0))
+    batch = {"tokens": jnp.asarray(b["tokens"])}
+    labels = np.asarray(b["labels"][:, -1])
+    for name in ("backward_squirrel", "forward_squirrel", "breadth"):
+        order = generate_depth_order(members, batch, labels, name, top_v=32)
+        counts = np.bincount(order, minlength=2)
+        assert (counts == cfg.num_layers).all(), name
+    curve = accuracy_curve(members, order, batch, labels)
+    assert len(curve) == 2 * cfg.num_layers + 1
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("olmo_1b", reduced=True)
+    params = MD.init(cfg, KEY)
+    path = os.path.join(tmp_path, "ck", "step_1.npz")
+    ckpt_lib.save(path, {"params": params}, metadata={"step": 1})
+    like = jax.eval_shape(lambda: {"params": params})
+    restored = ckpt_lib.restore(path, like)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt_lib.latest_step(os.path.dirname(path)) == 1

@@ -1,0 +1,80 @@
+"""End-to-end behaviour of the paper's system: train forest -> generate
+orders -> anytime inference -> the paper's qualitative claims hold."""
+import numpy as np
+import pytest
+
+from repro.core import AnytimeForest, ORDER_NAMES, engine, generate_order
+from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
+from repro.forest import make_dataset, split_dataset, train_forest
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    X, y = make_dataset("magic", seed=0)
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=0)
+    rf = train_forest(tr, ytr, 2, n_trees=5, max_depth=5, seed=0)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx)
+    return fa, pp, yor, te, yte
+
+
+def _curve(fa, order, te, yte):
+    return AnytimeForest(fa, order).accuracy_curve(te, yte)
+
+
+def test_accuracy_rises_with_steps(pipeline):
+    """Paper Sec. VI-C: accuracy increases (on trend) with steps taken."""
+    fa, pp, yor, te, yte = pipeline
+    curve = _curve(fa, generate_order("backward_squirrel", pp, yor), te, yte)
+    assert curve[-1] > curve[0] + 0.05
+    # monotone on trend: late third must beat early third
+    k = len(curve) // 3
+    assert curve[-k:].mean() > curve[:k].mean()
+
+
+def test_all_orders_same_endpoints(pipeline):
+    """Every order starts from the prior and converges to the full-forest
+    accuracy (Fig. 5: 'all step orders start from and converge to the
+    same accuracy')."""
+    fa, pp, yor, te, yte = pipeline
+    curves = [_curve(fa, generate_order(n, pp, yor), te, yte)
+              for n in ("depth", "breadth", "backward_squirrel", "unoptimal")]
+    for c in curves[1:]:
+        assert c[0] == pytest.approx(curves[0][0], abs=1e-6)
+        assert c[-1] == pytest.approx(curves[0][-1], abs=1e-6)
+
+
+def test_squirrel_beats_naive_on_test_set(pipeline):
+    """The headline claim, on held-out data: Backward Squirrel's NMA is
+    close to Optimal's and clearly better than Unoptimal."""
+    fa, pp, yor, te, yte = pipeline
+    nma = {n: normalized_mean_accuracy(_curve(fa, generate_order(n, pp, yor), te, yte))
+           for n in ("optimal", "backward_squirrel", "random", "unoptimal")}
+    assert nma["backward_squirrel"] >= 0.90 * nma["optimal"]
+    assert nma["backward_squirrel"] > nma["unoptimal"]
+    assert nma["optimal"] > nma["unoptimal"]
+
+
+def test_full_order_suite_runs(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    for name in ORDER_NAMES:
+        curve = _curve(fa, generate_order(name, pp, yor), te, yte)
+        assert len(curve) == fa.total_steps + 1
+        assert np.isfinite(curve).all()
+
+
+def test_anytime_session_abort_anywhere(pipeline):
+    """Serving-style: abort after arbitrary step counts, prediction is
+    always available and final prediction matches batch run."""
+    fa, pp, yor, te, yte = pipeline
+    af = AnytimeForest(fa, generate_order("backward_squirrel", pp, yor))
+    sess = af.session(te[:100])
+    preds = [sess.predict()]
+    for k in (1, 3, 7, 100):
+        sess.advance(k)
+        preds.append(sess.predict())
+    assert sess.remaining == max(0, af.order.shape[0] - 111)
+    sess.advance(10_000)
+    final_curve = af.accuracy_curve(te[:100], yte[:100])
+    final_acc = float((sess.predict() == yte[:100]).mean())
+    assert final_acc == pytest.approx(float(final_curve[-1]), abs=1e-6)

@@ -1,0 +1,94 @@
+"""Optimizer, schedule, data pipeline and end-to-end training behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM, make_batches
+from repro.training import optimizer as opt_lib
+from repro.training.train import train_loop
+
+
+def test_adamw_matches_manual_reference():
+    """One AdamW step on a scalar-friendly problem vs hand computation."""
+    cfg = opt_lib.AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8,
+                              weight_decay=0.0, grad_clip=1e9,
+                              warmup_steps=0, total_steps=1, min_lr_ratio=1.0)
+    params = {"w": jnp.asarray([2.0])}
+    grads = {"w": jnp.asarray([0.5])}
+    st = opt_lib.init_state(params)
+    new_p, new_st, _ = opt_lib.apply_updates(cfg, params, grads, st)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    expect = 2.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    assert float(new_p["w"][0]) == pytest.approx(expect, rel=1e-5)
+
+
+def test_grad_clipping():
+    cfg = opt_lib.AdamWConfig(grad_clip=1.0, warmup_steps=0, weight_decay=0.0)
+    params = {"w": jnp.ones(4)}
+    grads = {"w": jnp.full(4, 100.0)}
+    st = opt_lib.init_state(params)
+    _, _, stats = opt_lib.apply_updates(cfg, params, grads, st)
+    assert float(stats["grad_norm"]) == pytest.approx(200.0, rel=1e-4)
+
+
+def test_lr_schedule_shape():
+    cfg = opt_lib.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                              min_lr_ratio=0.1)
+    lrs = [float(opt_lib.lr_at(cfg, jnp.asarray(s))) for s in range(0, 111, 10)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(1.0, rel=1e-5)       # end of warmup
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-2)      # cosine floor
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))  # decay
+
+
+def test_data_pipeline_determinism_and_sharding():
+    c = DataConfig(vocab_size=100, seq_len=16, batch_size=4, seed=3)
+    a = SyntheticLM(c).batch(5)
+    b = SyntheticLM(c).batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+    # different shards differ
+    c2 = DataConfig(vocab_size=100, seq_len=16, batch_size=4, seed=3,
+                    shard_id=1, num_shards=2)
+    d = SyntheticLM(c2).batch(5)
+    assert not np.array_equal(a["tokens"], d["tokens"])
+
+
+def test_data_is_learnable_structure():
+    """Markov structure => big models should beat the unigram entropy.
+    Here: bigram count check — top successor must dominate."""
+    c = DataConfig(vocab_size=50, seq_len=256, batch_size=16, seed=0)
+    b = SyntheticLM(c).batch(0)
+    toks = b["tokens"]
+    # repeated contexts appear (hash table is finite)
+    pairs = {}
+    for row in toks:
+        for i in range(len(row) - 2):
+            pairs.setdefault((row[i], row[i + 1]), []).append(row[i + 2])
+    multi = [v for v in pairs.values() if len(v) >= 5]
+    assert multi, "no repeated contexts"
+    conc = np.mean([np.max(np.bincount(v)) / len(v) for v in multi])
+    assert conc > 0.3  # successors are predictable far beyond uniform
+
+
+@pytest.mark.slow
+def test_end_to_end_loss_decreases():
+    cfg = get_config("olmo_1b", reduced=True)
+    res = train_loop(cfg, steps=40, seq_len=64, batch_size=8, log_every=0)
+    first = np.mean(res.losses[:5])
+    last = np.mean(res.losses[-5:])
+    assert last < first, (first, last)
+
+
+def test_vlm_batch_includes_stub():
+    cfg = get_config("internvl2_26b", reduced=True)
+    b = next(make_batches(cfg, 32, 2))
+    assert "image_embeds" in b
+    assert b["image_embeds"].shape == (2, cfg.num_patches, cfg.vision_embed_dim)
+    assert b["tokens"].shape == (2, 32 - cfg.num_patches)
