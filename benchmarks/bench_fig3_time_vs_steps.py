@@ -15,22 +15,19 @@ import time
 
 import numpy as np
 
-from benchmarks.common import build_pipeline
-from repro.core import AnytimeForest, generate_order
+from benchmarks.common import build_pipeline, runtime_for
 
 
 def run(n_trees: int = 10, depth: int = 10, dataset: str = "adult",
         n_periods: int = 8, repeats: int = 3, verbose: bool = True):
     fa, pp, yor, te, yte = build_pipeline(dataset, n_trees, depth)
+    rt = runtime_for(fa, pp, yor)
     rows = []
     for order_name in ("backward_squirrel", "depth", "breadth", "random"):
-        af = AnytimeForest(fa, generate_order(order_name, pp, yor))
-        total = af.order.shape[0]
+        total = rt.order(order_name).shape[0]
         # warm up (compile), then calibrate a full run to set expiry periods
-        sess = af.session(te)
-        while sess.remaining:
-            sess.advance(1)
-        sess = af.session(te)
+        rt.session(te, order_name, chunk=1).run_to_completion()
+        sess = rt.session(te, order_name, chunk=1)
         t0 = time.perf_counter()
         while sess.remaining:
             sess.advance(1)
@@ -39,10 +36,8 @@ def run(n_trees: int = 10, depth: int = 10, dataset: str = "adult",
             expiry = full_t * frac
             done = []
             for _ in range(repeats):
-                sess = af.session(te)
-                t0 = time.perf_counter()
-                while sess.remaining and (time.perf_counter() - t0) < expiry:
-                    sess.advance(1)
+                sess = rt.session(te, order_name, chunk=1)
+                sess.advance_until(expiry * 1e3, chunk=1)
                 done.append(sess.pos / total)
             rows.append({
                 "order": order_name,

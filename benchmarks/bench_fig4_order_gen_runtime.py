@@ -11,9 +11,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import build_pipeline, timed
-from repro.core import engine, orders
 from repro.core.metrics import mean_accuracy
 from repro.core.anytime import AnytimeForest
+from repro.schedule import get_order_policy
 
 
 def run(depth: int = 8, max_trees: int = 8, optimal_limit: int = 6,
@@ -21,17 +21,17 @@ def run(depth: int = 8, max_trees: int = 8, optimal_limit: int = 6,
     rows = []
     for t in range(2, max_trees + 1, 2):
         fa, pp, yor, te, yte = build_pipeline(dataset, t, depth, n_order=300)
-        ev = orders.StateEvaluator(pp, yor)
-        bwd, dt_b = timed(orders.backward_squirrel, ev)
+        bwd_policy = get_order_policy("backward_squirrel")
+        bwd, dt_b = timed(bwd_policy.generate, pp, yor)
         acc_b = mean_accuracy(AnytimeForest(fa, bwd).accuracy_curve(te, yte))
         row = {"trees": t, "squirrel_s": dt_b, "squirrel_mean_acc": acc_b}
         if t <= optimal_limit:
-            ev2 = orders.StateEvaluator(pp, yor)
+            opt_policy = get_order_policy("optimal")
             try:
-                opt, dt_o = timed(orders.optimal_order, ev2)
+                opt, dt_o = timed(opt_policy.generate, pp, yor)
                 acc_o = mean_accuracy(AnytimeForest(fa, opt).accuracy_curve(te, yte))
                 row.update({"optimal_s": dt_o, "optimal_mean_acc": acc_o,
-                            "optimal_states": len(ev2._cache)})
+                            "optimal_states": opt_policy.last_stats["states_evaluated"]})
             except (ValueError, MemoryError) as e:
                 row["optimal_s"] = None
         rows.append(row)

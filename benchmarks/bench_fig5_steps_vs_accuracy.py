@@ -4,12 +4,15 @@ depth 7; our default 6x6 keeps the Optimal Order tractable on 2 CPUs —
 
 Claims under test: all orders share start/end accuracy; squirrel/optimal
 rise fastest; unoptimal rises slowest.
+
+All curves come from ONE vmapped batched pass over the step axis
+(``AnytimeRuntime.evaluate_orders``) instead of a serial per-order loop.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import build_pipeline, curve_for
+from benchmarks.common import build_pipeline, runtime_for
 from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
 
 ORDERS = ("optimal", "backward_squirrel", "forward_squirrel",
@@ -21,10 +24,10 @@ def run(dataset: str = "letter", n_trees: int = 6, depth: int = 6,
     fa, pp, yor, te, yte = build_pipeline(dataset, n_trees, depth)
     names = [n for n in ORDERS
              if include_optimal or n not in ("optimal", "unoptimal")]
-    curves = {}
-    for name in names:
-        curves[name] = curve_for(fa, pp, yor, te, yte, name)
-        if verbose:
+    rt = runtime_for(fa, pp, yor)
+    curves = rt.evaluate_orders(te, yte, names)  # single vmapped pass
+    if verbose:
+        for name in names:
             c = curves[name]
             print(f"fig5,{name},mean={mean_accuracy(c):.4f},"
                   f"nma={normalized_mean_accuracy(c):.4f},"

@@ -5,8 +5,9 @@ import time
 
 import numpy as np
 
-from repro.core import AnytimeForest, engine, generate_order
+from repro.core import AnytimeForest, engine
 from repro.forest import make_dataset, split_dataset, train_forest
+from repro.schedule import AnytimeRuntime, ForestProgram, get_order_policy
 
 
 def build_pipeline(dataset: str, n_trees: int, depth: int, seed: int = 0,
@@ -22,8 +23,13 @@ def build_pipeline(dataset: str, n_trees: int, depth: int, seed: int = 0,
     return fa, pp, yor[:n_order], te[:n_test], yte[:n_test]
 
 
+def runtime_for(fa, pp, yor) -> AnytimeRuntime:
+    """An AnytimeRuntime over a pipeline's precomputed quality table."""
+    return AnytimeRuntime(ForestProgram(fa, y_order=yor, path_probs=pp))
+
+
 def curve_for(fa, pp, yor, te, yte, order_name: str, seed: int = 0):
-    order = generate_order(order_name, pp, yor, seed=seed)
+    order = get_order_policy(order_name, seed=seed).generate(pp, yor)
     return AnytimeForest(fa, order).accuracy_curve(te, yte)
 
 

@@ -1,11 +1,12 @@
-"""Quickstart: train a random forest, generate squirrel step orders, run
-anytime inference, and print the accuracy-vs-steps trade-off.
+"""Quickstart: train a random forest, generate squirrel step orders via
+the ``repro.schedule`` policy registry, run anytime inference through the
+``AnytimeRuntime``, and print the accuracy-vs-steps trade-off.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import AnytimeForest, engine, generate_order
+from repro import AnytimeRuntime, ForestProgram, list_orders
 from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
 from repro.forest import make_dataset, split_dataset, train_forest
 
@@ -21,21 +22,24 @@ def main():
     forest = rf.as_arrays()
     print(f"forest: {forest.n_trees} trees, depth {forest.max_depth}, "
           f"{forest.total_steps} anytime steps")
+    print(f"registered order policies: {', '.join(list_orders())}")
 
-    # 3. offline: generate step orders on the ordering set
-    pp = engine.path_probs_np(forest, Xor)
-    for name in ("optimal", "backward_squirrel", "forward_squirrel", "depth",
-                 "breadth", "random", "unoptimal"):
-        af = AnytimeForest(forest, generate_order(name, pp, yor))
-        curve = af.accuracy_curve(Xte, yte)
+    # 3. one runtime owns order generation (content-hash cached) and
+    #    serving; every registered order's curve comes from a single
+    #    vmapped batched pass
+    rt = AnytimeRuntime(ForestProgram(forest, y_order=yor, X_order=Xor))
+    names = ("optimal", "backward_squirrel", "forward_squirrel", "depth",
+             "breadth", "random", "unoptimal")
+    curves = rt.evaluate_orders(Xte, yte, names)
+    for name in names:
+        curve = curves[name]
         print(f"{name:18s} mean_acc={mean_accuracy(curve):.4f} "
               f"NMA={normalized_mean_accuracy(curve):.4f} "
               f"curve: {curve[0]:.3f} -> {curve[len(curve)//2]:.3f} "
               f"-> {curve[-1]:.3f}")
 
     # 4. online: interruptible session — abort after ANY number of steps
-    af = AnytimeForest(forest, generate_order("backward_squirrel", pp, yor))
-    sess = af.session(Xte)
+    sess = rt.session(Xte, "backward_squirrel")
     for budget in (0, 3, 10, sess.total_steps):
         sess.advance(budget - sess.pos)
         acc = (sess.predict() == yte).mean()

@@ -1,30 +1,26 @@
-"""Anytime serving demo — BOTH granularities of the paper's idea:
+"""Anytime serving demo — BOTH granularities of the paper's idea behind
+the ONE ``repro.schedule.AnytimeRuntime`` API:
 
   1. Random forests (the paper): batched tabular requests under a
      deadline; the squirrel step order decides which tree advances next;
-     every deadline still yields a full-quality-so-far prediction.
+     ``Session.advance_until(deadline_ms)`` realizes the deadline loop
+     and every abort still yields a full-quality-so-far prediction.
 
   2. Transformers (beyond-paper): a 2-member LM ensemble served with a
-     squirrel-generated layer-execution order; abort after any layer
-     budget and read out summed logit-lens predictions.
+     squirrel-generated layer-execution order; the SAME runtime wraps
+     the ensemble via ``EnsembleProgram``.
 
     PYTHONPATH=src python examples/serve_anytime.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import AnytimeRuntime, ForestProgram
 from repro.configs.registry import get_config
-from repro.core import AnytimeForest, engine, generate_order
-from repro.data.pipeline import make_batches
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.models import model as MD
-from repro.serving.anytime_depth import (AnytimeEnsembleSession,
-                                         EnsembleMember, accuracy_curve,
-                                         generate_depth_order)
-from repro.training.train import train_loop
+from repro.serving.anytime_depth import EnsembleMember, EnsembleProgram
 
 
 def forest_serving():
@@ -32,15 +28,11 @@ def forest_serving():
     X, y = make_dataset("adult", seed=0)
     (Xtr, ytr), (Xor, yor), (Xte, yte) = split_dataset(X, y, seed=0)
     rf = train_forest(Xtr, ytr, 2, n_trees=10, max_depth=8, seed=0)
-    forest = rf.as_arrays()
-    pp = engine.path_probs_np(forest, Xor)
-    af = AnytimeForest(forest, generate_order("backward_squirrel", pp, yor))
+    rt = AnytimeRuntime(ForestProgram(rf.as_arrays(), y_order=yor, X_order=Xor))
 
     for deadline_ms in (0.5, 2.0, 10.0, 1e9):
-        sess = af.session(Xte)
-        t0 = time.perf_counter()
-        while sess.remaining and (time.perf_counter() - t0) * 1e3 < deadline_ms:
-            sess.advance(4)  # abort checkpoint every 4 steps
+        sess = rt.session(Xte, "backward_squirrel", chunk=4)
+        sess.advance_until(deadline_ms)  # abort checkpoint every 4 steps
         acc = (sess.predict() == yte).mean()
         print(f"  deadline {deadline_ms:7.1f} ms -> {sess.pos:3d}/"
               f"{sess.total_steps} steps, accuracy {acc:.4f}")
@@ -68,14 +60,19 @@ def transformer_serving():
     calib = next(mb(cfg, 64, 16, seed=100))
     batch = {"tokens": jnp.asarray(calib["tokens"])}
     labels = np.asarray(calib["labels"][:, -1])
-    order = generate_depth_order(members, batch, labels,
-                                 "backward_squirrel", top_v=64)
+    # the SAME runtime class serves the ensemble granularity
+    rt = AnytimeRuntime(EnsembleProgram(members, batch, labels, top_v=64))
+    order = rt.order("backward_squirrel")
     print(f"  squirrel layer order over (member,layer) units: {order.tolist()}")
 
     test = next(mb(cfg, 64, 16, seed=200))
     tb = {"tokens": jnp.asarray(test["tokens"])}
     tl = np.asarray(test["labels"][:, -1])
-    curve = accuracy_curve(members, order, tb, tl)
+    sess = rt.session(tb, order=order)
+    curve = [float(np.mean(sess.predict() == tl))]
+    while sess.remaining:
+        sess.advance(1)
+        curve.append(float(np.mean(sess.predict() == tl)))
     for k in range(0, len(curve), max(1, len(curve) // 6)):
         print(f"  after {k:2d} layer-steps: next-token acc {curve[k]:.3f}")
     print(f"  final ({len(curve)-1} steps): {curve[-1]:.3f}")

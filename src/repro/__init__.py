@@ -1,0 +1,30 @@
+"""Reproduction of "Jump Like A Squirrel: Optimized Execution Step Order
+for Anytime Random Forest Inference", grown toward a production-scale
+JAX/Pallas anytime-inference system.
+
+One-stop public surface — everything examples need imports from here:
+
+    from repro import AnytimeRuntime, OrderPolicy, list_orders
+"""
+# Note: the device-level evaluate_orders(device, X, y, orders_by_name)
+# helper stays in repro.schedule — batched evaluation at this level is
+# AnytimeRuntime.evaluate_orders(X, y, names).
+from repro.schedule import (
+    AnytimeRuntime,
+    ForestProgram,
+    OrderPolicy,
+    Session,
+    get_order_policy,
+    list_orders,
+    register_order,
+)
+
+__all__ = [
+    "AnytimeRuntime",
+    "ForestProgram",
+    "OrderPolicy",
+    "Session",
+    "get_order_policy",
+    "list_orders",
+    "register_order",
+]

@@ -1,28 +1,66 @@
 """Core contribution: anytime random-forest inference with optimized
 step orders ("Jump Like A Squirrel", Biebert et al.).
 
-Public API:
-  AnytimeForest / AnytimeSession  — inference with any step order
-  generate_order / ORDER_NAMES    — every order the paper evaluates
+The PUBLIC scheduling API is :mod:`repro.schedule`; this package holds
+the forest-facing machinery underneath it.  Migration table (the string
+shims remain for one release, emitting ``DeprecationWarning``):
+
+    old call (repro.core)                     new call (repro.schedule)
+    ----------------------------------------  ------------------------------------------
+    generate_order(name, pp, y, seed=s)       get_order_policy(name, seed=s).generate(pp, y)
+    ORDER_NAMES                               list_orders()
+    AnytimeForest.build(f, name, X, y)        AnytimeRuntime(ForestProgram(f, y_order=y,
+                                                  X_order=X)).session(X_test, name)
+    AnytimeSession(af, X) / af.session(X)     AnytimeRuntime(...).session(X)  (adds
+                                                  advance_until(deadline_ms), RLE fusion)
+    [serial loop over run_order per order]    AnytimeRuntime(...).evaluate_orders(X, y)
+                                                  (single vmapped batched pass)
+
+Still exported from here:
+  AnytimeForest / AnytimeSession  — forest + order convenience wrapper
+  AnytimeProgram                  — the schedulable-computation protocol
   StateEvaluator                  — state-accuracy machinery
   engine                          — jnp reference execution engine
 """
+# Submodules first: repro.schedule.runtime imports repro.core.engine
+# mid-cycle, so engine must be bound before anytime (which pulls in the
+# schedule package) executes.
+from repro.core import engine, metrics, orders, pruning, qwyc
 from repro.core.anytime import (
     AnytimeForest,
-    AnytimeSession,
     AnytimeProgram,
     ORDER_NAMES,
     generate_order,
 )
 from repro.core.orders import StateEvaluator, validate_order
-from repro.core import engine, metrics, orders, pruning, qwyc
+from repro.schedule.policies import OrderPolicy, get_order_policy, list_orders
+
+# Runtime-side names resolve lazily: when this package is imported from
+# inside repro.schedule.runtime's own import, the runtime module is not
+# finished yet.
+_LAZY_RUNTIME = ("AnytimeRuntime", "ForestProgram", "Session", "AnytimeSession")
+
+
+def __getattr__(name: str):
+    if name in _LAZY_RUNTIME:
+        from repro.schedule import runtime
+
+        val = runtime.Session if name == "AnytimeSession" else getattr(runtime, name)
+        globals()[name] = val
+        return val
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "AnytimeForest",
     "AnytimeSession",
     "AnytimeProgram",
+    "AnytimeRuntime",
+    "ForestProgram",
+    "OrderPolicy",
     "ORDER_NAMES",
     "generate_order",
+    "get_order_policy",
+    "list_orders",
     "StateEvaluator",
     "validate_order",
     "engine",

@@ -1,29 +1,37 @@
-"""High-level anytime-inference API.
+"""High-level anytime-inference API (forest-facing convenience layer).
 
-Two layers:
+The public scheduling surface now lives in :mod:`repro.schedule`
+(policy registry + :class:`~repro.schedule.runtime.AnytimeRuntime`);
+this module keeps:
 
-* :class:`AnytimeForest` — owns a trained forest + a generated step
-  order; one-call evaluation (accuracy curve, NMA) and an interruptible
-  session for production serving.
+* :class:`AnytimeProgram` — the generic protocol every schedulable
+  computation implements (forests here, transformer ensembles in
+  ``repro.serving.anytime_depth``);
 
-* :class:`AnytimeProgram` — the generic abstraction the framework uses
-  to apply the paper's scheduling idea beyond forests (e.g. early-exit
-  transformer depth scheduling in ``repro.serving.anytime_depth``): any
-  computation decomposable into discrete *units* with per-state quality
-  estimates can be ordered by the same Optimal/Squirrel machinery.
+* :class:`AnytimeForest` — a trained forest + a generated step order;
+  one-call evaluation (accuracy curve, NMA) and an interruptible
+  session, now served through the RLE-fused ``repro.schedule`` runtime;
+
+* ``generate_order`` / ``ORDER_NAMES`` — DEPRECATED string shims over
+  the registry, kept for one release so existing callers keep working.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Protocol
+import warnings
+from typing import Protocol
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, orders, pruning, qwyc
+from repro.core import engine
 from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
 from repro.forest.forest import ForestArrays
+# Only the policies half of repro.schedule is importable here at module
+# level: repro.schedule.runtime imports repro.core back, so its pieces
+# (Session, ForestStepBackend, check_order) are imported lazily inside
+# the methods that need them.
+from repro.schedule.policies import get_order_policy, list_orders
 
 
 class AnytimeProgram(Protocol):
@@ -35,6 +43,9 @@ class AnytimeProgram(Protocol):
         vectors on a calibration set — exactly the shape
         engine.compute_path_probs produces for forests, and what the
         early-exit logit-lens readouts produce for transformers.
+    make_session: an executor over (order, inputs) with ``advance`` /
+        ``predict`` — what :class:`repro.schedule.AnytimeRuntime` wraps
+        into deadline-aware :class:`~repro.schedule.runtime.Session`s.
     """
 
     @property
@@ -47,17 +58,11 @@ class AnytimeProgram(Protocol):
         """Returns (contribution vectors [B, U, S+1, C], labels [B])."""
         ...
 
+    def make_session(self, order: np.ndarray, inputs): ...
 
-ORDER_NAMES = (
-    "optimal", "unoptimal", "forward_squirrel", "backward_squirrel",
-    "random",
-    "depth", "breadth",
-    "prune_depth_IE", "prune_breadth_IE",
-    "prune_depth_EA", "prune_breadth_EA",
-    "prune_depth_RE", "prune_breadth_RE",
-    "prune_depth_D", "prune_breadth_D",
-    "qwyc_depth", "qwyc_breadth",
-)
+
+#: DEPRECATED — enumerate via :func:`repro.schedule.list_orders` instead.
+ORDER_NAMES = tuple(list_orders())
 
 
 def generate_order(
@@ -67,38 +72,19 @@ def generate_order(
     seed: int = 0,
     state_limit: int = 2_000_000,
 ) -> np.ndarray:
-    """Dispatch every step-order generator the paper evaluates by name.
+    """DEPRECATED string dispatch, now a thin shim over the registry.
 
-    path_probs/y are computed on the ordering set S_o.
+    Use ``get_order_policy(name, ...).generate(path_probs, y)`` —
+    orders produced through either surface are byte-identical.
     """
-    B, T, d1, C = path_probs.shape
-    d = d1 - 1
-    ev = orders.StateEvaluator(path_probs, y)
-    if name == "optimal":
-        return orders.optimal_order(ev, state_limit=state_limit)
-    if name == "unoptimal":
-        return orders.unoptimal_order(ev, state_limit=state_limit)
-    if name == "forward_squirrel":
-        return orders.forward_squirrel(ev)
-    if name == "backward_squirrel":
-        return orders.backward_squirrel(ev)
-    if name == "random":
-        return orders.random_order(T, d, seed=seed)
-    if name == "depth":
-        return orders.depth_order(T, d)
-    if name == "breadth":
-        return orders.breadth_order(T, d)
-    if name.startswith("prune_"):
-        _, variant, metric = name.split("_")
-        seq = pruning.PRUNE_SEQUENCES[metric](path_probs, y)
-        fn = orders.depth_order if variant == "depth" else orders.breadth_order
-        return fn(T, d, seq)
-    if name.startswith("qwyc_"):
-        variant = name.split("_")[1]
-        seq, _ = qwyc.qwyc_seq(path_probs, y)
-        fn = orders.depth_order if variant == "depth" else orders.breadth_order
-        return fn(T, d, seq)
-    raise ValueError(f"unknown order: {name!r}")
+    warnings.warn(
+        "repro.core.anytime.generate_order is deprecated; use "
+        "repro.schedule.get_order_policy(name).generate(path_probs, y)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    policy = get_order_policy(name, seed=seed, state_limit=state_limit)
+    return policy.generate(path_probs, y)
 
 
 @dataclasses.dataclass
@@ -110,7 +96,9 @@ class AnytimeForest:
     device: engine.DeviceForest = dataclasses.field(init=False)
 
     def __post_init__(self):
-        assert orders.validate_order(self.order, self.forest.n_trees, self.forest.max_depth)
+        from repro.schedule.runtime import check_order
+
+        check_order(self.order, self.forest.n_trees, self.forest.max_depth)
         self.device = engine.to_device(self.forest)
 
     @classmethod
@@ -123,7 +111,8 @@ class AnytimeForest:
         seed: int = 0,
     ) -> "AnytimeForest":
         pp = engine.path_probs_np(forest, X_order)
-        return cls(forest=forest, order=generate_order(order_name, pp, y_order, seed=seed))
+        policy = get_order_policy(order_name, seed=seed)
+        return cls(forest=forest, order=policy.generate(pp, y_order))
 
     def accuracy_curve(self, X: np.ndarray, y: np.ndarray) -> np.ndarray:
         """Accuracy after every prefix of the step order on (X, y)."""
@@ -141,53 +130,19 @@ class AnytimeForest:
             "initial_accuracy": float(curve[0]),
         }
 
-    def session(self, X: np.ndarray) -> "AnytimeSession":
-        return AnytimeSession(self, jnp.asarray(X))
+    def session(self, X: np.ndarray) -> "Session":
+        """Interruptible, RLE-fused, deadline-aware inference session."""
+        from repro.schedule.runtime import ForestStepBackend, Session
+
+        return Session(ForestStepBackend(self.device, X, self.order))
 
 
-class AnytimeSession:
-    """Interruptible inference: advance in chunks, read a prediction at
-    any point — the deployment-facing realization of Sec. V."""
+def __getattr__(name: str):
+    # Back-compat alias: sessions are now the runtime-level
+    # repro.schedule.runtime.Session (adds advance_until + RLE fusion).
+    # Resolved lazily to keep this module importable mid-cycle.
+    if name == "AnytimeSession":
+        from repro.schedule.runtime import Session
 
-    def __init__(self, af: AnytimeForest, X: jax.Array):
-        self.af = af
-        self.X = X
-        self.idx = engine.init_state(af.device, X.shape[0])
-        self.pos = 0
-        self._order_dev = jnp.asarray(af.order)
-
-        def _advance(idx, start, k):
-            chunk = jax.lax.dynamic_slice_in_dim(self._order_dev, start, k)
-
-            def body(i, tree_id):
-                return engine.tree_step(af.device, self.X, i, tree_id), None
-
-            idx, _ = jax.lax.scan(body, idx, chunk)
-            return idx
-
-        # jit with static chunk length: one compile per distinct k, then
-        # every deadline-loop step is a cached dispatch (the serving loop
-        # calls this thousands of times).
-        self._advance = jax.jit(_advance, static_argnums=(2,))
-
-    @property
-    def total_steps(self) -> int:
-        return int(self.af.order.shape[0])
-
-    @property
-    def remaining(self) -> int:
-        return self.total_steps - self.pos
-
-    def advance(self, k: int) -> int:
-        """Execute up to k more steps; returns steps actually taken."""
-        k = min(k, self.remaining)
-        if k > 0:
-            self.idx = self._advance(self.idx, self.pos, k)
-            self.pos += k
-        return k
-
-    def predict_proba(self) -> np.ndarray:
-        return np.asarray(engine.predict_from_state(self.af.device, self.idx))
-
-    def predict(self) -> np.ndarray:
-        return self.predict_proba().argmax(axis=1)
+        return Session
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -28,6 +28,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across versions; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 # Scratch layout: per-sample gathered node fields, accumulated over M tiles.
 _F_IDX, _THR, _LEFT, _RIGHT, _LEAF = range(5)
@@ -139,7 +142,7 @@ def forest_step(
         out_specs=pl.BlockSpec((block_b, 1), lambda b, m: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
         scratch_shapes=[pltpu.VMEM((block_b, _NFIELDS), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across versions; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _prob_accum_kernel(
     idx_ref,    # int32 [Bb, 1]     idx[:, t] column for this grid t
@@ -73,7 +76,7 @@ def prob_accum(
         ],
         out_specs=pl.BlockSpec((block_b, C), lambda b, t, m: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, C), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

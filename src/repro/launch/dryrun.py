@@ -92,7 +92,7 @@ def lower_combination(arch: str, shape_name: str, mesh: Mesh,
         jitted = jax.jit(step, in_shardings=(p_sh, opt_sh, b_sh),
                          out_shardings=(p_sh, opt_sh, None),
                          donate_argnums=(0, 1))
-        with jax.set_mesh(mesh):
+        with mesh_lib.mesh_context(mesh):
             lowered = jitted.lower(params_abs, opt_abs, batch_abs)
         return lowered, chips, {"kind": "train"}
 
@@ -107,7 +107,7 @@ def lower_combination(arch: str, shape_name: str, mesh: Mesh,
         fn = SE.prefill_fn(cfg, cache_len=shape.seq_len)
         jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
                          out_shardings=(NamedSharding(mesh, P(baxes)), c_sh))
-        with jax.set_mesh(mesh):
+        with mesh_lib.mesh_context(mesh):
             lowered = jitted.lower(params_abs, batch_abs)
         return lowered, chips, {"kind": "prefill"}
 
@@ -125,7 +125,7 @@ def lower_combination(arch: str, shape_name: str, mesh: Mesh,
         fn = SE.decode_fn(cfg)
         jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, tok_sh),
                          out_shardings=(tok_sh, c_sh), donate_argnums=(1,))
-        with jax.set_mesh(mesh):
+        with mesh_lib.mesh_context(mesh):
             lowered = jitted.lower(params_abs, cache_abs, tok_abs)
         return lowered, chips, {"kind": "decode", "context_parallel": ctx_par}
 
@@ -196,7 +196,7 @@ def main() -> int:
         if args.mesh:
             dims = tuple(int(x) for x in args.mesh.split(","))
             axes = ("pod", "data", "model")[-len(dims):]
-            return jax.make_mesh(dims, axes, axis_types=mesh_lib._auto(len(dims)))
+            return mesh_lib.make_mesh(dims, axes)
         return mesh_lib.make_production_mesh(multi_pod=multi_pod)
 
     archs = transformer_arch_ids() if (args.all or not args.arch) else [args.arch]

@@ -16,13 +16,31 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+    # jax < 0.5 has neither jax.sharding.AxisType nor the axis_types
+    # kwarg on make_mesh; None means "omit the kwarg".
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return None if axis_type is None else (axis_type.Auto,) * n
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """jax.make_mesh with Auto axis types where the jax version has them."""
+    auto = _auto(len(axes))
+    if auto is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def mesh_context(mesh: Mesh):
+    """``jax.set_mesh(mesh)`` on current jax; on jax < 0.5 the Mesh
+    object itself is the context manager."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
@@ -30,7 +48,7 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh: Mesh) -> tuple[str, ...]:

@@ -131,7 +131,7 @@ def main() -> int:
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
         axes = ("pod", "data", "model")[-len(dims):]
-        mesh = jax.make_mesh(dims, axes, axis_types=mesh_lib._auto(len(dims)))
+        mesh = mesh_lib.make_mesh(dims, axes)
     else:
         mesh = mesh_lib.make_production_mesh()
 

@@ -1,0 +1,56 @@
+"""``repro.schedule`` — the public API for anytime inference.
+
+The paper's contribution is a *design space* of execution step orders;
+this package exposes it as one coherent surface:
+
+* :mod:`repro.schedule.policies` — the :class:`OrderPolicy` registry
+  (``register_order`` / ``get_order_policy`` / ``list_orders``): every
+  order the paper evaluates, plus any you register, discoverable by name
+  and configurable as a dataclass value.
+* :mod:`repro.schedule.runtime` — :class:`AnytimeRuntime`: wraps any
+  anytime program (forest or transformer ensemble), caches generated
+  orders by content hash, serves deadline-aware :class:`Session`s with
+  RLE-fused chunked execution, and evaluates many orders in one vmapped
+  pass (:func:`evaluate_orders`).
+
+Quickstart::
+
+    from repro.schedule import AnytimeRuntime, ForestProgram, list_orders
+
+    rt = AnytimeRuntime(ForestProgram(forest, y_order=y_o, X_order=X_o))
+    sess = rt.session(X_test, "backward_squirrel")
+    sess.advance_until(deadline_ms=2.0)
+    preds = sess.predict()
+    curves = rt.evaluate_orders(X_test, y_test, list_orders())
+"""
+from repro.schedule.policies import (
+    OrderPolicy,
+    get_order_policy,
+    iter_policies,
+    list_orders,
+    register_order,
+)
+from repro.schedule.runtime import (
+    AnytimeRuntime,
+    ForestProgram,
+    ForestStepBackend,
+    Session,
+    check_order,
+    evaluate_orders,
+    rle_chunks,
+)
+
+__all__ = [
+    "OrderPolicy",
+    "register_order",
+    "get_order_policy",
+    "list_orders",
+    "iter_policies",
+    "AnytimeRuntime",
+    "ForestProgram",
+    "ForestStepBackend",
+    "Session",
+    "check_order",
+    "evaluate_orders",
+    "rle_chunks",
+]

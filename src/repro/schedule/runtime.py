@@ -1,0 +1,354 @@
+"""Deadline-aware anytime runtime — the serving half of ``repro.schedule``.
+
+:class:`AnytimeRuntime` wraps any :class:`~repro.core.anytime.AnytimeProgram`
+(a random forest via :class:`ForestProgram`, a transformer ensemble via
+:class:`repro.serving.anytime_depth.EnsembleProgram`, or anything else
+decomposable into schedulable units) and owns:
+
+* **order generation** through the :mod:`repro.schedule.policies` registry,
+  memoized in a content-hash cache keyed on (quality table, policy config)
+  so repeated sessions never re-run Dijkstra/Squirrel;
+* **sessions** — interruptible executions with ``advance(k)``,
+  ``advance_until(deadline_ms)`` and ``predict()`` after any prefix;
+* **RLE-fused execution** — consecutive same-unit steps in an order are
+  run-length encoded and each run executes as ONE ``lax.scan`` segment
+  instead of per-step dispatches (depth-style orders collapse from
+  U*S dispatches to U);
+* **batched evaluation** — :func:`evaluate_orders` runs the accuracy
+  curves of many orders in a single vmapped pass over the step axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from functools import partial
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.forest.forest import ForestArrays
+from repro.schedule.policies import OrderPolicy, get_order_policy, list_orders
+
+PolicyLike = Union[str, OrderPolicy]
+
+
+def _as_policy(policy: PolicyLike, **overrides) -> OrderPolicy:
+    if isinstance(policy, OrderPolicy):
+        return policy
+    return get_order_policy(policy, **overrides)
+
+
+def check_order(order: np.ndarray, n_units: int, unit_steps: int) -> np.ndarray:
+    """Validate a step order, raising a ValueError that names the first
+    offending unit (unlike a bare assert, this survives ``python -O``)."""
+    order = np.asarray(order)
+    expect = n_units * unit_steps
+    if order.shape[0] != expect:
+        raise ValueError(
+            f"invalid step order: length {order.shape[0]}, expected "
+            f"{n_units} units x {unit_steps} steps = {expect}"
+        )
+    counts = np.bincount(order, minlength=n_units)
+    bad = np.flatnonzero(counts != unit_steps)
+    if bad.size:
+        t = int(bad[0])
+        raise ValueError(
+            f"invalid step order: unit {t} takes {int(counts[t])} steps, "
+            f"expected {unit_steps} (and {bad.size - 1} more offending units)"
+        )
+    return order
+
+
+def rle_chunks(order: np.ndarray) -> list[tuple[int, int]]:
+    """Run-length encode a step order into (unit_id, run_length) chunks.
+
+    Consecutive equal entries fuse into one chunk, which the forest
+    backend executes as a single ``lax.scan`` segment.
+    """
+    order = np.asarray(order)
+    if order.size == 0:
+        return []
+    change = np.flatnonzero(np.diff(order)) + 1
+    starts = np.concatenate([[0], change])
+    ends = np.concatenate([change, [order.size]])
+    return [(int(order[s]), int(e - s)) for s, e in zip(starts, ends)]
+
+
+# ---------------------------------------------------------------------------
+# Forest execution backend (RLE-fused).
+# ---------------------------------------------------------------------------
+
+
+class ForestStepBackend:
+    """Step-level forest executor over an RLE-chunked order.
+
+    A run of r consecutive steps of the same tree executes as one jitted
+    ``lax.scan`` of length r (compiled once per distinct run length; the
+    tree id is a traced scalar, so runs of different trees share the
+    compilation).  ``advance`` remains exact at single-step granularity —
+    a chunk is split whenever the requested step budget ends inside it.
+    """
+
+    def __init__(self, device: engine.DeviceForest, X, order: np.ndarray):
+        self.device = device
+        self.X = jnp.asarray(X)
+        self.order = np.asarray(order, dtype=np.int32)
+        self.idx = engine.init_state(device, self.X.shape[0])
+        self.pos = 0
+        chunks = rle_chunks(self.order)
+        self._chunk_units = np.asarray([u for u, _ in chunks], dtype=np.int32)
+        self._chunk_starts = np.concatenate(
+            [[0], np.cumsum([n for _, n in chunks], dtype=np.int64)]
+        )
+
+        @partial(jax.jit, static_argnums=(2,))
+        def _run(idx, tree_id, n):
+            def body(i, _):
+                return engine.tree_step(self.device, self.X, i, tree_id), None
+
+            return jax.lax.scan(body, idx, None, length=n)[0]
+
+        self._run = _run
+
+    @property
+    def total_steps(self) -> int:
+        return int(self.order.shape[0])
+
+    @property
+    def remaining(self) -> int:
+        return self.total_steps - self.pos
+
+    def advance(self, k: int) -> int:
+        """Execute up to k more steps (RLE-fused); returns steps taken."""
+        k = min(int(k), self.remaining)
+        taken = 0
+        while taken < k:
+            ci = int(np.searchsorted(self._chunk_starts, self.pos, side="right")) - 1
+            seg_end = int(self._chunk_starts[ci + 1])
+            step = min(k - taken, seg_end - self.pos)
+            tree = jnp.int32(self._chunk_units[ci])
+            self.idx = self._run(self.idx, tree, step)
+            self.pos += step
+            taken += step
+        return taken
+
+    def predict_proba(self) -> np.ndarray:
+        return np.asarray(engine.predict_from_state(self.device, self.idx))
+
+    def predict(self) -> np.ndarray:
+        return self.predict_proba().argmax(axis=1)
+
+
+@dataclasses.dataclass
+class ForestProgram:
+    """Adapter making a trained forest an :class:`AnytimeProgram`.
+
+    Provide either the ordering set (``X_order``/``y_order``) — the
+    quality table is computed on demand — or a precomputed ``path_probs``
+    table alongside ``y_order``.
+    """
+
+    forest: ForestArrays
+    y_order: np.ndarray
+    X_order: Optional[np.ndarray] = None
+    path_probs: Optional[np.ndarray] = None
+    device: engine.DeviceForest = dataclasses.field(init=False, repr=False)
+
+    def __post_init__(self):
+        if self.X_order is None and self.path_probs is None:
+            raise ValueError("ForestProgram needs X_order or path_probs")
+        self.device = engine.to_device(self.forest)
+
+    @property
+    def n_units(self) -> int:
+        return self.forest.n_trees
+
+    @property
+    def unit_steps(self) -> int:
+        return self.forest.max_depth
+
+    def quality_table(self) -> tuple[np.ndarray, np.ndarray]:
+        if self.path_probs is None:
+            self.path_probs = engine.path_probs_np(self.forest, self.X_order)
+        return self.path_probs, np.asarray(self.y_order)
+
+    def make_session(self, order: np.ndarray, inputs) -> ForestStepBackend:
+        return ForestStepBackend(self.device, inputs, order)
+
+
+# ---------------------------------------------------------------------------
+# Deadline-aware session + runtime.
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """Interruptible inference over any step backend.
+
+    ``advance(k)`` runs up to k steps; ``advance_until(deadline_ms)``
+    runs chunks until a wall-clock deadline; ``predict()`` is valid after
+    ANY prefix — the deployment-facing realization of Sec. V, shared by
+    forests and transformer ensembles.
+    """
+
+    def __init__(self, backend, chunk: int = 8, clock=time.perf_counter):
+        self.backend = backend
+        self.chunk = int(chunk)
+        self.clock = clock
+
+    @property
+    def total_steps(self) -> int:
+        return self.backend.total_steps
+
+    @property
+    def pos(self) -> int:
+        return self.backend.pos
+
+    @property
+    def remaining(self) -> int:
+        return self.total_steps - self.backend.pos
+
+    def advance(self, k: int) -> int:
+        if k <= 0:
+            return 0
+        return self.backend.advance(k)
+
+    def advance_until(self, deadline_ms: float, chunk: Optional[int] = None) -> int:
+        """Advance in chunks until ``deadline_ms`` elapses or the order is
+        exhausted; returns steps taken.  The deadline is checked between
+        chunks, so the overshoot is bounded by one chunk's runtime."""
+        chunk = self.chunk if chunk is None else int(chunk)
+        t0 = self.clock()
+        budget_s = deadline_ms / 1e3
+        taken = 0
+        while self.remaining and (self.clock() - t0) < budget_s:
+            taken += self.backend.advance(min(chunk, self.remaining))
+        return taken
+
+    def run_to_completion(self) -> int:
+        return self.advance(self.remaining)
+
+    def predict(self) -> np.ndarray:
+        return self.backend.predict()
+
+    def predict_proba(self) -> np.ndarray:
+        fn = getattr(self.backend, "predict_proba", None)
+        if fn is None:
+            fn = self.backend.predict_logprobs
+        return fn()
+
+    def __getattr__(self, name: str):
+        # Backend-specific state (e.g. the forest index array ``idx``)
+        # stays reachable through the wrapper.
+        return getattr(self.backend, name)
+
+
+class AnytimeRuntime:
+    """Single serving entry point for anytime inference.
+
+    Wraps an :class:`AnytimeProgram` (forest or ensemble) and owns order
+    generation (policy registry + content-hash cache), session creation,
+    and batched order evaluation.
+
+        rt = AnytimeRuntime(ForestProgram(forest, y_order=y, X_order=X))
+        sess = rt.session(X_test, "backward_squirrel")
+        sess.advance_until(deadline_ms=2.0)
+        preds = sess.predict()
+    """
+
+    def __init__(self, program):
+        self.program = program
+        self._order_cache: dict[str, np.ndarray] = {}
+        self._quality: Optional[tuple[np.ndarray, np.ndarray]] = None
+        self._quality_digest: Optional[str] = None
+
+    def quality_table(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._quality is None:
+            self._quality = self.program.quality_table()
+            # Digest once: the table is immutable after this point, and
+            # per-request order()/session() calls must not re-hash a
+            # potentially tens-of-MB array.
+            pp, y = self._quality
+            h = hashlib.sha1()
+            h.update(np.ascontiguousarray(pp).tobytes())
+            h.update(np.ascontiguousarray(y).tobytes())
+            self._quality_digest = h.hexdigest()
+        return self._quality
+
+    def _cache_key(self, policy: OrderPolicy) -> str:
+        return f"{self._quality_digest}:{policy.cache_key()}"
+
+    def order(self, policy: PolicyLike, **overrides) -> np.ndarray:
+        """Generate (or fetch from cache) the step order for ``policy``."""
+        policy = _as_policy(policy, **overrides)
+        pp, y = self.quality_table()
+        key = self._cache_key(policy)
+        hit = self._order_cache.get(key)
+        if hit is None:
+            hit = check_order(
+                policy.generate(pp, y), self.program.n_units, self.program.unit_steps
+            )
+            self._order_cache[key] = hit
+        return hit
+
+    def session(
+        self,
+        inputs,
+        policy: PolicyLike = "backward_squirrel",
+        order: Optional[np.ndarray] = None,
+        chunk: int = 8,
+        clock=time.perf_counter,
+    ) -> Session:
+        if order is None:
+            order = self.order(policy)
+        else:
+            order = check_order(order, self.program.n_units, self.program.unit_steps)
+        return Session(self.program.make_session(order, inputs), chunk=chunk, clock=clock)
+
+    def evaluate_orders(
+        self, X, y, names: Optional[Sequence[PolicyLike]] = None
+    ) -> dict[str, np.ndarray]:
+        """Accuracy curves of many orders in ONE vmapped batched pass.
+
+        ``names`` defaults to every registered order.  Requires the
+        program to expose a :class:`~repro.core.engine.DeviceForest` as
+        ``.device`` (forests); other programs fall back to serial
+        per-order sessions."""
+        policies = [_as_policy(n) for n in (names if names is not None else list_orders())]
+        stacked = {p.name: self.order(p) for p in policies}
+        device = getattr(self.program, "device", None)
+        if device is not None:
+            return evaluate_orders(device, X, y, stacked)
+        out = {}
+        for name, order in stacked.items():
+            sess = self.session(X, order=order)
+            curve = [float(np.mean(sess.predict() == y))]
+            while sess.remaining:
+                sess.advance(1)
+                curve.append(float(np.mean(sess.predict() == y)))
+            out[name] = np.asarray(curve)
+        return out
+
+
+@partial(jax.jit, static_argnums=())
+def _batched_curves(device: engine.DeviceForest, X, orders_mat, y):
+    return jax.vmap(lambda o: engine.run_order(device, X, o, y)[1])(orders_mat)
+
+
+def evaluate_orders(
+    device: engine.DeviceForest, X, y, orders_by_name: dict[str, np.ndarray]
+) -> dict[str, np.ndarray]:
+    """Run every order's accuracy curve in a single vmapped pass.
+
+    All orders must share the same length (they do by construction:
+    n_trees * max_depth).  Returns {name: curve [steps+1]}."""
+    if not orders_by_name:
+        return {}
+    names = list(orders_by_name)
+    mat = jnp.asarray(np.stack([orders_by_name[n] for n in names]))
+    curves = _batched_curves(device, jnp.asarray(X), mat, jnp.asarray(y))
+    curves = np.asarray(curves)
+    return {n: curves[i] for i, n in enumerate(names)}

@@ -25,10 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import orders
 from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.schedule import get_order_policy
 
 
 @dataclasses.dataclass
@@ -68,20 +68,44 @@ def quality_table(members: Sequence[EnsembleMember], batch: dict,
 def generate_depth_order(members: Sequence[EnsembleMember], calib_batch: dict,
                          labels: np.ndarray, name: str = "backward_squirrel",
                          top_v: int = 64) -> np.ndarray:
-    """Step order over (member, layer) units via the core generators."""
+    """Step order over (member, layer) units via the policy registry.
+
+    Any name in :func:`repro.schedule.list_orders` works — not just the
+    five the old string dispatch special-cased."""
     pp, y = quality_table(members, calib_batch, labels, top_v=top_v)
-    ev = orders.StateEvaluator(pp, y)
-    if name == "backward_squirrel":
-        return orders.backward_squirrel(ev)
-    if name == "forward_squirrel":
-        return orders.forward_squirrel(ev)
-    if name == "optimal":
-        return orders.optimal_order(ev)
-    if name == "depth":
-        return orders.depth_order(ev.T, ev.depth)
-    if name == "breadth":
-        return orders.breadth_order(ev.T, ev.depth)
-    raise ValueError(name)
+    return get_order_policy(name).generate(pp, y)
+
+
+@dataclasses.dataclass
+class EnsembleProgram:
+    """Adapter making an LM ensemble an :class:`AnytimeProgram`, so
+    :class:`repro.schedule.AnytimeRuntime` can schedule and serve it with
+    the exact machinery used for forests (order cache, deadline-aware
+    sessions)."""
+
+    members: Sequence[EnsembleMember]
+    calib_batch: dict
+    calib_labels: np.ndarray
+    top_v: int = 64
+    _quality: Optional[tuple] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def n_units(self) -> int:
+        return len(self.members)
+
+    @property
+    def unit_steps(self) -> int:
+        return max(m.cfg.num_layers for m in self.members)
+
+    def quality_table(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._quality is None:
+            self._quality = quality_table(
+                self.members, self.calib_batch, self.calib_labels, top_v=self.top_v
+            )
+        return self._quality
+
+    def make_session(self, order: np.ndarray, inputs: dict) -> "AnytimeEnsembleSession":
+        return AnytimeEnsembleSession(self.members, order, inputs)
 
 
 class AnytimeEnsembleSession:

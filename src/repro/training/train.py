@@ -104,7 +104,7 @@ def train_loop(cfg: ModelConfig, *, steps: int, seq_len: int, batch_size: int,
     batches = make_batches(cfg, seq_len, batch_size, seed=seed)
     first = next(batches)
 
-    with jax.set_mesh(mesh):
+    with mesh_lib.mesh_context(mesh):
         params = MD.init(cfg, jax.random.PRNGKey(seed))
         if param_dtype != jnp.float32:
             from repro.models.params import cast_tree

@@ -1,0 +1,59 @@
+"""Import ``given``/``settings``/``st`` from hypothesis when available,
+else fall back to a deterministic sampler so the tier-1 suite collects
+and runs without the dependency installed.
+
+The fallback covers exactly what the suite uses: ``@settings(...)``
+stacked on ``@given(**kwargs)`` with ``st.integers(lo, hi)`` strategies.
+Each wrapped test runs ``max_examples`` times on values drawn from a
+PRNG seeded from the test name (stable across runs and processes).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Integers:
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def sample(self, rng) -> int:
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class st:  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+    class settings:  # noqa: N801
+        def __init__(self, max_examples=10, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._compat_max_examples = self.max_examples
+            return fn
+
+    def given(**strategies):
+        def deco(fn):
+            # No functools.wraps: it would set __wrapped__ and pytest
+            # would then mistake the drawn parameters for fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_compat_max_examples", 10)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -1,7 +1,7 @@
 """CART / random-forest substrate invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.forest.cart import train_tree

@@ -3,7 +3,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import engine, orders, pruning, qwyc
 from repro.core.anytime import ORDER_NAMES, generate_order

@@ -1,0 +1,243 @@
+"""repro.schedule: policy registry parity with the legacy dispatch,
+deadline sessions, RLE-fused execution, and batched order evaluation."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, orders, pruning, qwyc
+from repro.core.anytime import ORDER_NAMES, AnytimeForest
+from repro.forest import make_dataset, split_dataset, train_forest
+from repro.schedule import (
+    AnytimeRuntime,
+    ForestProgram,
+    OrderPolicy,
+    Session,
+    check_order,
+    evaluate_orders,
+    get_order_policy,
+    list_orders,
+    register_order,
+    rle_chunks,
+)
+from repro.schedule import policies as policies_mod
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    # magic is binary, so every registered order (incl. qwyc) is legal
+    X, y = make_dataset("magic", seed=0)
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=0)
+    rf = train_forest(tr[:800], ytr[:800], 2, n_trees=4, max_depth=3, seed=0)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx[:300])
+    return fa, pp, yor[:300], te[:200], yte[:200]
+
+
+def _legacy_generate_order(name, path_probs, y, seed=0, state_limit=2_000_000):
+    """Frozen copy of the pre-registry string dispatch — the parity
+    reference the registry must reproduce byte-for-byte."""
+    B, T, d1, C = path_probs.shape
+    d = d1 - 1
+    ev = orders.StateEvaluator(path_probs, y)
+    if name == "optimal":
+        return orders.optimal_order(ev, state_limit=state_limit)
+    if name == "unoptimal":
+        return orders.unoptimal_order(ev, state_limit=state_limit)
+    if name == "forward_squirrel":
+        return orders.forward_squirrel(ev)
+    if name == "backward_squirrel":
+        return orders.backward_squirrel(ev)
+    if name == "random":
+        return orders.random_order(T, d, seed=seed)
+    if name == "depth":
+        return orders.depth_order(T, d)
+    if name == "breadth":
+        return orders.breadth_order(T, d)
+    if name.startswith("prune_"):
+        _, variant, metric = name.split("_")
+        seq = pruning.PRUNE_SEQUENCES[metric](path_probs, y)
+        fn = orders.depth_order if variant == "depth" else orders.breadth_order
+        return fn(T, d, seq)
+    if name.startswith("qwyc_"):
+        variant = name.split("_")[1]
+        seq, _ = qwyc.qwyc_seq(path_probs, y)
+        fn = orders.depth_order if variant == "depth" else orders.breadth_order
+        return fn(T, d, seq)
+    raise ValueError(f"unknown order: {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_legacy_names_in_order():
+    assert tuple(list_orders()) == ORDER_NAMES
+    assert len(set(list_orders())) == len(list_orders())
+
+
+@pytest.mark.parametrize("name", ORDER_NAMES)
+def test_registry_parity_with_legacy_dispatch(name, pipeline):
+    """Every legacy string must yield a BYTE-IDENTICAL order through the
+    registry (the PR's central acceptance criterion)."""
+    fa, pp, yor, te, yte = pipeline
+    legacy = _legacy_generate_order(name, pp, yor, seed=0)
+    via_registry = get_order_policy(name, seed=0).generate(pp, yor)
+    assert legacy.dtype == via_registry.dtype
+    assert legacy.tobytes() == via_registry.tobytes()
+
+
+def test_deprecated_shim_warns_and_matches(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    from repro.core import generate_order
+
+    with pytest.warns(DeprecationWarning):
+        shimmed = generate_order("backward_squirrel", pp, yor)
+    direct = get_order_policy("backward_squirrel").generate(pp, yor)
+    assert shimmed.tobytes() == direct.tobytes()
+
+
+def test_unknown_order_name_raises():
+    with pytest.raises(ValueError, match="unknown order"):
+        get_order_policy("no_such_order")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+
+        @register_order("depth")
+        @dataclasses.dataclass
+        class Dup(OrderPolicy):
+            pass
+
+
+def test_policy_config_fields_and_override_filtering():
+    p = get_order_policy("random", seed=7, state_limit=123)  # state_limit dropped
+    assert p.seed == 7 and p.name == "random"
+    q = get_order_policy("optimal", state_limit=99)
+    assert q.state_limit == 99
+    assert p.cache_key() != get_order_policy("random", seed=8).cache_key()
+
+
+def test_prune_metrics_in_sync_with_pruning_module():
+    # policies.py hardcodes the metric keys to stay import-acyclic
+    assert tuple(pruning.PRUNE_SEQUENCES) == policies_mod.PRUNE_METRICS
+
+
+# ---------------------------------------------------------------------------
+# check_order / AnytimeForest validation
+# ---------------------------------------------------------------------------
+
+
+def test_check_order_names_offending_unit():
+    with pytest.raises(ValueError, match="unit 1 takes 3 steps"):
+        check_order(np.array([0, 0, 1, 1, 1, 2], dtype=np.int32), 3, 2)
+    with pytest.raises(ValueError, match="length 5"):
+        check_order(np.zeros(5, dtype=np.int32), 3, 2)
+
+
+def test_anytime_forest_rejects_bad_order(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    bad = np.zeros(fa.n_trees * fa.max_depth, dtype=np.int32)  # all tree 0
+    with pytest.raises(ValueError, match="unit 0"):
+        AnytimeForest(fa, bad)
+
+
+# ---------------------------------------------------------------------------
+# Runtime: cache, sessions, RLE fusion, deadline loop
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_order_cache_hits(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    rt = AnytimeRuntime(ForestProgram(fa, y_order=yor, path_probs=pp))
+    a = rt.order("backward_squirrel")
+    b = rt.order("backward_squirrel")
+    assert a is b  # second call served from the content-hash cache
+    assert rt.order("random", seed=1) is not rt.order("random", seed=2)
+
+
+def test_rle_chunks_roundtrip():
+    order = np.array([3, 3, 3, 1, 2, 2, 3], dtype=np.int32)
+    chunks = rle_chunks(order)
+    assert chunks == [(3, 3), (1, 1), (2, 2), (3, 1)]
+    rebuilt = np.concatenate([[u] * n for u, n in chunks])
+    np.testing.assert_array_equal(rebuilt, order)
+    assert rle_chunks(np.array([], dtype=np.int32)) == []
+
+
+@pytest.mark.parametrize("name", ["depth", "breadth", "backward_squirrel"])
+def test_rle_fused_session_matches_unfused_run_order(name, pipeline):
+    """Chunk-fused execution must be step-for-step equivalent to the
+    unfused reference scan, at every prefix — not just at the end."""
+    fa, pp, yor, te, yte = pipeline
+    rt = AnytimeRuntime(ForestProgram(fa, y_order=yor, path_probs=pp))
+    order = rt.order(name)
+    sess = rt.session(te, order=order)
+    dev = engine.to_device(fa)
+    pos = 0
+    for k in (1, 2, 5, 1, 3, 10_000):  # odd chunks straddle RLE runs
+        sess.advance(k)
+        pos = min(pos + k, len(order))
+        if pos == 0:
+            continue
+        idx_ref, _ = engine.run_order(dev, jnp.asarray(te), jnp.asarray(order[:pos]))
+        ref = np.asarray(engine.predict_from_state(dev, idx_ref))
+        np.testing.assert_allclose(sess.predict_proba(), ref, rtol=1e-6, atol=1e-6)
+    assert sess.remaining == 0
+
+
+def test_session_advance_until_deadline(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    rt = AnytimeRuntime(ForestProgram(fa, y_order=yor, path_probs=pp))
+
+    class FakeClock:
+        """Each call advances 1 'ms' — deadline math becomes exact."""
+
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            self.t += 1e-3
+            return self.t
+
+    # t0 costs one read; each loop check costs one more, so elapsed time
+    # at check k is k fake-ms: checks at 1..4 ms pass, the 5 ms check
+    # fails -> exactly 4 chunks of 2 steps execute
+    sess = rt.session(te, "backward_squirrel", chunk=2, clock=FakeClock())
+    taken = sess.advance_until(deadline_ms=5.0)
+    assert taken == 8 and sess.pos == 8
+
+    # an expired deadline takes no steps at all
+    sess2 = rt.session(te, "backward_squirrel", chunk=2, clock=FakeClock())
+    assert sess2.advance_until(deadline_ms=0.0) == 0
+    assert sess2.pos == 0
+
+    # a generous deadline runs to completion and predictions match the
+    # one-shot batch execution
+    sess3 = rt.session(te, "backward_squirrel", chunk=3, clock=FakeClock())
+    taken3 = sess3.advance_until(deadline_ms=1e9)
+    assert taken3 == sess3.total_steps and sess3.remaining == 0
+    curve = AnytimeForest(fa, rt.order("backward_squirrel")).accuracy_curve(te, yte)
+    acc = float((sess3.predict() == yte).mean())
+    assert acc == pytest.approx(float(curve[-1]), abs=1e-6)
+
+
+def test_evaluate_orders_vmapped_matches_serial(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    rt = AnytimeRuntime(ForestProgram(fa, y_order=yor, path_probs=pp))
+    names = ["depth", "breadth", "backward_squirrel"]
+    batched = rt.evaluate_orders(te, yte, names)
+    assert set(batched) == set(names)
+    for n in names:
+        serial = AnytimeForest(fa, rt.order(n)).accuracy_curve(te, yte)
+        np.testing.assert_allclose(batched[n], serial, rtol=1e-6, atol=1e-6)
+        assert len(batched[n]) == fa.n_trees * fa.max_depth + 1
+
+
+def test_forest_program_requires_ordering_inputs(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    with pytest.raises(ValueError, match="X_order or path_probs"):
+        ForestProgram(fa, y_order=yor)

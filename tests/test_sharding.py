@@ -85,14 +85,13 @@ def test_roofline_terms_math():
 
 
 def test_param_sharding_rules():
-    import jax
     from repro.configs.registry import get_config
+    from repro.launch import mesh as mesh_lib
     from repro.models import model as MD
     from repro.models.params import shardings_for
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = mesh_lib.make_mesh((1, 1), ("data", "model"))
     cfg = get_config("qwen3-14b")
     sh = shardings_for(MD.build_param_specs(cfg), mesh, "fsdp_tp",
                        shard_kv_heads=False)
