@@ -1,0 +1,143 @@
+"""Execution-backend benchmarks and the CI kernel-path regression gate.
+
+Three entry points, all wired through ``benchmarks/run.py``:
+
+* :func:`run_nma` — per-order NMA via ``AnytimeRuntime.evaluate_orders``
+  (one vmapped pass); the summary lands in ``BENCH_nma.json`` so NMA
+  regressions across PRs show up in version control, not just curves.
+* :func:`run_parity` — the smoke gate: the ``pallas`` (interpret) and
+  ``sharded`` backends must reproduce the ``jnp-ref`` oracle's index
+  state bit-for-bit under a mid-chunk advance pattern.  Raises on
+  mismatch, so a kernel-path regression FAILS the build.
+* :func:`run_stepplan_traces` — micro-benchmark of the acceptance
+  criterion: step-plan bucketing caps distinct jit compilations for a
+  squirrel order at ≤ 8 traces, vs one compilation per distinct
+  dispatched run length on the legacy path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_pipeline, runtime_for, timed
+from repro.core.metrics import normalized_mean_accuracy
+from repro.schedule import list_orders, rle_chunks
+
+
+def run_nma(dataset: str = "magic", n_trees: int = 5, depth: int = 4,
+            seed: int = 0, names=None, verbose: bool = True) -> dict:
+    """Per-order NMA from one vmapped evaluate_orders pass."""
+    fa, pp, yor, te, yte = build_pipeline(dataset, n_trees, depth, seed=seed,
+                                          n_order=300, n_test=300)
+    rt = runtime_for(fa, pp, yor)
+    names = list(names) if names is not None else [
+        n for n in list_orders()
+        # qwyc orders assume binary labels; magic is binary so keep them,
+        # but guard for other datasets
+        if not (n.startswith("qwyc_") and int(yte.max()) > 1)
+    ]
+    curves, dt = timed(rt.evaluate_orders, te, yte, names)
+    nma = {n: float(normalized_mean_accuracy(curves[n])) for n in names}
+    if verbose:
+        for n in sorted(nma, key=nma.get, reverse=True):
+            print(f"nma,{dataset},{n},{nma[n]:.4f}")
+        print(f"nma,{dataset},eval_s,{dt:.2f}")
+    return {"dataset": dataset, "n_trees": n_trees, "depth": depth,
+            "seed": seed, "nma": nma, "eval_s": dt}
+
+
+def run_parity(dataset: str = "magic", n_trees: int = 4, depth: int = 5,
+               n_test: int = 33, verbose: bool = True) -> dict:
+    """Backend parity gate (raises AssertionError on divergence).
+
+    Odd 33-sample batch + small kernel tiles force batch padding and
+    multi-M-tile streaming; the advance pattern splits RLE runs
+    mid-chunk.
+    """
+    fa, pp, yor, te, yte = build_pipeline(dataset, n_trees, depth,
+                                          n_order=200, n_test=n_test)
+    rt = runtime_for(fa, pp, yor)
+    order = rt.order("backward_squirrel")
+    opts = {"pallas": {"block_b": 16, "block_m": 8}, "sharded": {}}
+    ref = rt.session(te, order=order, backend="jnp-ref")
+    others = {n: rt.session(te, order=order, backend=n, **o)
+              for n, o in opts.items()}
+    timings = {}
+    for k in (1, 2, 5, 1, 3, 10_000):
+        ref.advance(k)
+        for name, sess in others.items():
+            _, dt = timed(sess.advance, k)
+            timings.setdefault(name, 0.0)
+            timings[name] += dt
+            assert np.array_equal(
+                np.asarray(sess.idx)[:n_test], np.asarray(ref.idx)
+            ), f"{name} diverged from jnp-ref at pos {ref.pos}"
+            np.testing.assert_allclose(
+                sess.predict_proba(), ref.predict_proba(),
+                rtol=1e-5, atol=1e-5,
+                err_msg=f"{name} read-out diverged at pos {ref.pos}")
+    if verbose:
+        for name, dt in timings.items():
+            print(f"backend_parity,{name},ok,advance_s,{dt:.3f}")
+    return {"backends_checked": sorted(others), "steps": int(ref.pos),
+            "advance_s": timings}
+
+
+def run_stepplan_traces(dataset: str = "magic", n_trees: int = 6,
+                        depth: int = 12, chunk: int = 10_000,
+                        verbose: bool = True) -> dict:
+    """Trace-count micro-benchmark (acceptance criterion).
+
+    Replays a chunked deadline-style serving loop over a squirrel order
+    and counts the distinct fused-segment lengths each strategy
+    dispatches — on the legacy path every distinct length is a separate
+    jit compilation of the scan; the step-plan buckets them to powers of
+    two, bounded at 8.
+    """
+    fa, pp, yor, te, yte = build_pipeline(dataset, n_trees, depth,
+                                          n_order=200, n_test=64)
+    rt = runtime_for(fa, pp, yor)
+    order = rt.order("backward_squirrel")
+
+    # Legacy dispatch: one scan per RLE run, split only at chunk
+    # boundaries — each distinct length is one jit trace.
+    legacy_lengths: set[int] = set()
+    pos = 0
+    starts = np.concatenate(
+        [[0], np.cumsum([n for _, n in rle_chunks(order)], dtype=np.int64)])
+    while pos < len(order):
+        budget = min(chunk, len(order) - pos)
+        while budget:
+            ci = int(np.searchsorted(starts, pos, side="right")) - 1
+            step = min(budget, int(starts[ci + 1]) - pos)
+            legacy_lengths.add(step)
+            pos += step
+            budget -= step
+
+    sess = rt.session(te, order=order, backend="jnp-ref")
+    while sess.remaining:
+        sess.advance(chunk)
+    plan_lengths = sess.backend.dispatched_lengths
+    assert len(plan_lengths) <= 8, (
+        f"step-plan dispatched {sorted(plan_lengths)} — more than 8 traces")
+    if verbose:
+        print(f"stepplan,traces_legacy,{len(legacy_lengths)},"
+              f"lengths,{sorted(legacy_lengths)}")
+        print(f"stepplan,traces_plan,{len(plan_lengths)},"
+              f"lengths,{sorted(plan_lengths)}")
+    return {"order": "backward_squirrel", "chunk": chunk,
+            "n_trees": n_trees, "depth": depth,
+            "legacy_traces": len(legacy_lengths),
+            "plan_traces": len(plan_lengths),
+            "plan_lengths": sorted(plan_lengths)}
+
+
+def run(verbose: bool = True) -> dict:
+    return {
+        "parity": run_parity(verbose=verbose),
+        "stepplan": run_stepplan_traces(verbose=verbose),
+    }
+
+
+if __name__ == "__main__":
+    run()
+    run_nma()

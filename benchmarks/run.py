@@ -1,8 +1,15 @@
-"""Benchmark driver: one module per paper figure + kernel micro-bench.
+"""Benchmark driver: one module per paper figure + kernel/backend benches.
 
 ``python -m benchmarks.run [--fast]`` prints CSV-ish lines per benchmark
-and writes reports/bench_results.json.  EXPERIMENTS.md cites these
-numbers; the roofline/dry-run tables come from repro.launch.dryrun.
+and writes reports/bench_results.json plus BENCH_nma.json (per-order NMA
+from one vmapped ``AnytimeRuntime.evaluate_orders`` pass — the number
+regression-tracked across PRs).  EXPERIMENTS.md cites these numbers; the
+roofline/dry-run tables come from repro.launch.dryrun.
+
+``--smoke`` is the CI gate: reduced config, only the execution-backend
+parity check (pallas/sharded vs the jnp-ref oracle — raises on
+divergence, failing the build), the step-plan trace-count bound, the
+kernel micro-bench, and the NMA summary.
 """
 from __future__ import annotations
 
@@ -12,60 +19,88 @@ import os
 import time
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true",
-                    help="reduced grids (CI-sized)")
-    ap.add_argument("--out", default="reports/bench_results.json")
-    args = ap.parse_args()
-
-    from benchmarks import (bench_fig3_time_vs_steps, bench_fig4_order_gen_runtime,
-                            bench_fig5_steps_vs_accuracy, bench_fig6_nma,
-                            bench_kernels)
-
-    results = {}
-    t0 = time.perf_counter()
-
-    print("== Fig.3: expiry time vs executed steps ==", flush=True)
-    results["fig3"] = bench_fig3_time_vs_steps.run(
-        n_trees=6 if args.fast else 10, depth=6 if args.fast else 10,
-        n_periods=5 if args.fast else 8, repeats=2 if args.fast else 3)
-
-    print("== Fig.4: order generation runtime ==", flush=True)
-    results["fig4"] = bench_fig4_order_gen_runtime.run(
-        depth=6 if args.fast else 8,
-        max_trees=6 if args.fast else 8,
-        optimal_limit=4 if args.fast else 6)
-
-    print("== Fig.5: steps vs accuracy ==", flush=True)
-    results["fig5"] = bench_fig5_steps_vs_accuracy.run(
-        n_trees=5 if args.fast else 6, depth=5 if args.fast else 6)
-
-    print("== Fig.6: NMA across datasets ==", flush=True)
-    results["fig6"] = bench_fig6_nma.run(
-        datasets=["magic", "letter", "spambase"] if args.fast else None,
-        small=(4, 4) if args.fast else (5, 4),
-        large=(8, 6) if args.fast else (10, 8),
-        seeds=(0,) if args.fast else (0, 1))
-
-    print("== Kernel micro-benchmarks ==", flush=True)
-    results["kernels"] = bench_kernels.run()
-
-    results["total_s"] = time.perf_counter() - t0
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+def _dump(path: str, payload) -> None:
+    import numpy as np
 
     def default(o):
-        import numpy as np
         if isinstance(o, (np.floating, np.integer)):
             return o.item()
         if isinstance(o, np.ndarray):
             return o.tolist()
         return str(o)
 
-    with open(args.out, "w") as f:
-        json.dump(results, f, indent=2, default=default)
+    if os.path.dirname(path):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=default)
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced grids (CI-sized)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="backend-parity gate + trace bound + kernels + NMA "
+                         "only (fails on kernel-path regressions)")
+    ap.add_argument("--out", default="reports/bench_results.json")
+    ap.add_argument("--nma-out", default="BENCH_nma.json",
+                    help="per-order NMA summary for cross-PR regression "
+                         "tracking")
+    args = ap.parse_args()
+
+    from benchmarks import bench_backends, bench_kernels
+
+    results = {}
+    t0 = time.perf_counter()
+
+    if not args.smoke:
+        from benchmarks import (bench_fig3_time_vs_steps,
+                                bench_fig4_order_gen_runtime,
+                                bench_fig5_steps_vs_accuracy, bench_fig6_nma)
+
+        print("== Fig.3: expiry time vs executed steps ==", flush=True)
+        results["fig3"] = bench_fig3_time_vs_steps.run(
+            n_trees=6 if args.fast else 10, depth=6 if args.fast else 10,
+            n_periods=5 if args.fast else 8, repeats=2 if args.fast else 3)
+
+        print("== Fig.4: order generation runtime ==", flush=True)
+        results["fig4"] = bench_fig4_order_gen_runtime.run(
+            depth=6 if args.fast else 8,
+            max_trees=6 if args.fast else 8,
+            optimal_limit=4 if args.fast else 6)
+
+        print("== Fig.5: steps vs accuracy ==", flush=True)
+        results["fig5"] = bench_fig5_steps_vs_accuracy.run(
+            n_trees=5 if args.fast else 6, depth=5 if args.fast else 6)
+
+        print("== Fig.6: NMA across datasets ==", flush=True)
+        results["fig6"] = bench_fig6_nma.run(
+            datasets=["magic", "letter", "spambase"] if args.fast else None,
+            small=(4, 4) if args.fast else (5, 4),
+            large=(8, 6) if args.fast else (10, 8),
+            seeds=(0,) if args.fast else (0, 1))
+
+    print("== Backend parity gate (pallas/sharded vs jnp-ref) ==", flush=True)
+    results["backend_parity"] = bench_backends.run_parity(
+        n_trees=3 if args.smoke else 4, depth=4 if args.smoke else 5)
+
+    print("== Step-plan trace bound ==", flush=True)
+    results["stepplan"] = bench_backends.run_stepplan_traces(
+        n_trees=4 if args.smoke else 6, depth=8 if args.smoke else 12)
+
+    print("== Kernel micro-benchmarks ==", flush=True)
+    results["kernels"] = bench_kernels.run()
+
+    print("== Per-order NMA (evaluate_orders, vmapped) ==", flush=True)
+    small = args.smoke or args.fast
+    results["nma"] = bench_backends.run_nma(
+        n_trees=4 if small else 6, depth=3 if small else 5)
+    _dump(args.nma_out, results["nma"])
+
+    results["total_s"] = time.perf_counter() - t0
+    _dump(args.out, results)
     print(f"bench,total_s,{results['total_s']:.1f}")
-    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

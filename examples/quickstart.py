@@ -6,7 +6,7 @@ the ``repro.schedule`` policy registry, run anytime inference through the
 """
 import numpy as np
 
-from repro import AnytimeRuntime, ForestProgram, list_orders
+from repro import AnytimeRuntime, ForestProgram, list_backends, list_orders
 from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
 from repro.forest import make_dataset, split_dataset, train_forest
 
@@ -23,6 +23,7 @@ def main():
     print(f"forest: {forest.n_trees} trees, depth {forest.max_depth}, "
           f"{forest.total_steps} anytime steps")
     print(f"registered order policies: {', '.join(list_orders())}")
+    print(f"registered execution backends: {', '.join(list_backends())}")
 
     # 3. one runtime owns order generation (content-hash cached) and
     #    serving; every registered order's curve comes from a single
@@ -38,13 +39,16 @@ def main():
               f"curve: {curve[0]:.3f} -> {curve[len(curve)//2]:.3f} "
               f"-> {curve[-1]:.3f}")
 
-    # 4. online: interruptible session — abort after ANY number of steps
+    # 4. online: interruptible session — abort after ANY number of steps.
+    #    backend= picks the execution layer ("jnp-ref" oracle scan,
+    #    "pallas" MXU kernels, "sharded" mesh batching); unset
+    #    auto-selects by jax.default_backend().
     sess = rt.session(Xte, "backward_squirrel")
     for budget in (0, 3, 10, sess.total_steps):
         sess.advance(budget - sess.pos)
         acc = (sess.predict() == yte).mean()
         print(f"abort after {sess.pos:3d}/{sess.total_steps} steps -> "
-              f"accuracy {acc:.4f}")
+              f"accuracy {acc:.4f}  [{sess.backend.backend_name}]")
 
 
 if __name__ == "__main__":

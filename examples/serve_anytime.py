@@ -37,6 +37,20 @@ def forest_serving():
         print(f"  deadline {deadline_ms:7.1f} ms -> {sess.pos:3d}/"
               f"{sess.total_steps} steps, accuracy {acc:.4f}")
 
+    # Execution backends are pluggable per session: "pallas" routes the
+    # fused runs through the MXU kernels (compiled Mosaic on TPU;
+    # interpret mode on CPU, so only a small slice here), "sharded"
+    # places the batch axis on the host mesh. Both match "jnp-ref"
+    # bit-for-bit — the parity suite in tests/test_backends.py.
+    ref = rt.session(Xte[:64], "backward_squirrel", backend="jnp-ref")
+    ref.run_to_completion()
+    for backend in ("pallas", "sharded"):
+        sess = rt.session(Xte[:64], "backward_squirrel", backend=backend)
+        sess.run_to_completion()
+        agree = (sess.predict() == ref.predict()).mean()
+        print(f"  backend={backend:8s} agreement vs jnp-ref: {agree:.4f} "
+              f"({len(sess.backend.dispatched_lengths)} jit traces)")
+
 
 def transformer_serving():
     print("=== anytime-depth transformer serving (beyond-paper) ===")

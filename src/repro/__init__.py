@@ -15,7 +15,9 @@ from repro.schedule import (
     OrderPolicy,
     Session,
     get_order_policy,
+    list_backends,
     list_orders,
+    register_backend,
     register_order,
 )
 
@@ -25,6 +27,8 @@ __all__ = [
     "OrderPolicy",
     "Session",
     "get_order_policy",
+    "list_backends",
     "list_orders",
+    "register_backend",
     "register_order",
 ]

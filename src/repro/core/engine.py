@@ -78,6 +78,22 @@ def tree_step(forest: DeviceForest, X: jax.Array, idx: jax.Array, tree_id: jax.A
     return idx.at[:, tree_id].set(nxt)
 
 
+def tree_run(
+    forest: DeviceForest, X: jax.Array, idx: jax.Array, tree_id: jax.Array, n: int
+) -> jax.Array:
+    """n fused steps of ``tree_id`` as one ``lax.scan`` (n static under jit).
+
+    This is the RLE-fusion primitive: a run of n consecutive same-tree
+    steps in an order costs one dispatch instead of n.  ``tree_id`` stays
+    a traced scalar, so runs of different trees share the compilation.
+    """
+
+    def body(i, _):
+        return tree_step(forest, X, i, tree_id), None
+
+    return jax.lax.scan(body, idx, None, length=n)[0]
+
+
 def predict_from_state(forest: DeviceForest, idx: jax.Array) -> jax.Array:
     """Anytime read-out: sum per-node probability vectors over trees.
 

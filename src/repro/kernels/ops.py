@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref  # noqa: F401  (oracles re-exported below)
 from repro.kernels.forest_step import forest_step as _forest_step
 from repro.kernels.prob_accum import prob_accum as _prob_accum
 
@@ -26,6 +26,26 @@ def forest_step(idx, X, feature, threshold, left, right, is_leaf, **kw):
         idx, X, feature, threshold, left, right, is_leaf,
         interpret=interpret, **kw,
     )
+
+
+def forest_run(idx, X, feature, threshold, left, right, is_leaf, *, length, **kw):
+    """RLE-fused run: ``length`` consecutive steps of ONE tree for a batch,
+    scanned over the Pallas step kernel in a single dispatch.
+
+    idx here is the stepped tree's index COLUMN (int32 [B]); ``length``
+    must be static under jit — the step-plan buckets it to powers of two
+    so at most log2(cap)+1 traces ever exist.
+    """
+    interpret = kw.pop("interpret", not _on_tpu())
+
+    def body(col, _):
+        col = _forest_step(
+            col, X, feature, threshold, left, right, is_leaf,
+            interpret=interpret, **kw,
+        )
+        return col, None
+
+    return jax.lax.scan(body, idx, None, length=length)[0]
 
 
 def prob_accum(idx, probs, **kw):

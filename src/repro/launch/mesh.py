@@ -60,6 +60,24 @@ def batch_pspec(mesh: Mesh) -> P:
     return P(batch_axes(mesh))
 
 
+def n_batch_shards(mesh: Mesh) -> int:
+    """How many ways the batch axis splits on this mesh."""
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding placing an array's leading (batch) dim on the mesh."""
+    return NamedSharding(mesh, batch_pspec(mesh))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement (e.g. forest node tables, params)."""
+    return NamedSharding(mesh, P())
+
+
 def seq_pspec(mesh: Mesh) -> P:
     """Context-parallel spec: shard a sequence/cache-length dim over the
     batch axes (used when global_batch < data axis, e.g. long_500k)."""

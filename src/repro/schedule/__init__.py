@@ -7,22 +7,38 @@ this package exposes it as one coherent surface:
   (``register_order`` / ``get_order_policy`` / ``list_orders``): every
   order the paper evaluates, plus any you register, discoverable by name
   and configurable as a dataclass value.
+* :mod:`repro.schedule.backends` — the pluggable execution layer
+  (``register_backend`` / ``get_backend`` / ``list_backends``): orders
+  compile once into power-of-two bucketed :class:`StepPlan` segments
+  and run on the ``jnp-ref`` oracle scan, the ``pallas`` MXU kernels,
+  or ``sharded`` across a mesh.
 * :mod:`repro.schedule.runtime` — :class:`AnytimeRuntime`: wraps any
   anytime program (forest or transformer ensemble), caches generated
   orders by content hash, serves deadline-aware :class:`Session`s with
-  RLE-fused chunked execution, and evaluates many orders in one vmapped
-  pass (:func:`evaluate_orders`).
+  plan-fused chunked execution on any registered backend, and evaluates
+  many orders in one vmapped pass (:func:`evaluate_orders`).
 
 Quickstart::
 
     from repro.schedule import AnytimeRuntime, ForestProgram, list_orders
 
     rt = AnytimeRuntime(ForestProgram(forest, y_order=y_o, X_order=X_o))
-    sess = rt.session(X_test, "backward_squirrel")
+    sess = rt.session(X_test, "backward_squirrel", backend="pallas")
     sess.advance_until(deadline_ms=2.0)
     preds = sess.predict()
     curves = rt.evaluate_orders(X_test, y_test, list_orders())
 """
+from repro.schedule.backends import (
+    ForestStepBackend,
+    StepPlan,
+    check_order,
+    default_backend,
+    get_backend,
+    list_backends,
+    pow2_decompose,
+    register_backend,
+    rle_chunks,
+)
 from repro.schedule.policies import (
     OrderPolicy,
     get_order_policy,
@@ -33,11 +49,8 @@ from repro.schedule.policies import (
 from repro.schedule.runtime import (
     AnytimeRuntime,
     ForestProgram,
-    ForestStepBackend,
     Session,
-    check_order,
     evaluate_orders,
-    rle_chunks,
 )
 
 __all__ = [
@@ -50,7 +63,13 @@ __all__ = [
     "ForestProgram",
     "ForestStepBackend",
     "Session",
+    "StepPlan",
     "check_order",
+    "default_backend",
     "evaluate_orders",
+    "get_backend",
+    "list_backends",
+    "pow2_decompose",
+    "register_backend",
     "rle_chunks",
 ]

@@ -1,0 +1,407 @@
+"""Pluggable execution backends for anytime forest serving.
+
+The paper's anytime value proposition (Sec. V) only pays off if the
+per-step overhead is negligible; this module makes the execution layer
+a pluggable subsystem so the same :class:`~repro.schedule.runtime.Session`
+surface can dispatch to whichever implementation the hardware rewards:
+
+* ``jnp-ref``  — the pure-jnp ``engine.tree_step`` scan.  Kept as the
+  bit-exactness oracle every other backend is parity-tested against.
+* ``pallas``   — RLE-fused runs dispatched through the MXU-oriented
+  Pallas kernels (:func:`repro.kernels.ops.forest_run` for stepping,
+  :func:`repro.kernels.ops.prob_accum` for the read-out).  Interpret
+  mode on CPU, compiled Mosaic on TPU.
+* ``sharded``  — the batch axis placed on a ``launch/mesh.py`` mesh via
+  ``batch_pspec``, so ONE runtime serves many concurrent deadline
+  streams; the jit partitioner splits every segment scan across the
+  mesh's batch shards.
+
+Selection surface: ``AnytimeRuntime(program, backend="pallas")`` or
+per-session ``runtime.session(X, policy, backend="sharded")``; with no
+explicit choice, :func:`default_backend` picks by ``jax.default_backend()``.
+
+**Step-plans.** Orders are compiled ONCE into a :class:`StepPlan`:
+``check_order`` + ``rle_chunks`` lower the order into device arrays of
+(unit, run-length) segments whose run lengths are bucketed to powers of
+two.  ``advance``/``advance_until`` then execute under a handful of
+cached jit traces (one per distinct power-of-two length, ≤
+``log2(max_segment)+1`` ≈ 7) instead of one compilation per distinct
+run length — mid-chunk splits decompose into the SAME power-of-two
+buckets, so arbitrary deadline-driven advance patterns never mint new
+traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.kernels import ops as kops
+from repro.launch import mesh as mesh_lib
+
+
+def check_order(order: np.ndarray, n_units: int, unit_steps: int) -> np.ndarray:
+    """Validate a step order, raising a ValueError that names the first
+    offending unit (unlike a bare assert, this survives ``python -O``)."""
+    order = np.asarray(order)
+    expect = n_units * unit_steps
+    if order.shape[0] != expect:
+        raise ValueError(
+            f"invalid step order: length {order.shape[0]}, expected "
+            f"{n_units} units x {unit_steps} steps = {expect}"
+        )
+    counts = np.bincount(order, minlength=n_units)
+    bad = np.flatnonzero(counts != unit_steps)
+    if bad.size:
+        t = int(bad[0])
+        raise ValueError(
+            f"invalid step order: unit {t} takes {int(counts[t])} steps, "
+            f"expected {unit_steps} (and {bad.size - 1} more offending units)"
+        )
+    return order
+
+
+def rle_chunks(order: np.ndarray) -> list[tuple[int, int]]:
+    """Run-length encode a step order into (unit_id, run_length) chunks.
+
+    Consecutive equal entries fuse into one chunk, which a backend
+    executes as a single fused segment.
+    """
+    order = np.asarray(order)
+    if order.size == 0:
+        return []
+    change = np.flatnonzero(np.diff(order)) + 1
+    starts = np.concatenate([[0], change])
+    ends = np.concatenate([change, [order.size]])
+    return [(int(order[s]), int(e - s)) for s, e in zip(starts, ends)]
+
+
+def pow2_decompose(n: int, cap: int = 64) -> list[int]:
+    """Descending powers of two (each ≤ cap) summing to n.
+
+    This is the trace-count bound: every dispatched segment length is a
+    member of {1, 2, 4, ..., cap}, so at most log2(cap)+1 distinct jit
+    traces exist no matter how an order's runs are split by deadlines.
+    """
+    if n < 0:
+        raise ValueError(f"cannot decompose negative run length {n}")
+    if cap < 1 or cap & (cap - 1):
+        raise ValueError(f"cap must be a positive power of two, got {cap}")
+    out = []
+    while n:
+        p = min(1 << (n.bit_length() - 1), cap)
+        out.append(p)
+        n -= p
+    return out
+
+
+# eq=False: plans hold ndarray/jax.Array fields (value __eq__/__hash__
+# would be broken) and are shared by identity via ForestProgram's
+# content-addressed cache.
+@dataclasses.dataclass(frozen=True, eq=False)
+class StepPlan:
+    """Compile-once lowering of a step order to fused device segments.
+
+    ``seg_units[i]`` advances for ``seg_lens[i]`` consecutive steps;
+    lengths are powers of two ≤ ``max_segment``.  ``seg_starts`` is the
+    cumulative step position of each segment boundary (host-side, for
+    the ``advance`` bookkeeping); ``units_dev`` mirrors the unit ids on
+    device so per-segment dispatch never re-uploads scalars.
+    """
+
+    order: np.ndarray                       # int32 [total_steps]
+    seg_units: np.ndarray                   # int32 [S]
+    seg_lens: np.ndarray                    # int32 [S], all powers of two
+    seg_starts: np.ndarray                  # int64 [S+1], cumulative
+    units_dev: jax.Array = dataclasses.field(repr=False)
+    max_segment: int = 64
+
+    @classmethod
+    def compile(
+        cls,
+        order: np.ndarray,
+        n_units: Optional[int] = None,
+        unit_steps: Optional[int] = None,
+        max_segment: int = 64,
+    ) -> "StepPlan":
+        order = np.asarray(order, dtype=np.int32)
+        if n_units is not None and unit_steps is not None:
+            check_order(order, n_units, unit_steps)
+        units, lens = [], []
+        for u, n in rle_chunks(order):
+            for p in pow2_decompose(n, cap=max_segment):
+                units.append(u)
+                lens.append(p)
+        seg_units = np.asarray(units, dtype=np.int32)
+        seg_lens = np.asarray(lens, dtype=np.int32)
+        seg_starts = np.concatenate([[0], np.cumsum(seg_lens, dtype=np.int64)])
+        return cls(
+            order=order,
+            seg_units=seg_units,
+            seg_lens=seg_lens,
+            seg_starts=seg_starts,
+            units_dev=jnp.asarray(seg_units),
+            max_segment=max_segment,
+        )
+
+    @property
+    def total_steps(self) -> int:
+        return int(self.order.shape[0])
+
+    @property
+    def n_segments(self) -> int:
+        return int(self.seg_units.shape[0])
+
+    @property
+    def trace_lengths(self) -> tuple[int, ...]:
+        """Distinct segment lengths = upper bound on live jit traces."""
+        return tuple(sorted(set(int(x) for x in self.seg_lens)))
+
+    def segment_at(self, pos: int) -> int:
+        """Index of the segment containing absolute step position pos."""
+        return int(np.searchsorted(self.seg_starts, pos, side="right")) - 1
+
+
+# ---------------------------------------------------------------------------
+# Backend registry.
+# ---------------------------------------------------------------------------
+
+_BACKENDS: dict[str, type] = {}
+
+
+def register_backend(name: str) -> Callable[[type], type]:
+    """Class decorator registering a :class:`ForestExecutor` under ``name``."""
+
+    def deco(cls: type) -> type:
+        if name in _BACKENDS:
+            raise ValueError(f"backend {name!r} already registered")
+        cls.name = name
+        _BACKENDS[name] = cls
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> type:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {', '.join(list_backends())}"
+        ) from None
+
+
+def list_backends() -> tuple[str, ...]:
+    return tuple(_BACKENDS)
+
+
+def default_backend() -> str:
+    """Auto-selection: kernels where the MXU exists, reference elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp-ref"
+
+
+# ---------------------------------------------------------------------------
+# Executors (the ExecutionBackend protocol).
+# ---------------------------------------------------------------------------
+
+
+class ForestExecutor:
+    """Execution strategy behind :class:`ForestStepBackend`.
+
+    Implementations own state placement and the two hot operations:
+
+    * ``run_segment(idx, unit, length)`` — ``length`` fused steps of one
+      tree (``length`` is a static power of two from the step-plan, so
+      each distinct value is one cached jit trace);
+    * ``readout(idx)`` — the anytime prediction read-out ``[B, C]``.
+    """
+
+    name = "abstract"
+
+    def __init__(self, device: engine.DeviceForest, X, plan: StepPlan):
+        self.device = device
+        self.X = jnp.asarray(X)
+        self.plan = plan
+        self.batch = int(self.X.shape[0])
+
+    def init_state(self) -> jax.Array:
+        return engine.init_state(self.device, self.batch)
+
+    def run_segment(self, idx: jax.Array, unit: jax.Array, length: int) -> jax.Array:
+        raise NotImplementedError
+
+    def readout(self, idx: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+
+@register_backend("jnp-ref")
+class JnpRefExecutor(ForestExecutor):
+    """Pure-jnp scan over ``engine.tree_step`` — the parity oracle."""
+
+    def __init__(self, device, X, plan):
+        super().__init__(device, X, plan)
+
+        @partial(jax.jit, static_argnums=(2,))
+        def _run(idx, unit, length):
+            return engine.tree_run(self.device, self.X, idx, unit, length)
+
+        self._run = _run
+
+    def run_segment(self, idx, unit, length):
+        return self._run(idx, unit, length)
+
+    def readout(self, idx):
+        return engine.predict_from_state(self.device, idx)
+
+
+@register_backend("pallas")
+class PallasExecutor(ForestExecutor):
+    """RLE-fused runs through the Pallas kernels.
+
+    Stepping gathers one tree's node tables and scans
+    :func:`repro.kernels.ops.forest_step` over the fused segment
+    (:func:`~repro.kernels.ops.forest_run`); the read-out is the
+    :func:`~repro.kernels.ops.prob_accum` one-hot MXU contraction.
+    Interpret mode on CPU — same kernel body, element-for-element.
+    """
+
+    def __init__(self, device, X, plan, *, block_b: int = 256,
+                 block_m: int = 512, interpret: Optional[bool] = None):
+        super().__init__(device, X, plan)
+        kw = {"block_b": block_b, "block_m": block_m}
+        if interpret is not None:
+            kw["interpret"] = interpret
+        self._kernel_kw = kw
+
+        @partial(jax.jit, static_argnums=(2,))
+        def _run(idx, unit, length):
+            feature, threshold, left, right, is_leaf = (
+                jnp.take(a, unit, axis=0)
+                for a in (self.device.feature, self.device.threshold,
+                          self.device.left, self.device.right,
+                          self.device.is_leaf)
+            )
+            col = jnp.take(idx, unit, axis=1)
+            col = kops.forest_run(
+                col, self.X, feature, threshold, left, right, is_leaf,
+                length=length, **kw,
+            )
+            return idx.at[:, unit].set(col)
+
+        self._run = _run
+
+    def run_segment(self, idx, unit, length):
+        return self._run(idx, unit, length)
+
+    def readout(self, idx):
+        return kops.prob_accum(idx, self.device.probs, **self._kernel_kw)
+
+
+@register_backend("sharded")
+class ShardedExecutor(JnpRefExecutor):
+    """Batch axis on a mesh: one runtime, many concurrent deadline streams.
+
+    The forest tables replicate; inputs and the index-array state shard
+    over the mesh's batch axes (``batch_pspec``), so the jit partitioner
+    splits every segment scan across shards with zero collectives (the
+    anytime step is embarrassingly batch-parallel; only the read-out
+    gathers are per-shard too).  Batches that don't divide the shard
+    count are padded internally and sliced at read-out.
+    """
+
+    def __init__(self, device, X, plan, *, mesh=None):
+        self.mesh = mesh if mesh is not None else mesh_lib.make_host_mesh(
+            data=len(jax.devices())
+        )
+        self._shards = mesh_lib.n_batch_shards(self.mesh)
+        X = jnp.asarray(X)
+        self._true_batch = int(X.shape[0])
+        pad = (-self._true_batch) % self._shards
+        if pad:
+            X = jnp.concatenate([X, jnp.zeros((pad, X.shape[1]), X.dtype)])
+        batch_sh = mesh_lib.batch_sharding(self.mesh)
+        repl = mesh_lib.replicated_sharding(self.mesh)
+        super().__init__(jax.device_put(device, repl), jax.device_put(X, batch_sh), plan)
+        self._batch_sharding = batch_sh
+
+    def init_state(self):
+        return jax.device_put(super().init_state(), self._batch_sharding)
+
+    def readout(self, idx):
+        return super().readout(idx)[: self._true_batch]
+
+
+# ---------------------------------------------------------------------------
+# The step backend every Session wraps.
+# ---------------------------------------------------------------------------
+
+
+class ForestStepBackend:
+    """Step-level forest executor over a compiled :class:`StepPlan`.
+
+    A run of r consecutive steps of the same tree executes as fused
+    segments of power-of-two length through the selected executor (the
+    tree id is a traced scalar, so runs of different trees share each
+    trace).  ``advance`` remains exact at single-step granularity — a
+    segment splits into smaller power-of-two pieces whenever the
+    requested step budget ends inside it, which by construction mints no
+    new trace lengths.
+    """
+
+    def __init__(
+        self,
+        device: engine.DeviceForest,
+        X,
+        order: np.ndarray,
+        backend: Optional[str] = None,
+        plan: Optional[StepPlan] = None,
+        **backend_opts,
+    ):
+        self.backend_name = backend if backend is not None else default_backend()
+        self.plan = plan if plan is not None else StepPlan.compile(order)
+        self.order = self.plan.order
+        self.executor = get_backend(self.backend_name)(
+            device, X, self.plan, **backend_opts
+        )
+        self.device = self.executor.device
+        self.X = self.executor.X
+        self.idx = self.executor.init_state()
+        self.pos = 0
+        #: distinct fused-segment lengths dispatched so far — each is one
+        #: cached jit trace; the parity/trace tests assert the bound.
+        self.dispatched_lengths: set[int] = set()
+
+    @property
+    def total_steps(self) -> int:
+        return self.plan.total_steps
+
+    @property
+    def remaining(self) -> int:
+        return self.total_steps - self.pos
+
+    def advance(self, k: int) -> int:
+        """Execute up to k more steps (plan-fused); returns steps taken."""
+        k = min(int(k), self.remaining)
+        taken = 0
+        while taken < k:
+            s = self.plan.segment_at(self.pos)
+            seg_end = int(self.plan.seg_starts[s + 1])
+            step = min(k - taken, seg_end - self.pos)
+            unit = self.plan.units_dev[s]
+            for p in pow2_decompose(step, cap=self.plan.max_segment):
+                self.idx = self.executor.run_segment(self.idx, unit, p)
+                self.dispatched_lengths.add(p)
+            self.pos += step
+            taken += step
+        return taken
+
+    def predict_proba(self) -> np.ndarray:
+        return np.asarray(self.executor.readout(self.idx))
+
+    def predict(self) -> np.ndarray:
+        return self.predict_proba().argmax(axis=1)

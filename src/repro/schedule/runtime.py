@@ -10,10 +10,12 @@ decomposable into schedulable units) and owns:
   so repeated sessions never re-run Dijkstra/Squirrel;
 * **sessions** — interruptible executions with ``advance(k)``,
   ``advance_until(deadline_ms)`` and ``predict()`` after any prefix;
-* **RLE-fused execution** — consecutive same-unit steps in an order are
-  run-length encoded and each run executes as ONE ``lax.scan`` segment
-  instead of per-step dispatches (depth-style orders collapse from
-  U*S dispatches to U);
+* **backend selection** — execution itself is pluggable
+  (:mod:`repro.schedule.backends`): orders compile once into power-of-two
+  bucketed :class:`~repro.schedule.backends.StepPlan` segments, then run
+  on the ``jnp-ref`` oracle, the ``pallas`` MXU kernels, or ``sharded``
+  across a mesh — ``AnytimeRuntime(..., backend="pallas")`` or
+  per-session ``session(X, policy, backend=...)``;
 * **batched evaluation** — :func:`evaluate_orders` runs the accuracy
   curves of many orders in a single vmapped pass over the step axis.
 """
@@ -31,6 +33,16 @@ import numpy as np
 
 from repro.core import engine
 from repro.forest.forest import ForestArrays
+from repro.schedule.backends import (  # noqa: F401  (re-exported surface)
+    ForestStepBackend,
+    StepPlan,
+    check_order,
+    default_backend,
+    get_backend,
+    list_backends,
+    register_backend,
+    rle_chunks,
+)
 from repro.schedule.policies import OrderPolicy, get_order_policy, list_orders
 
 PolicyLike = Union[str, OrderPolicy]
@@ -42,114 +54,14 @@ def _as_policy(policy: PolicyLike, **overrides) -> OrderPolicy:
     return get_order_policy(policy, **overrides)
 
 
-def check_order(order: np.ndarray, n_units: int, unit_steps: int) -> np.ndarray:
-    """Validate a step order, raising a ValueError that names the first
-    offending unit (unlike a bare assert, this survives ``python -O``)."""
-    order = np.asarray(order)
-    expect = n_units * unit_steps
-    if order.shape[0] != expect:
-        raise ValueError(
-            f"invalid step order: length {order.shape[0]}, expected "
-            f"{n_units} units x {unit_steps} steps = {expect}"
-        )
-    counts = np.bincount(order, minlength=n_units)
-    bad = np.flatnonzero(counts != unit_steps)
-    if bad.size:
-        t = int(bad[0])
-        raise ValueError(
-            f"invalid step order: unit {t} takes {int(counts[t])} steps, "
-            f"expected {unit_steps} (and {bad.size - 1} more offending units)"
-        )
-    return order
-
-
-def rle_chunks(order: np.ndarray) -> list[tuple[int, int]]:
-    """Run-length encode a step order into (unit_id, run_length) chunks.
-
-    Consecutive equal entries fuse into one chunk, which the forest
-    backend executes as a single ``lax.scan`` segment.
-    """
-    order = np.asarray(order)
-    if order.size == 0:
-        return []
-    change = np.flatnonzero(np.diff(order)) + 1
-    starts = np.concatenate([[0], change])
-    ends = np.concatenate([change, [order.size]])
-    return [(int(order[s]), int(e - s)) for s, e in zip(starts, ends)]
-
-
-# ---------------------------------------------------------------------------
-# Forest execution backend (RLE-fused).
-# ---------------------------------------------------------------------------
-
-
-class ForestStepBackend:
-    """Step-level forest executor over an RLE-chunked order.
-
-    A run of r consecutive steps of the same tree executes as one jitted
-    ``lax.scan`` of length r (compiled once per distinct run length; the
-    tree id is a traced scalar, so runs of different trees share the
-    compilation).  ``advance`` remains exact at single-step granularity —
-    a chunk is split whenever the requested step budget ends inside it.
-    """
-
-    def __init__(self, device: engine.DeviceForest, X, order: np.ndarray):
-        self.device = device
-        self.X = jnp.asarray(X)
-        self.order = np.asarray(order, dtype=np.int32)
-        self.idx = engine.init_state(device, self.X.shape[0])
-        self.pos = 0
-        chunks = rle_chunks(self.order)
-        self._chunk_units = np.asarray([u for u, _ in chunks], dtype=np.int32)
-        self._chunk_starts = np.concatenate(
-            [[0], np.cumsum([n for _, n in chunks], dtype=np.int64)]
-        )
-
-        @partial(jax.jit, static_argnums=(2,))
-        def _run(idx, tree_id, n):
-            def body(i, _):
-                return engine.tree_step(self.device, self.X, i, tree_id), None
-
-            return jax.lax.scan(body, idx, None, length=n)[0]
-
-        self._run = _run
-
-    @property
-    def total_steps(self) -> int:
-        return int(self.order.shape[0])
-
-    @property
-    def remaining(self) -> int:
-        return self.total_steps - self.pos
-
-    def advance(self, k: int) -> int:
-        """Execute up to k more steps (RLE-fused); returns steps taken."""
-        k = min(int(k), self.remaining)
-        taken = 0
-        while taken < k:
-            ci = int(np.searchsorted(self._chunk_starts, self.pos, side="right")) - 1
-            seg_end = int(self._chunk_starts[ci + 1])
-            step = min(k - taken, seg_end - self.pos)
-            tree = jnp.int32(self._chunk_units[ci])
-            self.idx = self._run(self.idx, tree, step)
-            self.pos += step
-            taken += step
-        return taken
-
-    def predict_proba(self) -> np.ndarray:
-        return np.asarray(engine.predict_from_state(self.device, self.idx))
-
-    def predict(self) -> np.ndarray:
-        return self.predict_proba().argmax(axis=1)
-
-
 @dataclasses.dataclass
 class ForestProgram:
     """Adapter making a trained forest an :class:`AnytimeProgram`.
 
     Provide either the ordering set (``X_order``/``y_order``) — the
     quality table is computed on demand — or a precomputed ``path_probs``
-    table alongside ``y_order``.
+    table alongside ``y_order``.  Step-plans compile once per distinct
+    order (content-addressed) and are shared across sessions.
     """
 
     forest: ForestArrays
@@ -157,6 +69,9 @@ class ForestProgram:
     X_order: Optional[np.ndarray] = None
     path_probs: Optional[np.ndarray] = None
     device: engine.DeviceForest = dataclasses.field(init=False, repr=False)
+    _plan_cache: dict = dataclasses.field(
+        init=False, repr=False, default_factory=dict
+    )
 
     def __post_init__(self):
         if self.X_order is None and self.path_probs is None:
@@ -176,8 +91,23 @@ class ForestProgram:
             self.path_probs = engine.path_probs_np(self.forest, self.X_order)
         return self.path_probs, np.asarray(self.y_order)
 
-    def make_session(self, order: np.ndarray, inputs) -> ForestStepBackend:
-        return ForestStepBackend(self.device, inputs, order)
+    def step_plan(self, order: np.ndarray) -> StepPlan:
+        """Compile-once step-plan, content-addressed on the order bytes."""
+        order = np.asarray(order, dtype=np.int32)
+        key = hashlib.sha1(order.tobytes()).hexdigest()
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            plan = StepPlan.compile(order)
+            self._plan_cache[key] = plan
+        return plan
+
+    def make_session(
+        self, order: np.ndarray, inputs, backend: Optional[str] = None, **backend_opts
+    ) -> ForestStepBackend:
+        return ForestStepBackend(
+            self.device, inputs, order,
+            backend=backend, plan=self.step_plan(order), **backend_opts,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +149,10 @@ class Session:
     def advance_until(self, deadline_ms: float, chunk: Optional[int] = None) -> int:
         """Advance in chunks until ``deadline_ms`` elapses or the order is
         exhausted; returns steps taken.  The deadline is checked between
-        chunks, so the overshoot is bounded by one chunk's runtime."""
+        chunks, so the overshoot is bounded by one chunk's runtime.
+        Non-positive deadlines take no steps (and never read the clock)."""
+        if deadline_ms <= 0:
+            return 0
         chunk = self.chunk if chunk is None else int(chunk)
         t0 = self.clock()
         budget_s = deadline_ms / 1e3
@@ -242,25 +175,40 @@ class Session:
 
     def __getattr__(self, name: str):
         # Backend-specific state (e.g. the forest index array ``idx``)
-        # stays reachable through the wrapper.
-        return getattr(self.backend, name)
+        # stays reachable through the wrapper.  Guard the ``backend``
+        # attribute itself: before __init__ runs (unpickling, __new__)
+        # it is absent from __dict__, and falling through to
+        # getattr(self.backend, ...) would recurse forever.
+        backend = self.__dict__.get("backend")
+        if backend is None:
+            raise AttributeError(name)
+        return getattr(backend, name)
 
 
 class AnytimeRuntime:
     """Single serving entry point for anytime inference.
 
     Wraps an :class:`AnytimeProgram` (forest or ensemble) and owns order
-    generation (policy registry + content-hash cache), session creation,
-    and batched order evaluation.
+    generation (policy registry + content-hash cache), session creation
+    with pluggable execution backends, and batched order evaluation.
 
-        rt = AnytimeRuntime(ForestProgram(forest, y_order=y, X_order=X))
+        rt = AnytimeRuntime(ForestProgram(forest, y_order=y, X_order=X),
+                            backend="pallas")
         sess = rt.session(X_test, "backward_squirrel")
         sess.advance_until(deadline_ms=2.0)
         preds = sess.predict()
+
+    ``backend`` (here or per-``session``) picks the execution layer:
+    ``jnp-ref`` (oracle scan), ``pallas`` (MXU kernels), ``sharded``
+    (mesh batch parallelism); ``None`` auto-selects by
+    ``jax.default_backend()``.
     """
 
-    def __init__(self, program):
+    def __init__(self, program, backend: Optional[str] = None):
+        if backend is not None:
+            get_backend(backend)  # fail fast on typos
         self.program = program
+        self.backend = backend
         self._order_cache: dict[str, np.ndarray] = {}
         self._quality: Optional[tuple[np.ndarray, np.ndarray]] = None
         self._quality_digest: Optional[str] = None
@@ -301,12 +249,23 @@ class AnytimeRuntime:
         order: Optional[np.ndarray] = None,
         chunk: int = 8,
         clock=time.perf_counter,
+        backend: Optional[str] = None,
+        **backend_opts,
     ) -> Session:
         if order is None:
             order = self.order(policy)
         else:
             order = check_order(order, self.program.n_units, self.program.unit_steps)
-        return Session(self.program.make_session(order, inputs), chunk=chunk, clock=clock)
+        backend = backend if backend is not None else self.backend
+        if backend is None and not backend_opts:
+            # old two-arg make_session protocol stays valid for programs
+            # that don't select backends (e.g. custom user programs)
+            step_backend = self.program.make_session(order, inputs)
+        else:
+            step_backend = self.program.make_session(
+                order, inputs, backend=backend, **backend_opts
+            )
+        return Session(step_backend, chunk=chunk, clock=clock)
 
     def evaluate_orders(
         self, X, y, names: Optional[Sequence[PolicyLike]] = None

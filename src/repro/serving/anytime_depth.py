@@ -104,7 +104,22 @@ class EnsembleProgram:
             )
         return self._quality
 
-    def make_session(self, order: np.ndarray, inputs: dict) -> "AnytimeEnsembleSession":
+    def make_session(
+        self, order: np.ndarray, inputs: dict, backend: Optional[str] = None,
+        **backend_opts,
+    ) -> "AnytimeEnsembleSession":
+        # Layer execution is the ensemble's own jitted forward; the
+        # forest kernel/mesh backends don't apply at this granularity.
+        if backend not in (None, "jnp-ref"):
+            raise ValueError(
+                f"EnsembleProgram only supports the default 'jnp-ref' "
+                f"execution backend, got {backend!r}"
+            )
+        if backend_opts:
+            raise TypeError(
+                f"EnsembleProgram sessions take no backend options, got "
+                f"{sorted(backend_opts)}"
+            )
         return AnytimeEnsembleSession(self.members, order, inputs)
 
 
@@ -133,6 +148,13 @@ class AnytimeEnsembleSession:
             T._embed_inputs(m.cfg, m.params, batch)[1] for m in self.members
         ]
         self.pos = 0
+        # Exit readouts keyed on effective layer depth: a member whose
+        # depth didn't change between predict() calls reuses its cached
+        # log-softmax readout instead of re-running norm+unembed.
+        self._exit_cache: list[Optional[tuple[int, jax.Array]]] = (
+            [None] * len(self.members)
+        )
+        self.readout_computes = 0  # cache-miss counter (observability)
 
     @staticmethod
     def _make_readout(m: EnsembleMember):
@@ -169,11 +191,24 @@ class AnytimeEnsembleSession:
             self.pos += 1
         return k
 
-    def predict_logprobs(self) -> np.ndarray:
-        acc = None
-        for u, m in enumerate(self.members):
+    def _exit_logprobs(self, u: int) -> jax.Array:
+        """Member u's exit readout, cached on its effective layer depth
+        (``min(depth, num_layers)`` — no-op steps past the final layer
+        leave the residual, and therefore the readout, unchanged)."""
+        eff = min(self.depth[u], self.members[u].cfg.num_layers)
+        cached = self._exit_cache[u]
+        if cached is None or cached[0] != eff:
             lp = jax.nn.log_softmax(
                 self._readout[u](self.hidden[u]).astype(jnp.float32), axis=-1)
+            cached = (eff, lp)
+            self._exit_cache[u] = cached
+            self.readout_computes += 1
+        return cached[1]
+
+    def predict_logprobs(self) -> np.ndarray:
+        acc = None
+        for u in range(len(self.members)):
+            lp = self._exit_logprobs(u)
             acc = lp if acc is None else acc + lp
         return np.asarray(acc)
 

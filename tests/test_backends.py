@@ -1,0 +1,273 @@
+"""Execution-backend subsystem: step-plan compilation, registry, and the
+pallas/sharded parity suite against the jnp-ref oracle on odd shapes."""
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.forest import make_dataset, split_dataset, train_forest
+from repro.schedule import (
+    AnytimeRuntime,
+    ForestProgram,
+    ForestStepBackend,
+    Session,
+    StepPlan,
+    default_backend,
+    get_backend,
+    list_backends,
+    pow2_decompose,
+)
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    X, y = make_dataset("magic", seed=3)
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=3)
+    # depth 6 -> up to 127 nodes per tree: many M-tiles at block_m=8
+    rf = train_forest(tr[:800], ytr[:800], 2, n_trees=4, max_depth=6, seed=3)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx[:200])
+    return fa, pp, yor[:200], te, yte
+
+
+def _runtime(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    return AnytimeRuntime(ForestProgram(fa, y_order=yor, path_probs=pp))
+
+
+# ---------------------------------------------------------------------------
+# StepPlan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,cap,expect", [
+    (0, 64, []),
+    (1, 64, [1]),
+    (13, 64, [8, 4, 1]),
+    (64, 64, [64]),
+    (100, 64, [64, 32, 4]),
+    (100, 16, [16, 16, 16, 16, 16, 16, 4]),
+])
+def test_pow2_decompose(n, cap, expect):
+    assert pow2_decompose(n, cap=cap) == expect
+    assert sum(expect) == n
+    assert all(p & (p - 1) == 0 and p <= cap for p in expect)
+
+
+def test_pow2_decompose_rejects_negative():
+    with pytest.raises(ValueError, match="negative"):
+        pow2_decompose(-1)
+
+
+@pytest.mark.parametrize("cap", [0, -4, 6])
+def test_pow2_decompose_rejects_bad_cap(cap):
+    with pytest.raises(ValueError, match="power of two"):
+        pow2_decompose(5, cap=cap)
+
+
+def test_step_plan_roundtrip_and_bucketing():
+    order = np.array([0] * 13 + [1] * 3 + [0] + [2] * 8, dtype=np.int32)
+    plan = StepPlan.compile(order)
+    # segments reconstruct the order exactly
+    rebuilt = np.concatenate(
+        [[u] * n for u, n in zip(plan.seg_units, plan.seg_lens)])
+    np.testing.assert_array_equal(rebuilt, order)
+    # every segment length is a power of two <= cap
+    assert all(int(l) & (int(l) - 1) == 0 for l in plan.seg_lens)
+    assert plan.trace_lengths == (1, 2, 4, 8)
+    assert plan.total_steps == len(order)
+    assert plan.seg_starts[-1] == len(order)
+    # segment_at maps positions to containing segments
+    for pos in range(len(order)):
+        s = plan.segment_at(pos)
+        assert plan.seg_starts[s] <= pos < plan.seg_starts[s + 1]
+
+
+def test_step_plan_validates_order_when_shape_given():
+    with pytest.raises(ValueError, match="unit 0"):
+        StepPlan.compile(np.zeros(6, dtype=np.int32), n_units=3, unit_steps=2)
+
+
+def test_step_plan_trace_bound_is_logarithmic(pipeline):
+    """Distinct plan segment lengths <= log2(max_segment)+1 = 7 <= 8 —
+    the acceptance criterion's compile-count bound for ANY order."""
+    rt = _runtime(pipeline)
+    for name in ("backward_squirrel", "depth", "breadth", "random"):
+        plan = StepPlan.compile(rt.order(name))
+        assert len(plan.trace_lengths) <= 8, name
+
+
+# ---------------------------------------------------------------------------
+# Registry / selection surface
+# ---------------------------------------------------------------------------
+
+
+def test_backend_registry():
+    assert set(list_backends()) >= {"jnp-ref", "pallas", "sharded"}
+    assert get_backend("pallas").name == "pallas"
+    with pytest.raises(ValueError, match="unknown backend.*jnp-ref"):
+        get_backend("mosaic")
+
+
+def test_default_backend_matches_platform():
+    import jax
+
+    expect = "pallas" if jax.default_backend() == "tpu" else "jnp-ref"
+    assert default_backend() == expect
+
+
+def test_runtime_rejects_unknown_backend_eagerly(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    with pytest.raises(ValueError, match="unknown backend"):
+        AnytimeRuntime(
+            ForestProgram(fa, y_order=yor, path_probs=pp), backend="nope")
+
+
+def test_runtime_backend_default_flows_to_sessions(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    rt = AnytimeRuntime(
+        ForestProgram(fa, y_order=yor, path_probs=pp), backend="pallas")
+    sess = rt.session(te[:9], "depth")
+    assert sess.backend.backend_name == "pallas"
+    # per-session override wins
+    sess2 = rt.session(te[:9], "depth", backend="jnp-ref")
+    assert sess2.backend.backend_name == "jnp-ref"
+
+
+def test_step_plans_shared_across_sessions(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    rt = _runtime(pipeline)
+    order = rt.order("backward_squirrel")
+    a = rt.session(te[:5], order=order)
+    b = rt.session(te[:7], order=order)
+    assert a.backend.plan is b.backend.plan  # compile-once, content-addressed
+
+
+# ---------------------------------------------------------------------------
+# Parity suite: pallas (interpret) and sharded vs the jnp-ref oracle.
+# Odd shapes: batch not a multiple of the tile, trees larger than one
+# M-tile, single-sample batch, mid-chunk advance splits.
+# ---------------------------------------------------------------------------
+
+PARITY_OPTS = {
+    # tiny tiles force batch padding + multi-M-tile streaming on a
+    # depth-6 (<=127 node) forest
+    "pallas": {"block_b": 16, "block_m": 8},
+    "sharded": {},
+}
+
+
+@pytest.mark.parametrize("backend", ["pallas", "sharded"])
+@pytest.mark.parametrize("batch", [1, 33])
+@pytest.mark.parametrize("name", ["backward_squirrel", "depth"])
+def test_backend_parity_with_oracle(backend, batch, name, pipeline):
+    """Index-array state must match the jnp-ref oracle BIT-FOR-BIT at
+    every mid-chunk split point; read-outs to float tolerance."""
+    fa, pp, yor, te, yte = pipeline
+    rt = _runtime(pipeline)
+    order = rt.order(name)
+    X = te[:batch]
+    ref = rt.session(X, order=order, backend="jnp-ref")
+    sess = rt.session(X, order=order, backend=backend, **PARITY_OPTS[backend])
+    for k in (1, 2, 5, 1, 3, 10_000):  # odd chunks straddle plan segments
+        ref.advance(k)
+        sess.advance(k)
+        assert sess.pos == ref.pos
+        np.testing.assert_array_equal(
+            np.asarray(sess.idx)[:batch], np.asarray(ref.idx))
+        np.testing.assert_allclose(
+            sess.predict_proba(), ref.predict_proba(), rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(sess.predict(), ref.predict())
+    assert sess.remaining == 0
+
+
+def test_pallas_backend_dispatches_kernel(monkeypatch, pipeline):
+    """backend="pallas" must route the hot path through
+    repro.kernels.ops.forest_run / prob_accum (the acceptance criterion),
+    not the jnp engine scan."""
+    from repro.kernels import ops
+    from repro.schedule import backends as B
+
+    calls = {"run": 0, "accum": 0}
+    real_run, real_accum = ops.forest_run, ops.prob_accum
+
+    def spy_run(*a, **kw):
+        calls["run"] += 1
+        return real_run(*a, **kw)
+
+    def spy_accum(*a, **kw):
+        calls["accum"] += 1
+        return real_accum(*a, **kw)
+
+    monkeypatch.setattr(B.kops, "forest_run", spy_run)
+    monkeypatch.setattr(B.kops, "prob_accum", spy_accum)
+    rt = _runtime(pipeline)
+    fa, pp, yor, te, yte = pipeline
+    sess = rt.session(te[:9], "depth", backend="pallas",
+                      block_b=16, block_m=8)
+    sess.advance(3)
+    sess.predict()
+    assert calls["run"] >= 1 and calls["accum"] >= 1
+
+
+def test_trace_count_bounded_under_deadline_pattern(pipeline):
+    """Arbitrary odd advance splits never mint new trace lengths: every
+    dispatched fused-segment length is a power of two, <= 8 distinct."""
+    fa, pp, yor, te, yte = pipeline
+    rt = _runtime(pipeline)
+    sess = rt.session(te[:17], "backward_squirrel")
+    rng = np.random.default_rng(0)
+    while sess.remaining:
+        sess.advance(int(rng.integers(1, 8)))
+    lens = sess.backend.dispatched_lengths
+    assert all(p & (p - 1) == 0 for p in lens)
+    assert len(lens) <= 8
+
+
+def test_sharded_backend_pads_and_unpads_odd_batch(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    rt = _runtime(pipeline)
+    sess = rt.session(te[:33], "depth", backend="sharded")
+    sess.run_to_completion()
+    assert sess.predict_proba().shape == (33, fa.probs.shape[-1])
+
+
+def test_forest_step_backend_direct_construction(pipeline):
+    """The pre-refactor positional signature keeps working."""
+    fa, pp, yor, te, yte = pipeline
+    rt = _runtime(pipeline)
+    order = rt.order("depth")
+    dev = engine.to_device(fa)
+    b = ForestStepBackend(dev, te[:5], order)
+    assert b.backend_name == default_backend()
+    assert b.total_steps == len(order)
+    b.advance(4)
+    assert b.pos == 4 and b.remaining == len(order) - 4
+
+
+# ---------------------------------------------------------------------------
+# Session fixes (satellite): __getattr__ recursion guard, deadline edge.
+# ---------------------------------------------------------------------------
+
+
+def test_session_getattr_raises_before_init():
+    """During unpickling __getattr__ runs before __dict__ holds
+    ``backend``; it must raise AttributeError, not recurse forever."""
+    s = Session.__new__(Session)
+    with pytest.raises(AttributeError):
+        s.backend
+    with pytest.raises(AttributeError):
+        s.idx
+    assert not hasattr(s, "anything_else")
+
+
+def test_advance_until_non_positive_deadline(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    rt = _runtime(pipeline)
+
+    def exploding_clock():
+        raise AssertionError("clock must not be read for non-positive deadlines")
+
+    sess = rt.session(te[:5], "depth", clock=exploding_clock)
+    assert sess.advance_until(0.0) == 0
+    assert sess.advance_until(-3.0) == 0
+    assert sess.pos == 0

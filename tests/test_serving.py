@@ -91,6 +91,54 @@ def test_anytime_depth_order_generation():
     assert len(curve) == 2 * cfg.num_layers + 1
 
 
+def test_anytime_depth_readout_cache_hits():
+    """Exit readouts are cached per member keyed on layer depth: a
+    member whose depth didn't change between predict() calls must not
+    recompute norm+unembed, and cached results stay correct."""
+    cfg = get_config("olmo_1b", reduced=True)
+    members = _members(cfg)
+    b = next(make_batches(cfg, 16, 4, seed=0))
+    batch = {"tokens": jnp.asarray(b["tokens"])}
+    order = np.asarray([0, 1] * cfg.num_layers, dtype=np.int32)
+    sess = AnytimeEnsembleSession(members, order, batch)
+    first = sess.predict_logprobs()
+    assert sess.readout_computes == 2          # one per member
+    again = sess.predict_logprobs()
+    assert sess.readout_computes == 2          # pure cache hit
+    np.testing.assert_array_equal(first, again)
+    sess.advance(1)                            # only member 0 moved
+    sess.predict_logprobs()
+    assert sess.readout_computes == 3          # member 1 still cached
+    # cached path matches a cache-cold session advanced identically
+    cold = AnytimeEnsembleSession(members, order, batch)
+    cold.advance(1)
+    np.testing.assert_allclose(sess.predict_logprobs(),
+                               cold.predict_logprobs(), rtol=1e-6, atol=1e-6)
+    # steps past a member's final layer are no-ops: depth-keying stays hot
+    sess.advance(sess.total_steps)
+    n = sess.readout_computes
+    sess.predict_logprobs()
+    assert sess.readout_computes == n + 2      # both members moved since
+    sess.predict_logprobs()
+    assert sess.readout_computes == n + 2
+
+
+def test_ensemble_program_rejects_kernel_backends():
+    from repro.serving.anytime_depth import EnsembleProgram
+
+    cfg = get_config("olmo_1b", reduced=True)
+    members = _members(cfg)
+    b = next(make_batches(cfg, 16, 4, seed=0))
+    batch = {"tokens": jnp.asarray(b["tokens"])}
+    labels = np.asarray(b["labels"][:, -1])
+    prog = EnsembleProgram(members, batch, labels, top_v=16)
+    order = np.asarray([0, 1] * cfg.num_layers, dtype=np.int32)
+    with pytest.raises(ValueError, match="jnp-ref"):
+        prog.make_session(order, batch, backend="pallas")
+    sess = prog.make_session(order, batch, backend="jnp-ref")
+    assert sess.total_steps == len(order)
+
+
 def test_checkpoint_roundtrip(tmp_path):
     cfg = get_config("olmo_1b", reduced=True)
     params = MD.init(cfg, KEY)
