@@ -1,0 +1,134 @@
+"""Serving benchmark + CI gate: batched deadline scheduling vs the
+serial per-request session loop it replaces.
+
+Two workloads over the same forest, order, and request stream:
+
+* **complete** — generous deadlines, every request runs its full step
+  order; isolates pure throughput (requests/sec).  This is the gated
+  smoke workload: batched serving must deliver >= ``min_speedup`` x the
+  serial loop's requests/sec with >= ``min_hit_rate`` deadline-hit-rate.
+* **tight** — millisecond deadlines; reports the anytime quality
+  profile under pressure (deadline-hit-rate, p50/p99
+  steps-at-deadline, slot occupancy).
+
+The serial baseline is the pre-``repro.serve`` deployment shape: one
+fresh :class:`~repro.schedule.runtime.Session` per request, advanced
+under its own deadline.  Each solo session closes over its own input
+row, so every request re-traces its fused-segment dispatches — exactly
+the per-request overhead the slot-batched scheduler amortizes across
+``capacity`` concurrent requests (shared StepPlan, shared jit traces,
+one masked dispatch for everyone).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import build_pipeline, runtime_for
+from repro.serve import AnytimeServer
+
+
+def _serial_loop(rt, order, rows, deadline_ms):
+    """The pre-serve baseline: one session per request, own deadline."""
+    steps = []
+    t0 = time.perf_counter()
+    for row in rows:
+        sess = rt.session(row[None, :], order=order, backend="jnp-ref")
+        sess.advance_until(deadline_ms)
+        np.asarray(sess.predict_proba())  # deliver the anytime readout
+        steps.append(sess.pos)
+    dt = time.perf_counter() - t0
+    steps = np.asarray(steps)
+    return {
+        "requests": len(rows),
+        "wall_s": dt,
+        "requests_per_sec": len(rows) / dt,
+        "deadline_hit_rate": float((steps > 0).mean()),
+        "steps_p50": float(np.percentile(steps, 50)),
+        "steps_p99": float(np.percentile(steps, 99)),
+    }
+
+
+def _batched_loop(rt, rows, deadline_ms, capacity, warmup: bool = False):
+    server = AnytimeServer(rt, capacity=capacity)
+    if warmup:
+        # compile the slot batch's fused-segment traces before timing —
+        # millisecond deadlines are meaningless against cold jit compiles
+        server.serve(list(rows[:capacity]), deadline_ms=300_000.0)
+        server.metrics.reset()
+    t0 = time.perf_counter()
+    results = server.serve(list(rows), deadline_ms=deadline_ms)
+    dt = time.perf_counter() - t0
+    assert len(results) == len(rows)
+    steps = np.asarray([r.steps_completed for r in results])
+    snap = server.metrics.snapshot()
+    return {
+        "requests": len(rows),
+        "wall_s": dt,
+        "requests_per_sec": len(rows) / dt,
+        "deadline_hit_rate": float(np.mean([r.deadline_hit for r in results])),
+        "steps_p50": float(np.percentile(steps, 50)),
+        "steps_p99": float(np.percentile(steps, 99)),
+        "slot_occupancy": snap["slot_occupancy"],
+        "dispatches": snap["dispatches"],
+    }
+
+
+def run(dataset: str = "magic", n_trees: int = 10, depth: int = 6,
+        capacity: int = 16, n_requests: int = 48,
+        tight_deadline_ms: float = 30.0, seed: int = 0,
+        min_speedup: float = 3.0, min_hit_rate: float = 0.99,
+        gate: bool = True, verbose: bool = True) -> dict:
+    """Batched-vs-serial serving comparison; raises (failing the smoke
+    build) when the gated thresholds are missed."""
+    fa, pp, yor, te, yte = build_pipeline(
+        dataset, n_trees, depth, seed=seed, n_order=200,
+        n_test=max(n_requests, 64))
+    rt = runtime_for(fa, pp, yor)
+    order = rt.order("backward_squirrel")
+    rows = te[:n_requests]
+    generous = 300_000.0  # every request completes: pure throughput
+
+    out = {"dataset": dataset, "n_trees": n_trees, "depth": depth,
+           "capacity": capacity, "n_requests": n_requests,
+           "total_steps": int(len(order))}
+    out["serial"] = _serial_loop(rt, order, rows, generous)
+    out["batched"] = _batched_loop(rt, rows, generous, capacity)
+    out["speedup"] = (
+        out["batched"]["requests_per_sec"] / out["serial"]["requests_per_sec"])
+    # tight workload sized to capacity: the anytime-quality profile of
+    # one in-flight generation (oversubscribed tight workloads measure
+    # admission-control starvation instead — a different experiment)
+    out["tight"] = {
+        "deadline_ms": tight_deadline_ms,
+        "serial": _serial_loop(rt, order, rows[:capacity], tight_deadline_ms),
+        "batched": _batched_loop(rt, rows[:capacity], tight_deadline_ms,
+                                 capacity, warmup=True),
+    }
+
+    if verbose:
+        for name in ("serial", "batched"):
+            r = out[name]
+            print(f"serve,{name},rps,{r['requests_per_sec']:.1f},"
+                  f"hit_rate,{r['deadline_hit_rate']:.3f},"
+                  f"steps_p99,{r['steps_p99']:.0f}")
+        print(f"serve,speedup,{out['speedup']:.2f}x")
+        tb = out["tight"]["batched"]
+        print(f"serve,tight_{tight_deadline_ms}ms,batched_rps,"
+              f"{tb['requests_per_sec']:.1f},hit_rate,"
+              f"{tb['deadline_hit_rate']:.3f},steps_p50,{tb['steps_p50']:.0f},"
+              f"steps_p99,{tb['steps_p99']:.0f}")
+
+    if gate:
+        assert out["speedup"] >= min_speedup, (
+            f"batched serving only {out['speedup']:.2f}x the serial loop "
+            f"(gate: >= {min_speedup}x)")
+        assert out["batched"]["deadline_hit_rate"] >= min_hit_rate, (
+            f"deadline-hit-rate {out['batched']['deadline_hit_rate']:.3f} "
+            f"below gate {min_hit_rate}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -2,14 +2,18 @@
 
 ``python -m benchmarks.run [--fast]`` prints CSV-ish lines per benchmark
 and writes reports/bench_results.json plus BENCH_nma.json (per-order NMA
-from one vmapped ``AnytimeRuntime.evaluate_orders`` pass — the number
-regression-tracked across PRs).  EXPERIMENTS.md cites these numbers; the
+from one vmapped ``AnytimeRuntime.evaluate_orders`` pass) and
+BENCH_serve.json (batched-vs-serial serving: requests/sec,
+deadline-hit-rate, p99 steps-at-deadline) — the numbers
+regression-tracked across PRs.  EXPERIMENTS.md cites these numbers; the
 roofline/dry-run tables come from repro.launch.dryrun.
 
 ``--smoke`` is the CI gate: reduced config, only the execution-backend
 parity check (pallas/sharded vs the jnp-ref oracle — raises on
 divergence, failing the build), the step-plan trace-count bound, the
-kernel micro-bench, and the NMA summary.
+kernel micro-bench, the NMA summary, and the serving gate (batched
+scheduling must beat the serial per-request loop >= 3x at >= 99%
+deadline-hit-rate, or the build fails).
 """
 from __future__ import annotations
 
@@ -47,9 +51,12 @@ def main() -> None:
     ap.add_argument("--nma-out", default="BENCH_nma.json",
                     help="per-order NMA summary for cross-PR regression "
                          "tracking")
+    ap.add_argument("--serve-out", default="BENCH_serve.json",
+                    help="batched-vs-serial serving summary (requests/sec, "
+                         "deadline-hit-rate, p99 steps-at-deadline)")
     args = ap.parse_args()
 
-    from benchmarks import bench_backends, bench_kernels
+    from benchmarks import bench_backends, bench_kernels, bench_serve
 
     results = {}
     t0 = time.perf_counter()
@@ -97,6 +104,14 @@ def main() -> None:
     results["nma"] = bench_backends.run_nma(
         n_trees=4 if small else 6, depth=3 if small else 5)
     _dump(args.nma_out, results["nma"])
+
+    print("== Serving: batched scheduler vs serial session loop ==",
+          flush=True)
+    # gated: batched >= 3x serial requests/sec at >= 99% hit-rate
+    results["serve"] = bench_serve.run(
+        n_trees=6 if small else 10, depth=5 if small else 6,
+        capacity=8 if small else 16, n_requests=24 if small else 48)
+    _dump(args.serve_out, results["serve"])
 
     results["total_s"] = time.perf_counter() - t0
     _dump(args.out, results)

@@ -1,14 +1,15 @@
 """Anytime serving demo — BOTH granularities of the paper's idea behind
-the ONE ``repro.schedule.AnytimeRuntime`` API:
+the ONE ``repro.serve.AnytimeServer`` loop:
 
-  1. Random forests (the paper): batched tabular requests under a
-     deadline; the squirrel step order decides which tree advances next;
-     ``Session.advance_until(deadline_ms)`` realizes the deadline loop
-     and every abort still yields a full-quality-so-far prediction.
+  1. Random forests (the paper): many concurrent deadline-bearing
+     requests multiplexed onto one device runtime by the EDF
+     slot-batched scheduler; every request gets the last completed
+     segment-boundary readout at its deadline — bit-identical to a solo
+     session advanced the same number of steps.
 
-  2. Transformers (beyond-paper): a 2-member LM ensemble served with a
-     squirrel-generated layer-execution order; the SAME runtime wraps
-     the ensemble via ``EnsembleProgram``.
+  2. Transformers (beyond-paper): a 2-member LM ensemble served by the
+     SAME server through a session lane — the subsystem is
+     program-agnostic.
 
     PYTHONPATH=src python examples/serve_anytime.py
 """
@@ -16,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import AnytimeRuntime, ForestProgram
+from repro import AnytimeRuntime, AnytimeServer, ForestProgram
 from repro.configs.registry import get_config
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.models import model as MD
@@ -29,27 +30,39 @@ def forest_serving():
     (Xtr, ytr), (Xor, yor), (Xte, yte) = split_dataset(X, y, seed=0)
     rf = train_forest(Xtr, ytr, 2, n_trees=10, max_depth=8, seed=0)
     rt = AnytimeRuntime(ForestProgram(rf.as_arrays(), y_order=yor, X_order=Xor))
+    server = AnytimeServer(rt, capacity=16)
 
-    for deadline_ms in (0.5, 2.0, 10.0, 1e9):
-        sess = rt.session(Xte, "backward_squirrel", chunk=4)
-        sess.advance_until(deadline_ms)  # abort checkpoint every 4 steps
-        acc = (sess.predict() == yte).mean()
-        print(f"  deadline {deadline_ms:7.1f} ms -> {sess.pos:3d}/"
-              f"{sess.total_steps} steps, accuracy {acc:.4f}")
+    # warm the slot batch's jit traces, then serve one capacity-sized
+    # generation per deadline tier — every delivery is the anytime
+    # readout of the last completed segment boundary, so tighter
+    # deadlines land earlier on the squirrel order's accuracy curve
+    n = 16
+    server.serve(list(Xte[:n]), deadline_ms=300_000.0)
+    for deadline_ms in (5.0, 25.0, 100.0, 1e9):
+        results = server.serve(list(Xte[:n]), deadline_ms=deadline_ms)
+        preds = np.asarray([int(r.prediction) for r in results])
+        steps = np.asarray([r.steps_completed for r in results])
+        acc = float((preds == yte[:n]).mean())
+        print(f"  deadline {deadline_ms:9.1f} ms -> steps p50 "
+              f"{int(np.percentile(steps, 50)):3d}/{results[0].total_steps}, "
+              f"accuracy {acc:.4f}")
 
-    # Execution backends are pluggable per session: "pallas" routes the
-    # fused runs through the MXU kernels (compiled Mosaic on TPU;
-    # interpret mode on CPU, so only a small slice here), "sharded"
-    # places the batch axis on the host mesh. Both match "jnp-ref"
-    # bit-for-bit — the parity suite in tests/test_backends.py.
-    ref = rt.session(Xte[:64], "backward_squirrel", backend="jnp-ref")
-    ref.run_to_completion()
+    # oversubscribed burst: 4x capacity shares the slots, EDF recycling
+    server.metrics.reset()  # snapshot the burst alone, not the tiers above
+    burst = server.serve(list(Xte[:64]), deadline_ms=30_000.0)
+    snap = server.metrics.snapshot()
+    print(f"  burst of {len(burst)} on {server.scheduler.capacity} slots: "
+          f"hit-rate {snap['deadline_hit_rate']:.2f}, occupancy "
+          f"{snap['slot_occupancy']:.2f}, {snap['requests_per_sec']:.1f} req/s")
+
+    # requests pick execution backends per lane; all three match the
+    # jnp-ref oracle (tests/test_serve.py asserts bit-parity)
+    ref = server.serve(list(Xte[:8]), deadline_ms=1e9, backend="jnp-ref")
     for backend in ("pallas", "sharded"):
-        sess = rt.session(Xte[:64], "backward_squirrel", backend=backend)
-        sess.run_to_completion()
-        agree = (sess.predict() == ref.predict()).mean()
-        print(f"  backend={backend:8s} agreement vs jnp-ref: {agree:.4f} "
-              f"({len(sess.backend.dispatched_lengths)} jit traces)")
+        res = server.serve(list(Xte[:8]), deadline_ms=1e9, backend=backend)
+        agree = np.mean([int(a.prediction) == int(b.prediction)
+                         for a, b in zip(res, ref)])
+        print(f"  backend={backend:8s} agreement vs jnp-ref: {agree:.4f}")
 
 
 def transformer_serving():
@@ -74,22 +87,25 @@ def transformer_serving():
     calib = next(mb(cfg, 64, 16, seed=100))
     batch = {"tokens": jnp.asarray(calib["tokens"])}
     labels = np.asarray(calib["labels"][:, -1])
-    # the SAME runtime class serves the ensemble granularity
+    # the SAME server class serves the ensemble granularity: the program
+    # has no slot-batch surface, so requests flow through a session lane
     rt = AnytimeRuntime(EnsembleProgram(members, batch, labels, top_v=64))
+    server = AnytimeServer(rt, capacity=2, chunk=1)
     order = rt.order("backward_squirrel")
     print(f"  squirrel layer order over (member,layer) units: {order.tolist()}")
 
     test = next(mb(cfg, 64, 16, seed=200))
     tb = {"tokens": jnp.asarray(test["tokens"])}
     tl = np.asarray(test["labels"][:, -1])
-    sess = rt.session(tb, order=order)
-    curve = [float(np.mean(sess.predict() == tl))]
-    while sess.remaining:
-        sess.advance(1)
-        curve.append(float(np.mean(sess.predict() == tl)))
-    for k in range(0, len(curve), max(1, len(curve) // 6)):
-        print(f"  after {k:2d} layer-steps: next-token acc {curve[k]:.3f}")
-    print(f"  final ({len(curve)-1} steps): {curve[-1]:.3f}")
+    for deadline_ms in (3_000.0, 1e9):
+        ticket = server.submit(tb, deadline_ms=deadline_ms)
+        server.drain()
+        r = ticket.result()
+        acc = float(np.mean(r.prediction == tl))
+        print(f"  deadline {deadline_ms:9.1f} ms -> "
+              f"{r.steps_completed:2d}/{r.total_steps} layer-steps, "
+              f"next-token acc {acc:.3f} "
+              f"({'completed' if r.completed else 'aborted at deadline'})")
 
 
 if __name__ == "__main__":

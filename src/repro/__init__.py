@@ -20,11 +20,15 @@ from repro.schedule import (
     register_backend,
     register_order,
 )
+from repro.serve import AnytimeServer, Request, Result
 
 __all__ = [
     "AnytimeRuntime",
+    "AnytimeServer",
     "ForestProgram",
     "OrderPolicy",
+    "Request",
+    "Result",
     "Session",
     "get_order_policy",
     "list_backends",

@@ -2,8 +2,9 @@
 step orders ("Jump Like A Squirrel", Biebert et al.).
 
 The PUBLIC scheduling API is :mod:`repro.schedule`; this package holds
-the forest-facing machinery underneath it.  Migration table (the string
-shims remain for one release, emitting ``DeprecationWarning``):
+the forest-facing machinery underneath it.  Migration table (the
+``generate_order`` / ``ORDER_NAMES`` string shims are DELETED after
+their one-release grace period):
 
     old call (repro.core)                     new call (repro.schedule)
     ----------------------------------------  ------------------------------------------
@@ -26,12 +27,7 @@ Still exported from here:
 # mid-cycle, so engine must be bound before anytime (which pulls in the
 # schedule package) executes.
 from repro.core import engine, metrics, orders, pruning, qwyc
-from repro.core.anytime import (
-    AnytimeForest,
-    AnytimeProgram,
-    ORDER_NAMES,
-    generate_order,
-)
+from repro.core.anytime import AnytimeForest, AnytimeProgram
 from repro.core.orders import StateEvaluator, validate_order
 from repro.schedule.policies import OrderPolicy, get_order_policy, list_orders
 
@@ -57,8 +53,6 @@ __all__ = [
     "AnytimeRuntime",
     "ForestProgram",
     "OrderPolicy",
-    "ORDER_NAMES",
-    "generate_order",
     "get_order_policy",
     "list_orders",
     "StateEvaluator",

@@ -10,15 +10,16 @@ this module keeps:
 
 * :class:`AnytimeForest` — a trained forest + a generated step order;
   one-call evaluation (accuracy curve, NMA) and an interruptible
-  session, now served through the RLE-fused ``repro.schedule`` runtime;
+  session, now served through the RLE-fused ``repro.schedule`` runtime.
 
-* ``generate_order`` / ``ORDER_NAMES`` — DEPRECATED string shims over
-  the registry, kept for one release so existing callers keep working.
+The ``generate_order`` / ``ORDER_NAMES`` string shims that briefly lived
+here are GONE (their one-release grace period is over): enumerate orders
+with :func:`repro.schedule.list_orders` and generate them with
+``get_order_policy(name, ...).generate(path_probs, y)``.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Protocol
 
 import jax.numpy as jnp
@@ -31,7 +32,7 @@ from repro.forest.forest import ForestArrays
 # level: repro.schedule.runtime imports repro.core back, so its pieces
 # (Session, ForestStepBackend, check_order) are imported lazily inside
 # the methods that need them.
-from repro.schedule.policies import get_order_policy, list_orders
+from repro.schedule.policies import get_order_policy
 
 
 class AnytimeProgram(Protocol):
@@ -59,32 +60,6 @@ class AnytimeProgram(Protocol):
         ...
 
     def make_session(self, order: np.ndarray, inputs): ...
-
-
-#: DEPRECATED — enumerate via :func:`repro.schedule.list_orders` instead.
-ORDER_NAMES = tuple(list_orders())
-
-
-def generate_order(
-    name: str,
-    path_probs: np.ndarray,
-    y: np.ndarray,
-    seed: int = 0,
-    state_limit: int = 2_000_000,
-) -> np.ndarray:
-    """DEPRECATED string dispatch, now a thin shim over the registry.
-
-    Use ``get_order_policy(name, ...).generate(path_probs, y)`` —
-    orders produced through either surface are byte-identical.
-    """
-    warnings.warn(
-        "repro.core.anytime.generate_order is deprecated; use "
-        "repro.schedule.get_order_policy(name).generate(path_probs, y)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    policy = get_order_policy(name, seed=seed, state_limit=state_limit)
-    return policy.generate(path_probs, y)
 
 
 @dataclasses.dataclass

@@ -94,6 +94,56 @@ def tree_run(
     return jax.lax.scan(body, idx, None, length=n)[0]
 
 
+def slot_step(
+    forest: DeviceForest,
+    X: jax.Array,
+    idx: jax.Array,
+    units: jax.Array,
+    mask: jax.Array,
+) -> jax.Array:
+    """Advance, for every batch row b, tree ``units[b]`` by one step.
+
+    The slot-batched generalization of :func:`tree_step` used by the
+    serving scheduler: each row is a *slot* holding an independent
+    request, so one dispatch advances many concurrent requests that sit
+    at different positions of the same step order.  Rows where ``mask``
+    is False (empty or retired slots) keep their state.  The per-row
+    arithmetic is exactly :func:`tree_step`'s, so slot execution stays
+    bit-exact with a solo session advanced the same number of steps.
+    """
+    b = jnp.arange(idx.shape[0])
+    node = idx[b, units]                                    # [B]
+    f = forest.feature[units, node]                         # [B]
+    thr = forest.threshold[units, node]                     # [B]
+    fv = X[b, f.astype(jnp.int32)]                          # [B]
+    go_left = fv <= thr
+    nxt = jnp.where(go_left, forest.left[units, node], forest.right[units, node])
+    nxt = jnp.where(forest.is_leaf[units, node], node, nxt)
+    nxt = jnp.where(mask, nxt, node)
+    return idx.at[b, units].set(nxt)
+
+
+def slot_run(
+    forest: DeviceForest,
+    X: jax.Array,
+    idx: jax.Array,
+    units: jax.Array,
+    mask: jax.Array,
+    n: int,
+) -> jax.Array:
+    """n fused masked slot-steps as one ``lax.scan`` (n static under jit).
+
+    The serving analogue of :func:`tree_run`: a plan segment of n
+    consecutive steps costs one dispatch for the whole slot batch, with
+    every slot stepping its own tree (``units``) or idling (``mask``).
+    """
+
+    def body(i, _):
+        return slot_step(forest, X, i, units, mask), None
+
+    return jax.lax.scan(body, idx, None, length=n)[0]
+
+
 def predict_from_state(forest: DeviceForest, idx: jax.Array) -> jax.Array:
     """Anytime read-out: sum per-node probability vectors over trees.
 

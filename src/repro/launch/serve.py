@@ -1,52 +1,71 @@
-"""Serving launcher: batched prefill + decode on the host mesh.
+"""Serving launcher: deadline-aware batched anytime-forest serving.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
-        --batch 4 --prompt-len 32 --max-new 16
+Drives :class:`repro.serve.AnytimeServer` — the EDF slot-batched
+scheduler — over a freshly trained forest and a synthetic request
+stream, then prints the serving metrics (requests/sec,
+deadline-hit-rate, p50/p99 steps-at-deadline, slot occupancy) plus the
+accuracy of the predictions actually delivered at the deadline.
+
+    PYTHONPATH=src python -m repro.launch.serve --dataset magic \
+        --n-trees 10 --depth 6 --requests 64 --deadline-ms 5 \
+        --capacity 16 --policy backward_squirrel
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.registry import get_config
-from repro.data.pipeline import frontend_stub
-from repro.launch import mesh as mesh_lib
-from repro.models import model as MD
-from repro.serving import engine as SE
+from repro.forest import make_dataset, split_dataset, train_forest
+from repro.schedule import AnytimeRuntime, ForestProgram
+from repro.serve import AnytimeServer
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--dataset", default="magic")
+    ap.add_argument("--n-trees", type=int, default=10)
+    ap.add_argument("--depth", type=int, default=6)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--deadline-ms", type=float, default=5.0)
+    ap.add_argument("--capacity", type=int, default=16)
+    ap.add_argument("--policy", default="backward_squirrel")
+    ap.add_argument("--backend", default=None,
+                    help="jnp-ref | pallas | sharded (default: auto)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    params = MD.init(cfg, jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    toks = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
-    extra = {k: jnp.asarray(v) for k, v in
-             frontend_stub(cfg, args.batch, args.seed).items()}
+    X, y = make_dataset(args.dataset, seed=args.seed)
+    n_classes = int(y.max()) + 1
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=args.seed)
+    rf = train_forest(tr, ytr, n_classes, n_trees=args.n_trees,
+                      max_depth=args.depth, seed=args.seed)
+    rt = AnytimeRuntime(
+        ForestProgram(rf.as_arrays(), y_order=yor[:300], X_order=orx[:300]))
+    server = AnytimeServer(rt, capacity=args.capacity)
 
-    t0 = time.perf_counter()
-    out = SE.generate(cfg, params, toks, args.max_new,
-                      extra_inputs=extra or None,
-                      temperature=args.temperature, seed=args.seed)
-    dt = time.perf_counter() - t0
-    new_tokens = args.batch * args.max_new
-    print(f"arch={cfg.name} generated {new_tokens} tokens in {dt:.2f}s "
-          f"({new_tokens/dt:.1f} tok/s incl. prefill+compile)")
-    print("sample:", np.asarray(out[0, args.prompt_len:]).tolist())
+    # warm the slot batch's jit traces so deadlines measure serving, not
+    # compilation
+    warm = min(args.capacity, len(te))
+    server.serve(list(te[:warm]), deadline_ms=300_000.0,
+                 policy=args.policy, backend=args.backend)
+    server.metrics.reset()  # report the measured stream, not the warmup
+
+    n = min(args.requests, len(te))
+    results = server.serve(list(te[:n]), deadline_ms=args.deadline_ms,
+                           policy=args.policy, backend=args.backend)
+    preds = np.asarray([int(r.prediction) for r in results])
+    acc = float((preds == yte[:n]).mean())
+    snap = server.metrics.snapshot()
+    print(f"served {n} requests @ {args.deadline_ms} ms deadline "
+          f"(policy={args.policy}, capacity={args.capacity})")
+    print(f"  accuracy-at-deadline  {acc:.4f}")
+    print(f"  deadline-hit-rate     {snap['deadline_hit_rate']:.3f}")
+    print(f"  steps-at-deadline     p50={snap['steps_at_deadline']['p50']:.0f} "
+          f"p99={snap['steps_at_deadline']['p99']:.0f} "
+          f"of {results[0].total_steps}")
+    print(f"  requests/sec          {snap['requests_per_sec']:.1f}")
+    print(f"  slot occupancy        {snap['slot_occupancy']:.2f}")
 
 
 if __name__ == "__main__":

@@ -50,6 +50,7 @@ from repro.schedule.runtime import (
     AnytimeRuntime,
     ForestProgram,
     Session,
+    SessionBatch,
     evaluate_orders,
 )
 
@@ -63,6 +64,7 @@ __all__ = [
     "ForestProgram",
     "ForestStepBackend",
     "Session",
+    "SessionBatch",
     "StepPlan",
     "check_order",
     "default_backend",

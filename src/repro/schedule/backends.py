@@ -229,6 +229,12 @@ class ForestExecutor:
         self.plan = plan
         self.batch = int(self.X.shape[0])
 
+        @partial(jax.jit, static_argnums=(4,))
+        def _run_slots(idx, X, units, mask, length):
+            return engine.slot_run(self.device, X, idx, units, mask, length)
+
+        self._run_slots_jit = _run_slots
+
     def init_state(self) -> jax.Array:
         return engine.init_state(self.device, self.batch)
 
@@ -237,6 +243,31 @@ class ForestExecutor:
 
     def readout(self, idx: jax.Array) -> jax.Array:
         raise NotImplementedError
+
+    # -- masked-slot entry point (the repro.serve scheduler's hot path) --
+
+    def run_slots(
+        self, idx: jax.Array, X, units: jax.Array, mask: jax.Array, length: int
+    ) -> jax.Array:
+        """``length`` fused masked steps where slot b advances its OWN
+        tree ``units[b]`` (``mask[b]`` False = idle slot).
+
+        One dispatch serves many concurrent requests sitting at
+        different positions of the same step plan; ``length`` is a
+        static power of two from the plan, so the trace bound of
+        :meth:`run_segment` carries over unchanged.  The generic
+        per-slot gather path is shared by every executor (per-slot tree
+        ids defeat the single-tree table gather the Pallas kernels are
+        tiled for); ``sharded`` re-places the slot axis, see
+        :meth:`place_slots`.
+        """
+        return self._run_slots_jit(idx, jnp.asarray(X), units, mask, length)
+
+    def place_slots(self, *arrays) -> tuple:
+        """Placement hook for slot-batch state arrays whose leading dim
+        is the slot axis (identity by default; the sharded executor puts
+        the slot axis on the mesh).  Always returns a tuple."""
+        return arrays
 
 
 @register_backend("jnp-ref")
@@ -334,6 +365,17 @@ class ShardedExecutor(JnpRefExecutor):
 
     def readout(self, idx):
         return super().readout(idx)[: self._true_batch]
+
+    def place_slots(self, *arrays):
+        """Slot-batch state (idx [S,T], X [S,F], masks/units [S]) gets
+        its leading slot axis placed via ``mesh.batch_pspec`` — the slot
+        batch IS the mesh's data-parallel batch, so every masked segment
+        dispatch splits across shards with zero collectives."""
+        return tuple(jax.device_put(a, self._batch_sharding) for a in arrays)
+
+    def run_slots(self, idx, X, units, mask, length):
+        units, mask = self.place_slots(jnp.asarray(units), jnp.asarray(mask))
+        return super().run_slots(idx, X, units, mask, length)
 
 
 # ---------------------------------------------------------------------------

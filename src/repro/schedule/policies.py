@@ -15,8 +15,10 @@ QWYC variant) as dataclass fields, so a configured policy is a value:
 hashable into the runtime's order cache, reproducible, and printable.
 
 The registry replaces the string-dispatch if-chain that used to live in
-``repro.core.anytime.generate_order`` (kept there as a deprecated shim);
-orders produced through either surface are byte-identical.
+``repro.core.anytime.generate_order`` (shim deleted after its
+one-release grace period); orders the legacy dispatch produced are
+byte-identical through the registry (tests/test_schedule.py keeps a
+frozen copy of the old dispatch as the parity reference).
 """
 from __future__ import annotations
 
@@ -256,3 +258,72 @@ for _metric in PRUNE_METRICS:
 for _variant in ("depth", "breadth"):
     register_order(f"qwyc_{_variant}", variant=_variant)(QwycOrder)
 del _metric, _variant
+
+
+@register_order("bandit_squirrel")
+@dataclasses.dataclass
+class BanditSquirrelOrder(OrderPolicy):
+    """Epsilon-greedy reordering of Backward-Squirrel tree segments.
+
+    The backward-squirrel order is run-length-encoded into per-tree
+    segments (each tree's internal segment sequence is preserved, so the
+    result is always a valid order); a bandit then replays the segments,
+    at each round picking the tree with the highest *observed per-tree
+    confidence gain* — the mean increase of the top class score per step
+    when that tree's segments were executed so far — or, with
+    probability ``epsilon``, a uniformly random tree (exploration).
+    Trees not yet pulled are optimistic (tried first, in the squirrel
+    order's own first-appearance rank).  Seeded and deterministic under
+    a fixed ``seed``; the scoring machinery is the squirrel generators'
+    own :class:`~repro.core.orders.StateEvaluator`.
+    """
+
+    epsilon: float = 0.1
+    seed: int = 0
+
+    def generate(self, path_probs, y):
+        from repro.core import orders
+        from repro.schedule.backends import rle_chunks
+
+        ev = orders.StateEvaluator(path_probs, y)
+        base = orders.backward_squirrel(ev)
+        U, _ = self._shape(path_probs)
+        segments: list[list[tuple[int, int]]] = [[] for _ in range(U)]
+        first_rank = np.full(U, U, dtype=np.int64)
+        for rank, (tree, n) in enumerate(rle_chunks(base)):
+            if not segments[tree]:
+                first_rank[tree] = rank
+            segments[tree].append((tree, n))
+        cursors = [0] * U
+
+        rng = np.random.default_rng(self.seed)
+        state = np.zeros(U, dtype=np.int64)
+        S = ev.score_matrix(state)
+
+        def confidence(S):
+            return float(S.max(axis=1).mean())
+
+        gain = np.full(U, np.inf)  # optimistic init: every arm pulled once
+        out: list[int] = []
+        remaining = sum(len(s) for s in segments)
+        while remaining:
+            avail = [t for t in range(U) if cursors[t] < len(segments[t])]
+            if len(avail) > 1 and rng.random() < self.epsilon:
+                tree = avail[int(rng.integers(len(avail)))]
+            else:
+                # greedy arm; np.inf ties (unpulled) break by squirrel rank
+                a = np.asarray(avail)
+                best = a[gain[a] == gain[a].max()]
+                tree = int(best[np.argmin(first_rank[best])])
+            _, n = segments[tree][cursors[tree]]
+            cursors[tree] += 1
+            remaining -= 1
+            c0 = confidence(S)
+            for _ in range(n):
+                ev.apply_step(S, state, tree, forward=True)
+                out.append(tree)
+            observed = (confidence(S) - c0) / n
+            gain[tree] = (
+                observed if np.isinf(gain[tree]) else 0.5 * (gain[tree] + observed)
+            )
+        return np.asarray(out, dtype=np.int32)

@@ -86,6 +86,17 @@ class ForestProgram:
     def unit_steps(self) -> int:
         return self.forest.max_depth
 
+    @property
+    def n_features(self) -> Optional[int]:
+        """Expected input-row width, when the program can know it (from
+        the ordering set).  The serving layer uses this to size slot
+        batches so a malformed first request cannot define the lane
+        width for everyone else; None = unknown (first request decides).
+        """
+        if self.X_order is None:
+            return None
+        return int(np.asarray(self.X_order).shape[1])
+
     def quality_table(self) -> tuple[np.ndarray, np.ndarray]:
         if self.path_probs is None:
             self.path_probs = engine.path_probs_np(self.forest, self.X_order)
@@ -108,6 +119,176 @@ class ForestProgram:
             self.device, inputs, order,
             backend=backend, plan=self.step_plan(order), **backend_opts,
         )
+
+    def make_slot_batch(
+        self,
+        order: np.ndarray,
+        capacity: int,
+        n_features: int,
+        backend: Optional[str] = None,
+        **backend_opts,
+    ) -> "SessionBatch":
+        """Slot-batched execution surface for the ``repro.serve``
+        scheduler: ``capacity`` recyclable request slots sharing this
+        program's compiled (content-addressed) step plan."""
+        return SessionBatch(
+            self.device, self.step_plan(np.asarray(order, dtype=np.int32)),
+            capacity, n_features, backend=backend, **backend_opts,
+        )
+
+    def prior_readout(self) -> np.ndarray:
+        """The 0-step ("empty") anytime readout [C]: every tree at its
+        root — what a request that never got a step returns."""
+        roots = engine.init_state(self.device, 1)
+        return np.asarray(engine.predict_from_state(self.device, roots))[0]
+
+
+# ---------------------------------------------------------------------------
+# Slot-batched execution: the state surface the repro.serve scheduler
+# drives.
+# ---------------------------------------------------------------------------
+
+
+class SessionBatch:
+    """Fixed-capacity slot batch executing ONE compiled :class:`StepPlan`.
+
+    Where a :class:`Session` serves one request, a ``SessionBatch``
+    multiplexes up to ``capacity`` concurrent requests (*slots*) onto a
+    single device dispatch stream.  Every slot owns an input row, an
+    index-array row, and a plan cursor; :meth:`advance_segment` issues
+    one fused masked dispatch in which each in-flight slot advances its
+    OWN current plan segment (per-slot tree ids via
+    :meth:`~repro.schedule.backends.ForestExecutor.run_slots`).
+
+    Invariants the serving layer relies on:
+
+    * all in-flight slots advance by the same power-of-two length ``L``
+      per dispatch, chosen so no slot crosses its current segment
+      boundary — slot state after ``pos`` steps is bit-identical to a
+      solo session advanced ``pos`` steps (prefix semantics preserved
+      per slot, even for slots admitted mid-flight and out of phase);
+    * admission and retirement happen strictly between dispatches, i.e.
+      at segment boundaries — a readout never observes a torn
+      mid-segment state;
+    * dispatched lengths are plan powers of two, so the ≤ 8-trace
+      compile bound of solo sessions carries over.
+    """
+
+    def __init__(
+        self,
+        device: engine.DeviceForest,
+        plan: StepPlan,
+        capacity: int,
+        n_features: int,
+        backend: Optional[str] = None,
+        dtype=np.float32,
+        **backend_opts,
+    ):
+        backend_name = backend if backend is not None else default_backend()
+        if backend_name == "sharded":
+            # the slot axis shards over the mesh: round capacity up so
+            # slots divide evenly (a few extra recyclable slots, never
+            # fewer than asked for)
+            from repro.launch import mesh as mesh_lib
+
+            mesh = backend_opts.get("mesh")
+            if mesh is None:
+                mesh = mesh_lib.make_host_mesh(data=len(jax.devices()))
+                backend_opts = {**backend_opts, "mesh": mesh}
+            shards = mesh_lib.n_batch_shards(mesh)
+            capacity += (-capacity) % shards
+        self.plan = plan
+        self.capacity = int(capacity)
+        self.backend_name = backend_name
+        X0 = np.zeros((self.capacity, int(n_features)), dtype=dtype)
+        self.executor = get_backend(backend_name)(device, X0, plan, **backend_opts)
+        self.X = self.executor.X
+        self.idx = self.executor.init_state()
+        self.pos = np.zeros(self.capacity, dtype=np.int64)      # plan cursor/slot
+        self.active = np.zeros(self.capacity, dtype=bool)
+        self.dispatched_lengths: set[int] = set()
+        # admissions buffer host-side and flush as ONE fused scatter at
+        # the next dispatch/readout — per-slot eager device writes would
+        # cost a dispatch per admitted request
+        self._pending_rows: dict[int, np.ndarray] = {}
+
+    @property
+    def total_steps(self) -> int:
+        return self.plan.total_steps
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    def open_slots(self) -> list[int]:
+        return [int(s) for s in np.flatnonzero(~self.active)]
+
+    def stepping_slots(self) -> np.ndarray:
+        """Active slots that still have plan steps left."""
+        return np.flatnonzero(self.active & (self.pos < self.total_steps))
+
+    def admit(self, slot: int, x_row) -> None:
+        """Recycle ``slot`` for a new request: reset its index row to the
+        all-roots state and install its input row.  Must be called
+        between dispatches (always true for host callers); the device
+        writes are deferred and fused with other admissions."""
+        if self.active[slot]:
+            raise ValueError(f"slot {slot} is still occupied")
+        x_row = np.asarray(x_row, dtype=self.X.dtype).reshape(-1)
+        if x_row.shape[0] != self.X.shape[1]:
+            raise ValueError(
+                f"request row has {x_row.shape[0]} features, batch expects "
+                f"{self.X.shape[1]}"
+            )
+        self._pending_rows[slot] = x_row
+        self.pos[slot] = 0
+        self.active[slot] = True
+
+    def retire(self, slot: int) -> None:
+        self.active[slot] = False
+        self._pending_rows.pop(slot, None)
+
+    def _flush_admissions(self) -> None:
+        if not self._pending_rows:
+            return
+        slots = np.asarray(sorted(self._pending_rows), dtype=np.int32)
+        rows = np.stack([self._pending_rows[int(s)] for s in slots])
+        self._pending_rows.clear()
+        self.X = self.X.at[slots].set(jnp.asarray(rows))
+        self.idx = self.idx.at[slots].set(0)
+        self.X, self.idx = self.executor.place_slots(self.X, self.idx)
+
+    def advance_segment(self) -> int:
+        """One fused masked dispatch: every in-flight slot advances ``L``
+        steps of its own current plan segment, where ``L`` is the
+        largest power of two that crosses no slot's segment boundary.
+        Returns ``L`` (0 when nothing can step)."""
+        self._flush_admissions()
+        step_ids = self.stepping_slots()
+        if step_ids.size == 0:
+            return 0
+        plan = self.plan
+        segs = np.searchsorted(plan.seg_starts, self.pos[step_ids], side="right") - 1
+        units = np.zeros(self.capacity, dtype=np.int32)
+        units[step_ids] = plan.seg_units[segs]
+        rem = plan.seg_starts[segs + 1] - self.pos[step_ids]
+        min_rem = int(rem.min())
+        L = min(1 << (min_rem.bit_length() - 1), plan.max_segment)
+        mask = np.zeros(self.capacity, dtype=bool)
+        mask[step_ids] = True
+        self.idx = self.executor.run_slots(
+            self.idx, self.X, jnp.asarray(units), jnp.asarray(mask), L
+        )
+        self.pos[step_ids] += L
+        self.dispatched_lengths.add(L)
+        return L
+
+    def readout(self) -> jax.Array:
+        """Device-side anytime readout [capacity, C] of the CURRENT
+        boundary (asynchronous — ``np.asarray`` it to sync; the serving
+        loop does so one dispatch later, double-buffered)."""
+        self._flush_admissions()
+        return self.executor.readout(self.idx)
 
 
 # ---------------------------------------------------------------------------

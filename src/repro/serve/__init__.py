@@ -1,0 +1,46 @@
+"""``repro.serve`` — deadline-aware async batch serving for anytime
+inference.
+
+The subsystem that turns per-session anytime machinery
+(:mod:`repro.schedule`) into a *server*: many concurrent deadline-bearing
+requests multiplexed onto one device runtime.
+
+* :mod:`repro.serve.queue` — :class:`Request`/:class:`Result` and the
+  EDF :class:`AdmissionQueue` with monotonic-clock bookkeeping;
+* :mod:`repro.serve.scheduler` — the earliest-deadline-first
+  micro-batcher: requests sharing a ``(program, policy, backend)`` key
+  coalesce into fixed-capacity slot batches executing the same cached
+  :class:`~repro.schedule.backends.StepPlan` segments, with per-slot
+  masking for mid-flight admission and slot recycling;
+* :mod:`repro.serve.server` — :class:`AnytimeServer`, the
+  double-buffered driver loop (dispatch segment k+1 while harvesting
+  segment k's readouts and retiring expired slots);
+* :mod:`repro.serve.metrics` — deadline-hit-rate, p50/p99
+  steps-at-deadline, slot occupancy, requests/sec.
+
+Quickstart::
+
+    from repro.serve import AnytimeServer
+
+    server = AnytimeServer(runtime, capacity=16)
+    tickets = [server.submit(x, deadline_ms=2.0) for x in rows]
+    server.drain()
+    preds = [t.result().prediction for t in tickets]
+    print(server.metrics.snapshot())
+"""
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import AdmissionQueue, Request, Result
+from repro.serve.scheduler import ForestLane, Scheduler, SessionLane
+from repro.serve.server import AnytimeServer, Ticket
+
+__all__ = [
+    "AdmissionQueue",
+    "AnytimeServer",
+    "ForestLane",
+    "Request",
+    "Result",
+    "Scheduler",
+    "ServeMetrics",
+    "SessionLane",
+    "Ticket",
+]

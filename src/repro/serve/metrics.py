@@ -1,0 +1,93 @@
+"""Serving observability: the four numbers that characterize an anytime
+server under load.
+
+* **deadline-hit-rate** — fraction of delivered requests that got a
+  >= 1-step anytime readout by their deadline (or completed outright);
+  a miss means the request starved to 0 steps and received the prior.
+* **steps-at-deadline** — p50/p99/mean of ``steps_completed`` across
+  delivered requests: how deep into the step order requests get before
+  their deadlines fire (the anytime-quality proxy the paper's NMA
+  metric integrates).
+* **slot occupancy** — mean fraction of slot capacity doing useful work
+  per dispatch (batching efficiency).
+* **requests/sec** — delivered requests over the first-submit →
+  last-delivery wall span.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+import numpy as np
+
+
+class ServeMetrics:
+    """Counters the :class:`~repro.serve.server.AnytimeServer` feeds.
+
+    ``reset()`` zeroes everything — call it after a warmup pass so
+    snapshots describe the measured stream, not the jit compiles.  The
+    steps-at-deadline percentile population is a bounded window
+    (``window`` most recent deliveries) so a long-lived server's
+    memory stays flat; scalar counters run unbounded.
+    """
+
+    def __init__(self, window: int = 100_000):
+        self._window = int(window)
+        self.reset()
+
+    def reset(self) -> None:
+        self.submitted = 0
+        self.delivered = 0
+        self.completed = 0
+        self.deadline_hits = 0
+        self.dispatches = 0
+        self.steps_at_deadline: collections.deque[int] = collections.deque(
+            maxlen=self._window)
+        self._occ_num = 0.0      # sum of active-slot counts over dispatches
+        self._occ_den = 0.0      # sum of capacities over dispatches
+        self._t_first_submit: Optional[float] = None
+        self._t_last_delivery: Optional[float] = None
+
+    def record_submit(self, now: float) -> None:
+        self.submitted += 1
+        if self._t_first_submit is None:
+            self._t_first_submit = now
+
+    def record_dispatch(self, n_active: int, capacity: int) -> None:
+        self.dispatches += 1
+        self._occ_num += n_active
+        self._occ_den += capacity
+
+    def record_delivery(self, result, now: float) -> None:
+        self.delivered += 1
+        self.completed += bool(result.completed)
+        self.deadline_hits += bool(result.deadline_hit)
+        self.steps_at_deadline.append(int(result.steps_completed))
+        self._t_last_delivery = now
+
+    @property
+    def wall_s(self) -> float:
+        if self._t_first_submit is None or self._t_last_delivery is None:
+            return 0.0
+        return max(0.0, self._t_last_delivery - self._t_first_submit)
+
+    def snapshot(self) -> dict:
+        steps = np.asarray(list(self.steps_at_deadline), dtype=np.int64)
+        wall = self.wall_s
+        return {
+            "submitted": self.submitted,
+            "delivered": self.delivered,
+            "completed": self.completed,
+            "deadline_hit_rate": (
+                self.deadline_hits / self.delivered if self.delivered else 0.0
+            ),
+            "steps_at_deadline": {
+                "p50": float(np.percentile(steps, 50)) if steps.size else 0.0,
+                "p99": float(np.percentile(steps, 99)) if steps.size else 0.0,
+                "mean": float(steps.mean()) if steps.size else 0.0,
+            },
+            "slot_occupancy": self._occ_num / self._occ_den if self._occ_den else 0.0,
+            "dispatches": self.dispatches,
+            "wall_s": wall,
+            "requests_per_sec": self.delivered / wall if wall > 0 else 0.0,
+        }

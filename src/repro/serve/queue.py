@@ -1,0 +1,110 @@
+"""Admission queue for deadline-bearing anytime requests.
+
+Monotonic-clock bookkeeping: :meth:`AdmissionQueue.submit` stamps each
+request with an id and an *absolute* deadline on the server's monotonic
+clock (``t_deadline = now + deadline_ms/1e3``), so downstream deadline
+checks are single comparisons immune to wall-clock adjustments.  The
+queue itself is earliest-deadline-first: :meth:`AdmissionQueue.pop`
+always yields the pending request with the nearest deadline, which is
+the order the scheduler admits requests into slot batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Optional, Union
+
+from repro.schedule.policies import OrderPolicy
+
+PolicyLike = Union[str, OrderPolicy]
+
+
+@dataclasses.dataclass
+class Request:
+    """One deadline-bearing inference request.
+
+    ``x`` is a single input row (``[F]``) for slot-batched programs
+    (forests); for generic programs served through solo-session lanes
+    (e.g. LM ensembles) it is whatever the program's ``make_session``
+    accepts.  ``deadline_ms`` is relative to submission; the queue turns
+    it into the absolute ``t_deadline``.
+    """
+
+    x: Any
+    deadline_ms: float
+    policy: PolicyLike = "backward_squirrel"
+    backend: Optional[str] = None
+    program: str = "default"
+    # stamped by AdmissionQueue.submit (monotonic clock):
+    request_id: int = -1
+    t_submit: float = float("nan")
+    t_deadline: float = float("nan")
+
+    def policy_key(self) -> str:
+        """Stable identity of the requested order policy (lane keying)."""
+        if isinstance(self.policy, OrderPolicy):
+            return self.policy.cache_key()
+        return str(self.policy)
+
+
+@dataclasses.dataclass
+class Result:
+    """What a request gets back at (or before) its deadline.
+
+    ``proba``/``prediction`` come from the last *completed* segment
+    boundary the host had seen by the deadline — bit-identical to a solo
+    ``jnp-ref`` session advanced ``steps_completed`` steps, never a torn
+    mid-segment state.  ``steps_completed == 0`` means the request got
+    the prior (all-roots / empty) readout.  ``error`` is set (and
+    ``deadline_hit`` False) when the request itself was unservable —
+    e.g. an input row of the wrong width — so one malformed request
+    fails ITS ticket instead of crashing the serving loop.
+    """
+
+    request_id: int
+    prediction: Any
+    proba: Any
+    steps_completed: int
+    total_steps: int
+    completed: bool       # ran the entire step order before the deadline
+    deadline_hit: bool    # delivered a >=1-step anytime readout (or completed)
+    latency_ms: float
+    error: Optional[str] = None
+
+
+class AdmissionQueue:
+    """EDF admission queue with monotonic-clock bookkeeping."""
+
+    def __init__(self):
+        self._heap: list[tuple[float, int, Request]] = []
+        self._ids = itertools.count()
+        self.submitted = 0
+
+    def submit(self, request: Request, now: float) -> Request:
+        """Stamp and enqueue ``request``; returns it (id/deadline filled)."""
+        if request.deadline_ms < 0:
+            raise ValueError(f"deadline_ms must be >= 0, got {request.deadline_ms}")
+        request.request_id = next(self._ids)
+        request.t_submit = now
+        request.t_deadline = now + request.deadline_ms / 1e3
+        self.submitted += 1
+        self.push(request)
+        return request
+
+    def push(self, request: Request) -> None:
+        """(Re-)enqueue an already-stamped request (e.g. one that found
+        no free slot this round)."""
+        heapq.heappush(self._heap, (request.t_deadline, request.request_id, request))
+
+    def pop(self) -> Optional[Request]:
+        """Earliest-deadline pending request, or None when empty."""
+        if not self._heap:
+            return None
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

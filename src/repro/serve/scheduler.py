@@ -1,0 +1,427 @@
+"""Earliest-deadline-first micro-batcher over slot batches.
+
+The scheduler coalesces requests sharing a ``(program, policy, backend)``
+key into fixed-capacity *lanes*.  A forest lane drives one
+:class:`~repro.schedule.runtime.SessionBatch`: all of its slots execute
+the same cached :class:`~repro.schedule.backends.StepPlan` segments in
+fused masked dispatches, requests admitted mid-flight join at the next
+segment boundary (their slot simply starts the plan from position 0,
+masked per-slot execution keeps everyone exact), and finished or expired
+slots are recycled for queued requests.  Programs without a slot-batch
+surface (e.g. LM ensembles) get a *session lane*: the same EDF loop and
+deadline bookkeeping drive per-request solo sessions in chunk-sized
+steps, which is what makes the server program-agnostic.
+
+Boundary bookkeeping (the double buffer): each lane keeps up to three
+readout snapshots —
+
+* ``_front``  — enqueued with the dispatch that just went out (device,
+  asynchronous);
+* ``_back``   — the previous dispatch's snapshot, materialized on the
+  host during :meth:`harvest` *while the device executes the front
+  segment*;
+* ``_host``   — the newest host-resident boundary, used for deliveries.
+
+A request retired at its deadline therefore receives the newest readout
+the host had fully materialized — always a segment boundary, never a
+torn mid-segment state, and bit-identical to a solo ``jnp-ref`` session
+advanced the same number of steps.  A request that expires before its
+first harvested boundary gets the program's prior (0-step) readout.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.schedule.backends import default_backend
+from repro.serve.queue import AdmissionQueue, Request
+
+
+class _Boundary(NamedTuple):
+    """Readout snapshot of one segment boundary."""
+
+    probs: object        # [capacity, C] (device until harvested)
+    pos: np.ndarray      # plan cursor per slot at the boundary
+    owner: np.ndarray    # request_id per slot at the boundary (-1 = free)
+
+
+class Delivery(NamedTuple):
+    """A retired request plus the payload the server turns into a Result.
+
+    ``proba`` is None when the request never reached a harvested
+    boundary — the server substitutes the program's prior readout.
+    """
+
+    request: Request
+    proba: Optional[np.ndarray]
+    steps: int
+    completed: bool
+    error: Optional[str] = None
+
+
+class ForestLane:
+    """Slot-batched lane over one :class:`SessionBatch` (double-buffered)."""
+
+    def __init__(self, batch):
+        self.batch = batch
+        self.requests: list[Optional[Request]] = [None] * batch.capacity
+        self._front: Optional[_Boundary] = None
+        self._back: Optional[_Boundary] = None
+        self._host: Optional[_Boundary] = None
+
+    @property
+    def capacity(self) -> int:
+        return self.batch.capacity
+
+    @property
+    def n_active(self) -> int:
+        return self.batch.n_active
+
+    @property
+    def busy(self) -> bool:
+        return (
+            any(r is not None for r in self.requests)
+            or self._front is not None
+            or self._back is not None
+        )
+
+    def min_deadline(self) -> float:
+        deadlines = [r.t_deadline for r in self.requests if r is not None]
+        return min(deadlines) if deadlines else float("inf")
+
+    def _owners(self) -> np.ndarray:
+        return np.asarray(
+            [r.request_id if r is not None else -1 for r in self.requests],
+            dtype=np.int64,
+        )
+
+    def admit(self, request: Request) -> bool:
+        """Place ``request`` into a free slot (joining the batch at the
+        next segment boundary); False when the lane is full."""
+        slots = self.batch.open_slots()
+        if not slots:
+            return False
+        slot = slots[0]
+        self.batch.admit(slot, request.x)
+        self.requests[slot] = request
+        return True
+
+    def dispatch(self) -> int:
+        """Advance every in-flight slot one fused masked segment and
+        enqueue (asynchronously) the new boundary's readout; rotates the
+        double buffer.  Returns the number of slots stepped."""
+        stepped = int(self.batch.stepping_slots().size)
+        L = self.batch.advance_segment()
+        self._back = self._front
+        if L:
+            self._front = _Boundary(
+                self.batch.readout(), self.batch.pos.copy(), self._owners()
+            )
+        else:
+            self._front = None
+        return stepped if L else 0
+
+    def harvest(self, now: float) -> list[Delivery]:
+        """Materialize the previous boundary on the host (overlapping the
+        device's execution of the front segment) and retire slots that
+        completed the plan or whose deadline has passed."""
+        back, self._back = self._back, None
+        if back is not None:
+            self._host = _Boundary(np.asarray(back.probs), back.pos, back.owner)
+        out: list[Delivery] = []
+        for slot, req in enumerate(self.requests):
+            if req is None:
+                continue
+            host = self._host
+            host_valid = host is not None and host.owner[slot] == req.request_id
+            steps = int(host.pos[slot]) if host_valid else 0
+            done = host_valid and steps >= self.batch.total_steps
+            if done or req.t_deadline <= now:
+                proba = np.array(host.probs[slot]) if host_valid else None
+                out.append(Delivery(req, proba, steps, done))
+                self.batch.retire(slot)
+                self.requests[slot] = None
+        return out
+
+
+class SessionLane:
+    """Per-request solo sessions for programs without a slot-batch
+    surface, driven by the same EDF loop and deadline bookkeeping.
+
+    Each entry advances ``chunk`` steps per scheduler iteration and
+    refreshes its boundary readout afterwards; a request retired at its
+    deadline returns the readout stored *before* the advance that
+    straddled the deadline — boundary semantics identical to the slot
+    path, at per-session granularity.
+    """
+
+    def __init__(self, runtime, order, backend, capacity: int, chunk: int):
+        self.runtime = runtime
+        self.order = order
+        self.backend = backend
+        self.capacity = int(capacity)
+        self.chunk = int(chunk)
+        #: slot -> (request, session, last boundary proba, steps at boundary)
+        self.entries: list[dict] = []
+
+    @property
+    def n_active(self) -> int:
+        return len(self.entries)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.entries)
+
+    def min_deadline(self) -> float:
+        if not self.entries:
+            return float("inf")
+        return min(e["request"].t_deadline for e in self.entries)
+
+    def admit(self, request: Request) -> bool:
+        if len(self.entries) >= self.capacity:
+            return False
+        kwargs = {} if self.backend is None else {"backend": self.backend}
+        sess = self.runtime.session(request.x, order=self.order, **kwargs)
+        self.entries.append({
+            "request": request,
+            "session": sess,
+            "proba": np.asarray(sess.predict_proba()),  # 0-step prior boundary
+            "steps": 0,
+        })
+        return True
+
+    def dispatch(self) -> int:
+        stepped = 0
+        for e in self.entries:
+            if e["session"].remaining:
+                e["session"].advance(self.chunk)
+                stepped += 1
+        return stepped
+
+    def harvest(self, now: float) -> list[Delivery]:
+        out: list[Delivery] = []
+        kept: list[dict] = []
+        for e in self.entries:
+            req, sess = e["request"], e["session"]
+            if req.t_deadline <= now:
+                out.append(Delivery(
+                    req, e["proba"], e["steps"],
+                    completed=e["steps"] >= sess.total_steps,
+                ))
+                continue
+            # refresh the boundary readout to the state after dispatch
+            e["proba"] = np.asarray(sess.predict_proba())
+            e["steps"] = int(sess.pos)
+            if sess.remaining == 0:
+                out.append(Delivery(req, e["proba"], e["steps"], completed=True))
+                continue
+            kept.append(e)
+        self.entries = kept
+        return out
+
+
+class Scheduler:
+    """EDF micro-batcher: admission, lane management, and the
+    dispatch → admit → harvest iteration the server loop drives."""
+
+    def __init__(
+        self,
+        runtimes: dict,
+        metrics,
+        capacity: int = 16,
+        chunk: int = 8,
+        backend_opts: Optional[dict] = None,
+        max_idle_lanes: int = 32,
+    ):
+        self.runtimes = dict(runtimes)
+        self.metrics = metrics
+        self.capacity = int(capacity)
+        self.chunk = int(chunk)
+        self.backend_opts = dict(backend_opts or {})
+        self.max_idle_lanes = int(max_idle_lanes)
+        self.lanes: dict[tuple, object] = {}
+        self._lane_last_used: dict[tuple, int] = {}
+        self._tick = 0
+        # per-lane EDF heaps of requests waiting for a free slot: each
+        # request leaves the admission queue exactly ONCE (no per-
+        # iteration pop/re-push churn proportional to the backlog)
+        self._waiting: dict[tuple, list] = {}
+        self._prior_cache: dict[str, np.ndarray] = {}
+
+    # -- lane management ---------------------------------------------------
+
+    def _runtime(self, req: Request):
+        try:
+            return self.runtimes[req.program]
+        except KeyError:
+            raise ValueError(
+                f"unknown program {req.program!r}; serving: "
+                f"{', '.join(self.runtimes)}"
+            ) from None
+
+    def _lane_key(self, req: Request) -> tuple:
+        rt = self._runtime(req)
+        backend = req.backend if req.backend is not None else rt.backend
+        if backend is None and hasattr(rt.program, "make_slot_batch"):
+            # canonicalize: "unset" and an explicit default must share a
+            # lane, not build duplicate slot batches + jit traces
+            backend = default_backend()
+        return (req.program, req.policy_key(), str(backend))
+
+    def lane_for(self, req: Request):
+        key = self._lane_key(req)
+        lane = self.lanes.get(key)
+        if lane is None:
+            rt = self._runtime(req)
+            order = rt.order(req.policy)
+            backend = req.backend if req.backend is not None else rt.backend
+            if hasattr(rt.program, "make_slot_batch"):
+                # prefer the program's own input width — a malformed
+                # first request must not define the lane for everyone
+                n_features = getattr(rt.program, "n_features", None)
+                if n_features is None:
+                    n_features = int(np.asarray(req.x).reshape(-1).shape[0])
+                batch = rt.program.make_slot_batch(
+                    order, self.capacity, n_features,
+                    backend=backend, **self.backend_opts,
+                )
+                lane = ForestLane(batch)
+            else:
+                lane = SessionLane(rt, order, backend, self.capacity, self.chunk)
+            self.lanes[key] = lane
+        self._lane_last_used[key] = self._tick
+        return lane
+
+    def _evict_idle_lanes(self) -> None:
+        """Bound device state on long-lived servers: a lane's slot batch
+        (device arrays + jit traces) is worth keeping warm, but clients
+        cycling through many distinct (program, policy, backend) keys
+        must not grow it without limit — beyond ``max_idle_lanes``, the
+        least-recently-used idle lanes are dropped (busy lanes never
+        are; a re-arrival simply rebuilds)."""
+        if len(self.lanes) <= self.max_idle_lanes:
+            return
+        idle = sorted(
+            (key for key, lane in self.lanes.items()
+             if not lane.busy and key not in self._waiting),
+            key=lambda key: self._lane_last_used.get(key, 0),
+        )
+        excess = len(self.lanes) - self.max_idle_lanes
+        for key in idle[:excess]:
+            del self.lanes[key]
+            self._lane_last_used.pop(key, None)
+
+    # -- request-level helpers --------------------------------------------
+
+    def total_steps(self, req: Request) -> int:
+        prog = self._runtime(req).program
+        return int(prog.n_units) * int(prog.unit_steps)
+
+    def prior_proba(self, req: Request) -> np.ndarray:
+        """The 0-step readout a starved/zero-deadline request receives.
+
+        Program priors are input-independent constants, cached per
+        program name — mass starvation under overload must not pay one
+        device round trip per starved request.  Programs without a
+        ``prior_readout`` (session-lane programs) have input-shaped
+        readouts and are computed per request."""
+        prog = self._runtime(req).program
+        if hasattr(prog, "prior_readout"):
+            prior = self._prior_cache.get(req.program)
+            if prior is None:
+                prior = prog.prior_readout()
+                self._prior_cache[req.program] = prior
+            return prior
+        rt = self._runtime(req)
+        sess = rt.session(req.x, order=rt.order(req.policy))
+        return np.asarray(sess.predict_proba())
+
+    # -- the serving iteration --------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._waiting) or any(
+            lane.busy for lane in self.lanes.values()
+        )
+
+    def _admit(self, queue: AdmissionQueue, now: float,
+               deliveries: list[Delivery]) -> None:
+        """Move arrivals into per-lane EDF waiting heaps (once each),
+        then fill every lane's free slots earliest-deadline-first.
+        A request whose lane raises (unknown program, malformed input)
+        fails alone — an error delivery, never a crashed loop or a
+        dropped neighbor."""
+        while True:
+            req = queue.pop()
+            if req is None:
+                break
+            if req.t_deadline <= now:
+                # already expired (zero-deadline or stale): the prior
+                # readout needs no lane — don't pay order generation or
+                # slot-batch construction for a request that cannot run
+                deliveries.append(Delivery(req, None, 0, False))
+                continue
+            try:
+                key = self._lane_key(req)
+                self.lane_for(req)  # create the lane up front (may raise)
+            except Exception as e:  # noqa: BLE001 - isolate bad requests
+                deliveries.append(Delivery(req, None, 0, False, error=str(e)))
+                continue
+            heapq.heappush(
+                self._waiting.setdefault(key, []),
+                (req.t_deadline, req.request_id, req),
+            )
+        for key in list(self._waiting):
+            heap = self._waiting[key]
+            lane = self.lanes[key]
+            while heap:
+                t_deadline, _, head = heap[0]
+                if t_deadline <= now:
+                    # expired while queued (or zero-deadline): prior
+                    # readout, 0 steps
+                    heapq.heappop(heap)
+                    deliveries.append(Delivery(head, None, 0, False))
+                    continue
+                try:
+                    admitted = lane.admit(head)
+                except Exception as e:  # noqa: BLE001
+                    heapq.heappop(heap)
+                    deliveries.append(
+                        Delivery(head, None, 0, False, error=str(e)))
+                    continue
+                if not admitted:
+                    break  # lane full; EDF head waits for a recycled slot
+                heapq.heappop(heap)
+            if not heap:
+                del self._waiting[key]
+
+    def step(self, queue: AdmissionQueue, now: float) -> list[Delivery]:
+        """One scheduling iteration.
+
+        1. **dispatch** — every busy lane, earliest deadline first,
+           enqueues its next fused masked segment (asynchronous);
+        2. **admit** — queued requests join free slots at the fresh
+           segment boundary, EDF order; already-expired requests are
+           delivered the prior readout immediately;
+        3. **harvest** — the previous boundary's readout is pulled to
+           the host (overlapping device execution of the segment
+           dispatched in 1) and done/expired slots retire, freeing
+           capacity for the next admission round.
+        """
+        for lane in sorted(
+            (l for l in self.lanes.values() if l.busy),
+            key=lambda l: l.min_deadline(),
+        ):
+            stepped = lane.dispatch()
+            if stepped:
+                self.metrics.record_dispatch(stepped, lane.capacity)
+
+        self._tick += 1
+        deliveries: list[Delivery] = []
+        self._admit(queue, now, deliveries)
+        for lane in self.lanes.values():
+            deliveries.extend(lane.harvest(now))
+        self._evict_idle_lanes()
+        return deliveries

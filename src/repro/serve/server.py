@@ -1,0 +1,225 @@
+"""`AnytimeServer` — the deadline-aware serving driver loop.
+
+One server multiplexes many concurrent anytime requests onto one device
+runtime.  The loop is double-buffered: each iteration *dispatches* the
+next fused step-plan segment for every lane (asynchronous on device),
+*admits* queued requests into freed slots at the fresh segment boundary,
+then *harvests* the previous boundary's readout on the host while the
+device is still executing — so deadline checks and result delivery
+overlap segment execution instead of serializing with it.  Every request
+is answered with the last segment-boundary readout the host had seen at
+its deadline: bit-identical to a solo ``jnp-ref`` session advanced the
+same number of steps, never a torn mid-segment state.
+
+    server = AnytimeServer(runtime, capacity=16)
+    tickets = [server.submit(x, deadline_ms=2.0) for x in rows]
+    server.drain()
+    preds = [t.result().prediction for t in tickets]
+
+Programs are pluggable: forests serve through masked slot batches
+(:class:`~repro.schedule.runtime.SessionBatch`); any other
+:class:`AnytimeProgram` (e.g. the LM
+:class:`~repro.serving.anytime_depth.EnsembleProgram`) is driven through
+per-request session lanes by the same loop, queue, and metrics.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.schedule.runtime import AnytimeRuntime
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import AdmissionQueue, PolicyLike, Request, Result
+from repro.serve.scheduler import Delivery, Scheduler
+
+
+class Ticket:
+    """Handle to an in-flight request; resolves to a :class:`Result`.
+
+    Delivery writes the result directly onto the ticket (the server
+    tracks only PENDING tickets), so a long-lived server's memory holds
+    results exactly as long as their callers hold the tickets — whether
+    collected via ``result()`` or via ``drain()``'s return value.
+    """
+
+    __slots__ = ("_server", "request", "_result")
+
+    def __init__(self, server: "AnytimeServer", request: Request):
+        self._server = server
+        self.request = request
+        self._result: Optional[Result] = None
+
+    @property
+    def request_id(self) -> int:
+        return self.request.request_id
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> Result:
+        """The request's result, driving the server loop if needed."""
+        while self._result is None:
+            if not self._server.step() and self._result is None:
+                raise RuntimeError(  # pragma: no cover - defensive
+                    f"server idle but request {self.request_id} undelivered"
+                )
+        return self._result
+
+
+class AnytimeServer:
+    """Deadline-aware async batch server over anytime runtimes.
+
+    ``runtime`` (or a ``programs`` name -> :class:`AnytimeRuntime` dict)
+    names what is served; ``capacity`` is the slot count per
+    ``(program, policy, backend)`` lane; ``chunk`` is the per-iteration
+    step granularity of session lanes (slot lanes use plan segments);
+    ``clock`` must be monotonic — injectable for deterministic tests.
+    """
+
+    def __init__(
+        self,
+        runtime: Optional[AnytimeRuntime] = None,
+        *,
+        programs: Optional[dict] = None,
+        capacity: int = 16,
+        chunk: int = 8,
+        clock=time.monotonic,
+        backend_opts: Optional[dict] = None,
+    ):
+        runtimes = dict(programs or {})
+        if runtime is not None:
+            runtimes.setdefault("default", runtime)
+        if not runtimes:
+            raise ValueError("AnytimeServer needs a runtime or a programs dict")
+        self.clock = clock
+        self.queue = AdmissionQueue()
+        self.metrics = ServeMetrics()
+        self.scheduler = Scheduler(
+            runtimes, self.metrics, capacity=capacity, chunk=chunk,
+            backend_opts=backend_opts,
+        )
+        self._pending: dict[int, Ticket] = {}   # awaiting delivery
+        self._drain_buffer: Optional[list[Result]] = None
+
+    # -- submission --------------------------------------------------------
+
+    def submit(
+        self,
+        x,
+        deadline_ms: float,
+        policy: PolicyLike = "backward_squirrel",
+        backend: Optional[str] = None,
+        program: str = "default",
+    ) -> Ticket:
+        """Enqueue one request; returns a :class:`Ticket` immediately."""
+        return self.submit_request(Request(
+            x=x, deadline_ms=deadline_ms, policy=policy,
+            backend=backend, program=program,
+        ))
+
+    def submit_request(self, request: Request) -> Ticket:
+        if request.program not in self.scheduler.runtimes:
+            raise ValueError(
+                f"unknown program {request.program!r}; serving: "
+                f"{', '.join(self.scheduler.runtimes)}"
+            )
+        now = self.clock()
+        self.queue.submit(request, now)
+        self.metrics.record_submit(now)
+        ticket = Ticket(self, request)
+        self._pending[request.request_id] = ticket
+        return ticket
+
+    # -- the driver loop ---------------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or self.scheduler.busy
+
+    def step(self) -> bool:
+        """One dispatch → admit → harvest iteration; returns whether any
+        work remains."""
+        now = self.clock()
+        deliveries = self.scheduler.step(self.queue, now)
+        if deliveries:
+            t_done = self.clock()
+            for d in deliveries:
+                self._finalize(d, t_done)
+        return self.busy
+
+    def drain(self, max_steps: Optional[int] = None) -> list[Result]:
+        """Run the loop until idle; returns results delivered during the
+        drain, in delivery order."""
+        self._drain_buffer = buffer = []
+        try:
+            steps = 0
+            while self.busy:
+                self.step()
+                steps += 1
+                if max_steps is not None and steps >= max_steps:
+                    break
+        finally:
+            self._drain_buffer = None
+        return buffer
+
+    def serve(
+        self,
+        xs: Sequence,
+        deadline_ms: Union[float, Sequence[float]],
+        policy: PolicyLike = "backward_squirrel",
+        backend: Optional[str] = None,
+        program: str = "default",
+    ) -> list[Result]:
+        """Batch convenience: submit every row, drain, return results in
+        submission order."""
+        if np.isscalar(deadline_ms):
+            deadline_ms = [float(deadline_ms)] * len(xs)
+        if len(deadline_ms) != len(xs):
+            raise ValueError("deadline_ms must be scalar or match len(xs)")
+        tickets = [
+            self.submit(x, d, policy=policy, backend=backend, program=program)
+            for x, d in zip(xs, deadline_ms)
+        ]
+        self.drain()
+        return [t.result() for t in tickets]
+
+    def result(self, request_id: int) -> Optional[Result]:
+        """Result of a still-tracked request, or None while pending."""
+        ticket = self._pending.get(request_id)
+        return ticket._result if ticket is not None else None
+
+    # -- internals ---------------------------------------------------------
+
+    def _finalize(self, d: Delivery, now: float) -> None:
+        req = d.request
+        proba, total = d.proba, 0
+        try:
+            if proba is None:
+                proba = self.scheduler.prior_proba(req)
+            total = self.scheduler.total_steps(req)
+        except Exception as e:  # noqa: BLE001 - unservable request
+            proba = None
+            if d.error is None:
+                d = d._replace(error=str(e))
+        res = Result(
+            request_id=req.request_id,
+            prediction=np.argmax(proba, axis=-1) if proba is not None else None,
+            proba=proba,
+            steps_completed=int(d.steps),
+            total_steps=total,
+            completed=bool(d.completed),
+            deadline_hit=bool(
+                d.error is None and (d.completed or d.steps > 0 or total == 0)
+            ),
+            latency_ms=(now - req.t_submit) * 1e3,
+            error=d.error,
+        )
+        ticket = self._pending.pop(req.request_id, None)
+        if ticket is not None:
+            ticket._result = res
+        if self._drain_buffer is not None:
+            self._drain_buffer.append(res)
+        self.metrics.record_delivery(res, now)

@@ -6,8 +6,12 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import engine, orders, pruning, qwyc
-from repro.core.anytime import ORDER_NAMES, generate_order
 from repro.forest import make_dataset, split_dataset, train_forest
+from repro.schedule import get_order_policy, list_orders
+
+
+def _order(name, pp, y, seed=0):
+    return get_order_policy(name, seed=seed).generate(pp, y)
 
 
 def _setup(trees=3, depth=3, dataset="magic", seed=0):
@@ -29,10 +33,10 @@ def _mean_acc(ev: orders.StateEvaluator, order: np.ndarray) -> float:
     return float(np.mean(accs))
 
 
-@pytest.mark.parametrize("name", ORDER_NAMES)
+@pytest.mark.parametrize("name", list_orders())
 def test_every_generator_produces_valid_order(name):
     fa, pp, y = _setup()
-    order = generate_order(name, pp, y)
+    order = _order(name, pp, y)
     assert orders.validate_order(order, fa.n_trees, fa.max_depth)
 
 
@@ -63,7 +67,7 @@ def test_paper_ordering_on_ordering_set():
     """Sec. VI: on S_o, optimal >= squirrels >= unoptimal (by construction)."""
     fa, pp, y = _setup(trees=4, depth=4)
     ev = orders.StateEvaluator(pp, y)
-    m = {n: _mean_acc(ev, generate_order(n, pp, y))
+    m = {n: _mean_acc(ev, _order(n, pp, y))
          for n in ("optimal", "backward_squirrel", "forward_squirrel",
                    "random", "unoptimal")}
     assert m["optimal"] >= m["backward_squirrel"] - 1e-9

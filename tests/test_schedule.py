@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import engine, orders, pruning, qwyc
-from repro.core.anytime import ORDER_NAMES, AnytimeForest
+from repro.core.anytime import AnytimeForest
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.schedule import (
     AnytimeRuntime,
@@ -33,6 +33,19 @@ def pipeline():
     fa = rf.as_arrays()
     pp = engine.path_probs_np(fa, orx[:300])
     return fa, pp, yor[:300], te[:200], yte[:200]
+
+
+# The names the deleted repro.core string dispatch knew, in its
+# enumeration order — frozen here as the parity reference.  New policies
+# (e.g. bandit_squirrel) register AFTER this prefix.
+LEGACY_NAMES = (
+    "optimal", "unoptimal", "forward_squirrel", "backward_squirrel",
+    "random", "depth", "breadth",
+    "prune_depth_IE", "prune_breadth_IE", "prune_depth_EA",
+    "prune_breadth_EA", "prune_depth_RE", "prune_breadth_RE",
+    "prune_depth_D", "prune_breadth_D",
+    "qwyc_depth", "qwyc_breadth",
+)
 
 
 def _legacy_generate_order(name, path_probs, y, seed=0, state_limit=2_000_000):
@@ -74,11 +87,11 @@ def _legacy_generate_order(name, path_probs, y, seed=0, state_limit=2_000_000):
 
 
 def test_registry_covers_legacy_names_in_order():
-    assert tuple(list_orders()) == ORDER_NAMES
+    assert tuple(list_orders())[: len(LEGACY_NAMES)] == LEGACY_NAMES
     assert len(set(list_orders())) == len(list_orders())
 
 
-@pytest.mark.parametrize("name", ORDER_NAMES)
+@pytest.mark.parametrize("name", LEGACY_NAMES)
 def test_registry_parity_with_legacy_dispatch(name, pipeline):
     """Every legacy string must yield a BYTE-IDENTICAL order through the
     registry (the PR's central acceptance criterion)."""
@@ -89,14 +102,59 @@ def test_registry_parity_with_legacy_dispatch(name, pipeline):
     assert legacy.tobytes() == via_registry.tobytes()
 
 
-def test_deprecated_shim_warns_and_matches(pipeline):
-    fa, pp, yor, te, yte = pipeline
-    from repro.core import generate_order
+def test_string_shims_are_gone():
+    """generate_order/ORDER_NAMES left repro.core after their grace
+    period — only the registry surface remains."""
+    import repro.core
+    import repro.core.anytime as anytime_mod
 
-    with pytest.warns(DeprecationWarning):
-        shimmed = generate_order("backward_squirrel", pp, yor)
-    direct = get_order_policy("backward_squirrel").generate(pp, yor)
-    assert shimmed.tobytes() == direct.tobytes()
+    for mod in (repro.core, anytime_mod):
+        with pytest.raises(AttributeError):
+            mod.generate_order
+        with pytest.raises(AttributeError):
+            mod.ORDER_NAMES
+
+
+# ---------------------------------------------------------------------------
+# bandit_squirrel: the learned (epsilon-greedy) reordering policy
+# ---------------------------------------------------------------------------
+
+
+def test_bandit_squirrel_registered_after_legacy_prefix():
+    assert "bandit_squirrel" in list_orders()
+    assert list_orders().index("bandit_squirrel") >= len(LEGACY_NAMES)
+
+
+def test_bandit_squirrel_valid_and_deterministic(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    a = get_order_policy("bandit_squirrel", seed=3).generate(pp, yor)
+    b = get_order_policy("bandit_squirrel", seed=3).generate(pp, yor)
+    assert orders.validate_order(a, fa.n_trees, fa.max_depth)
+    assert a.tobytes() == b.tobytes()  # seeded => bit-reproducible
+    assert a.dtype == np.int32
+
+
+def test_bandit_squirrel_preserves_per_tree_segment_order(pipeline):
+    """Reordering moves whole squirrel segments between trees but never
+    reorders one tree's own steps — counts stay exact per tree."""
+    fa, pp, yor, te, yte = pipeline
+    out = get_order_policy("bandit_squirrel", seed=0, epsilon=0.5).generate(pp, yor)
+    counts = np.bincount(out, minlength=fa.n_trees)
+    assert (counts == fa.max_depth).all()
+
+
+def test_bandit_squirrel_epsilon_zero_is_pure_greedy(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    a = get_order_policy("bandit_squirrel", epsilon=0.0, seed=0).generate(pp, yor)
+    b = get_order_policy("bandit_squirrel", epsilon=0.0, seed=99).generate(pp, yor)
+    assert a.tobytes() == b.tobytes()  # no exploration => seed-independent
+
+
+def test_bandit_squirrel_cache_key_carries_config():
+    a = get_order_policy("bandit_squirrel", seed=1).cache_key()
+    b = get_order_policy("bandit_squirrel", seed=2).cache_key()
+    c = get_order_policy("bandit_squirrel", seed=1, epsilon=0.9).cache_key()
+    assert len({a, b, c}) == 3
 
 
 def test_unknown_order_name_raises():

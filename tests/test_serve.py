@@ -1,0 +1,472 @@
+"""repro.serve: EDF admission queue, slot-batched scheduling, the
+double-buffered AnytimeServer loop, deadline edges, and solo-session
+parity (the subsystem's acceptance criterion)."""
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.forest import make_dataset, split_dataset, train_forest
+from repro.schedule import AnytimeRuntime, ForestProgram, SessionBatch
+from repro.serve import AdmissionQueue, AnytimeServer, Request
+from repro.serve.scheduler import ForestLane, SessionLane
+
+
+class ManualClock:
+    """Monotonic clock under test control (seconds)."""
+
+    def __init__(self, t: float = 100.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance_ms(self, ms: float) -> None:
+        self.t += ms / 1e3
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    X, y = make_dataset("magic", seed=1)
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=1)
+    rf = train_forest(tr[:800], ytr[:800], 2, n_trees=4, max_depth=5, seed=1)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx[:200])
+    return fa, pp, yor[:200], te, yte
+
+
+@pytest.fixture(scope="module")
+def runtime(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    # X_order supplies the program's input width (the quality table
+    # itself comes from the precomputed path_probs)
+    return AnytimeRuntime(
+        ForestProgram(fa, y_order=yor, path_probs=pp, X_order=te[:8]))
+
+
+def _solo(runtime, x_row, order, steps):
+    """The jnp-ref oracle: a solo session advanced ``steps`` steps."""
+    sess = runtime.session(np.asarray(x_row)[None, :], order=order, backend="jnp-ref")
+    sess.advance(steps)
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# AdmissionQueue
+# ---------------------------------------------------------------------------
+
+
+def test_queue_stamps_monotonic_deadlines_and_pops_edf():
+    q = AdmissionQueue()
+    a = q.submit(Request(x=None, deadline_ms=50.0), now=10.0)
+    b = q.submit(Request(x=None, deadline_ms=5.0), now=10.0)
+    c = q.submit(Request(x=None, deadline_ms=20.0), now=10.0)
+    assert (a.request_id, b.request_id, c.request_id) == (0, 1, 2)
+    assert b.t_deadline == pytest.approx(10.005)
+    assert [q.pop() for _ in range(3)] == [b, c, a]  # earliest deadline first
+    assert q.pop() is None and not q
+
+
+def test_queue_rejects_negative_deadline():
+    with pytest.raises(ValueError, match="deadline_ms"):
+        AdmissionQueue().submit(Request(x=None, deadline_ms=-1.0), now=0.0)
+
+
+# ---------------------------------------------------------------------------
+# SessionBatch: the slot-state surface
+# ---------------------------------------------------------------------------
+
+
+def test_session_batch_masks_inactive_slots(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    sb = runtime.program.make_slot_batch(order, 4, te.shape[1], backend="jnp-ref")
+    sb.admit(1, te[0])
+    idx_before = np.asarray(sb.idx)
+    for _ in range(4):
+        sb.advance_segment()
+    idx_after = np.asarray(sb.idx)
+    # only slot 1 moved; empty slots are bit-frozen
+    for s in (0, 2, 3):
+        np.testing.assert_array_equal(idx_after[s], idx_before[s])
+    assert (idx_after[1] != idx_before[1]).any()
+    assert sb.pos[1] > 0 and (sb.pos[[0, 2, 3]] == 0).all()
+
+
+def test_session_batch_lockstep_and_trace_bound(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    sb = runtime.program.make_slot_batch(order, 4, te.shape[1], backend="jnp-ref")
+    sb.admit(0, te[0])
+    sb.advance_segment()
+    sb.advance_segment()
+    sb.admit(2, te[1])  # joins mid-flight, out of phase
+    while sb.stepping_slots().size:
+        L = sb.advance_segment()
+        assert L & (L - 1) == 0  # every dispatch a power of two
+    assert sb.pos[0] == sb.pos[2] == sb.total_steps
+    assert len(sb.dispatched_lengths) <= 8
+    with pytest.raises(ValueError, match="occupied"):
+        sb.admit(0, te[0])
+
+
+def test_session_batch_rejects_wrong_width(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    sb = runtime.program.make_slot_batch(
+        runtime.order("depth"), 2, te.shape[1], backend="jnp-ref")
+    with pytest.raises(ValueError, match="features"):
+        sb.admit(0, te[0][:3])
+
+
+# ---------------------------------------------------------------------------
+# Parity: every served prediction == solo jnp-ref at the same step count
+# (the subsystem acceptance criterion), across all three backends.
+# ---------------------------------------------------------------------------
+
+
+BACKEND_OPTS = {
+    "jnp-ref": {},
+    "pallas": {"block_b": 16, "block_m": 8},
+    "sharded": {},
+}
+
+
+@pytest.mark.parametrize("backend", ["jnp-ref", "pallas", "sharded"])
+def test_served_results_match_solo_oracle(backend, runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    server = AnytimeServer(
+        runtime, capacity=3, backend_opts=BACKEND_OPTS[backend])
+    results = server.serve(
+        [te[i] for i in range(7)], deadline_ms=60_000.0, backend=backend)
+    assert len(results) == 7
+    for i, r in enumerate(results):
+        assert r.completed and r.deadline_hit
+        assert r.steps_completed == r.total_steps == len(order)
+        solo = _solo(runtime, te[i], order, r.steps_completed)
+        np.testing.assert_array_equal(r.prediction, solo.predict()[0])
+        if backend == "pallas":
+            # prob_accum associates float sums differently; state parity
+            # is exact, readout to kernel tolerance (as in test_backends)
+            np.testing.assert_allclose(
+                r.proba, solo.predict_proba()[0], rtol=1e-5, atol=1e-5)
+        else:
+            np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+    assert server.metrics.snapshot()["deadline_hit_rate"] == 1.0
+
+
+def test_mid_flight_admission_joins_at_segment_boundary(runtime, pipeline):
+    """A request admitted after the batch started executes its own full
+    prefix (out of phase with resident slots) and stays solo-exact."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    clk = ManualClock()
+    server = AnytimeServer(runtime, capacity=4, clock=clk)
+    early = [server.submit(te[i], 1e9) for i in range(2)]
+    for _ in range(4):
+        server.step()
+    lane = next(iter(server.scheduler.lanes.values()))
+    pos_before = lane.batch.pos.copy()
+    assert lane.n_active == 2 and 0 < pos_before[:2].min() < lane.batch.total_steps
+    late = [server.submit(te[i], 1e9) for i in range(2, 4)]
+    server.step()
+    # the late requests occupy recycled slots at position < residents'
+    assert lane.n_active == 4
+    assert lane.batch.pos[2:4].max() < lane.batch.pos[:2].min()
+    server.drain()
+    for i, t in enumerate(early + late):
+        r = t.result()
+        assert r.completed
+        solo = _solo(runtime, te[i], order, r.steps_completed)
+        np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+
+
+# ---------------------------------------------------------------------------
+# Deadline edges
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expiry_mid_flight_returns_previous_boundary(runtime, pipeline):
+    """A request whose deadline fires mid-segment gets the last
+    host-completed boundary readout — bit-identical to a solo jnp-ref
+    session advanced that same number of steps — never a torn state."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    clk = ManualClock()
+    server = AnytimeServer(runtime, capacity=2, clock=clk)
+    ticket = server.submit(te[0], deadline_ms=50.0)
+    # let several boundaries harvest while the deadline is far away
+    for _ in range(5):
+        server.step()
+    lane = next(iter(server.scheduler.lanes.values()))
+    assert 0 < lane.batch.pos[0] < lane.batch.total_steps  # genuinely mid-flight
+    clk.advance_ms(60.0)  # deadline fires between boundaries
+    server.drain()
+    r = ticket.result()
+    assert not r.completed and r.deadline_hit
+    assert 0 < r.steps_completed < r.total_steps
+    solo = _solo(runtime, te[0], order, r.steps_completed)
+    np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+    np.testing.assert_array_equal(r.prediction, solo.predict()[0])
+
+
+def test_zero_deadline_returns_prior_immediately(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    ticket = server.submit(te[0], deadline_ms=0.0)
+    server.step()  # one iteration suffices — no execution needed
+    assert ticket.done
+    r = ticket.result()
+    assert r.steps_completed == 0 and not r.completed and not r.deadline_hit
+    np.testing.assert_array_equal(r.proba, runtime.program.prior_readout())
+    # the prior equals the all-roots readout a 0-step solo session gives
+    solo = _solo(runtime, te[0], runtime.order("backward_squirrel"), 0)
+    np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+
+
+def test_request_starved_in_full_lane_expires_to_prior(runtime, pipeline):
+    """EDF admission: when the lane is full, a queued request whose
+    deadline passes before a slot frees gets the prior readout."""
+    fa, pp, yor, te, yte = pipeline
+    clk = ManualClock()
+    server = AnytimeServer(runtime, capacity=1, clock=clk)
+    long_t = server.submit(te[0], deadline_ms=1e9)
+    server.step()   # te[0] occupies the only slot
+    starved = server.submit(te[1], deadline_ms=5.0)
+    server.step()   # lane full -> te[1] stays queued
+    clk.advance_ms(10.0)
+    server.step()   # deadline passed while queued -> prior delivery
+    r = starved.result()
+    assert r.steps_completed == 0 and not r.deadline_hit
+    np.testing.assert_array_equal(r.proba, runtime.program.prior_readout())
+    server.drain()
+    assert long_t.result().completed
+
+
+def test_slot_recycling_many_requests_small_capacity(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    results = server.serve([te[i] for i in range(9)], deadline_ms=60_000.0)
+    assert len(results) == 9 and all(r.completed for r in results)
+    assert len(server.scheduler.lanes) == 1  # one (program, policy, backend) key
+    snap = server.metrics.snapshot()
+    assert snap["delivered"] == 9
+    assert snap["deadline_hit_rate"] == 1.0
+    assert snap["steps_at_deadline"]["p99"] == results[0].total_steps
+    assert 0 < snap["slot_occupancy"] <= 1.0
+    assert snap["requests_per_sec"] > 0
+
+
+def test_distinct_policies_get_distinct_lanes(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    t1 = server.submit(te[0], 60_000.0, policy="backward_squirrel")
+    t2 = server.submit(te[1], 60_000.0, policy="depth")
+    server.drain()
+    assert len(server.scheduler.lanes) == 2
+    assert t1.result().completed and t2.result().completed
+
+
+def test_unknown_program_raises_at_submit(runtime):
+    server = AnytimeServer(runtime)
+    with pytest.raises(ValueError, match="unknown program"):
+        server.submit(np.zeros(3), 10.0, program="nope")
+    assert not server.busy  # nothing enqueued
+
+
+def test_malformed_request_fails_alone(runtime, pipeline):
+    """One unservable request (wrong feature width) gets an error
+    result; its well-formed neighbors are served normally — the loop
+    must neither crash nor drop anyone."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    server = AnytimeServer(runtime, capacity=2)
+    good_a = server.submit(te[0], 60_000.0)
+    bad = server.submit(te[1][:3], 60_000.0)     # wrong width
+    good_b = server.submit(te[2], 60_000.0)
+    server.drain()
+    rb = bad.result()
+    assert rb.error is not None and "features" in rb.error
+    assert not rb.deadline_hit and rb.steps_completed == 0
+    # best-available-answer semantics: even an unservable request gets
+    # the program's prior readout alongside its error
+    np.testing.assert_array_equal(rb.proba, runtime.program.prior_readout())
+    for i, t in ((0, good_a), (2, good_b)):
+        r = t.result()
+        assert r.completed and r.error is None
+        solo = _solo(runtime, te[i], order, r.steps_completed)
+        np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+
+
+def test_malformed_first_request_cannot_poison_lane(runtime, pipeline):
+    """Lane width comes from the program, not the first request: a
+    wrong-width FIRST request errors alone and later correct requests
+    are served through the properly-sized lane."""
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    bad = server.submit(te[0][:3], 60_000.0)     # wrong width, arrives first
+    good = server.submit(te[1], 60_000.0)
+    server.drain()
+    assert bad.result().error is not None
+    r = good.result()
+    assert r.completed and r.error is None
+    solo = _solo(runtime, te[1], runtime.order("backward_squirrel"),
+                 r.steps_completed)
+    np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+
+
+def test_results_live_on_tickets_not_in_server(runtime, pipeline):
+    """Long-lived servers must not accumulate delivered results: the
+    server tracks only pending tickets; delivery moves the result onto
+    the ticket (and drain()'s return list), so dropping both frees it."""
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    tickets = [server.submit(te[i], 60_000.0) for i in range(4)]
+    assert len(server._pending) == 4
+    drained = server.drain()
+    assert len(server._pending) == 0          # nothing retained server-side
+    assert len(drained) == 4
+    results = [t.result() for t in tickets]
+    assert all(r.completed for r in results)
+    assert tickets[0].result() is results[0]  # idempotent
+
+
+def test_idle_lanes_evicted_beyond_cap(runtime, pipeline):
+    """Clients cycling through many policy configs must not grow device
+    state without bound: LRU idle lanes drop past max_idle_lanes.
+    Configured policy VALUES key lanes (cache_key includes the seed), so
+    four seeds of 'random' make four distinct lanes, sequentially idle."""
+    from repro.schedule import get_order_policy
+
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=1)
+    server.scheduler.max_idle_lanes = 2
+    for seed in range(4):
+        server.submit(te[0], 60_000.0, policy=get_order_policy("random", seed=seed))
+        server.drain()
+    assert len(server.scheduler.lanes) <= 2
+
+
+def test_zero_deadline_builds_no_lane(runtime, pipeline):
+    """An already-expired request is answered from the prior readout
+    without paying order generation or slot-batch construction."""
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    t = server.submit(te[0], deadline_ms=0.0, policy="depth")
+    server.step()
+    assert t.done and len(server.scheduler.lanes) == 0
+
+
+def test_default_and_explicit_backend_share_a_lane(runtime, pipeline):
+    """backend=None canonicalizes to the resolved default: no duplicate
+    slot batches / jit traces for the same execution path."""
+    from repro.schedule import default_backend
+
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    server.submit(te[0], 60_000.0)                              # unset
+    server.submit(te[1], 60_000.0, backend=default_backend())   # explicit
+    server.drain()
+    assert len(server.scheduler.lanes) == 1
+
+
+def test_metrics_reset_scopes_snapshot(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    server.serve([te[0], te[1]], deadline_ms=60_000.0)  # "warmup"
+    server.metrics.reset()
+    server.serve([te[2]], deadline_ms=60_000.0)
+    snap = server.metrics.snapshot()
+    assert snap["submitted"] == 1 and snap["delivered"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Program-agnostic serving: a non-forest program goes through the same
+# loop via a SessionLane (solo sessions, same EDF + deadline semantics).
+# ---------------------------------------------------------------------------
+
+
+class _CountingSession:
+    """Deterministic fake step backend: state == steps taken."""
+
+    def __init__(self, order, inputs):
+        self.order = np.asarray(order)
+        self.inputs = inputs
+        self.pos = 0
+
+    @property
+    def total_steps(self):
+        return len(self.order)
+
+    @property
+    def remaining(self):
+        return self.total_steps - self.pos
+
+    def advance(self, k):
+        k = min(k, self.remaining)
+        self.pos += k
+        return k
+
+    def predict_proba(self):
+        return np.asarray([[float(self.pos), float(self.inputs)]])
+
+    def predict(self):
+        return self.predict_proba().argmax(axis=1)
+
+
+class _CountingProgram:
+    """Minimal AnytimeProgram WITHOUT make_slot_batch -> SessionLane."""
+
+    n_units = 2
+    unit_steps = 3
+
+    def quality_table(self):
+        rng = np.random.default_rng(0)
+        return rng.random((8, 2, 4, 2)).astype(np.float32), rng.integers(0, 2, 8)
+
+    def make_session(self, order, inputs):
+        return _CountingSession(order, inputs)
+
+
+def test_generic_program_serves_through_session_lane():
+    rt = AnytimeRuntime(_CountingProgram())
+    clk = ManualClock()
+    server = AnytimeServer(rt, capacity=4, chunk=2, clock=clk)
+    done = server.submit(7.0, deadline_ms=1e9)
+    expiring = server.submit(9.0, deadline_ms=25.0)
+    server.step()
+    lane = next(iter(server.scheduler.lanes.values()))
+    assert isinstance(lane, SessionLane)
+    server.step()  # both advanced chunk=2 twice -> boundary steps == 4
+    clk.advance_ms(30.0)
+    server.drain()
+    r_done, r_exp = done.result(), expiring.result()
+    assert r_done.completed and r_done.steps_completed == 6
+    np.testing.assert_array_equal(r_done.proba, [[6.0, 7.0]])
+    # the expired request returns the boundary BEFORE its deadline fired
+    assert not r_exp.completed and 0 < r_exp.steps_completed < 6
+    np.testing.assert_array_equal(
+        r_exp.proba, [[float(r_exp.steps_completed), 9.0]])
+
+
+def test_forest_lane_used_for_forest_programs(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    server.submit(te[0], 60_000.0)
+    server.drain()
+    assert isinstance(next(iter(server.scheduler.lanes.values())), ForestLane)
+
+
+def test_multi_program_server(runtime, pipeline):
+    """One server, two programs (forest + generic) — the ISSUE's
+    program-agnostic claim, behind one queue and metrics object."""
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(
+        programs={"forest": runtime, "counter": AnytimeRuntime(_CountingProgram())},
+        capacity=2,
+    )
+    tf = server.submit(te[0], 60_000.0, program="forest")
+    tc = server.submit(3.0, 60_000.0, program="counter")
+    server.drain()
+    assert tf.result().completed and tc.result().completed
+    assert server.metrics.snapshot()["delivered"] == 2
+    assert len(server.scheduler.lanes) == 2

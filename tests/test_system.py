@@ -3,9 +3,14 @@ orders -> anytime inference -> the paper's qualitative claims hold."""
 import numpy as np
 import pytest
 
-from repro.core import AnytimeForest, ORDER_NAMES, engine, generate_order
+from repro.core import AnytimeForest, engine
 from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
 from repro.forest import make_dataset, split_dataset, train_forest
+from repro.schedule import get_order_policy, list_orders
+
+
+def generate_order(name, pp, y, seed=0):
+    return get_order_policy(name, seed=seed).generate(pp, y)
 
 
 @pytest.fixture(scope="module")
@@ -57,7 +62,7 @@ def test_squirrel_beats_naive_on_test_set(pipeline):
 
 def test_full_order_suite_runs(pipeline):
     fa, pp, yor, te, yte = pipeline
-    for name in ORDER_NAMES:
+    for name in list_orders():
         curve = _curve(fa, generate_order(name, pp, yor), te, yte)
         assert len(curve) == fa.total_steps + 1
         assert np.isfinite(curve).all()
