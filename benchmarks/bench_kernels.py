@@ -1,9 +1,26 @@
-"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp reference.
+"""Kernel micro-benchmarks + the fused-kernel CI gate (BENCH_kernels.json).
 
-On this CPU container the numbers measure the *reference* path and the
-interpret-mode kernel (functional, not performance-representative); on a
-TPU the same harness times the compiled Mosaic kernels.  Derived column
-reports achieved read throughput of the read-out kernel's gathers.
+Two comparisons, both written to ``BENCH_kernels.json`` by
+``benchmarks/run.py`` for cross-PR regression tracking:
+
+* **fused vs scanned** — the fused multi-step kernel
+  (:func:`repro.kernels.ops.forest_run`: ONE launch per plan segment,
+  node tables resident in VMEM) against the legacy path it replaced
+  (:func:`~repro.kernels.ops.forest_run_scanned`: ``length`` launches
+  of the single-step kernel under a scan);
+* **slot kernel vs gather** — the masked-slot kernel
+  (:func:`~repro.kernels.ops.slot_run`: per-slot tree ids on flattened
+  VMEM-resident tables) against the generic per-slot jnp gather it
+  replaced (:func:`~repro.kernels.ref.slot_run_ref`).
+
+Gate semantics (``gate=True``, wired into ``run.py --smoke``): on a
+real TPU the fused path must beat the scanned path by >=
+``fused_gate_speedup`` x wall-clock or the build fails.  On CPU the
+kernels execute in interpret mode, whose wall-clock is not
+performance-representative — there the gate degrades to the
+interpret-mode-safe assertion that both comparisons are BIT-IDENTICAL
+(index state) / tolerance-identical (readout), raising on divergence so
+a fused-kernel regression still fails the build.
 """
 from __future__ import annotations
 
@@ -16,42 +33,125 @@ import numpy as np
 from repro.kernels import ops, ref
 
 
-def _time(fn, *args, repeats=5):
-    fn(*args)  # compile/warm
+def _time(fn, *args, repeats=3, **kw):
+    jax.block_until_ready(fn(*args, **kw))  # compile/warm
     t0 = time.perf_counter()
     for _ in range(repeats):
-        jax.block_until_ready(fn(*args))
+        jax.block_until_ready(fn(*args, **kw))
     return (time.perf_counter() - t0) / repeats
 
 
-def run(verbose: bool = True):
+def _tree_tables(rng, M, F):
+    return (
+        jnp.asarray(rng.integers(0, F, size=M), jnp.int32),
+        jnp.asarray(rng.normal(size=M), jnp.float32),
+        jnp.asarray(rng.integers(0, M, size=M), jnp.int32),
+        jnp.asarray(rng.integers(0, M, size=M), jnp.int32),
+        jnp.asarray(rng.random(M) < 0.3),
+    )
+
+
+def run_fused_vs_scan(configs=None, verbose: bool = True) -> list[dict]:
+    """Fused multi-step launch vs ``length`` scanned single-step
+    launches; asserts bit-parity, reports wall-clock both ways."""
     rng = np.random.default_rng(0)
     rows = []
-    for B, T, M, C in [(1024, 10, 512, 10), (4096, 20, 2048, 26)]:
-        idx = jnp.asarray(rng.integers(0, M, size=(B, T)), jnp.int32)
-        probs = jnp.asarray(rng.random((T, M, C)), jnp.float32)
-        t_ref = _time(jax.jit(ref.prob_accum_ref), idx, probs)
-        gather_bytes = B * T * C * 4
-        rows.append(("prob_accum_ref", B * T, t_ref * 1e6,
-                     gather_bytes / t_ref / 1e9))
-        if verbose:
-            print(f"kernel,prob_accum_ref,B{B}xT{T}xM{M}xC{C},"
-                  f"{t_ref*1e6:.1f}us,{gather_bytes/t_ref/1e9:.2f}GB/s")
-    for B, F, M in [(1024, 16, 511), (4096, 54, 2047)]:
-        idx1 = jnp.asarray(rng.integers(0, M, size=B), jnp.int32)
+    for B, F, M, length in configs or [(128, 16, 127, 32), (256, 32, 255, 64)]:
+        idx = jnp.asarray(rng.integers(0, M, size=B), jnp.int32)
         X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
-        feature = jnp.asarray(rng.integers(0, F, size=M), jnp.int32)
-        thr = jnp.asarray(rng.normal(size=M), jnp.float32)
-        left = jnp.asarray(rng.integers(0, M, size=M), jnp.int32)
-        right = jnp.asarray(rng.integers(0, M, size=M), jnp.int32)
-        leaf = jnp.asarray(rng.random(M) < 0.3)
-        t_ref = _time(jax.jit(ref.forest_step_ref), idx1, X, feature, thr,
-                      left, right, leaf)
-        rows.append(("forest_step_ref", B, t_ref * 1e6, B / t_ref / 1e6))
+        tables = _tree_tables(rng, M, F)
+        # time jitted callables on BOTH sides — the production executors
+        # call these under jit, so per-call wrapper overhead
+        # (pack_fields, budget check) must not pollute the gated ratio
+        fused_j = jax.jit(lambda i, x, *t: ops.forest_run(
+            i, x, *t, length=length))
+        scan_j = jax.jit(lambda i, x, *t: ops.forest_run_scanned(
+            i, x, *t, length=length))
+        fused = fused_j(idx, X, *tables)
+        scanned = scan_j(idx, X, *tables)
+        assert np.array_equal(np.asarray(fused), np.asarray(scanned)), (
+            f"fused forest_run diverged from the scanned path at "
+            f"B{B} M{M} L{length}")
+        t_fused = _time(fused_j, idx, X, *tables)
+        t_scan = _time(scan_j, idx, X, *tables)
+        row = {
+            "B": B, "F": F, "M": M, "length": length,
+            "launches_fused": 1, "launches_scanned": length,
+            "fused_us": t_fused * 1e6, "scanned_us": t_scan * 1e6,
+            "speedup": t_scan / t_fused,
+        }
+        rows.append(row)
         if verbose:
-            print(f"kernel,forest_step_ref,B{B}xF{F}xM{M},"
-                  f"{t_ref*1e6:.1f}us,{B/t_ref/1e6:.2f}Msteps/s")
-    return {"rows": rows}
+            print(f"kernel,fused_vs_scan,B{B}xM{M}xL{length},"
+                  f"fused_us,{row['fused_us']:.0f},"
+                  f"scanned_us,{row['scanned_us']:.0f},"
+                  f"speedup,{row['speedup']:.2f}x")
+    return rows
+
+
+def run_slot_vs_gather(configs=None, verbose: bool = True) -> list[dict]:
+    """Masked-slot kernel vs the generic per-slot gather path."""
+    rng = np.random.default_rng(1)
+    rows = []
+    gather = jax.jit(ref.slot_run_ref, static_argnames=("length",))
+    for S, T, M, F, length in configs or [(64, 8, 127, 16, 8),
+                                          (128, 12, 255, 32, 16)]:
+        idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+        X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+        tables = (
+            jnp.asarray(rng.integers(0, F, size=(T, M)), jnp.int32),
+            jnp.asarray(rng.normal(size=(T, M)), jnp.float32),
+            jnp.asarray(rng.integers(0, M, size=(T, M)), jnp.int32),
+            jnp.asarray(rng.integers(0, M, size=(T, M)), jnp.int32),
+            jnp.asarray(rng.random((T, M)) < 0.3),
+        )
+        units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+        mask = jnp.asarray(rng.random(S) < 0.8)
+        kernel_j = jax.jit(lambda i, x, *a: ops.slot_run(
+            i, x, *a, length=length))
+        kernel = kernel_j(idx, X, *tables, units, mask)
+        generic = gather(idx, X, *tables, units, mask, length=length)
+        assert np.array_equal(np.asarray(kernel), np.asarray(generic)), (
+            f"slot kernel diverged from the gather path at S{S} T{T} M{M}")
+        t_kernel = _time(kernel_j, idx, X, *tables, units, mask)
+        t_gather = _time(gather, idx, X, *tables, units, mask, length=length)
+        row = {
+            "S": S, "T": T, "M": M, "F": F, "length": length,
+            "kernel_us": t_kernel * 1e6, "gather_us": t_gather * 1e6,
+            "speedup": t_gather / t_kernel,
+        }
+        rows.append(row)
+        if verbose:
+            print(f"kernel,slot_vs_gather,S{S}xT{T}xM{M}xL{length},"
+                  f"kernel_us,{row['kernel_us']:.0f},"
+                  f"gather_us,{row['gather_us']:.0f},"
+                  f"speedup,{row['speedup']:.2f}x")
+    return rows
+
+
+def run(verbose: bool = True, gate: bool = True,
+        fused_gate_speedup: float = 1.5) -> dict:
+    on_tpu = jax.default_backend() == "tpu"
+    out = {
+        "platform": jax.default_backend(),
+        "fused_vs_scan": run_fused_vs_scan(verbose=verbose),
+        "slot_vs_gather": run_slot_vs_gather(verbose=verbose),
+    }
+    if gate and on_tpu:
+        worst = min(r["speedup"] for r in out["fused_vs_scan"])
+        assert worst >= fused_gate_speedup, (
+            f"fused forest_run only {worst:.2f}x the scanned path "
+            f"(gate: >= {fused_gate_speedup}x)")
+        out["gate"] = {"mode": "tpu-wallclock", "min_speedup": worst,
+                       "threshold": fused_gate_speedup}
+    elif gate:
+        # interpret-mode wall-clock is not performance-representative;
+        # the parity assertions above are the CPU gate (they raise —
+        # and fail the build — on any fused-kernel divergence)
+        out["gate"] = {"mode": "cpu-interpret-parity"}
+        if verbose:
+            print("kernel,gate,cpu-interpret-parity,ok")
+    return out
 
 
 if __name__ == "__main__":

@@ -2,18 +2,20 @@
 
 ``python -m benchmarks.run [--fast]`` prints CSV-ish lines per benchmark
 and writes reports/bench_results.json plus BENCH_nma.json (per-order NMA
-from one vmapped ``AnytimeRuntime.evaluate_orders`` pass) and
+from one vmapped ``AnytimeRuntime.evaluate_orders`` pass),
 BENCH_serve.json (batched-vs-serial serving: requests/sec,
-deadline-hit-rate, p99 steps-at-deadline) — the numbers
-regression-tracked across PRs.  EXPERIMENTS.md cites these numbers; the
+deadline-hit-rate, p99 steps-at-deadline), and BENCH_kernels.json
+(fused-vs-scan and slot-kernel-vs-gather launch comparisons) — the
+numbers regression-tracked across PRs.  EXPERIMENTS.md cites these numbers; the
 roofline/dry-run tables come from repro.launch.dryrun.
 
 ``--smoke`` is the CI gate: reduced config, only the execution-backend
 parity check (pallas/sharded vs the jnp-ref oracle — raises on
 divergence, failing the build), the step-plan trace-count bound, the
-kernel micro-bench, the NMA summary, and the serving gate (batched
-scheduling must beat the serial per-request loop >= 3x at >= 99%
-deadline-hit-rate, or the build fails).
+kernel gate (fused-vs-scan >= 1.5x on TPU, bit-parity asserted in
+interpret mode on CPU — BENCH_kernels.json), the NMA summary, and the
+serving gate (batched scheduling must beat the serial per-request loop
+>= 3x at >= 99% deadline-hit-rate, or the build fails).
 """
 from __future__ import annotations
 
@@ -51,6 +53,10 @@ def main() -> None:
     ap.add_argument("--nma-out", default="BENCH_nma.json",
                     help="per-order NMA summary for cross-PR regression "
                          "tracking")
+    ap.add_argument("--kernels-out", default="BENCH_kernels.json",
+                    help="fused-vs-scan and slot-kernel-vs-gather kernel "
+                         "comparison (gated >= 1.5x fused on TPU; "
+                         "parity-asserted in interpret mode on CPU)")
     ap.add_argument("--serve-out", default="BENCH_serve.json",
                     help="batched-vs-serial serving summary (requests/sec, "
                          "deadline-hit-rate, p99 steps-at-deadline)")
@@ -96,8 +102,12 @@ def main() -> None:
     results["stepplan"] = bench_backends.run_stepplan_traces(
         n_trees=4 if args.smoke else 6, depth=8 if args.smoke else 12)
 
-    print("== Kernel micro-benchmarks ==", flush=True)
-    results["kernels"] = bench_kernels.run()
+    print("== Kernels: fused-vs-scan + slot-kernel-vs-gather (gated) ==",
+          flush=True)
+    # gated: fused multi-step launch >= 1.5x the scanned single-step path
+    # on TPU; interpret-mode-safe bit-parity assertion on CPU
+    results["kernels"] = bench_kernels.run(gate=True)
+    _dump(args.kernels_out, results["kernels"])
 
     print("== Per-order NMA (evaluate_orders, vmapped) ==", flush=True)
     small = args.smoke or args.fast

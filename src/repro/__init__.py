@@ -11,6 +11,7 @@ One-stop public surface — everything examples need imports from here:
 # AnytimeRuntime.evaluate_orders(X, y, names).
 from repro.schedule import (
     AnytimeRuntime,
+    ExecutorCore,
     ForestProgram,
     OrderPolicy,
     Session,
@@ -20,11 +21,13 @@ from repro.schedule import (
     register_backend,
     register_order,
 )
-from repro.serve import AnytimeServer, Request, Result
+from repro.serve import AdmissionRejected, AnytimeServer, Request, Result
 
 __all__ = [
+    "AdmissionRejected",
     "AnytimeRuntime",
     "AnytimeServer",
+    "ExecutorCore",
     "ForestProgram",
     "OrderPolicy",
     "Request",

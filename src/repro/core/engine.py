@@ -144,6 +144,30 @@ def slot_run(
     return jax.lax.scan(body, idx, None, length=n)[0]
 
 
+def segment_run(
+    forest: DeviceForest,
+    X: jax.Array,
+    idx: jax.Array,
+    units: jax.Array,
+    mask: Optional[jax.Array],
+    n: int,
+) -> jax.Array:
+    """The unified plan-segment primitive behind ``ExecutorCore``.
+
+    ``units`` scalar (0-d) -> lockstep batch: every sample advances the
+    SAME tree for n steps (:func:`tree_run`, the solo-session shape).
+    ``units`` vector [B]  -> masked slots: row b advances its OWN tree
+    ``units[b]`` unless ``mask[b]`` is False (:func:`slot_run`, the
+    serving shape).  The rank check is static under jit, so both shapes
+    share one entry point without a runtime branch.
+    """
+    if jnp.ndim(units) == 0:
+        return tree_run(forest, X, idx, units, n)
+    if mask is None:
+        mask = jnp.ones(idx.shape[0], dtype=bool)
+    return slot_run(forest, X, idx, units, mask, n)
+
+
 def predict_from_state(forest: DeviceForest, idx: jax.Array) -> jax.Array:
     """Anytime read-out: sum per-node probability vectors over trees.
 

@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the anytime-forest execution core.
+
+Layout:
+
+* :mod:`repro.kernels.common`      — shared plumbing: interpret-mode
+  selection, compiler-params shim, node-field-matrix layout.
+* :mod:`repro.kernels.forest_step` — single-step kernel (PR 2).
+* :mod:`repro.kernels.forest_run`  — fused multi-step kernel: one launch
+  per plan segment, node tables resident in VMEM, optional fused
+  boundary read-out.
+* :mod:`repro.kernels.slot_run`    — masked-slot kernel: per-slot tree
+  ids + live mask on flattened whole-forest tables (serving hot path).
+* :mod:`repro.kernels.prob_accum`  — standalone read-out kernel.
+* :mod:`repro.kernels.ref`         — pure-jnp oracles for all of them.
+* :mod:`repro.kernels.ops`         — the public wrappers (budget-checked
+  fallbacks, interpret-mode defaults); everything above is plumbing.
+"""

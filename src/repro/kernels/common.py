@@ -1,0 +1,96 @@
+"""Shared plumbing for the Pallas kernel package.
+
+Every kernel module used to carry its own copy of the TPU/interpret-mode
+detection and the jax-version `CompilerParams` shim; drift between those
+copies would silently run one kernel compiled and another interpreted.
+This module is the single choke point:
+
+* :func:`on_tpu` / :func:`resolve_interpret` — interpret-mode selection
+  (compiled Mosaic on TPU, interpret mode everywhere else, explicit
+  override always wins);
+* :data:`CompilerParams` — the renamed ``TPUCompilerParams`` →
+  ``CompilerParams`` class, whichever this jax version has;
+* the **field-matrix layout** shared by the stepping kernels: node
+  tables gather through one-hot matmuls against a ``[M, NFIELDS]`` f32
+  matrix whose columns are (feature, threshold, left, right, is_leaf),
+  padded to :data:`NFIELDS` lanes so the contraction tiles cleanly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+# Column layout of the one-hot-gatherable node-field matrix.
+F_IDX, THR, LEFT, RIGHT, LEAF = range(5)
+NFIELDS = 8  # padded to 8 lanes
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret=None) -> bool:
+    """Interpret-mode selection for every kernel in this package.
+
+    ``None`` auto-selects: compiled Mosaic on a real TPU, interpret mode
+    (same kernel body, element-for-element) elsewhere.  An explicit
+    True/False always wins — the parity tests force interpret mode, the
+    TPU benchmarks force compilation.
+    """
+    return (not on_tpu()) if interpret is None else bool(interpret)
+
+
+def pack_fields(feature, threshold, left, right, is_leaf) -> jax.Array:
+    """Node tables -> the ``[M, NFIELDS]`` f32 field matrix.
+
+    A one-hot ``[B, M]`` contraction against this matrix gathers all
+    five per-node scalars of one node per sample in a single MXU matmul.
+    """
+    mat = jnp.stack(
+        [a.astype(jnp.float32) for a in (feature, threshold, left, right, is_leaf)],
+        axis=1,
+    )
+    pad = jnp.zeros((mat.shape[0], NFIELDS - mat.shape[1]), mat.dtype)
+    return jnp.concatenate([mat, pad], axis=1)
+
+
+def round_up(n: int, multiple: int) -> int:
+    return -(-n // multiple) * multiple
+
+
+def pad_fields(fields: jax.Array) -> jax.Array:
+    """Pad a [M, NFIELDS] field matrix to a lane-aligned Mp; padding
+    nodes are leaves (self-loop) so a stray visit cannot escape.  The
+    ONE place the padding invariant lives — both the solo tables and
+    the flattened per-tree slot tables go through it."""
+    M = fields.shape[0]
+    Mp = round_up(max(M, 1), 128)
+    out = jnp.pad(fields.astype(jnp.float32), ((0, Mp - M), (0, 0)))
+    if Mp > M:
+        out = out.at[M:, LEAF].set(1.0)
+    return out
+
+
+def accum_boundary_readout(new_idx, probs_ref, *, block_m: int,
+                           n_trees: int, n_classes: int) -> jax.Array:
+    """The fused ``prob_accum`` body shared by the run-readout kernels:
+    accumulate ``sum_t probs[t, new_idx[:, t]]`` over per-tree tiles of
+    a flattened ``[T*Mp, C]`` probability ref, in the same tree order
+    (0..T-1) as the standalone kernel.  ``new_idx`` is the advanced
+    [Bb, T] index block; returns the readout ``[Bb, C]``."""
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, new_idx.shape, 1)
+    m_ids = jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+
+    def ro_body(t, acc):
+        col_t = jnp.sum(jnp.where(t_ids == t, new_idx, 0), axis=1)
+        onehot = (col_t[:, None] == m_ids).astype(jnp.float32)
+        ptile = probs_ref[pl.ds(t * block_m, block_m), :]
+        return acc + jax.lax.dot(onehot, ptile, preferred_element_type=jnp.float32)
+
+    ro0 = jnp.zeros((new_idx.shape[0], n_classes), jnp.float32)
+    return jax.lax.fori_loop(0, n_trees, ro_body, ro0)

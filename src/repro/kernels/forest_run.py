@@ -1,0 +1,218 @@
+"""Pallas TPU kernel: fused multi-step anytime forest run.
+
+The single-step kernel (:mod:`repro.kernels.forest_step`) pays one
+kernel launch per tree-step: a plan segment of length L scanned over it
+re-reads the tree's node tables from HBM L times.  This kernel moves the
+run loop *inside* the launch: a kernel-internal ``jax.lax.fori_loop``
+advances the stepped tree's index column L times while the node-field
+matrix stays **resident in VMEM** for the whole segment — the
+memory-hierarchy-aware layout the large-forest literature (Gossen &
+Steffen) motivates, applied to the paper's per-step anytime execution.
+
+Per step the arithmetic is identical to the single-step kernel (so the
+index state stays bit-exact with the jnp oracle):
+
+  * node gather     -> one-hot [Bb, Mp] x field-matrix [Mp, 8] matmul (MXU)
+  * feature gather  -> one-hot [Bb, F] masked reduction (VPU)
+  * branch select   -> vectorized where
+
+:func:`forest_run_readout` additionally fuses the ``prob_accum``
+read-out into the SAME launch: after the run loop it accumulates
+``sum_t probs[t, idx[b, t]]`` over the flattened per-tree probability
+tiles, so a segment-boundary dispatch that needs its readout (the
+serving hot path) costs one launch instead of two.
+
+Residency tradeoff: there is no M-tiling here — the field matrix (and,
+for the readout variant, the flattened probability table) must fit in
+VMEM.  :mod:`repro.kernels.ops` checks the footprint against a budget
+and falls back to the streamed single-step scan for oversized forests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (
+    F_IDX,
+    LEAF,
+    LEFT,
+    NFIELDS,
+    RIGHT,
+    THR,
+    CompilerParams,
+    accum_boundary_readout,
+    pad_fields,
+    round_up,
+)
+
+
+def _step_body(col, x, fields, m_ids, f_cols):
+    """One anytime step of the resident tree for the whole batch tile."""
+    onehot = (col[:, None] == m_ids).astype(jnp.float32)      # [Bb, Mp]
+    acc = jax.lax.dot(onehot, fields, preferred_element_type=jnp.float32)
+    f_onehot = (f_cols == acc[:, F_IDX][:, None]).astype(jnp.float32)
+    fv = jnp.sum(x * f_onehot, axis=1)                        # [Bb]
+    nxt = jnp.where(fv <= acc[:, THR], acc[:, LEFT], acc[:, RIGHT])
+    new = jnp.where(acc[:, LEAF] > 0.5, col.astype(jnp.float32), nxt)
+    return new.astype(jnp.int32)
+
+
+def _forest_run_kernel(
+    idx_ref,     # int32 [Bb, 1]   stepped tree's index column
+    x_ref,       # f32   [Bb, F]
+    fields_ref,  # f32   [Mp, NFIELDS]  resident node-field matrix
+    out_ref,     # int32 [Bb, 1]
+    *,
+    length: int,
+    block_m: int,
+):
+    fields = fields_ref[...]
+    x = x_ref[...]
+    m_ids = jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+    f_cols = jax.lax.broadcasted_iota(jnp.float32, x.shape, 1)
+
+    def body(_, col):
+        return _step_body(col, x, fields, m_ids, f_cols)
+
+    out_ref[:, 0] = jax.lax.fori_loop(0, length, body, idx_ref[:, 0])
+
+
+def _forest_run_readout_kernel(
+    unit_ref,    # int32 [1, 1]    stepped tree id
+    idx_ref,     # int32 [Bb, T]   FULL index array
+    x_ref,       # f32   [Bb, F]
+    fields_ref,  # f32   [Mp, NFIELDS]  stepped tree's resident fields
+    probs_ref,   # f32   [T*Mp, C] flattened per-tree probability tiles
+    idx_out,     # int32 [Bb, T]
+    ro_out,      # f32   [Bb, C]
+    *,
+    length: int,
+    block_m: int,
+    n_trees: int,
+):
+    unit = unit_ref[0, 0]
+    idx = idx_ref[...]                                        # [Bb, T]
+    x = x_ref[...]
+    fields = fields_ref[...]
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1)
+    sel = t_ids == unit                                       # [Bb, T]
+    m_ids = jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+    f_cols = jax.lax.broadcasted_iota(jnp.float32, x.shape, 1)
+
+    def body(_, col):
+        return _step_body(col, x, fields, m_ids, f_cols)
+
+    col0 = jnp.sum(jnp.where(sel, idx, 0), axis=1)            # idx[:, unit]
+    col = jax.lax.fori_loop(0, length, body, col0)
+    new_idx = jnp.where(sel, col[:, None], idx)
+    idx_out[...] = new_idx
+    ro_out[...] = accum_boundary_readout(
+        new_idx, probs_ref, block_m=block_m, n_trees=n_trees,
+        n_classes=ro_out.shape[1],
+    )
+
+
+def _pad_batch(idx, X, block_b):
+    B = X.shape[0]
+    Bp = round_up(B, block_b)
+    return (
+        jnp.pad(idx, ((0, Bp - B),) + ((0, 0),) * (idx.ndim - 1)),
+        jnp.pad(X, ((0, Bp - B), (0, 0))),
+        Bp,
+    )
+
+
+def flatten_probs(probs: jax.Array, Mp: int) -> jax.Array:
+    """[T, M, C] -> [T*Mp, C] with each tree's tile padded to Mp, so
+    flat index ``t*Mp + node`` addresses tree t's node row."""
+    T, M, C = probs.shape
+    padded = jnp.pad(probs.astype(jnp.float32), ((0, 0), (0, Mp - M), (0, 0)))
+    return padded.reshape(T * Mp, C)
+
+
+@functools.partial(jax.jit, static_argnames=("length", "block_b", "interpret"))
+def forest_run(
+    idx: jax.Array,     # int32 [B]   stepped tree's index column
+    X: jax.Array,       # f32   [B, F]
+    fields: jax.Array,  # f32   [M, NFIELDS]  (common.pack_fields)
+    *,
+    length: int,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """``length`` fused steps of one tree in ONE launch (VMEM-resident
+    tables).  ``length`` must be static — plan-bucketed powers of two."""
+    B, F = X.shape
+    block_b = min(block_b, max(8, B))
+    idx_p, x_p, Bp = _pad_batch(idx, X, block_b)
+    fields_p = pad_fields(fields)
+    Mp = fields_p.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_forest_run_kernel, length=length, block_m=Mp),
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, F), lambda b: (b, 0)),
+            pl.BlockSpec((Mp, NFIELDS), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(idx_p.reshape(Bp, 1), x_p, fields_p)
+    return out[:B, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("length", "block_b", "interpret"))
+def forest_run_readout(
+    idx: jax.Array,     # int32 [B, T]  FULL index array
+    X: jax.Array,       # f32   [B, F]
+    fields: jax.Array,  # f32   [M, NFIELDS]  stepped tree's fields
+    probs: jax.Array,   # f32   [T, M, C]
+    unit,               # int32 scalar: stepped tree id
+    *,
+    length: int,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused run + boundary read-out: one launch advances ``unit`` by
+    ``length`` steps AND returns the full anytime readout ``[B, C]`` of
+    the resulting state."""
+    B, F = X.shape
+    T = idx.shape[1]
+    C = probs.shape[2]
+    block_b = min(block_b, max(8, B))
+    idx_p, x_p, Bp = _pad_batch(idx, X, block_b)
+    fields_p = pad_fields(fields)
+    Mp = fields_p.shape[0]
+    probs_p = flatten_probs(probs, Mp)
+    unit_arr = jnp.asarray(unit, jnp.int32).reshape(1, 1)
+
+    new_idx, ro = pl.pallas_call(
+        functools.partial(
+            _forest_run_readout_kernel, length=length, block_m=Mp, n_trees=T
+        ),
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b: (0, 0)),
+            pl.BlockSpec((block_b, T), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, F), lambda b: (b, 0)),
+            pl.BlockSpec((Mp, NFIELDS), lambda b: (0, 0)),
+            pl.BlockSpec((T * Mp, C), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, T), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, C), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, T), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, C), jnp.float32),
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(unit_arr, idx_p, x_p, fields_p, probs_p)
+    return new_idx[:B], ro[:B]

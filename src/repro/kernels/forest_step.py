@@ -28,13 +28,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax renamed TPUCompilerParams -> CompilerParams across versions; accept both.
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+from repro.kernels.common import CompilerParams as _CompilerParams
 
-
-# Scratch layout: per-sample gathered node fields, accumulated over M tiles.
-_F_IDX, _THR, _LEFT, _RIGHT, _LEAF = range(5)
-_NFIELDS = 8  # padded to 8 lanes
+# Scratch layout: per-sample gathered node fields, accumulated over M
+# tiles (shared with the fused kernels via kernels.common).
+from repro.kernels.common import (  # noqa: F401  (re-exported layout)
+    F_IDX as _F_IDX,
+    THR as _THR,
+    LEFT as _LEFT,
+    RIGHT as _RIGHT,
+    LEAF as _LEAF,
+    NFIELDS as _NFIELDS,
+)
 
 
 def _forest_step_kernel(

@@ -1,9 +1,27 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels — the kernel-resident
+execution core.
 
-On a real TPU these dispatch to the compiled Mosaic kernels; on CPU (this
+On a real TPU these dispatch compiled Mosaic kernels; on CPU (this
 container) they run in interpret mode, which executes the same kernel
 body element-for-element — the mode the test suite validates against the
-ref.py oracles.
+ref.py oracles.  Interpret-mode selection lives in ONE place
+(:func:`repro.kernels.common.resolve_interpret`) so it cannot drift
+between kernels.
+
+Entry points, by execution shape:
+
+* :func:`forest_step` — one step of one tree (the PR-2 latency kernel).
+* :func:`forest_run` — L fused steps of one tree in ONE launch, node
+  tables resident in VMEM across the whole segment
+  (:mod:`repro.kernels.forest_run`); falls back to
+  :func:`forest_run_scanned` when the tables exceed the VMEM budget.
+* :func:`forest_run_readout` — same launch, plus the full anytime
+  read-out of the resulting state (segment-boundary fusion).
+* :func:`slot_run` / :func:`slot_run_readout` — the masked-slot
+  variants (:mod:`repro.kernels.slot_run`): per-slot tree ids + live
+  mask, flattened whole-forest tables resident in VMEM — the serving
+  hot path on the MXU; generic-gather fallback over the same budget.
+* :func:`prob_accum` — the standalone read-out kernel.
 """
 from __future__ import annotations
 
@@ -11,49 +29,236 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref  # noqa: F401  (oracles re-exported below)
+from repro.kernels import forest_run as _fused
+from repro.kernels import slot_run as _slots
+from repro.kernels.common import (
+    NFIELDS,
+    on_tpu,
+    pack_fields,
+    pad_fields,
+    resolve_interpret,
+    round_up,
+)
 from repro.kernels.forest_step import forest_step as _forest_step
 from repro.kernels.prob_accum import prob_accum as _prob_accum
 
+#: Soft cap on the VMEM-resident table footprint of the fused kernels.
+#: Above it the wrappers fall back to the streamed/generic paths — the
+#: fused kernels trade M-tiling for residency, so arbitrarily large
+#: forests must not be forced through them.  ~4 MiB leaves headroom in a
+#: 16 MiB VMEM for the batch tile, one-hot blocks, and double buffering.
+VMEM_TABLE_BUDGET_BYTES = 4 * 2**20
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+
+def _on_tpu() -> bool:  # retained alias: single source is common.on_tpu
+    return on_tpu()
 
 
 def forest_step(idx, X, feature, threshold, left, right, is_leaf, **kw):
     """Batched anytime step (see kernels.forest_step)."""
-    interpret = kw.pop("interpret", not _on_tpu())
-    return _forest_step(
-        idx, X, feature, threshold, left, right, is_leaf,
-        interpret=interpret, **kw,
-    )
+    kw["interpret"] = resolve_interpret(kw.pop("interpret", None))
+    return _forest_step(idx, X, feature, threshold, left, right, is_leaf, **kw)
 
 
-def forest_run(idx, X, feature, threshold, left, right, is_leaf, *, length, **kw):
-    """RLE-fused run: ``length`` consecutive steps of ONE tree for a batch,
-    scanned over the Pallas step kernel in a single dispatch.
-
-    idx here is the stepped tree's index COLUMN (int32 [B]); ``length``
-    must be static under jit — the step-plan buckets it to powers of two
-    so at most log2(cap)+1 traces ever exist.
-    """
-    interpret = kw.pop("interpret", not _on_tpu())
+def forest_run_scanned(
+    idx, X, feature, threshold, left, right, is_leaf, *, length, **kw
+):
+    """Legacy multi-step path: ``length`` launches of the single-step
+    kernel under one ``lax.scan``.  Kept as the streaming fallback for
+    forests whose tables exceed the VMEM budget, and as the baseline the
+    fused-vs-scan benchmark gate compares against."""
+    kw["interpret"] = resolve_interpret(kw.pop("interpret", None))
 
     def body(col, _):
         col = _forest_step(
-            col, X, feature, threshold, left, right, is_leaf,
-            interpret=interpret, **kw,
+            col, X, feature, threshold, left, right, is_leaf, **kw
         )
         return col, None
 
     return jax.lax.scan(body, idx, None, length=length)[0]
 
 
+def _tables_fit(M: int, *, field_trees: int = 1, probs_trees: int = 0,
+                C: int = 0, onehot_rows: int = 0) -> bool:
+    """Does the kernel's VMEM footprint fit the budget?
+
+    Counts what the target kernel actually holds: ``field_trees``
+    trees' [Mp, NFIELDS] field matrices, (for the fused-readout
+    variants) ``probs_trees`` trees' [Mp, C] probability tiles, and —
+    the dominant term for wide trees — the per-step one-hot matmul
+    operand ``[onehot_rows, field_trees*Mp]`` the gather materializes.
+    All f32.  Exact accounting both ways: the fused paths are not
+    disabled for forests that fit, and wide forests whose one-hot
+    would blow VMEM on a real TPU fall back to the streamed/generic
+    paths instead of failing Mosaic compilation.
+    """
+    Mp = round_up(max(M, 1), 128)
+    resident = (field_trees * Mp * NFIELDS + probs_trees * Mp * C
+                + onehot_rows * field_trees * Mp) * 4
+    return resident <= VMEM_TABLE_BUDGET_BYTES
+
+
+def _block_rows(n_rows: int, kw: dict, default: int = 256) -> int:
+    """The batch/slot tile height the kernel will actually use (the
+    wrappers clamp the block to the padded row count; for the slot
+    kernels an explicit block_s wins, mirroring _slot_kw)."""
+    rows = kw.get("block_s", kw.get("block_b", default))
+    return min(int(rows), max(8, int(n_rows)))
+
+
+_SOLO_KW = frozenset({"block_b", "block_m", "interpret"})
+_SLOT_ALLOWED_KW = _SOLO_KW | {"block_s"}
+
+
+def _check_kw(kw: dict, allowed: frozenset = _SOLO_KW) -> None:
+    """Reject tuning kwargs the target path cannot honor — eagerly and
+    identically on both sides of the VMEM budget, never silently
+    swallowed (block_s is slot-only; the solo wrappers reject it)."""
+    unknown = set(kw) - allowed
+    if unknown:
+        raise TypeError(f"unknown kernel option(s): {sorted(unknown)}")
+
+
+def _fb_kw(kw: dict) -> dict:
+    """Kwargs for the scan/prob_accum fallback paths."""
+    return {k: v for k, v in kw.items()
+            if k in ("block_b", "block_m", "interpret")}
+
+
+def _slot_kw(kw: dict) -> dict:
+    """Kwargs for the slot kernels: callers tune the slot tile via
+    either name; an explicit block_s wins over a translated block_b."""
+    out = {}
+    if "block_b" in kw:
+        out["block_s"] = kw["block_b"]
+    if "block_s" in kw:
+        out["block_s"] = kw["block_s"]
+    return out
+
+
+def forest_run(idx, X, feature, threshold, left, right, is_leaf, *, length, **kw):
+    """RLE-fused run: ``length`` consecutive steps of ONE tree for a
+    batch in a single kernel launch with VMEM-resident node tables.
+
+    ``idx`` is the stepped tree's index COLUMN (int32 [B]); ``length``
+    must be static under jit — the step-plan buckets it to powers of two
+    so at most log2(cap)+1 traces ever exist.  Falls back to the
+    streamed single-step scan when the tree exceeds the VMEM budget.
+    """
+    _check_kw(kw)
+    if not _tables_fit(feature.shape[0],
+                       onehot_rows=_block_rows(X.shape[0], kw)):
+        return forest_run_scanned(
+            idx, X, feature, threshold, left, right, is_leaf,
+            length=length, **_fb_kw(kw),
+        )
+    interpret = resolve_interpret(kw.pop("interpret", None))
+    fields = pack_fields(feature, threshold, left, right, is_leaf)
+    return _fused.forest_run(
+        idx, X, fields, length=length, interpret=interpret,
+        **{k: v for k, v in kw.items() if k == "block_b"},
+    )
+
+
+def forest_run_readout(
+    idx, X, feature, threshold, left, right, is_leaf, probs, unit,
+    *, length, **kw,
+):
+    """Fused run + boundary read-out: advance ``unit``'s column of the
+    FULL index array ``idx`` [B, T] by ``length`` steps and return
+    ``(new_idx, readout [B, C])`` from ONE launch.  Falls back to
+    scan + :func:`prob_accum` (two dispatches) over the VMEM budget.
+    """
+    _check_kw(kw)
+    M = feature.shape[0]
+    if not _tables_fit(M, probs_trees=probs.shape[0], C=probs.shape[2],
+                       onehot_rows=_block_rows(X.shape[0], kw)):
+        fb = _fb_kw(kw)
+        col = jnp.take(idx, unit, axis=1)
+        col = forest_run_scanned(
+            col, X, feature, threshold, left, right, is_leaf,
+            length=length, **fb,
+        )
+        new_idx = idx.at[:, unit].set(col)
+        return new_idx, prob_accum(new_idx, probs, **fb)
+    interpret = resolve_interpret(kw.pop("interpret", None))
+    fields = pack_fields(feature, threshold, left, right, is_leaf)
+    return _fused.forest_run_readout(
+        idx, X, fields, probs, unit, length=length, interpret=interpret,
+        **{k: v for k, v in kw.items() if k == "block_b"},
+    )
+
+
+def _flat_tables(feature, threshold, left, right, is_leaf):
+    """Stacked per-tree tables [T, M] -> resident flat fields [T*Mp, NF],
+    every tree's tile through the shared pad_fields invariant."""
+    T = feature.shape[0]
+    padded = jax.vmap(
+        lambda *tree: pad_fields(pack_fields(*tree))
+    )(feature, threshold, left, right, is_leaf)
+    Mp = padded.shape[1]
+    return padded.reshape(T * Mp, NFIELDS), Mp
+
+
+def slot_run(
+    idx, X, feature, threshold, left, right, is_leaf, units, mask,
+    *, length, **kw,
+):
+    """Masked-slot fused run: slot s advances its OWN tree ``units[s]``
+    for ``length`` steps in one launch (``mask[s]`` False = frozen).
+
+    Tables for the WHOLE forest flatten into one VMEM-resident field
+    matrix, so the per-slot (tree, node) double gather is a single
+    one-hot MXU contraction.  Generic-gather fallback over the budget.
+    """
+    _check_kw(kw, _SLOT_ALLOWED_KW)
+    T, M = feature.shape
+    if not _tables_fit(M, field_trees=T,
+                       onehot_rows=_block_rows(X.shape[0], kw)):
+        return ref.slot_run_ref(
+            idx, X, feature, threshold, left, right, is_leaf, units, mask,
+            length=length,
+        )
+    interpret = resolve_interpret(kw.pop("interpret", None))
+    fields, Mp = _flat_tables(feature, threshold, left, right, is_leaf)
+    return _slots.slot_run(
+        idx, X, fields, units, mask, mp=Mp, length=length,
+        interpret=interpret, **_slot_kw(kw),
+    )
+
+
+def slot_run_readout(
+    idx, X, feature, threshold, left, right, is_leaf, probs, units, mask,
+    *, length, **kw,
+):
+    """Fused masked run + boundary read-out for the serving loop: ONE
+    launch returns ``(new_idx [S, T], readout [S, C])``."""
+    _check_kw(kw, _SLOT_ALLOWED_KW)
+    T, M = feature.shape
+    if not _tables_fit(M, field_trees=T, probs_trees=T, C=probs.shape[2],
+                       onehot_rows=_block_rows(X.shape[0], kw)):
+        new_idx = ref.slot_run_ref(
+            idx, X, feature, threshold, left, right, is_leaf, units, mask,
+            length=length,
+        )
+        return new_idx, prob_accum(new_idx, probs, **_fb_kw(kw))
+    interpret = resolve_interpret(kw.pop("interpret", None))
+    fields, Mp = _flat_tables(feature, threshold, left, right, is_leaf)
+    probs_flat = _fused.flatten_probs(probs, Mp)
+    return _slots.slot_run_readout(
+        idx, X, fields, probs_flat, units, mask, mp=Mp, length=length,
+        interpret=interpret, **_slot_kw(kw),
+    )
+
+
 def prob_accum(idx, probs, **kw):
     """Anytime prediction read-out (see kernels.prob_accum)."""
-    interpret = kw.pop("interpret", not _on_tpu())
-    return _prob_accum(idx, probs, interpret=interpret, **kw)
+    kw["interpret"] = resolve_interpret(kw.pop("interpret", None))
+    return _prob_accum(idx, probs, **kw)
 
 
 # Re-export oracles so callers can opt into the pure-jnp path explicitly.
 forest_step_ref = ref.forest_step_ref
+forest_run_ref = ref.forest_run_ref
+slot_run_ref = ref.slot_run_ref
 prob_accum_ref = ref.prob_accum_ref

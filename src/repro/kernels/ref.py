@@ -26,6 +26,58 @@ def forest_step_ref(
     return jnp.where(is_leaf[idx].astype(bool), idx, nxt).astype(jnp.int32)
 
 
+def forest_run_ref(
+    idx, X, feature, threshold, left, right, is_leaf, *, length: int
+) -> jax.Array:
+    """``length`` consecutive :func:`forest_step_ref` steps (the oracle
+    for the fused multi-step kernel)."""
+
+    def body(col, _):
+        return forest_step_ref(
+            col, X, feature, threshold, left, right, is_leaf
+        ), None
+
+    return jax.lax.scan(body, idx, None, length=length)[0]
+
+
+def slot_step_ref(
+    idx: jax.Array,        # int32 [S, T]  per-slot index rows
+    X: jax.Array,          # f32   [S, F]  per-slot input rows
+    feature: jax.Array,    # int32 [T, M]  stacked per-tree tables
+    threshold: jax.Array,  # f32   [T, M]
+    left: jax.Array,       # int32 [T, M]
+    right: jax.Array,      # int32 [T, M]
+    is_leaf: jax.Array,    # bool  [T, M]
+    units: jax.Array,      # int32 [S]     per-slot stepped tree
+    mask: jax.Array,       # bool  [S]     False = frozen slot
+) -> jax.Array:
+    """One masked slot-step: slot s advances tree ``units[s]`` (same
+    arithmetic as :func:`repro.core.engine.slot_step`, on raw tables)."""
+    s = jnp.arange(idx.shape[0])
+    node = idx[s, units]
+    f = feature[units, node]
+    thr = threshold[units, node]
+    fv = X[s, f.astype(jnp.int32)]
+    nxt = jnp.where(fv <= thr, left[units, node], right[units, node])
+    nxt = jnp.where(is_leaf[units, node].astype(bool), node, nxt)
+    nxt = jnp.where(mask, nxt, node)
+    return idx.at[s, units].set(nxt.astype(jnp.int32))
+
+
+def slot_run_ref(
+    idx, X, feature, threshold, left, right, is_leaf, units, mask,
+    *, length: int,
+) -> jax.Array:
+    """``length`` fused masked slot-steps (the masked-slot kernel oracle)."""
+
+    def body(i, _):
+        return slot_step_ref(
+            i, X, feature, threshold, left, right, is_leaf, units, mask
+        ), None
+
+    return jax.lax.scan(body, idx, None, length=length)[0]
+
+
 def prob_accum_ref(idx: jax.Array, probs: jax.Array) -> jax.Array:
     """Anytime prediction read-out.
 

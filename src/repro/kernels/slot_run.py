@@ -1,0 +1,212 @@
+"""Pallas TPU kernel: fused masked-slot run (the serving hot path).
+
+The slot-batched scheduler (:mod:`repro.serve`) advances, per dispatch,
+every live *slot* by L steps of its OWN tree — per-slot tree ids defeat
+the single-tree table gather the solo kernels tile for, which is why
+``run_slots`` historically fell back to the generic jnp gather on every
+backend (ROADMAP open item 2).  This kernel puts that path on the MXU:
+
+  * the whole forest's node tables flatten to ONE field matrix
+    ``[T*Mp, NFIELDS]`` resident in VMEM, where row ``t*Mp + m`` holds
+    node m of tree t — a per-slot (tree, node) gather becomes a single
+    one-hot ``[Sb, T*Mp]`` matmul, no matter which tree each slot steps;
+  * a kernel-internal ``fori_loop`` runs all L steps of the segment in
+    one launch, tables resident throughout;
+  * the live ``mask`` freezes empty/retired slots bit-exactly (their
+    index rows pass through untouched), matching
+    :func:`repro.core.engine.slot_run` element-for-element;
+  * :func:`slot_run_readout` fuses the ``prob_accum`` boundary read-out
+    into the same launch — the double-buffered serving loop's
+    dispatch+readout pair becomes one kernel.
+
+Residency tradeoff: no TM-tiling — the flattened tables (and, for the
+readout variant, the flattened probabilities) must fit in VMEM;
+:mod:`repro.kernels.ops` budget-checks and falls back to the generic
+gather for oversized forests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (
+    F_IDX,
+    LEAF,
+    LEFT,
+    NFIELDS,
+    RIGHT,
+    THR,
+    CompilerParams,
+    accum_boundary_readout,
+    round_up,
+)
+
+
+def _slot_loop(idx, x, units, live, fields, *, length, block_m, n_trees):
+    """The fused masked step loop shared by both kernel variants."""
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1)  # [Sb, T]
+    sel = (t_ids == units[:, None]) & live[:, None]
+    tm_ids = jax.lax.broadcasted_iota(jnp.int32, (1, n_trees * block_m), 1)
+    f_cols = jax.lax.broadcasted_iota(jnp.float32, x.shape, 1)
+    base = units * block_m                                     # [Sb]
+
+    def body(_, idx):
+        node = jnp.sum(jnp.where(sel, idx, 0), axis=1)         # idx[s, units[s]]
+        onehot = ((base + node)[:, None] == tm_ids).astype(jnp.float32)
+        acc = jax.lax.dot(onehot, fields, preferred_element_type=jnp.float32)
+        f_onehot = (f_cols == acc[:, F_IDX][:, None]).astype(jnp.float32)
+        fv = jnp.sum(x * f_onehot, axis=1)
+        nxt = jnp.where(fv <= acc[:, THR], acc[:, LEFT], acc[:, RIGHT])
+        new = jnp.where(acc[:, LEAF] > 0.5, node.astype(jnp.float32), nxt)
+        return jnp.where(sel, new.astype(jnp.int32)[:, None], idx)
+
+    return jax.lax.fori_loop(0, length, body, idx)
+
+
+def _slot_run_kernel(
+    idx_ref,     # int32 [Sb, T]   per-slot index rows
+    x_ref,       # f32   [Sb, F]   per-slot input rows
+    units_ref,   # int32 [Sb, 1]   per-slot stepped tree id
+    mask_ref,    # int32 [Sb, 1]   1 = live, 0 = frozen
+    fields_ref,  # f32   [T*Mp, NFIELDS]  resident flattened tables
+    out_ref,     # int32 [Sb, T]
+    *,
+    length: int,
+    block_m: int,
+    n_trees: int,
+):
+    out_ref[...] = _slot_loop(
+        idx_ref[...], x_ref[...], units_ref[:, 0], mask_ref[:, 0] > 0,
+        fields_ref[...], length=length, block_m=block_m, n_trees=n_trees,
+    )
+
+
+def _slot_run_readout_kernel(
+    idx_ref, x_ref, units_ref, mask_ref, fields_ref,
+    probs_ref,   # f32 [T*Mp, C]  flattened per-tree probability tiles
+    out_ref,
+    ro_out,      # f32 [Sb, C]
+    *,
+    length: int,
+    block_m: int,
+    n_trees: int,
+):
+    new_idx = _slot_loop(
+        idx_ref[...], x_ref[...], units_ref[:, 0], mask_ref[:, 0] > 0,
+        fields_ref[...], length=length, block_m=block_m, n_trees=n_trees,
+    )
+    out_ref[...] = new_idx
+    ro_out[...] = accum_boundary_readout(
+        new_idx, probs_ref, block_m=block_m, n_trees=n_trees,
+        n_classes=ro_out.shape[1],
+    )
+
+
+def _pad_slots(idx, X, units, mask, block_s):
+    S = X.shape[0]
+    Sp = round_up(S, block_s)
+    pad = Sp - S
+    return (
+        jnp.pad(idx, ((0, pad), (0, 0))),
+        jnp.pad(X, ((0, pad), (0, 0))),
+        jnp.pad(units.astype(jnp.int32), (0, pad)).reshape(Sp, 1),
+        # padded slots are dead: their index rows pass through untouched
+        jnp.pad(mask.astype(jnp.int32), (0, pad)).reshape(Sp, 1),
+        Sp,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mp", "length", "block_s", "interpret"))
+def slot_run(
+    idx: jax.Array,     # int32 [S, T]
+    X: jax.Array,       # f32   [S, F]
+    fields: jax.Array,  # f32   [T*Mp, NFIELDS]  (ops flattens/pads)
+    units: jax.Array,   # int32 [S]
+    mask: jax.Array,    # bool  [S]
+    *,
+    mp: int,
+    length: int,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """``length`` fused masked slot-steps in ONE launch; slot s advances
+    tree ``units[s]`` (``mask[s]`` False = frozen).  ``mp`` is the
+    padded per-tree row stride of ``fields``."""
+    S, T = idx.shape
+    F = X.shape[1]
+    block_s = min(block_s, max(8, S))
+    idx_p, x_p, units_p, mask_p, Sp = _pad_slots(idx, X, units, mask, block_s)
+    TM = fields.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(
+            _slot_run_kernel, length=length, block_m=mp, n_trees=T
+        ),
+        grid=(Sp // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, T), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, F), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, 1), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, 1), lambda s: (s, 0)),
+            pl.BlockSpec((TM, NFIELDS), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, T), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, T), jnp.int32),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(idx_p, x_p, units_p, mask_p, fields)
+    return out[:S]
+
+
+@functools.partial(jax.jit, static_argnames=("mp", "length", "block_s", "interpret"))
+def slot_run_readout(
+    idx: jax.Array,
+    X: jax.Array,
+    fields: jax.Array,  # f32 [T*Mp, NFIELDS]
+    probs: jax.Array,   # f32 [T*Mp, C]  (ops flattens/pads)
+    units: jax.Array,
+    mask: jax.Array,
+    *,
+    mp: int,
+    length: int,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused masked run + boundary read-out in one launch: the advanced
+    index rows AND the full anytime readout ``[S, C]`` of the new state
+    (all slots, live or frozen — retirement bookkeeping is host-side)."""
+    S, T = idx.shape
+    F = X.shape[1]
+    C = probs.shape[1]
+    block_s = min(block_s, max(8, S))
+    idx_p, x_p, units_p, mask_p, Sp = _pad_slots(idx, X, units, mask, block_s)
+    TM = fields.shape[0]
+
+    new_idx, ro = pl.pallas_call(
+        functools.partial(
+            _slot_run_readout_kernel, length=length, block_m=mp, n_trees=T
+        ),
+        grid=(Sp // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, T), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, F), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, 1), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, 1), lambda s: (s, 0)),
+            pl.BlockSpec((TM, NFIELDS), lambda s: (0, 0)),
+            pl.BlockSpec((TM, C), lambda s: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, T), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, C), lambda s: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Sp, T), jnp.int32),
+            jax.ShapeDtypeStruct((Sp, C), jnp.float32),
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(idx_p, x_p, units_p, mask_p, fields, probs)
+    return new_idx[:S], ro[:S]

@@ -29,6 +29,8 @@ Quickstart::
     curves = rt.evaluate_orders(X_test, y_test, list_orders())
 """
 from repro.schedule.backends import (
+    ExecutorCore,
+    ForestExecutor,
     ForestStepBackend,
     StepPlan,
     check_order,
@@ -36,6 +38,7 @@ from repro.schedule.backends import (
     get_backend,
     list_backends,
     pow2_decompose,
+    pow2_floor,
     register_backend,
     rle_chunks,
 )
@@ -61,6 +64,8 @@ __all__ = [
     "list_orders",
     "iter_policies",
     "AnytimeRuntime",
+    "ExecutorCore",
+    "ForestExecutor",
     "ForestProgram",
     "ForestStepBackend",
     "Session",
@@ -72,6 +77,7 @@ __all__ = [
     "get_backend",
     "list_backends",
     "pow2_decompose",
+    "pow2_floor",
     "register_backend",
     "rle_chunks",
 ]

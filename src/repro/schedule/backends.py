@@ -5,16 +5,23 @@ per-step overhead is negligible; this module makes the execution layer
 a pluggable subsystem so the same :class:`~repro.schedule.runtime.Session`
 surface can dispatch to whichever implementation the hardware rewards:
 
-* ``jnp-ref``  — the pure-jnp ``engine.tree_step`` scan.  Kept as the
+* ``jnp-ref``  — the pure-jnp ``engine.segment_run`` scan.  Kept as the
   bit-exactness oracle every other backend is parity-tested against.
-* ``pallas``   — RLE-fused runs dispatched through the MXU-oriented
-  Pallas kernels (:func:`repro.kernels.ops.forest_run` for stepping,
-  :func:`repro.kernels.ops.prob_accum` for the read-out).  Interpret
-  mode on CPU, compiled Mosaic on TPU.
+* ``pallas``   — kernel-resident execution: one fused Pallas launch per
+  plan segment with the node tables resident in VMEM across all steps
+  (:func:`repro.kernels.ops.forest_run` for lockstep segments,
+  :func:`repro.kernels.ops.slot_run` for masked slot segments), the
+  boundary read-out fusable into the same launch.  Interpret mode on
+  CPU, compiled Mosaic on TPU.
 * ``sharded``  — the batch axis placed on a ``launch/mesh.py`` mesh via
   ``batch_pspec``, so ONE runtime serves many concurrent deadline
   streams; the jit partitioner splits every segment scan across the
   mesh's batch shards.
+
+All three implement :class:`ExecutorCore` — one plan-segment entry
+point (:meth:`ExecutorCore.run`) shared by the solo-session shape
+(:class:`ForestStepBackend`) and the slot-batch serving shape
+(:class:`~repro.schedule.runtime.SessionBatch`).
 
 Selection surface: ``AnytimeRuntime(program, backend="pallas")`` or
 per-session ``runtime.session(X, policy, backend="sharded")``; with no
@@ -81,12 +88,33 @@ def rle_chunks(order: np.ndarray) -> list[tuple[int, int]]:
     return [(int(order[s]), int(e - s)) for s, e in zip(starts, ends)]
 
 
+def pow2_floor(n: int, cap: int = 64) -> int:
+    """Largest power of two ≤ min(n, cap) — the shared run-length
+    bucketing primitive.
+
+    Both dispatch planners quantize through this ONE function: the
+    :class:`StepPlan` compiler / ``advance`` splitter (via
+    :func:`pow2_decompose`) and the :class:`~repro.schedule.runtime.
+    SessionBatch` masked slot dispatch (directly).  Every dispatched
+    segment length therefore comes from {1, 2, 4, ..., cap}, and the
+    ≤ log2(cap)+1 jit-trace bound cannot drift between the solo and
+    slot paths.
+    """
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"run length must be >= 1, got {n}")
+    if cap < 1 or cap & (cap - 1):
+        raise ValueError(f"cap must be a positive power of two, got {cap}")
+    return min(1 << (n.bit_length() - 1), cap)
+
+
 def pow2_decompose(n: int, cap: int = 64) -> list[int]:
     """Descending powers of two (each ≤ cap) summing to n.
 
     This is the trace-count bound: every dispatched segment length is a
-    member of {1, 2, 4, ..., cap}, so at most log2(cap)+1 distinct jit
-    traces exist no matter how an order's runs are split by deadlines.
+    member of {1, 2, 4, ..., cap} (:func:`pow2_floor`), so at most
+    log2(cap)+1 distinct jit traces exist no matter how an order's runs
+    are split by deadlines.
     """
     if n < 0:
         raise ValueError(f"cannot decompose negative run length {n}")
@@ -94,7 +122,7 @@ def pow2_decompose(n: int, cap: int = 64) -> list[int]:
         raise ValueError(f"cap must be a positive power of two, got {cap}")
     out = []
     while n:
-        p = min(1 << (n.bit_length() - 1), cap)
+        p = pow2_floor(n, cap)
         out.append(p)
         n -= p
     return out
@@ -206,19 +234,31 @@ def default_backend() -> str:
 
 
 # ---------------------------------------------------------------------------
-# Executors (the ExecutionBackend protocol).
+# Executors: the ExecutorCore interface (the ExecutionBackend protocol).
 # ---------------------------------------------------------------------------
 
 
-class ForestExecutor:
-    """Execution strategy behind :class:`ForestStepBackend`.
+class ExecutorCore:
+    """Unified execution core behind :class:`ForestStepBackend` and
+    :class:`~repro.schedule.runtime.SessionBatch`.
 
-    Implementations own state placement and the two hot operations:
+    ONE plan-segment entry point — :meth:`run` — serves both session
+    shapes on every backend:
 
-    * ``run_segment(idx, unit, length)`` — ``length`` fused steps of one
-      tree (``length`` is a static power of two from the step-plan, so
-      each distinct value is one cached jit trace);
-    * ``readout(idx)`` — the anytime prediction read-out ``[B, C]``.
+    * **solo lockstep batch** (``units`` scalar): every sample advances
+      the SAME tree for ``length`` steps — the ``Session`` shape;
+    * **masked slot batch** (``units`` vector + live ``mask``): row b
+      advances its OWN tree — the ``repro.serve`` shape.
+
+    ``length`` is always a static power of two from the step-plan
+    (:func:`pow2_floor`), so each distinct value is one cached jit
+    trace on either shape.  ``readout=True`` fuses the anytime boundary
+    read-out into the SAME dispatch — the same kernel launch on
+    ``pallas``, the same jit computation on ``jnp-ref``/``sharded`` —
+    so the serving loop's dispatch+readout pair costs one device round
+    trip.  Subclasses implement ``_segment``/``_slots``/``readout``;
+    the legacy ``run_segment``/``run_slots`` methods remain as shims
+    over :meth:`run`.
     """
 
     name = "abstract"
@@ -229,39 +269,86 @@ class ForestExecutor:
         self.plan = plan
         self.batch = int(self.X.shape[0])
 
+        # generic masked-slot path, available to every subclass (and the
+        # default behind _slots for legacy executors that only implement
+        # run_segment/readout — the pre-ExecutorCore base class shipped
+        # a working run_slots, so the base class still must)
         @partial(jax.jit, static_argnums=(4,))
-        def _run_slots(idx, X, units, mask, length):
+        def _generic_slots(idx, X, units, mask, length):
             return engine.slot_run(self.device, X, idx, units, mask, length)
 
-        self._run_slots_jit = _run_slots
+        self._generic_slots_jit = _generic_slots
 
     def init_state(self) -> jax.Array:
         return engine.init_state(self.device, self.batch)
 
-    def run_segment(self, idx: jax.Array, unit: jax.Array, length: int) -> jax.Array:
+    # -- the single plan-segment entry point -----------------------------
+
+    def run(
+        self,
+        idx: jax.Array,
+        units,
+        mask=None,
+        length: int = 1,
+        *,
+        X=None,
+        readout: bool = False,
+    ) -> tuple[jax.Array, Optional[jax.Array]]:
+        """``length`` fused steps of one plan segment; returns
+        ``(new_idx, probs)`` where ``probs`` is the fused boundary
+        read-out when ``readout`` else None.  ``units`` scalar selects
+        the lockstep shape, vector the masked-slot shape (the rank
+        check is static, so both shapes share this entry point without
+        a runtime branch)."""
+        X = self.X if X is None else jnp.asarray(X)
+        if jnp.ndim(units) == 0:
+            return self._segment(idx, X, units, length, readout)
+        if mask is None:
+            mask = jnp.ones(idx.shape[0], dtype=bool)
+        units, mask = self._place_unit_mask(jnp.asarray(units), jnp.asarray(mask))
+        return self._slots(idx, X, units, mask, length, readout)
+
+    # -- per-backend hooks ----------------------------------------------
+    #
+    # The base implementations keep PRE-ExecutorCore subclasses working:
+    # an external executor registered against the old protocol overrides
+    # run_segment (and maybe run_slots) rather than these hooks, so the
+    # base hooks route back to those overrides — never to the shims,
+    # which would recurse into run().
+
+    def _segment(self, idx, X, unit, length, readout):
+        if type(self).run_segment is not ExecutorCore.run_segment:
+            self._in_legacy_segment = True
+            try:
+                idx = self.run_segment(idx, unit, length)
+            finally:
+                self._in_legacy_segment = False
+            return idx, (self.readout(idx) if readout else None)
         raise NotImplementedError
+
+    def _slots(self, idx, X, units, mask, length, readout):
+        if type(self).run_slots is not ExecutorCore.run_slots:
+            # re-entrancy note: if the legacy override delegates to
+            # super().run_slots(), the shim below detects the live
+            # legacy call and runs the old base behavior (the generic
+            # gather) instead of recursing through run() again
+            self._in_legacy_slots = True
+            try:
+                idx = self.run_slots(idx, X, units, mask, length)
+            finally:
+                self._in_legacy_slots = False
+        else:
+            idx = self._generic_slots_jit(idx, X, units, mask, length)
+        return idx, (self.readout(idx) if readout else None)
 
     def readout(self, idx: jax.Array) -> jax.Array:
+        """Standalone anytime read-out ``[B, C]`` (no step)."""
         raise NotImplementedError
 
-    # -- masked-slot entry point (the repro.serve scheduler's hot path) --
-
-    def run_slots(
-        self, idx: jax.Array, X, units: jax.Array, mask: jax.Array, length: int
-    ) -> jax.Array:
-        """``length`` fused masked steps where slot b advances its OWN
-        tree ``units[b]`` (``mask[b]`` False = idle slot).
-
-        One dispatch serves many concurrent requests sitting at
-        different positions of the same step plan; ``length`` is a
-        static power of two from the plan, so the trace bound of
-        :meth:`run_segment` carries over unchanged.  The generic
-        per-slot gather path is shared by every executor (per-slot tree
-        ids defeat the single-tree table gather the Pallas kernels are
-        tiled for); ``sharded`` re-places the slot axis, see
-        :meth:`place_slots`.
-        """
-        return self._run_slots_jit(idx, jnp.asarray(X), units, mask, length)
+    def _place_unit_mask(self, units, mask):
+        """Placement hook for the per-slot unit/mask vectors (identity;
+        ``sharded`` puts them on the mesh's batch axis)."""
+        return units, mask
 
     def place_slots(self, *arrays) -> tuple:
         """Placement hook for slot-batch state arrays whose leading dim
@@ -269,36 +356,83 @@ class ForestExecutor:
         the slot axis on the mesh).  Always returns a tuple."""
         return arrays
 
+    # -- legacy shims (pre-ExecutorCore call surface) --------------------
+
+    def run_segment(self, idx: jax.Array, unit, length: int) -> jax.Array:
+        if getattr(self, "_in_legacy_segment", False):
+            # reached via super().run_segment() from a legacy override:
+            # the pre-ExecutorCore base had no solo implementation —
+            # keep that contract rather than recursing through run()
+            raise NotImplementedError(
+                "the base class provides no run_segment implementation"
+            )
+        return self.run(idx, unit, None, length)[0]
+
+    def run_slots(self, idx, X, units, mask, length) -> jax.Array:
+        if getattr(self, "_in_legacy_slots", False):
+            # reached via super().run_slots() from a legacy override
+            # mid-dispatch: behave like the pre-ExecutorCore base class
+            # (generic masked gather), don't recurse through run()
+            return self._generic_slots_jit(
+                idx, jnp.asarray(X), jnp.asarray(units), jnp.asarray(mask),
+                length,
+            )
+        return self.run(idx, units, mask, length, X=X)[0]
+
+
+#: Pre-PR-4 name for :class:`ExecutorCore`, kept for external callers.
+ForestExecutor = ExecutorCore
+
 
 @register_backend("jnp-ref")
-class JnpRefExecutor(ForestExecutor):
-    """Pure-jnp scan over ``engine.tree_step`` — the parity oracle."""
+class JnpRefExecutor(ExecutorCore):
+    """Pure-jnp ``engine.segment_run`` scans — the parity oracle.
+
+    Both session shapes route through ONE jitted function (the shape of
+    ``units`` picks the engine primitive at trace time); ``readout``
+    fuses ``predict_from_state`` into the same XLA computation.
+    """
 
     def __init__(self, device, X, plan):
         super().__init__(device, X, plan)
 
-        @partial(jax.jit, static_argnums=(2,))
-        def _run(idx, unit, length):
-            return engine.tree_run(self.device, self.X, idx, unit, length)
+        @partial(jax.jit, static_argnums=(4, 5))
+        def _run(idx, X, units, mask, length, readout):
+            idx = engine.segment_run(self.device, X, idx, units, mask, length)
+            probs = (
+                engine.predict_from_state(self.device, idx) if readout else None
+            )
+            return idx, probs
 
         self._run = _run
 
-    def run_segment(self, idx, unit, length):
-        return self._run(idx, unit, length)
+    def _segment(self, idx, X, unit, length, readout):
+        return self._run(idx, X, unit, None, length, readout)
+
+    def _slots(self, idx, X, units, mask, length, readout):
+        return self._run(idx, X, units, mask, length, readout)
 
     def readout(self, idx):
         return engine.predict_from_state(self.device, idx)
 
 
 @register_backend("pallas")
-class PallasExecutor(ForestExecutor):
-    """RLE-fused runs through the Pallas kernels.
+class PallasExecutor(ExecutorCore):
+    """Kernel-resident Pallas paths for BOTH session shapes.
 
-    Stepping gathers one tree's node tables and scans
-    :func:`repro.kernels.ops.forest_step` over the fused segment
-    (:func:`~repro.kernels.ops.forest_run`); the read-out is the
-    :func:`~repro.kernels.ops.prob_accum` one-hot MXU contraction.
-    Interpret mode on CPU — same kernel body, element-for-element.
+    * solo segments dispatch the fused multi-step kernel
+      (:func:`repro.kernels.ops.forest_run`): one launch per plan
+      segment, the tree's node tables resident in VMEM across all steps;
+    * masked slot segments dispatch the masked-slot kernel
+      (:func:`repro.kernels.ops.slot_run`): per-slot tree ids + live
+      mask on the flattened whole-forest tables — the serving hot path
+      on the MXU instead of the generic gather;
+    * ``readout=True`` fuses the ``prob_accum`` boundary read-out into
+      the SAME launch (``forest_run_readout`` / ``slot_run_readout``).
+
+    Interpret mode on CPU — same kernel bodies, element-for-element;
+    oversized forests fall back to the streamed/generic paths inside
+    :mod:`repro.kernels.ops` (VMEM residency budget).
     """
 
     def __init__(self, device, X, plan, *, block_b: int = 256,
@@ -308,26 +442,44 @@ class PallasExecutor(ForestExecutor):
         if interpret is not None:
             kw["interpret"] = interpret
         self._kernel_kw = kw
+        d = self.device
 
-        @partial(jax.jit, static_argnums=(2,))
-        def _run(idx, unit, length):
-            feature, threshold, left, right, is_leaf = (
+        def _tables(unit):
+            return tuple(
                 jnp.take(a, unit, axis=0)
-                for a in (self.device.feature, self.device.threshold,
-                          self.device.left, self.device.right,
-                          self.device.is_leaf)
+                for a in (d.feature, d.threshold, d.left, d.right, d.is_leaf)
             )
-            col = jnp.take(idx, unit, axis=1)
+
+        @partial(jax.jit, static_argnums=(3, 4))
+        def _seg(idx, X, unit, length, readout):
+            tables = _tables(unit)
+            if readout:
+                return kops.forest_run_readout(
+                    idx, X, *tables, d.probs, unit, length=length, **kw
+                )
             col = kops.forest_run(
-                col, self.X, feature, threshold, left, right, is_leaf,
-                length=length, **kw,
+                jnp.take(idx, unit, axis=1), X, *tables, length=length, **kw
             )
-            return idx.at[:, unit].set(col)
+            return idx.at[:, unit].set(col), None
 
-        self._run = _run
+        @partial(jax.jit, static_argnums=(4, 5))
+        def _slt(idx, X, units, mask, length, readout):
+            tables = (d.feature, d.threshold, d.left, d.right, d.is_leaf)
+            if readout:
+                return kops.slot_run_readout(
+                    idx, X, *tables, d.probs, units, mask, length=length, **kw
+                )
+            return kops.slot_run(
+                idx, X, *tables, units, mask, length=length, **kw
+            ), None
 
-    def run_segment(self, idx, unit, length):
-        return self._run(idx, unit, length)
+        self._seg, self._slt = _seg, _slt
+
+    def _segment(self, idx, X, unit, length, readout):
+        return self._seg(idx, X, unit, length, readout)
+
+    def _slots(self, idx, X, units, mask, length, readout):
+        return self._slt(idx, X, units, mask, length, readout)
 
     def readout(self, idx):
         return kops.prob_accum(idx, self.device.probs, **self._kernel_kw)
@@ -363,6 +515,14 @@ class ShardedExecutor(JnpRefExecutor):
     def init_state(self):
         return jax.device_put(super().init_state(), self._batch_sharding)
 
+    def run(self, idx, units, mask=None, length=1, *, X=None, readout=False):
+        idx, probs = super().run(
+            idx, units, mask, length, X=X, readout=readout
+        )
+        if probs is not None:
+            probs = probs[: self._true_batch]
+        return idx, probs
+
     def readout(self, idx):
         return super().readout(idx)[: self._true_batch]
 
@@ -373,9 +533,8 @@ class ShardedExecutor(JnpRefExecutor):
         dispatch splits across shards with zero collectives."""
         return tuple(jax.device_put(a, self._batch_sharding) for a in arrays)
 
-    def run_slots(self, idx, X, units, mask, length):
-        units, mask = self.place_slots(jnp.asarray(units), jnp.asarray(mask))
-        return super().run_slots(idx, X, units, mask, length)
+    def _place_unit_mask(self, units, mask):
+        return self.place_slots(units, mask)
 
 
 # ---------------------------------------------------------------------------
@@ -436,7 +595,7 @@ class ForestStepBackend:
             step = min(k - taken, seg_end - self.pos)
             unit = self.plan.units_dev[s]
             for p in pow2_decompose(step, cap=self.plan.max_segment):
-                self.idx = self.executor.run_segment(self.idx, unit, p)
+                self.idx, _ = self.executor.run(self.idx, unit, length=p)
                 self.dispatched_lengths.add(p)
             self.pos += step
             taken += step

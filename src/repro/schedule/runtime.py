@@ -34,12 +34,14 @@ import numpy as np
 from repro.core import engine
 from repro.forest.forest import ForestArrays
 from repro.schedule.backends import (  # noqa: F401  (re-exported surface)
+    ExecutorCore,
     ForestStepBackend,
     StepPlan,
     check_order,
     default_backend,
     get_backend,
     list_backends,
+    pow2_floor,
     register_backend,
     rle_chunks,
 )
@@ -157,8 +159,10 @@ class SessionBatch:
     single device dispatch stream.  Every slot owns an input row, an
     index-array row, and a plan cursor; :meth:`advance_segment` issues
     one fused masked dispatch in which each in-flight slot advances its
-    OWN current plan segment (per-slot tree ids via
-    :meth:`~repro.schedule.backends.ForestExecutor.run_slots`).
+    OWN current plan segment — the vector-``units`` shape of the same
+    :meth:`~repro.schedule.backends.ExecutorCore.run` entry point solo
+    sessions use (on ``pallas`` this is the masked-slot kernel, with
+    the boundary readout fusable into the same launch).
 
     Invariants the serving layer relies on:
 
@@ -258,30 +262,37 @@ class SessionBatch:
         self.idx = self.idx.at[slots].set(0)
         self.X, self.idx = self.executor.place_slots(self.X, self.idx)
 
-    def advance_segment(self) -> int:
-        """One fused masked dispatch: every in-flight slot advances ``L``
+    def advance_segment(self, readout: bool = False):
+        """One fused masked dispatch through the executor's unified
+        plan-segment entry point: every in-flight slot advances ``L``
         steps of its own current plan segment, where ``L`` is the
-        largest power of two that crosses no slot's segment boundary.
-        Returns ``L`` (0 when nothing can step)."""
+        largest power of two that crosses no slot's segment boundary
+        (:func:`~repro.schedule.backends.pow2_floor` — the same
+        bucketing the solo path uses, so the trace bound is shared).
+
+        Returns ``L`` (0 when nothing can step) — or, with
+        ``readout=True``, ``(L, probs)`` where ``probs`` is the new
+        boundary's anytime readout fused into the SAME dispatch (one
+        kernel launch on ``pallas``), or None when nothing stepped."""
         self._flush_admissions()
         step_ids = self.stepping_slots()
         if step_ids.size == 0:
-            return 0
+            return (0, None) if readout else 0
         plan = self.plan
         segs = np.searchsorted(plan.seg_starts, self.pos[step_ids], side="right") - 1
         units = np.zeros(self.capacity, dtype=np.int32)
         units[step_ids] = plan.seg_units[segs]
         rem = plan.seg_starts[segs + 1] - self.pos[step_ids]
-        min_rem = int(rem.min())
-        L = min(1 << (min_rem.bit_length() - 1), plan.max_segment)
+        L = pow2_floor(int(rem.min()), plan.max_segment)
         mask = np.zeros(self.capacity, dtype=bool)
         mask[step_ids] = True
-        self.idx = self.executor.run_slots(
-            self.idx, self.X, jnp.asarray(units), jnp.asarray(mask), L
+        self.idx, probs = self.executor.run(
+            self.idx, jnp.asarray(units), jnp.asarray(mask), L,
+            X=self.X, readout=readout,
         )
         self.pos[step_ids] += L
         self.dispatched_lengths.add(L)
-        return L
+        return (L, probs) if readout else L
 
     def readout(self) -> jax.Array:
         """Device-side anytime readout [capacity, C] of the CURRENT

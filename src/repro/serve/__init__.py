@@ -29,12 +29,13 @@ Quickstart::
     print(server.metrics.snapshot())
 """
 from repro.serve.metrics import ServeMetrics
-from repro.serve.queue import AdmissionQueue, Request, Result
+from repro.serve.queue import AdmissionQueue, AdmissionRejected, Request, Result
 from repro.serve.scheduler import ForestLane, Scheduler, SessionLane
 from repro.serve.server import AnytimeServer, Ticket
 
 __all__ = [
     "AdmissionQueue",
+    "AdmissionRejected",
     "AnytimeServer",
     "ForestLane",
     "Request",

@@ -20,6 +20,18 @@ from repro.schedule.policies import OrderPolicy
 PolicyLike = Union[str, OrderPolicy]
 
 
+class AdmissionRejected(RuntimeError):
+    """Raised by ``AnytimeServer.submit`` under ``admission="reject"``
+    when the backlog exceeds the configured depth bound.
+
+    Load shedding at submission time: under oversubscription the EDF
+    queue otherwise starves late-generation requests to 0 steps
+    (delivered as prior readouts) — rejection tells the CALLER, at
+    submit time, to retry elsewhere/later instead of silently burning a
+    slot-less wait.  The admitted population keeps its anytime quality.
+    """
+
+
 @dataclasses.dataclass
 class Request:
     """One deadline-bearing inference request.

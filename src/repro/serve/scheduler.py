@@ -109,16 +109,15 @@ class ForestLane:
         return True
 
     def dispatch(self) -> int:
-        """Advance every in-flight slot one fused masked segment and
-        enqueue (asynchronously) the new boundary's readout; rotates the
-        double buffer.  Returns the number of slots stepped."""
+        """Advance every in-flight slot one fused masked segment with
+        the new boundary's readout FUSED into the same dispatch (one
+        kernel launch on ``pallas``); rotates the double buffer.
+        Returns the number of slots stepped."""
         stepped = int(self.batch.stepping_slots().size)
-        L = self.batch.advance_segment()
+        L, probs = self.batch.advance_segment(readout=True)
         self._back = self._front
         if L:
-            self._front = _Boundary(
-                self.batch.readout(), self.batch.pos.copy(), self._owners()
-            )
+            self._front = _Boundary(probs, self.batch.pos.copy(), self._owners())
         else:
             self._front = None
         return stepped if L else 0
@@ -248,6 +247,10 @@ class Scheduler:
         # request leaves the admission queue exactly ONCE (no per-
         # iteration pop/re-push churn proportional to the backlog)
         self._waiting: dict[tuple, list] = {}
+        # still-queued requests per lane key, maintained at submit/pop —
+        # reject admission reads lane_backlog() in O(1) per submit
+        # instead of scanning the queue at exactly the overload moment
+        self._queued_by_lane: dict[tuple, int] = {}
         self._prior_cache: dict[str, np.ndarray] = {}
 
     # -- lane management ---------------------------------------------------
@@ -346,6 +349,39 @@ class Scheduler:
             lane.busy for lane in self.lanes.values()
         )
 
+    @property
+    def n_waiting(self) -> int:
+        """Requests admitted off the queue but still waiting for a free
+        slot, across all lanes."""
+        return sum(len(h) for h in self._waiting.values())
+
+    def lane_backlog(self, req: Request) -> int:
+        """How many requests are already queued or waiting for THIS
+        request's lane — what the server's reject admission policy
+        compares against capacity*k.  Per-lane, not global: flooding
+        one (program, policy, backend) lane must not shed load for an
+        idle one.  O(1): counters, not a queue scan."""
+        key = self._lane_key(req)
+        return len(self._waiting.get(key, ())) + self._queued_by_lane.get(key, 0)
+
+    def note_queued(self, req: Request) -> None:
+        """Record that ``req`` entered the admission queue (the server
+        calls this right after ``queue.submit``); balanced by
+        :meth:`_note_dequeued` when ``_admit`` pops it."""
+        key = self._lane_key(req)
+        self._queued_by_lane[key] = self._queued_by_lane.get(key, 0) + 1
+
+    def _note_dequeued(self, req: Request) -> None:
+        try:
+            key = self._lane_key(req)
+        except Exception:  # noqa: BLE001 - never let bookkeeping crash a pop
+            return
+        n = self._queued_by_lane.get(key, 0)
+        if n <= 1:
+            self._queued_by_lane.pop(key, None)
+        else:
+            self._queued_by_lane[key] = n - 1
+
     def _admit(self, queue: AdmissionQueue, now: float,
                deliveries: list[Delivery]) -> None:
         """Move arrivals into per-lane EDF waiting heaps (once each),
@@ -357,6 +393,7 @@ class Scheduler:
             req = queue.pop()
             if req is None:
                 break
+            self._note_dequeued(req)
             if req.t_deadline <= now:
                 # already expired (zero-deadline or stale): the prior
                 # readout needs no lane — don't pay order generation or

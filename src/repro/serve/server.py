@@ -31,7 +31,13 @@ import numpy as np
 
 from repro.schedule.runtime import AnytimeRuntime
 from repro.serve.metrics import ServeMetrics
-from repro.serve.queue import AdmissionQueue, PolicyLike, Request, Result
+from repro.serve.queue import (
+    AdmissionQueue,
+    AdmissionRejected,
+    PolicyLike,
+    Request,
+    Result,
+)
 from repro.serve.scheduler import Delivery, Scheduler
 
 
@@ -77,6 +83,17 @@ class AnytimeServer:
     ``(program, policy, backend)`` lane; ``chunk`` is the per-iteration
     step granularity of session lanes (slot lanes use plan segments);
     ``clock`` must be monotonic — injectable for deterministic tests.
+
+    ``admission`` picks the overload policy: ``"edf"`` (default)
+    accepts everything and lets the EDF queue starve whoever it must —
+    a starved request is delivered its prior (0-step) readout;
+    ``"reject"`` sheds load at submission instead, raising
+    :class:`~repro.serve.queue.AdmissionRejected` whenever the
+    submitted request's LANE already has ``capacity * admission_k``
+    requests queued or waiting for a slot (per-lane: flooding one
+    program/policy must not shed load for an idle one) — the admitted
+    population keeps its anytime step quality and callers learn about
+    the overload at submit time rather than from a degraded result.
     """
 
     def __init__(
@@ -88,12 +105,22 @@ class AnytimeServer:
         chunk: int = 8,
         clock=time.monotonic,
         backend_opts: Optional[dict] = None,
+        admission: str = "edf",
+        admission_k: float = 2.0,
     ):
         runtimes = dict(programs or {})
         if runtime is not None:
             runtimes.setdefault("default", runtime)
         if not runtimes:
             raise ValueError("AnytimeServer needs a runtime or a programs dict")
+        if admission not in ("edf", "reject"):
+            raise ValueError(
+                f"admission must be 'edf' or 'reject', got {admission!r}"
+            )
+        if admission_k <= 0:
+            raise ValueError(f"admission_k must be > 0, got {admission_k}")
+        self.admission = admission
+        self.admission_k = float(admission_k)
         self.clock = clock
         self.queue = AdmissionQueue()
         self.metrics = ServeMetrics()
@@ -126,8 +153,21 @@ class AnytimeServer:
                 f"unknown program {request.program!r}; serving: "
                 f"{', '.join(self.scheduler.runtimes)}"
             )
+        if self.admission == "reject":
+            # per-lane: flooding one (program, policy, backend) lane
+            # must not shed load for an idle one
+            backlog = self.scheduler.lane_backlog(request)
+            bound = self.scheduler.capacity * self.admission_k
+            if backlog >= bound:
+                raise AdmissionRejected(
+                    f"lane backlog {backlog} >= capacity "
+                    f"{self.scheduler.capacity} x admission_k "
+                    f"{self.admission_k}; shed load instead of starving "
+                    "admitted requests to prior readouts"
+                )
         now = self.clock()
         self.queue.submit(request, now)
+        self.scheduler.note_queued(request)
         self.metrics.record_submit(now)
         ticket = Ticket(self, request)
         self._pending[request.request_id] = ticket

@@ -2,11 +2,14 @@
 pallas/sharded parity suite against the jnp-ref oracle on odd shapes."""
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core import engine
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.schedule import (
     AnytimeRuntime,
+    ExecutorCore,
+    ForestExecutor,
     ForestProgram,
     ForestStepBackend,
     Session,
@@ -15,6 +18,7 @@ from repro.schedule import (
     get_backend,
     list_backends,
     pow2_decompose,
+    pow2_floor,
 )
 
 
@@ -56,6 +60,42 @@ def test_pow2_decompose(n, cap, expect):
 def test_pow2_decompose_rejects_negative():
     with pytest.raises(ValueError, match="negative"):
         pow2_decompose(-1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 10_000), log_cap=st.integers(0, 10))
+def test_pow2_floor_properties(n, log_cap):
+    """The SHARED bucketing primitive (StepPlan splitter + SessionBatch
+    slot dispatch): a power of two, <= n, <= cap, and maximal — so
+    every dispatched length on either path is in {1, 2, ..., cap}."""
+    cap = 1 << log_cap
+    p = pow2_floor(n, cap)
+    assert p & (p - 1) == 0
+    assert 1 <= p <= min(n, cap)
+    assert p == cap or 2 * p > n  # maximal under the cap
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(0, 10_000), log_cap=st.integers(0, 10))
+def test_pow2_decompose_consistent_with_floor(n, log_cap):
+    cap = 1 << log_cap
+    parts = pow2_decompose(n, cap=cap)
+    assert sum(parts) == n
+    assert parts == sorted(parts, reverse=True)
+    assert all(p == pow2_floor(p, cap) for p in parts)
+    if parts:
+        assert parts[0] == pow2_floor(n, cap)  # greedy head
+
+
+@pytest.mark.parametrize("n", [0, -3])
+def test_pow2_floor_rejects_non_positive(n):
+    with pytest.raises(ValueError, match=">= 1"):
+        pow2_floor(n)
+
+
+def test_pow2_floor_rejects_bad_cap():
+    with pytest.raises(ValueError, match="power of two"):
+        pow2_floor(5, cap=6)
 
 
 @pytest.mark.parametrize("cap", [0, -4, 6])
@@ -209,6 +249,119 @@ def test_pallas_backend_dispatches_kernel(monkeypatch, pipeline):
     assert calls["run"] >= 1 and calls["accum"] >= 1
 
 
+def test_pallas_fused_run_single_launch_per_segment(monkeypatch, pipeline):
+    """The pallas solo path must dispatch the FUSED multi-step kernel
+    (one pallas launch per plan segment), never fall back to scanning
+    the single-step kernel for an in-budget forest."""
+    from repro.kernels import forest_run as FR
+    from repro.kernels import ops
+
+    calls = {"fused": 0, "scanned": 0}
+    real_fused = FR.forest_run
+    monkeypatch.setattr(
+        FR, "forest_run",
+        lambda *a, **k: (calls.__setitem__("fused", calls["fused"] + 1),
+                         real_fused(*a, **k))[1])
+    monkeypatch.setattr(
+        ops, "forest_run_scanned",
+        lambda *a, **k: (_ for _ in ()).throw(
+            AssertionError("in-budget forest must not stream")))
+    rt = _runtime(pipeline)
+    fa, pp, yor, te, yte = pipeline
+    sess = rt.session(te[:9], "depth", backend="pallas", block_b=16)
+    sess.advance(5)
+    assert calls["fused"] >= 1
+
+
+def test_pallas_run_slots_dispatches_slot_kernel(monkeypatch, pipeline):
+    """ExecutorCore.run with vector units on pallas must route through
+    the masked-slot kernel (ROADMAP open item 2), not the generic
+    per-slot gather."""
+    from repro.kernels import ops
+
+    calls = {"slot": 0}
+    real = ops.slot_run
+    monkeypatch.setattr(
+        ops, "slot_run",
+        lambda *a, **k: (calls.__setitem__("slot", calls["slot"] + 1),
+                         real(*a, **k))[1])
+    rt = _runtime(pipeline)
+    fa, pp, yor, te, yte = pipeline
+    sess = rt.session(te[:8], "depth", backend="pallas", block_b=8, block_m=8)
+    core = sess.backend.executor
+    units = np.zeros(8, dtype=np.int32)
+    mask = np.ones(8, dtype=bool)
+    idx2 = core.run_slots(sess.idx, core.X, units, mask, 2)
+    assert calls["slot"] == 1
+    # and it matches the engine's generic gather bit-for-bit
+    exp = engine.slot_run(core.device, core.X, sess.idx,
+                          np.zeros(8, np.int32), np.ones(8, bool), 2)
+    np.testing.assert_array_equal(np.asarray(idx2), np.asarray(exp))
+
+
+@pytest.mark.parametrize("backend", ["jnp-ref", "pallas", "sharded"])
+def test_slot_path_parity_mixed_live_dead(backend, pipeline):
+    """ExecutorCore's masked-slot shape on every backend: mixed
+    live/dead lanes with per-slot tree ids must match the jnp-ref
+    oracle bit-for-bit, dead rows bit-frozen."""
+    fa, pp, yor, te, yte = pipeline
+    rt = _runtime(pipeline)
+    S = 9
+    sess = rt.session(te[:S], "depth", backend=backend,
+                      **PARITY_OPTS.get(backend, {}))
+    core = sess.backend.executor
+    rng = np.random.default_rng(0)
+    idx = core.init_state()
+    # size the unit/mask vectors to the EXECUTOR's batch — the sharded
+    # executor pads the slot axis to the shard count (as SessionBatch's
+    # capacity rounding guarantees in production); padded rows are dead
+    B = int(core.X.shape[0])
+    units = np.zeros(B, dtype=np.int32)
+    units[:S] = rng.integers(0, fa.n_trees, size=S)
+    mask = np.zeros(B, dtype=bool)
+    mask[:S] = rng.random(S) < 0.6
+    oracle = rt.session(te[:S], "depth", backend="jnp-ref")
+    exp = oracle.backend.executor.init_state()
+    for L in (1, 2, 4):
+        idx, probs = core.run(idx, units, mask, L, readout=True)
+        exp = engine.slot_run(oracle.backend.executor.device,
+                              oracle.backend.executor.X, exp,
+                              units[:S], mask[:S], L)
+        np.testing.assert_array_equal(np.asarray(idx)[:S], np.asarray(exp))
+        dead = ~mask[:S]
+        np.testing.assert_array_equal(np.asarray(idx)[:S][dead],
+                                      np.asarray(exp)[dead])
+        exp_probs = engine.predict_from_state(
+            oracle.backend.executor.device, exp)
+        np.testing.assert_allclose(np.asarray(probs)[:S],
+                                   np.asarray(exp_probs),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["jnp-ref", "pallas", "sharded"])
+def test_executor_core_unified_entry_solo_shape(backend, pipeline):
+    """run() with a SCALAR unit is the solo lockstep shape — identical
+    to the legacy run_segment shim, with the boundary readout fusable
+    into the same dispatch."""
+    fa, pp, yor, te, yte = pipeline
+    rt = _runtime(pipeline)
+    sess = rt.session(te[:7], "depth", backend=backend,
+                      **PARITY_OPTS.get(backend, {}))
+    core = sess.backend.executor
+    assert isinstance(core, ExecutorCore)
+    assert ForestExecutor is ExecutorCore  # compat alias
+    idx = core.init_state()
+    import jax.numpy as jnp
+
+    unit = jnp.asarray(1, jnp.int32)
+    via_run, probs = core.run(idx, unit, length=4, readout=True)
+    via_shim = core.run_segment(core.init_state(), unit, 4)
+    np.testing.assert_array_equal(np.asarray(via_run), np.asarray(via_shim))
+    np.testing.assert_allclose(
+        np.asarray(probs), np.asarray(core.readout(via_run)),
+        rtol=1e-5, atol=1e-5)
+
+
 def test_trace_count_bounded_under_deadline_pattern(pipeline):
     """Arbitrary odd advance splits never mint new trace lengths: every
     dispatched fused-segment length is a power of two, <= 8 distinct."""
@@ -229,6 +382,56 @@ def test_sharded_backend_pads_and_unpads_odd_batch(pipeline):
     sess = rt.session(te[:33], "depth", backend="sharded")
     sess.run_to_completion()
     assert sess.predict_proba().shape == (33, fa.probs.shape[-1])
+
+
+def test_legacy_executor_subclass_still_works(pipeline):
+    """A pre-ExecutorCore executor that overrides run_segment/readout
+    (the old protocol) must still serve BOTH session shapes through the
+    unified run() entry point — run_segment honored for solo segments,
+    the base class's generic gather behind the slot shape."""
+    import jax.numpy as jnp
+
+    fa, pp, yor, te, yte = pipeline
+    rt = _runtime(pipeline)
+    order = rt.order("depth")
+    dev = engine.to_device(fa)
+    calls = {"seg": 0}
+
+    class LegacyExecutor(ExecutorCore):
+        def run_segment(self, idx, unit, length):
+            calls["seg"] += 1
+            return engine.tree_run(self.device, self.X, idx, unit, length)
+
+        def readout(self, idx):
+            return engine.predict_from_state(self.device, idx)
+
+    plan = StepPlan.compile(np.asarray(order, dtype=np.int32))
+    core = LegacyExecutor(dev, te[:6], plan)
+    idx, probs = core.run(core.init_state(), jnp.asarray(1, jnp.int32),
+                          length=4, readout=True)
+    assert calls["seg"] == 1 and probs is not None
+    ref_exec = get_backend("jnp-ref")(dev, te[:6], plan)
+    exp, _ = ref_exec.run(ref_exec.init_state(), jnp.asarray(1, jnp.int32),
+                          length=4)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(exp))
+    # slot shape falls back to the base generic gather
+    units = np.zeros(6, np.int32)
+    mask = np.ones(6, bool)
+    got, _ = core.run(core.init_state(), units, mask, 2)
+    want = engine.slot_run(dev, core.X, core.init_state(),
+                           jnp.asarray(units), jnp.asarray(mask), 2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # the old in-tree pattern: run_slots override that DELEGATES to
+    # super().run_slots() after placement — must not recurse
+    class DelegatingExecutor(LegacyExecutor):
+        def run_slots(self, idx, X, units, mask, length):
+            return super().run_slots(idx, X, jnp.asarray(units),
+                                     jnp.asarray(mask), length)
+
+    core2 = DelegatingExecutor(dev, te[:6], plan)
+    got2, _ = core2.run(core2.init_state(), units, mask, 2)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(want))
 
 
 def test_forest_step_backend_direct_construction(pipeline):

@@ -83,6 +83,202 @@ def test_kernel_step_equals_engine_on_real_forest():
                                np.asarray(probs_engine), rtol=1e-5, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Fused multi-step kernel (PR 4): one launch per plan segment, node
+# tables resident in VMEM — must be bit-identical to the scanned
+# single-step path and the jnp oracle across odd batches, B=1, and
+# trees wider than one lane tile.
+# ---------------------------------------------------------------------------
+
+
+def _rand_forest_tables(rng, T, M, F):
+    feature = jnp.asarray(rng.integers(0, F, size=(T, M)), jnp.int32)
+    threshold = jnp.asarray(rng.normal(size=(T, M)), jnp.float32)
+    left = jnp.asarray(rng.integers(0, M, size=(T, M)), jnp.int32)
+    right = jnp.asarray(rng.integers(0, M, size=(T, M)), jnp.int32)
+    is_leaf = jnp.asarray(rng.random((T, M)) < 0.3)
+    return feature, threshold, left, right, is_leaf
+
+
+@pytest.mark.parametrize("B,F,M", [(1, 4, 8), (33, 14, 31), (257, 8, 513)])
+@pytest.mark.parametrize("length", [1, 2, 8])
+def test_fused_forest_run_matches_ref(B, F, M, length):
+    rng = np.random.default_rng(B * M + length)
+    idx = jnp.asarray(rng.integers(0, M, size=B), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    tables = _rand_tree_tables(rng, M, F)
+    out = ops.forest_run(idx, X, *tables, length=length, block_b=32)
+    exp = ref.forest_run_ref(idx, X, *tables, length=length)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    scanned = ops.forest_run_scanned(idx, X, *tables, length=length,
+                                     block_b=32, block_m=16)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(scanned))
+
+
+def test_fused_forest_run_readout_matches_refs():
+    """The fused run+readout launch == scan + prob_accum_ref (state
+    bit-exact, readout to the documented kernel tolerance)."""
+    rng = np.random.default_rng(7)
+    B, F, M, T, C, length = 33, 6, 31, 4, 3, 4
+    idx = jnp.asarray(rng.integers(0, M, size=(B, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    feature, thr, left, right, leaf = _rand_forest_tables(rng, T, M, F)
+    probs = jnp.asarray(rng.random((T, M, C)), jnp.float32)
+    for unit in (0, 2, T - 1):
+        new_idx, ro = ops.forest_run_readout(
+            idx, X, feature[unit], thr[unit], left[unit], right[unit],
+            leaf[unit], probs, unit, length=length, block_b=16)
+        col = ref.forest_run_ref(
+            idx[:, unit], X, feature[unit], thr[unit], left[unit],
+            right[unit], leaf[unit], length=length)
+        exp_idx = idx.at[:, unit].set(col)
+        np.testing.assert_array_equal(np.asarray(new_idx), np.asarray(exp_idx))
+        np.testing.assert_allclose(
+            np.asarray(ro), np.asarray(ref.prob_accum_ref(exp_idx, probs)),
+            rtol=1e-5, atol=1e-5)
+        idx = new_idx  # chain segments, as the executor does
+
+
+def test_fused_run_oversized_tree_falls_back_to_scan(monkeypatch):
+    """Tables over the VMEM budget must stream through the single-step
+    scan, not be forced resident — same results either way."""
+    monkeypatch.setattr(ops, "VMEM_TABLE_BUDGET_BYTES", 1024)
+    rng = np.random.default_rng(3)
+    B, F, M = 9, 5, 200  # Mp=256 -> 256*8*4 = 8KiB > 1KiB budget
+    idx = jnp.asarray(rng.integers(0, M, size=B), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    tables = _rand_tree_tables(rng, M, F)
+    out = ops.forest_run(idx, X, *tables, length=3, block_b=8, block_m=64)
+    exp = ref.forest_run_ref(idx, X, *tables, length=3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+# ---------------------------------------------------------------------------
+# Masked-slot kernel (PR 4): per-slot tree ids + live mask on the
+# flattened whole-forest tables — the serving hot path.  Mixed
+# live/dead lanes must leave dead rows bit-frozen.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S", [1, 13, 33])
+@pytest.mark.parametrize("length", [1, 4])
+def test_slot_kernel_parity_mixed_live_dead(S, length):
+    rng = np.random.default_rng(S * 10 + length)
+    T, M, F = 5, 31, 6
+    idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    tables = _rand_forest_tables(rng, T, M, F)
+    units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+    mask = jnp.asarray(rng.random(S) < 0.6)
+    out = ops.slot_run(idx, X, *tables, units, mask, length=length,
+                       block_b=8)
+    exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=length)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    # dead rows are bit-frozen
+    dead = ~np.asarray(mask)
+    np.testing.assert_array_equal(np.asarray(out)[dead],
+                                  np.asarray(idx)[dead])
+
+
+def test_slot_kernel_all_dead_is_identity():
+    rng = np.random.default_rng(0)
+    S, T, M, F = 7, 3, 15, 4
+    idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    tables = _rand_forest_tables(rng, T, M, F)
+    units = jnp.zeros(S, jnp.int32)
+    mask = jnp.zeros(S, bool)
+    out = ops.slot_run(idx, X, *tables, units, mask, length=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(idx))
+
+
+def test_slot_kernel_fused_readout_matches_refs():
+    rng = np.random.default_rng(11)
+    S, T, M, F, C = 17, 4, 31, 6, 3
+    idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    tables = _rand_forest_tables(rng, T, M, F)
+    probs = jnp.asarray(rng.random((T, M, C)), jnp.float32)
+    units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+    mask = jnp.asarray(rng.random(S) < 0.7)
+    new_idx, ro = ops.slot_run_readout(
+        idx, X, *tables, probs, units, mask, length=2, block_b=8)
+    exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=2)
+    np.testing.assert_array_equal(np.asarray(new_idx), np.asarray(exp))
+    np.testing.assert_allclose(
+        np.asarray(ro), np.asarray(ref.prob_accum_ref(exp, probs)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_fused_readout_oversized_falls_back_to_two_dispatches(monkeypatch):
+    """forest_run_readout over the VMEM budget must still return the
+    same (state, readout) pair through the scan + prob_accum fallback."""
+    monkeypatch.setattr(ops, "VMEM_TABLE_BUDGET_BYTES", 1024)
+    rng = np.random.default_rng(9)
+    B, F, M, T, C = 9, 5, 200, 3, 4
+    idx = jnp.asarray(rng.integers(0, M, size=(B, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    feature, thr, left, right, leaf = _rand_forest_tables(rng, T, M, F)
+    probs = jnp.asarray(rng.random((T, M, C)), jnp.float32)
+    unit = 1
+    new_idx, ro = ops.forest_run_readout(
+        idx, X, feature[unit], thr[unit], left[unit], right[unit],
+        leaf[unit], probs, unit, length=3, block_b=8, block_m=64)
+    col = ref.forest_run_ref(idx[:, unit], X, feature[unit], thr[unit],
+                             left[unit], right[unit], leaf[unit], length=3)
+    exp_idx = idx.at[:, unit].set(col)
+    np.testing.assert_array_equal(np.asarray(new_idx), np.asarray(exp_idx))
+    np.testing.assert_allclose(
+        np.asarray(ro), np.asarray(ref.prob_accum_ref(exp_idx, probs)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_slot_readout_oversized_falls_back_to_gather(monkeypatch):
+    monkeypatch.setattr(ops, "VMEM_TABLE_BUDGET_BYTES", 1024)
+    rng = np.random.default_rng(13)
+    S, T, M, F, C = 9, 3, 200, 5, 4
+    idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    tables = _rand_forest_tables(rng, T, M, F)
+    probs = jnp.asarray(rng.random((T, M, C)), jnp.float32)
+    units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+    mask = jnp.asarray(rng.random(S) < 0.5)
+    new_idx, ro = ops.slot_run_readout(
+        idx, X, *tables, probs, units, mask, length=3, block_b=8, block_m=64)
+    exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=3)
+    np.testing.assert_array_equal(np.asarray(new_idx), np.asarray(exp))
+    np.testing.assert_allclose(
+        np.asarray(ro), np.asarray(ref.prob_accum_ref(exp, probs)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_wrappers_reject_unknown_options():
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 8, size=4), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+    tables = _rand_tree_tables(rng, 8, 3)
+    with pytest.raises(TypeError, match="blok_b"):
+        ops.forest_run(idx, X, *tables, length=2, blok_b=8)
+    # slot-only tuning kwargs are rejected on the solo path, not
+    # silently swallowed
+    with pytest.raises(TypeError, match="block_s"):
+        ops.forest_run(idx, X, *tables, length=2, block_s=8)
+
+
+def test_slot_kernel_oversized_forest_falls_back_to_gather(monkeypatch):
+    monkeypatch.setattr(ops, "VMEM_TABLE_BUDGET_BYTES", 1024)
+    rng = np.random.default_rng(5)
+    S, T, M, F = 9, 4, 200, 5
+    idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    tables = _rand_forest_tables(rng, T, M, F)
+    units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+    mask = jnp.asarray(rng.random(S) < 0.5)
+    out = ops.slot_run(idx, X, *tables, units, mask, length=3)
+    exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
 @settings(max_examples=10, deadline=None)
 @given(B=st.integers(1, 70), M=st.integers(2, 90), T=st.integers(1, 6),
        C=st.integers(2, 12), seed=st.integers(0, 1000))

@@ -28,9 +28,20 @@ def _run_pytest_on_mesh(*pytest_args: str) -> subprocess.CompletedProcess:
 
 @pytest.mark.slow
 def test_sharded_backend_parity_under_8_device_mesh():
-    """tests/test_backends.py sharded parity (bit-exact vs the jnp-ref
-    oracle, odd batches, mid-chunk splits) on an 8-way batch mesh."""
-    r = _run_pytest_on_mesh("tests/test_backends.py", "-k", "sharded")
+    """tests/test_backends.py sharded + slot-path parity (bit-exact vs
+    the jnp-ref oracle, odd batches, mid-chunk splits, mixed live/dead
+    slot lanes) on an 8-way batch mesh."""
+    r = _run_pytest_on_mesh("tests/test_backends.py", "-k", "sharded or slot")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "passed" in r.stdout
+
+
+@pytest.mark.slow
+def test_slot_and_fused_kernel_parity_under_8_device_mesh():
+    """The fused-run and masked-slot KERNEL parity cases re-run on the
+    8-device mesh — interpret-mode pallas_calls must stay bit-exact
+    when XLA sees a multi-device host platform."""
+    r = _run_pytest_on_mesh("tests/test_kernels.py", "-k", "slot or fused")
     assert r.returncode == 0, r.stdout + r.stderr
     assert "passed" in r.stdout
 

@@ -7,7 +7,7 @@ import pytest
 from repro.core import engine
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.schedule import AnytimeRuntime, ForestProgram, SessionBatch
-from repro.serve import AdmissionQueue, AnytimeServer, Request
+from repro.serve import AdmissionQueue, AdmissionRejected, AnytimeServer, Request
 from repro.serve.scheduler import ForestLane, SessionLane
 
 
@@ -240,6 +240,87 @@ def test_request_starved_in_full_lane_expires_to_prior(runtime, pipeline):
     np.testing.assert_array_equal(r.proba, runtime.program.prior_readout())
     server.drain()
     assert long_t.result().completed
+
+
+def test_reject_admission_sheds_load_at_submit(runtime, pipeline):
+    """admission="reject": once the backlog reaches capacity*k, submit
+    raises AdmissionRejected instead of enqueueing a request the EDF
+    queue would starve to a prior readout."""
+    fa, pp, yor, te, yte = pipeline
+    clk = ManualClock()
+    server = AnytimeServer(runtime, capacity=1, clock=clk,
+                           admission="reject", admission_k=2.0)
+    accepted = [server.submit(te[i], deadline_ms=1e9) for i in range(2)]
+    with pytest.raises(AdmissionRejected, match="backlog"):
+        server.submit(te[2], deadline_ms=1e9)
+    # nothing about the rejected request leaked into the server
+    assert len(server._pending) == 2
+    server.drain()
+    for t in accepted:
+        assert t.result().completed
+    # backlog drained -> admission opens again
+    assert server.submit(te[3], deadline_ms=1e9) is not None
+    server.drain()
+
+
+def test_reject_admission_starvation_regression(runtime, pipeline):
+    """The starvation regression the knob exists for: oversubscribed
+    under EDF, late-generation requests starve to 0-step prior readouts;
+    under reject, every ADMITTED request is served with >= 1 step (and
+    the shed load is visible at submit, not as silent degradation)."""
+    fa, pp, yor, te, yte = pipeline
+    n_requests, deadline_ms = 12, 40.0
+
+    def flood(server, clk):
+        tickets, rejected = [], 0
+        for i in range(n_requests):
+            try:
+                tickets.append(server.submit(te[i % te.shape[0]], deadline_ms))
+            except AdmissionRejected:
+                rejected += 1
+        for _ in range(3):       # a few boundaries complete...
+            server.step()
+        clk.advance_ms(deadline_ms + 1.0)  # ...then every deadline fires
+        server.drain()
+        return [t.result() for t in tickets], rejected
+
+    clk = ManualClock()
+    edf_results, edf_rejected = flood(
+        AnytimeServer(runtime, capacity=2, clock=clk), clk)
+    assert edf_rejected == 0 and len(edf_results) == n_requests
+    # EDF accepts everyone and starves the tail to 0-step priors
+    assert sum(r.steps_completed == 0 for r in edf_results) > 0
+
+    clk = ManualClock()
+    rej_results, rej_rejected = flood(
+        AnytimeServer(runtime, capacity=2, clock=clk,
+                      admission="reject", admission_k=1.0), clk)
+    assert rej_rejected > 0                      # load visibly shed
+    assert all(r.steps_completed > 0 for r in rej_results)  # no starvation
+    assert all(r.deadline_hit for r in rej_results)
+
+
+def test_reject_admission_is_per_lane(runtime, pipeline):
+    """Flooding one (program, policy, backend) lane must not shed load
+    for an idle lane: the backlog bound is per-lane, not server-global."""
+    fa, pp, yor, te, yte = pipeline
+    clk = ManualClock()
+    server = AnytimeServer(runtime, capacity=1, clock=clk,
+                           admission="reject", admission_k=1.0)
+    server.submit(te[0], 1e9, policy="backward_squirrel")
+    with pytest.raises(AdmissionRejected):
+        server.submit(te[1], 1e9, policy="backward_squirrel")
+    # a DIFFERENT lane (other policy) has zero backlog: still admitted
+    other = server.submit(te[2], 1e9, policy="depth")
+    server.drain()
+    assert other.result().completed
+
+
+def test_admission_knob_validated_eagerly(runtime):
+    with pytest.raises(ValueError, match="admission"):
+        AnytimeServer(runtime, admission="degrade")
+    with pytest.raises(ValueError, match="admission_k"):
+        AnytimeServer(runtime, admission="reject", admission_k=0)
 
 
 def test_slot_recycling_many_requests_small_capacity(runtime, pipeline):
