@@ -1,0 +1,170 @@
+"""Bench-regression gate: compare a fresh ``--smoke`` run against the
+committed ``BENCH_nma.json`` / ``BENCH_serve.json`` / ``BENCH_kernels.json``
+baselines and fail the build on regression.
+
+What is compared, per the gate's contract:
+
+* **counts and parity — always.**  Order coverage and NMA values
+  (deterministic given the seeded smoke config), request/launch counts,
+  hit-rates, and the degrade-dominates-reject admission frontier.
+* **wall-clock — only where it was actually measured.**  Interpret-mode
+  kernel timings (``platform != "tpu"``) are functional checks, not
+  performance numbers, and are skipped; measured serving speedups are
+  compared with a generous factor so machine-to-machine CI variance
+  doesn't flake the build while order-of-magnitude regressions still
+  fail it.
+
+A failed gate means either a real regression (fix it) or an intentional
+config/metric change (regenerate the ``BENCH_*.json`` files with
+``python -m benchmarks.run --smoke`` and commit them alongside the
+change).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+#: absolute tolerance for deterministic quality metrics (NMA values are
+#: reproducible from the seeded smoke config up to float accumulation
+#: differences across BLAS/platform builds)
+NMA_ATOL = 2e-3
+#: hit-rates may wobble by a request or two on loaded CI machines
+HIT_RATE_TOL = 0.02
+#: measured wall-clock speedups must stay within this factor of the
+#: committed baseline (catches order-of-magnitude regressions, not noise)
+WALL_CLOCK_FACTOR = 0.25
+
+
+def _load(path: str) -> Optional[dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_nma(fresh: dict, base: dict, failures: list[str]) -> None:
+    fresh_nma, base_nma = fresh.get("nma", {}), base.get("nma", {})
+    for name, ref in base_nma.items():
+        got = fresh_nma.get(name)
+        if got is None:
+            failures.append(f"nma: order {name!r} missing from fresh run")
+        elif abs(float(got) - float(ref)) > NMA_ATOL:
+            failures.append(
+                f"nma: {name} = {float(got):.6f}, baseline "
+                f"{float(ref):.6f} (atol {NMA_ATOL})")
+
+
+def check_serve(fresh: dict, base: dict, failures: list[str]) -> None:
+    # counts: the smoke config and its coverage must match the baseline
+    for key in ("n_requests", "capacity", "total_steps"):
+        if fresh.get(key) != base.get(key):
+            failures.append(
+                f"serve: {key} = {fresh.get(key)}, baseline {base.get(key)} "
+                "(config drift — regenerate BENCH_serve.json)")
+    for mode in ("serial", "batched", "threaded"):
+        f_mode, b_mode = fresh.get(mode, {}), base.get(mode, {})
+        if f_mode.get("requests") != b_mode.get("requests"):
+            failures.append(
+                f"serve: {mode} served {f_mode.get('requests')} requests, "
+                f"baseline {b_mode.get('requests')}")
+        got = f_mode.get("deadline_hit_rate", 0.0)
+        ref = b_mode.get("deadline_hit_rate", 0.0)
+        if got < ref - HIT_RATE_TOL:
+            failures.append(
+                f"serve: {mode} hit-rate {got:.3f} below baseline {ref:.3f}")
+    # the admission frontier: degrade must keep dominating reject
+    f_over = fresh.get("overload", {})
+    reject_hit = f_over.get("reject", {}).get("hit_rate", 0.0)
+    degrade_hit = f_over.get("degrade", {}).get("hit_rate", 0.0)
+    if degrade_hit <= reject_hit:
+        failures.append(
+            f"serve: overload degrade hit-rate {degrade_hit:.3f} no longer "
+            f"dominates reject {reject_hit:.3f}")
+    b_over = base.get("overload", {})
+    ref_degrade = b_over.get("degrade", {}).get("hit_rate", 0.0)
+    if degrade_hit < ref_degrade - HIT_RATE_TOL:
+        failures.append(
+            f"serve: overload degrade hit-rate {degrade_hit:.3f} below "
+            f"baseline {ref_degrade:.3f}")
+    # wall-clock — measured on every platform (this is real serving
+    # throughput, not interpret-mode): generous factor, fail only on
+    # order-of-magnitude regressions
+    for key in ("speedup", "threaded_speedup"):
+        got, ref = fresh.get(key), base.get(key)
+        if got is not None and ref is not None:
+            if float(got) < float(ref) * WALL_CLOCK_FACTOR:
+                failures.append(
+                    f"serve: {key} {float(got):.2f}x below "
+                    f"{WALL_CLOCK_FACTOR}x baseline ({float(ref):.2f}x)")
+
+
+def check_kernels(fresh: dict, base: dict, failures: list[str]) -> None:
+    # counts/parity always: the fused path must keep its one-launch-per-
+    # segment contract for every case the baseline covers
+    for section in ("fused_vs_scan", "slot_vs_gather"):
+        base_cases = base.get(section, [])
+        fresh_cases = fresh.get(section, [])
+        if len(fresh_cases) < len(base_cases):
+            failures.append(
+                f"kernels: {section} covers {len(fresh_cases)} cases, "
+                f"baseline {len(base_cases)}")
+            continue
+        for ref, got in zip(base_cases, fresh_cases):
+            for key in ("launches_fused", "launches_scanned"):
+                if key in ref and got.get(key) != ref.get(key):
+                    failures.append(
+                        f"kernels: {section} {key} = {got.get(key)}, "
+                        f"baseline {ref.get(key)}")
+    if "gate" not in fresh:
+        failures.append("kernels: fresh run recorded no gate result")
+    # wall-clock only where measured: interpret-mode timings (any
+    # platform other than TPU) are not performance-representative
+    if fresh.get("platform") == "tpu" and base.get("platform") == "tpu":
+        for ref, got in zip(base.get("fused_vs_scan", []),
+                            fresh.get("fused_vs_scan", [])):
+            got_s, ref_s = got.get("speedup"), ref.get("speedup")
+            if got_s is not None and ref_s is not None:
+                if float(got_s) < float(ref_s) * WALL_CLOCK_FACTOR:
+                    failures.append(
+                        f"kernels: fused speedup {float(got_s):.2f}x below "
+                        f"{WALL_CLOCK_FACTOR}x baseline ({float(ref_s):.2f}x)")
+
+
+_CHECKS = (
+    ("BENCH_nma.json", "nma", check_nma),
+    ("BENCH_serve.json", "serve", check_serve),
+    ("BENCH_kernels.json", "kernels", check_kernels),
+)
+
+
+def load_baselines(root: str = ".") -> dict:
+    """Snapshot the committed baseline files into memory.  Call this
+    BEFORE the bench run writes its own outputs — ``benchmarks.run``
+    overwrites the same paths, and the gate must compare against what
+    the repo promised, not what this run just produced."""
+    return {fname: _load(os.path.join(root, fname))
+            for fname, _, _ in _CHECKS}
+
+
+def check_baselines(results: dict, baselines: Optional[dict] = None,
+                    root: str = ".") -> list[str]:
+    """Compare a ``benchmarks.run --smoke`` results dict against the
+    committed baselines (preloaded via :func:`load_baselines`, or read
+    from ``root``); returns failure messages (empty = gate passes).  A
+    missing baseline file is a failure — the gate exists to be
+    exercised, not silently skipped."""
+    if baselines is None:
+        baselines = load_baselines(root)
+    failures: list[str] = []
+    for fname, key, check in _CHECKS:
+        base = baselines.get(fname)
+        if base is None:
+            failures.append(f"baseline {fname} not found under {root!r}")
+            continue
+        fresh = results.get(key)
+        if fresh is None:
+            failures.append(f"fresh run produced no {key!r} section")
+            continue
+        check(fresh, base, failures)
+    return failures

@@ -10,7 +10,6 @@ All curves come from ONE vmapped batched pass over the step axis
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import build_pipeline, runtime_for
 from repro.core.metrics import mean_accuracy, normalized_mean_accuracy

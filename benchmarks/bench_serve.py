@@ -1,15 +1,29 @@
 """Serving benchmark + CI gate: batched deadline scheduling vs the
-serial per-request session loop it replaces.
+serial per-request session loop it replaces, the threaded driver vs the
+cooperative loop, and the degrade-vs-reject admission frontier.
 
-Two workloads over the same forest, order, and request stream:
+Workloads over the same forest, order, and request stream:
 
 * **complete** — generous deadlines, every request runs its full step
-  order; isolates pure throughput (requests/sec).  This is the gated
-  smoke workload: batched serving must deliver >= ``min_speedup`` x the
-  serial loop's requests/sec with >= ``min_hit_rate`` deadline-hit-rate.
+  order; isolates pure throughput (requests/sec).  Measured three ways:
+  the serial per-session baseline, the cooperative batched loop
+  (caller pumps ``drain()``), and the THREADED loop (background
+  ``ServeDriver`` owns dispatch→admit→harvest; the caller only submits
+  and blocks on tickets).  Both batched modes are gated at
+  >= ``min_speedup`` x serial with >= ``min_hit_rate`` hit-rate.
 * **tight** — millisecond deadlines; reports the anytime quality
   profile under pressure (deadline-hit-rate, p50/p99
   steps-at-deadline, slot occupancy).
+* **overload** — many more requests than slots, once under
+  ``admission="reject"`` and once under ``admission="degrade"``, at an
+  SLA generous enough that admitted work can be served (so the
+  admission policy, not the machine's speed, decides who answers).
+  Hit-rate counts REJECTED submissions as misses (the caller's view of
+  the offered load), so this measures the frontier the degrade policy
+  exists for: shrink per-request budgets smoothly instead of shedding —
+  degrade's ``steps_p50`` shows the budget price paid for its
+  hit-rate.  Gated: degrade must dominate reject on hit-rate at equal
+  load.
 
 The serial baseline is the pre-``repro.serve`` deployment shape: one
 fresh :class:`~repro.schedule.runtime.Session` per request, advanced
@@ -26,7 +40,7 @@ import time
 import numpy as np
 
 from benchmarks.common import build_pipeline, runtime_for
-from repro.serve import AnytimeServer
+from repro.serve import AdmissionRejected, AnytimeServer
 
 
 def _serial_loop(rt, order, rows, deadline_ms):
@@ -50,7 +64,22 @@ def _serial_loop(rt, order, rows, deadline_ms):
     }
 
 
+def _result_stats(results, dt, snap):
+    steps = np.asarray([r.steps_completed for r in results])
+    return {
+        "requests": len(results),
+        "wall_s": dt,
+        "requests_per_sec": len(results) / dt,
+        "deadline_hit_rate": float(np.mean([r.deadline_hit for r in results])),
+        "steps_p50": float(np.percentile(steps, 50)),
+        "steps_p99": float(np.percentile(steps, 99)),
+        "slot_occupancy": snap["slot_occupancy"],
+        "dispatches": snap["dispatches"],
+    }
+
+
 def _batched_loop(rt, rows, deadline_ms, capacity, warmup: bool = False):
+    """Cooperative mode: the caller pumps the loop via ``serve()``."""
     server = AnytimeServer(rt, capacity=capacity)
     if warmup:
         # compile the slot batch's fused-segment traces before timing —
@@ -61,27 +90,69 @@ def _batched_loop(rt, rows, deadline_ms, capacity, warmup: bool = False):
     results = server.serve(list(rows), deadline_ms=deadline_ms)
     dt = time.perf_counter() - t0
     assert len(results) == len(rows)
+    return _result_stats(results, dt, server.metrics.snapshot())
+
+
+def _threaded_loop(rt, rows, deadline_ms, capacity, warmup: bool = False):
+    """Threaded mode: the background driver owns the loop; the caller
+    fire-and-forgets submissions and blocks on tickets."""
+    with AnytimeServer(rt, capacity=capacity) as server:
+        if warmup:
+            for t in [server.submit(x, 300_000.0) for x in rows[:capacity]]:
+                t.result(timeout=600.0)
+            server.metrics.reset()
+        t0 = time.perf_counter()
+        tickets = [server.submit(x, deadline_ms) for x in rows]
+        results = [t.result(timeout=600.0) for t in tickets]
+        dt = time.perf_counter() - t0
+        snap = server.metrics.snapshot()
+    return _result_stats(results, dt, snap)
+
+
+def _overload_loop(rt, rows, deadline_ms, capacity, n_requests,
+                   admission, admission_k):
+    """Offered-load frontier: submit ``n_requests`` >> capacity under a
+    tight deadline; hit-rate counts rejected submissions as misses."""
+    server = AnytimeServer(rt, capacity=capacity,
+                           admission=admission, admission_k=admission_k)
+    server.serve(list(rows[:capacity]), deadline_ms=300_000.0)  # warm traces
+    server.metrics.reset()
+    tickets, rejected = [], 0
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        try:
+            tickets.append(server.submit(rows[i % len(rows)], deadline_ms))
+        except AdmissionRejected:
+            rejected += 1
+    server.drain()
+    dt = time.perf_counter() - t0
+    results = [t.result() for t in tickets]
+    hits = sum(r.deadline_hit for r in results)
     steps = np.asarray([r.steps_completed for r in results])
-    snap = server.metrics.snapshot()
+    budgets = np.asarray([r.budget_steps for r in results])
     return {
-        "requests": len(rows),
+        "admission": admission,
+        "requests_offered": n_requests,
+        "admitted": len(results),
+        "rejected": rejected,
         "wall_s": dt,
-        "requests_per_sec": len(rows) / dt,
-        "deadline_hit_rate": float(np.mean([r.deadline_hit for r in results])),
-        "steps_p50": float(np.percentile(steps, 50)),
-        "steps_p99": float(np.percentile(steps, 99)),
-        "slot_occupancy": snap["slot_occupancy"],
-        "dispatches": snap["dispatches"],
+        # the caller's view of the offered load: a rejection is a miss
+        "hit_rate": hits / n_requests,
+        "served_hit_rate": hits / len(results) if results else 0.0,
+        "degraded_requests": sum(r.degraded for r in results),
+        "steps_p50": float(np.percentile(steps, 50)) if steps.size else 0.0,
+        "steps_p99": float(np.percentile(steps, 99)) if steps.size else 0.0,
+        "budget_p50": float(np.percentile(budgets, 50)) if budgets.size else 0.0,
     }
 
 
 def run(dataset: str = "magic", n_trees: int = 10, depth: int = 6,
         capacity: int = 16, n_requests: int = 48,
-        tight_deadline_ms: float = 30.0, seed: int = 0,
-        min_speedup: float = 3.0, min_hit_rate: float = 0.99,
+        tight_deadline_ms: float = 30.0, overload_deadline_ms: float = 5_000.0,
+        seed: int = 0, min_speedup: float = 3.0, min_hit_rate: float = 0.99,
         gate: bool = True, verbose: bool = True) -> dict:
-    """Batched-vs-serial serving comparison; raises (failing the smoke
-    build) when the gated thresholds are missed."""
+    """Serving comparison; raises (failing the smoke build) when the
+    gated thresholds are missed."""
     fa, pp, yor, te, yte = build_pipeline(
         dataset, n_trees, depth, seed=seed, n_order=200,
         n_test=max(n_requests, 64))
@@ -95,38 +166,67 @@ def run(dataset: str = "magic", n_trees: int = 10, depth: int = 6,
            "total_steps": int(len(order))}
     out["serial"] = _serial_loop(rt, order, rows, generous)
     out["batched"] = _batched_loop(rt, rows, generous, capacity)
-    out["speedup"] = (
-        out["batched"]["requests_per_sec"] / out["serial"]["requests_per_sec"])
+    out["threaded"] = _threaded_loop(rt, rows, generous, capacity)
+    serial_rps = out["serial"]["requests_per_sec"]
+    out["speedup"] = out["batched"]["requests_per_sec"] / serial_rps
+    out["threaded_speedup"] = out["threaded"]["requests_per_sec"] / serial_rps
     # tight workload sized to capacity: the anytime-quality profile of
     # one in-flight generation (oversubscribed tight workloads measure
-    # admission-control starvation instead — a different experiment)
+    # admission-control behavior instead — the overload section below)
     out["tight"] = {
         "deadline_ms": tight_deadline_ms,
         "serial": _serial_loop(rt, order, rows[:capacity], tight_deadline_ms),
         "batched": _batched_loop(rt, rows[:capacity], tight_deadline_ms,
                                  capacity, warmup=True),
     }
+    # overload frontier: reject sheds at submit, degrade shrinks budgets
+    overload_n = 6 * capacity
+    out["overload"] = {
+        "deadline_ms": overload_deadline_ms,
+        "requests_offered": overload_n,
+        "admission_k": 1.0,
+        "reject": _overload_loop(rt, rows, overload_deadline_ms, capacity,
+                                 overload_n, "reject", 1.0),
+        "degrade": _overload_loop(rt, rows, overload_deadline_ms, capacity,
+                                  overload_n, "degrade", 1.0),
+    }
 
     if verbose:
-        for name in ("serial", "batched"):
+        for name in ("serial", "batched", "threaded"):
             r = out[name]
             print(f"serve,{name},rps,{r['requests_per_sec']:.1f},"
                   f"hit_rate,{r['deadline_hit_rate']:.3f},"
                   f"steps_p99,{r['steps_p99']:.0f}")
-        print(f"serve,speedup,{out['speedup']:.2f}x")
+        print(f"serve,speedup,{out['speedup']:.2f}x,"
+              f"threaded,{out['threaded_speedup']:.2f}x")
         tb = out["tight"]["batched"]
         print(f"serve,tight_{tight_deadline_ms}ms,batched_rps,"
               f"{tb['requests_per_sec']:.1f},hit_rate,"
               f"{tb['deadline_hit_rate']:.3f},steps_p50,{tb['steps_p50']:.0f},"
               f"steps_p99,{tb['steps_p99']:.0f}")
+        for mode in ("reject", "degrade"):
+            o = out["overload"][mode]
+            print(f"serve,overload_{mode},hit_rate,{o['hit_rate']:.3f},"
+                  f"rejected,{o['rejected']},degraded,"
+                  f"{o['degraded_requests']},steps_p50,{o['steps_p50']:.0f}")
 
     if gate:
         assert out["speedup"] >= min_speedup, (
             f"batched serving only {out['speedup']:.2f}x the serial loop "
             f"(gate: >= {min_speedup}x)")
-        assert out["batched"]["deadline_hit_rate"] >= min_hit_rate, (
-            f"deadline-hit-rate {out['batched']['deadline_hit_rate']:.3f} "
-            f"below gate {min_hit_rate}")
+        assert out["threaded_speedup"] >= min_speedup, (
+            f"threaded serving only {out['threaded_speedup']:.2f}x the "
+            f"serial loop (gate: >= {min_speedup}x)")
+        for name in ("batched", "threaded"):
+            assert out[name]["deadline_hit_rate"] >= min_hit_rate, (
+                f"{name} deadline-hit-rate "
+                f"{out[name]['deadline_hit_rate']:.3f} below gate "
+                f"{min_hit_rate}")
+        reject_hit = out["overload"]["reject"]["hit_rate"]
+        degrade_hit = out["overload"]["degrade"]["hit_rate"]
+        assert degrade_hit > reject_hit, (
+            f"admission='degrade' hit-rate {degrade_hit:.3f} does not "
+            f"dominate 'reject' {reject_hit:.3f} at equal load")
     return out
 
 

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core import AnytimeForest, engine
 from repro.forest import make_dataset, split_dataset, train_forest

@@ -7,10 +7,9 @@ from __future__ import annotations
 
 import glob
 import json
-import sys
 
 from repro.configs.registry import get_config
-from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.launch.roofline import HBM_BW
 from repro.models.model import model_flops, traffic_floor_bytes
 
 

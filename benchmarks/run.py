@@ -14,8 +14,15 @@ parity check (pallas/sharded vs the jnp-ref oracle — raises on
 divergence, failing the build), the step-plan trace-count bound, the
 kernel gate (fused-vs-scan >= 1.5x on TPU, bit-parity asserted in
 interpret mode on CPU — BENCH_kernels.json), the NMA summary, and the
-serving gate (batched scheduling must beat the serial per-request loop
->= 3x at >= 99% deadline-hit-rate, or the build fails).
+serving gate (batched AND threaded scheduling must beat the serial
+per-request loop >= 3x at >= 99% deadline-hit-rate, and degrade
+admission must dominate reject on hit-rate under overload, or the
+build fails).
+
+``--check-baseline`` additionally regression-gates the fresh results
+against the committed BENCH_*.json files (benchmarks/baseline.py):
+counts and parity always, wall-clock only where actually measured —
+interpret-mode kernel timings are skipped.
 """
 from __future__ import annotations
 
@@ -58,11 +65,24 @@ def main() -> None:
                          "comparison (gated >= 1.5x fused on TPU; "
                          "parity-asserted in interpret mode on CPU)")
     ap.add_argument("--serve-out", default="BENCH_serve.json",
-                    help="batched-vs-serial serving summary (requests/sec, "
-                         "deadline-hit-rate, p99 steps-at-deadline)")
+                    help="batched/threaded-vs-serial serving summary "
+                         "(requests/sec, deadline-hit-rate, p99 "
+                         "steps-at-deadline, admission frontier)")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail if fresh results regress vs the committed "
+                         "BENCH_*.json baselines (counts/parity always; "
+                         "wall-clock only where measured)")
     args = ap.parse_args()
 
     from benchmarks import bench_backends, bench_kernels, bench_serve
+
+    baselines = None
+    if args.check_baseline:
+        # snapshot the committed baselines BEFORE the run rewrites the
+        # same files: the gate compares against what the repo promises
+        from benchmarks import baseline
+
+        baselines = baseline.load_baselines()
 
     results = {}
     t0 = time.perf_counter()
@@ -126,6 +146,16 @@ def main() -> None:
     results["total_s"] = time.perf_counter() - t0
     _dump(args.out, results)
     print(f"bench,total_s,{results['total_s']:.1f}")
+
+    if args.check_baseline:
+        failures = baseline.check_baselines(results, baselines)
+        if failures:
+            for msg in failures:
+                print(f"bench,baseline,FAIL,{msg}")
+            raise SystemExit(
+                f"bench-regression gate: {len(failures)} failure(s) vs "
+                "committed BENCH_*.json baselines")
+        print("bench,baseline,ok")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,6 @@ the ``repro.schedule`` policy registry, run anytime inference through the
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro import AnytimeRuntime, ForestProgram, list_backends, list_orders
 from repro.core.metrics import mean_accuracy, normalized_mean_accuracy

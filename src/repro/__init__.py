@@ -21,12 +21,19 @@ from repro.schedule import (
     register_backend,
     register_order,
 )
-from repro.serve import AdmissionRejected, AnytimeServer, Request, Result
+from repro.serve import (
+    AdmissionRejected,
+    AnytimeServer,
+    Request,
+    Result,
+    as_completed,
+)
 
 __all__ = [
     "AdmissionRejected",
     "AnytimeRuntime",
     "AnytimeServer",
+    "as_completed",
     "ExecutorCore",
     "ForestProgram",
     "OrderPolicy",

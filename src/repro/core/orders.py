@@ -16,7 +16,7 @@ repro.core.qwyc.
 from __future__ import annotations
 
 import heapq
-from typing import Callable, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 

@@ -31,12 +31,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import get_config, transformer_arch_ids
-from repro.configs.shapes import SHAPES, InputShape
+from repro.configs.shapes import SHAPES
 from repro.launch import mesh as mesh_lib
 from repro.launch import roofline as RL
 from repro.models import model as MD
-from repro.models import transformer as T
-from repro.models.params import abstract_params, shardings_for, ParamSpec
+from repro.models.params import ParamSpec, shardings_for
 from repro.serving import engine as SE
 from repro.training import optimizer as opt_lib
 from repro.training.train import train_step_fn, _batch_pspec_tree
@@ -52,7 +51,7 @@ def _abstract_tree(specs, shardings, dtype_map=None):
 
 def _abstract_like(tree, shardings):
     return jax.tree_util.tree_map(
-        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        lambda leaf, s: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=s),
         tree, shardings)
 
 

@@ -22,13 +22,10 @@ os.environ["XLA_FLAGS"] = (
 #   python -m repro.launch.roofline_extrapolate --all --out reports/roofline
 
 import argparse
-import dataclasses
 import json
 import sys
 import time
 from typing import Any, Optional
-
-import jax
 
 from repro.configs.registry import get_config, transformer_arch_ids
 from repro.configs.shapes import SHAPES

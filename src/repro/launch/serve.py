@@ -8,7 +8,8 @@ accuracy of the predictions actually delivered at the deadline.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset magic \
         --n-trees 10 --depth 6 --requests 64 --deadline-ms 5 \
-        --capacity 16 --policy backward_squirrel
+        --capacity 16 --policy backward_squirrel \
+        --threaded --admission degrade
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ import numpy as np
 
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.schedule import AnytimeRuntime, ForestProgram
-from repro.serve import AnytimeServer
+from repro.serve import AdmissionRejected, AnytimeServer
 
 
 def main():
@@ -32,6 +33,17 @@ def main():
     ap.add_argument("--policy", default="backward_squirrel")
     ap.add_argument("--backend", default=None,
                     help="jnp-ref | pallas | sharded (default: auto)")
+    ap.add_argument("--admission", default="edf",
+                    choices=("edf", "reject", "degrade"),
+                    help="overload policy: starve (edf) / shed at submit "
+                         "(reject) / shrink per-request step budgets "
+                         "(degrade)")
+    ap.add_argument("--admission-k", type=float, default=2.0,
+                    help="backlog bound = capacity * k")
+    ap.add_argument("--threaded", action="store_true",
+                    help="serve through the background driver thread "
+                         "(fire-and-forget submits) instead of the "
+                         "cooperative drain loop")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -42,7 +54,11 @@ def main():
                       max_depth=args.depth, seed=args.seed)
     rt = AnytimeRuntime(
         ForestProgram(rf.as_arrays(), y_order=yor[:300], X_order=orx[:300]))
-    server = AnytimeServer(rt, capacity=args.capacity)
+    server = AnytimeServer(rt, capacity=args.capacity,
+                           admission=args.admission,
+                           admission_k=args.admission_k)
+    if args.threaded:
+        server.start()
 
     # warm the slot batch's jit traces so deadlines measure serving, not
     # compilation
@@ -52,18 +68,39 @@ def main():
     server.metrics.reset()  # report the measured stream, not the warmup
 
     n = min(args.requests, len(te))
-    results = server.serve(list(te[:n]), deadline_ms=args.deadline_ms,
-                           policy=args.policy, backend=args.backend)
+    tickets, rejected = [], 0
+    kept_labels = []
+    for i in range(n):
+        try:
+            tickets.append(server.submit(
+                te[i], args.deadline_ms,
+                policy=args.policy, backend=args.backend))
+            kept_labels.append(yte[i])
+        except AdmissionRejected:
+            rejected += 1   # --admission reject sheds load at submit
+    server.drain()
+    results = [t.result() for t in tickets]
+    if args.threaded:
+        server.close()
+    if rejected:
+        print(f"rejected at submit: {rejected}/{n} "
+              f"(admission={args.admission}, backlog bound = capacity x "
+              f"{args.admission_k})")
     preds = np.asarray([int(r.prediction) for r in results])
-    acc = float((preds == yte[:n]).mean())
+    acc = float((preds == np.asarray(kept_labels)).mean())
     snap = server.metrics.snapshot()
-    print(f"served {n} requests @ {args.deadline_ms} ms deadline "
-          f"(policy={args.policy}, capacity={args.capacity})")
+    mode = "threaded driver" if args.threaded else "cooperative loop"
+    print(f"served {len(results)} requests @ {args.deadline_ms} ms deadline "
+          f"(policy={args.policy}, capacity={args.capacity}, {mode}, "
+          f"admission={args.admission})")
     print(f"  accuracy-at-deadline  {acc:.4f}")
     print(f"  deadline-hit-rate     {snap['deadline_hit_rate']:.3f}")
     print(f"  steps-at-deadline     p50={snap['steps_at_deadline']['p50']:.0f} "
           f"p99={snap['steps_at_deadline']['p99']:.0f} "
           f"of {results[0].total_steps}")
+    if snap["degraded_requests"]:
+        print(f"  degraded requests     {snap['degraded_requests']} "
+              f"(budget p50 {snap['budget_at_deadline']['p50']:.0f})")
     print(f"  requests/sec          {snap['requests_per_sec']:.1f}")
     print(f"  slot occupancy        {snap['slot_occupancy']:.2f}")
 

@@ -9,7 +9,6 @@ materialized — mandatory for the 32k-prefill input shapes.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
@@ -153,27 +152,27 @@ def attention(
         qb, qposb = args                     # [B, qc, KH, G, dh], [B, qc]
 
         def kv_step(carry, kv):
-            m, l, acc = carry
+            m, lsum, acc = carry
             kb, vb, kposb = kv               # [B, kc, KH, dh] ...
             s = _scores(qb, kb, scale, softcap)                     # [B,KH,G,qc,kc]
             s = s + _mask(qposb, kposb, causal, window)[:, None, None]
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l = l * corr + p.sum(axis=-1)
+            lsum = lsum * corr + p.sum(axis=-1)
             pv = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(vb.dtype), vb,
                             preferred_element_type=jnp.float32)
             acc = acc * corr[..., None] + pv
-            return (m_new, l, acc), None
+            return (m_new, lsum, acc), None
 
         m0 = jnp.full((B, KH, G, q_chunk), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, KH, G, q_chunk), jnp.float32)
         a0 = jnp.zeros((B, KH, G, q_chunk, dh), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lsum, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0),
             (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(kposc, 1, 0)),
         )
-        out = acc / jnp.maximum(l, 1e-30)[..., None]                # [B,KH,G,qc,dh]
+        out = acc / jnp.maximum(lsum, 1e-30)[..., None]                # [B,KH,G,qc,dh]
         return jnp.transpose(out, (0, 3, 1, 2, 4))                  # [B,qc,KH,G,dh]
 
     qcs = jnp.moveaxis(qp.reshape(B, nq, q_chunk, KH, G, dh), 1, 0)

@@ -7,7 +7,7 @@ patches) appear here as precomputed embedding inputs.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.configs.shapes import SHAPES, InputShape
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.models.params import ParamSpec, abstract_params, init_params, param_count
+from repro.models.params import init_params, param_count
 
 
 def build_param_specs(cfg: ModelConfig):
@@ -155,8 +155,8 @@ def traffic_floor_bytes(cfg: ModelConfig, shape: InputShape | str) -> float:
 
     def cache_bytes() -> float:
         like = jax.eval_shape(lambda: T.init_cache(cfg, B, S, dtype=jnp.bfloat16))
-        return float(sum(np.prod(l.shape) * l.dtype.itemsize
-                         for l in jax.tree_util.tree_leaves(like)))
+        return float(sum(np.prod(leaf.shape) * leaf.dtype.itemsize
+                         for leaf in jax.tree_util.tree_leaves(like)))
 
     if shape.kind == "train":
         # fwd read + bwd read + grad write/read + AdamW m,v fp32 r/w

@@ -88,7 +88,6 @@ def ssd_train(cfg: ModelConfig, p, x: jax.Array, return_state: bool = False):
     Cm = xBC[..., di + N:]                         # [B, S, N]
     dt = jax.nn.softplus(dt + p["dt_bias"])        # [B, S, H]
     A = -jnp.exp(p["A_log"].astype(jnp.float32))   # [H]
-    dA = dt * A                                     # [B, S, H]
 
     # chunk everything: [B, nC, Q, ...]
     def ck(a, extra=()):

@@ -22,7 +22,6 @@ Three execution modes share the same parameters:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -531,7 +530,6 @@ def decode_step(cfg: ModelConfig, params, cache: Cache, tokens: jax.Array):
     if cfg.scale_embeds:
         x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
     B = x.shape[0]
-    pos_b = jnp.broadcast_to(pos[None, None], (B, 1))
     fam = cfg.family
     new_attn = dict(cache.attn)
     new_ssm = dict(cache.ssm)

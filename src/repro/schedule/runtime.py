@@ -210,6 +210,10 @@ class SessionBatch:
         self.idx = self.executor.init_state()
         self.pos = np.zeros(self.capacity, dtype=np.int64)      # plan cursor/slot
         self.active = np.zeros(self.capacity, dtype=bool)
+        # per-slot step-budget cap (admission="degrade"): a slot stops
+        # dispatching at min(budget, total_steps) — the readout there is
+        # still an exact prefix boundary, just of a shorter prefix
+        self.budget = np.full(self.capacity, plan.total_steps, dtype=np.int64)
         self.dispatched_lengths: set[int] = set()
         # admissions buffer host-side and flush as ONE fused scatter at
         # the next dispatch/readout — per-slot eager device writes would
@@ -228,14 +232,20 @@ class SessionBatch:
         return [int(s) for s in np.flatnonzero(~self.active)]
 
     def stepping_slots(self) -> np.ndarray:
-        """Active slots that still have plan steps left."""
-        return np.flatnonzero(self.active & (self.pos < self.total_steps))
+        """Active slots that still have plan steps left within their
+        step budget."""
+        return np.flatnonzero(self.active & (self.pos < self.budget))
 
-    def admit(self, slot: int, x_row) -> None:
+    def admit(self, slot: int, x_row, budget: Optional[int] = None) -> None:
         """Recycle ``slot`` for a new request: reset its index row to the
         all-roots state and install its input row.  Must be called
         between dispatches (always true for host callers); the device
-        writes are deferred and fused with other admissions."""
+        writes are deferred and fused with other admissions.
+
+        ``budget`` caps how many plan steps the slot may execute
+        (``admission="degrade"``): the slot stops dispatching exactly at
+        ``budget`` steps — an exact prefix boundary — and is then ready
+        to retire.  None = the full plan."""
         if self.active[slot]:
             raise ValueError(f"slot {slot} is still occupied")
         x_row = np.asarray(x_row, dtype=self.X.dtype).reshape(-1)
@@ -244,12 +254,20 @@ class SessionBatch:
                 f"request row has {x_row.shape[0]} features, batch expects "
                 f"{self.X.shape[1]}"
             )
+        total = self.plan.total_steps
+        if budget is None:
+            budget = total
+        budget = int(budget)
+        if budget < 1:
+            raise ValueError(f"budget must be >= 1 step, got {budget}")
         self._pending_rows[slot] = x_row
         self.pos[slot] = 0
+        self.budget[slot] = min(budget, total)
         self.active[slot] = True
 
     def retire(self, slot: int) -> None:
         self.active[slot] = False
+        self.budget[slot] = self.plan.total_steps
         self._pending_rows.pop(slot, None)
 
     def _flush_admissions(self) -> None:
@@ -282,7 +300,11 @@ class SessionBatch:
         segs = np.searchsorted(plan.seg_starts, self.pos[step_ids], side="right") - 1
         units = np.zeros(self.capacity, dtype=np.int32)
         units[step_ids] = plan.seg_units[segs]
-        rem = plan.seg_starts[segs + 1] - self.pos[step_ids]
+        # a budget-capped slot (admission="degrade") stops exactly at its
+        # budget: the dispatch length may not cross a segment boundary
+        # NOR any stepping slot's budget
+        bound = np.minimum(plan.seg_starts[segs + 1], self.budget[step_ids])
+        rem = bound - self.pos[step_ids]
         L = pow2_floor(int(rem.min()), plan.max_segment)
         mask = np.zeros(self.capacity, dtype=bool)
         mask[step_ids] = True

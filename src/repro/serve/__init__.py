@@ -15,12 +15,23 @@ requests multiplexed onto one device runtime.
 * :mod:`repro.serve.server` — :class:`AnytimeServer`, the
   double-buffered driver loop (dispatch segment k+1 while harvesting
   segment k's readouts and retiring expired slots);
+* :mod:`repro.serve.driver` — the background :class:`ServeDriver`
+  thread that owns that loop in threaded mode, plus
+  :func:`as_completed` over tickets;
 * :mod:`repro.serve.metrics` — deadline-hit-rate, p50/p99
-  steps-at-deadline, slot occupancy, requests/sec.
+  steps-at-deadline, slot occupancy, requests/sec, degraded requests.
 
-Quickstart::
+Quickstart (threaded — the loop runs on a background driver; callers
+overlap their own work with device execution)::
 
-    from repro.serve import AnytimeServer
+    from repro.serve import AnytimeServer, as_completed
+
+    with AnytimeServer(runtime, capacity=16) as server:
+        tickets = [server.submit(x, deadline_ms=2.0) for x in rows]
+        for t in as_completed(tickets):
+            print(t.result().prediction)
+
+Cooperative (no thread — the caller pumps the loop)::
 
     server = AnytimeServer(runtime, capacity=16)
     tickets = [server.submit(x, deadline_ms=2.0) for x in rows]
@@ -28,6 +39,7 @@ Quickstart::
     preds = [t.result().prediction for t in tickets]
     print(server.metrics.snapshot())
 """
+from repro.serve.driver import DriverDead, ServeDriver, as_completed
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import AdmissionQueue, AdmissionRejected, Request, Result
 from repro.serve.scheduler import ForestLane, Scheduler, SessionLane
@@ -37,11 +49,14 @@ __all__ = [
     "AdmissionQueue",
     "AdmissionRejected",
     "AnytimeServer",
+    "DriverDead",
     "ForestLane",
     "Request",
     "Result",
     "Scheduler",
+    "ServeDriver",
     "ServeMetrics",
     "SessionLane",
     "Ticket",
+    "as_completed",
 ]

@@ -1,0 +1,154 @@
+"""Background serving driver: the thread that owns the dispatch → admit
+→ harvest loop.
+
+:class:`ServeDriver` turns :class:`~repro.serve.server.AnytimeServer`
+from a cooperative loop (callers must pump ``step()``/``drain()``) into
+a fire-and-forget service: ``server.start()`` spawns the driver,
+``submit()`` becomes a thread-safe enqueue that wakes it, and callers
+overlap their own work with device execution, collecting answers through
+``concurrent.futures``-style :class:`~repro.serve.server.Ticket`
+semantics (``add_done_callback``, blocking ``result(timeout=)``, and
+:func:`as_completed`).
+
+The driver holds the server's lock only for the duration of one loop
+iteration, so submissions interleave with (at worst one segment of)
+device execution.  When the server goes idle the thread parks on the
+server's condition variable until the next submission — no busy spin.
+A driver that dies on an unexpected exception records it, wakes every
+blocked ``result()`` caller, and the error propagates to them (and to
+the next ``submit``) instead of silently stalling all deadlines.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Iterable, Iterator, Optional
+
+#: how long an idle driver parks between wake-up checks.  Wake-ups are
+#: notified (submit/stop), so this is only a backstop for clocks the
+#: condition variable cannot see (e.g. test-controlled manual clocks).
+IDLE_WAIT_S = 0.05
+
+
+class DriverDead(RuntimeError):
+    """The background driver thread died on an exception.
+
+    Raised to ``Ticket.result()`` callers (and subsequent ``submit``
+    attempts) with the driver's original exception as ``__cause__`` —
+    a dead driver must surface loudly, not stall every in-flight
+    deadline.
+    """
+
+
+class ServeDriver(threading.Thread):
+    """Daemon thread running ``server.step()`` while there is work.
+
+    Lifecycle is owned by the server: ``AnytimeServer.start()`` builds
+    and starts one, ``AnytimeServer.stop()`` signals it, joins it, then
+    flushes still-admitted requests to their last boundary readouts.
+    """
+
+    _seq = 0
+
+    def __init__(self, server, idle_wait_s: float = IDLE_WAIT_S):
+        ServeDriver._seq += 1
+        super().__init__(name=f"repro-serve-driver-{ServeDriver._seq}",
+                         daemon=True)
+        self._server = server
+        self._idle_wait_s = float(idle_wait_s)
+        self._stop_requested = threading.Event()
+        self.exception: Optional[BaseException] = None
+
+    # -- control -----------------------------------------------------------
+
+    @property
+    def stopping(self) -> bool:
+        return self._stop_requested.is_set()
+
+    def request_stop(self) -> None:
+        """Ask the loop to exit after its current iteration and wake it
+        if parked."""
+        self._stop_requested.set()
+        with self._server._cond:
+            self._server._cond.notify_all()
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self) -> None:  # pragma: no cover - exercised via threads
+        server = self._server
+        try:
+            while not self._stop_requested.is_set():
+                with server._cond:
+                    if not server.busy:
+                        if self._stop_requested.is_set():
+                            break
+                        # park until submit()/stop() notifies (timeout is
+                        # a backstop, not a poll — see IDLE_WAIT_S)
+                        server._cond.wait(self._idle_wait_s)
+                        if not server.busy:
+                            continue
+                server.step()
+        except BaseException as e:  # noqa: BLE001 - must surface to callers
+            self.exception = e
+            with server._cond:
+                server._cond.notify_all()  # wake blocked result() waits
+
+
+def as_completed(tickets: Iterable, timeout: Optional[float] = None) -> Iterator:
+    """Yield tickets as their results arrive (``concurrent.futures``
+    style), regardless of completion order.
+
+    Works in both serving modes: with a running driver it blocks on the
+    server's condition variable; without one it drives the cooperative
+    loop itself.  Raises :class:`TimeoutError` if ``timeout`` seconds
+    elapse with tickets still pending, and :class:`DriverDead` if a
+    driver thread died with requests outstanding.
+    """
+    pending = list(tickets)
+    t_end = None if timeout is None else time.monotonic() + timeout
+    while pending:
+        still = []
+        for t in pending:
+            if t.done:
+                yield t
+            else:
+                still.append(t)
+        pending = still
+        if not pending:
+            break
+        if t_end is not None and time.monotonic() >= t_end:
+            raise TimeoutError(
+                f"{len(pending)} ticket(s) pending after {timeout} s")
+        # make progress: cooperatively step driverless servers, then
+        # block on one threaded server's condition until something lands
+        servers = []
+        for t in pending:
+            if t._server not in servers:
+                servers.append(t._server)
+        threaded = [s for s in servers if s.driver_running]
+        for s in servers:
+            if not s.driver_running:
+                s._raise_if_driver_dead()
+                if not s.step() and any(
+                        not t.done for t in pending if t._server is s):
+                    raise RuntimeError(
+                        "server idle with tickets still undelivered")
+        if threaded:
+            srv = threaded[0]
+            if len(servers) > 1:
+                # other servers may deliver without notifying THIS
+                # condition: bound the wait
+                wait_s: Optional[float] = IDLE_WAIT_S
+            elif t_end is not None:
+                wait_s = max(0.0, t_end - time.monotonic())
+            else:
+                wait_s = None
+            with srv._cond:
+                # predicate checked under the lock: a delivery landing
+                # between the scan above and this wait cannot be lost
+                srv._cond.wait_for(
+                    lambda: any(t.done for t in pending)
+                    or not srv.driver_running,
+                    timeout=wait_s,
+                )
+            srv._raise_if_driver_dead()

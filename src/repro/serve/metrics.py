@@ -16,6 +16,7 @@ server under load.
 from __future__ import annotations
 
 import collections
+import threading
 from typing import Optional
 
 import numpy as np
@@ -33,15 +34,29 @@ class ServeMetrics:
 
     def __init__(self, window: int = 100_000):
         self._window = int(window)
+        # internal lock: the threaded driver records deliveries while
+        # monitoring threads call snapshot() — deque iteration during a
+        # concurrent append raises, so all access serializes here (the
+        # server lock does NOT cover callers of snapshot())
+        self._lock = threading.Lock()
         self.reset()
 
     def reset(self) -> None:
+        with self._lock:
+            self._reset_locked()
+
+    def _reset_locked(self) -> None:
         self.submitted = 0
         self.delivered = 0
         self.completed = 0
         self.deadline_hits = 0
+        self.degraded_requests = 0
         self.dispatches = 0
         self.steps_at_deadline: collections.deque[int] = collections.deque(
+            maxlen=self._window)
+        # effective step budgets of delivered requests (== total_steps
+        # when not degraded): the admission="degrade" frontier metric
+        self.budget_at_deadline: collections.deque[int] = collections.deque(
             maxlen=self._window)
         self._occ_num = 0.0      # sum of active-slot counts over dispatches
         self._occ_den = 0.0      # sum of capacities over dispatches
@@ -49,21 +64,31 @@ class ServeMetrics:
         self._t_last_delivery: Optional[float] = None
 
     def record_submit(self, now: float) -> None:
-        self.submitted += 1
-        if self._t_first_submit is None:
-            self._t_first_submit = now
+        with self._lock:
+            self.submitted += 1
+            if self._t_first_submit is None:
+                self._t_first_submit = now
 
     def record_dispatch(self, n_active: int, capacity: int) -> None:
-        self.dispatches += 1
-        self._occ_num += n_active
-        self._occ_den += capacity
+        with self._lock:
+            self.dispatches += 1
+            self._occ_num += n_active
+            self._occ_den += capacity
 
-    def record_delivery(self, result, now: float) -> None:
+    def _record_delivery_locked(self, result, now: float) -> None:
         self.delivered += 1
         self.completed += bool(result.completed)
         self.deadline_hits += bool(result.deadline_hit)
+        self.degraded_requests += bool(getattr(result, "degraded", False))
         self.steps_at_deadline.append(int(result.steps_completed))
+        budget = getattr(result, "budget_steps", None)
+        self.budget_at_deadline.append(
+            int(budget) if budget is not None else int(result.total_steps))
         self._t_last_delivery = now
+
+    def record_delivery(self, result, now: float) -> None:
+        with self._lock:
+            self._record_delivery_locked(result, now)
 
     @property
     def wall_s(self) -> float:
@@ -72,12 +97,18 @@ class ServeMetrics:
         return max(0.0, self._t_last_delivery - self._t_first_submit)
 
     def snapshot(self) -> dict:
+        with self._lock:
+            return self._snapshot_locked()
+
+    def _snapshot_locked(self) -> dict:
         steps = np.asarray(list(self.steps_at_deadline), dtype=np.int64)
+        budgets = np.asarray(list(self.budget_at_deadline), dtype=np.int64)
         wall = self.wall_s
         return {
             "submitted": self.submitted,
             "delivered": self.delivered,
             "completed": self.completed,
+            "degraded_requests": self.degraded_requests,
             "deadline_hit_rate": (
                 self.deadline_hits / self.delivered if self.delivered else 0.0
             ),
@@ -85,6 +116,11 @@ class ServeMetrics:
                 "p50": float(np.percentile(steps, 50)) if steps.size else 0.0,
                 "p99": float(np.percentile(steps, 99)) if steps.size else 0.0,
                 "mean": float(steps.mean()) if steps.size else 0.0,
+            },
+            "budget_at_deadline": {
+                "p50": float(np.percentile(budgets, 50)) if budgets.size else 0.0,
+                "p99": float(np.percentile(budgets, 99)) if budgets.size else 0.0,
+                "mean": float(budgets.mean()) if budgets.size else 0.0,
             },
             "slot_occupancy": self._occ_num / self._occ_den if self._occ_den else 0.0,
             "dispatches": self.dispatches,

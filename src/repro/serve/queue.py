@@ -48,6 +48,13 @@ class Request:
     policy: PolicyLike = "backward_squirrel"
     backend: Optional[str] = None
     program: str = "default"
+    #: effective step budget under ``admission="degrade"`` — stamped by
+    #: the server at submit time from the instantaneous lane backlog
+    #: (None = full budget).  The lane caps the slot's plan cursor at
+    #: this many steps, so overload shrinks per-request work instead of
+    #: rejecting or starving; fresh submissions under cleared pressure
+    #: get None again (budgets restore automatically).
+    budget_steps: Optional[int] = None
     # stamped by AdmissionQueue.submit (monotonic clock):
     request_id: int = -1
     t_submit: float = float("nan")
@@ -83,6 +90,14 @@ class Result:
     deadline_hit: bool    # delivered a >=1-step anytime readout (or completed)
     latency_ms: float
     error: Optional[str] = None
+    #: admission="degrade" bookkeeping: ``degraded`` marks a request
+    #: admitted with a shrunken step budget; ``budget_steps`` is the
+    #: effective budget it ran under (== total_steps when not degraded).
+    #: A degraded readout is still a clean boundary — bit-identical to a
+    #: solo session advanced ``steps_completed`` steps — just from a
+    #: shorter prefix of the order.
+    degraded: bool = False
+    budget_steps: Optional[int] = None
 
 
 class AdmissionQueue:

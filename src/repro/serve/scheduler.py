@@ -52,6 +52,8 @@ class Delivery(NamedTuple):
 
     ``proba`` is None when the request never reached a harvested
     boundary — the server substitutes the program's prior readout.
+    ``budget`` is the effective step budget the request ran under
+    (None = the full plan; set when admitted with a degrade cap).
     """
 
     request: Request
@@ -59,6 +61,7 @@ class Delivery(NamedTuple):
     steps: int
     completed: bool
     error: Optional[str] = None
+    budget: Optional[int] = None
 
 
 class ForestLane:
@@ -99,12 +102,15 @@ class ForestLane:
 
     def admit(self, request: Request) -> bool:
         """Place ``request`` into a free slot (joining the batch at the
-        next segment boundary); False when the lane is full."""
+        next segment boundary); False when the lane is full.  A request
+        carrying a degrade ``budget_steps`` gets its slot's plan cursor
+        capped there — it stops at that exact prefix boundary and the
+        slot recycles early."""
         slots = self.batch.open_slots()
         if not slots:
             return False
         slot = slots[0]
-        self.batch.admit(slot, request.x)
+        self.batch.admit(slot, request.x, budget=request.budget_steps)
         self.requests[slot] = request
         return True
 
@@ -136,12 +142,46 @@ class ForestLane:
             host = self._host
             host_valid = host is not None and host.owner[slot] == req.request_id
             steps = int(host.pos[slot]) if host_valid else 0
-            done = host_valid and steps >= self.batch.total_steps
+            total = self.batch.total_steps
+            target = int(self.batch.budget[slot])  # == total unless degraded
+            done = host_valid and steps >= target
             if done or req.t_deadline <= now:
                 proba = np.array(host.probs[slot]) if host_valid else None
-                out.append(Delivery(req, proba, steps, done))
+                out.append(Delivery(
+                    req, proba, steps, done and steps >= total,
+                    budget=target if target < total else None,
+                ))
                 self.batch.retire(slot)
                 self.requests[slot] = None
+        return out
+
+    def flush(self) -> list[Delivery]:
+        """Shutdown drain: materialize the NEWEST device boundary (the
+        in-flight front dispatch included — the device has already been
+        asked for it) and retire every slot with that readout.  Called
+        by ``AnytimeServer.stop()`` so every in-flight request is
+        answered at its last segment boundary."""
+        newest = self._front if self._front is not None else self._back
+        if newest is not None:
+            self._host = _Boundary(
+                np.asarray(newest.probs), newest.pos, newest.owner)
+        self._back = self._front = None
+        out: list[Delivery] = []
+        for slot, req in enumerate(self.requests):
+            if req is None:
+                continue
+            host = self._host
+            host_valid = host is not None and host.owner[slot] == req.request_id
+            steps = int(host.pos[slot]) if host_valid else 0
+            total = self.batch.total_steps
+            target = int(self.batch.budget[slot])
+            proba = np.array(host.probs[slot]) if host_valid else None
+            out.append(Delivery(
+                req, proba, steps, steps >= total,
+                budget=target if target < total else None,
+            ))
+            self.batch.retire(slot)
+            self.requests[slot] = None
         return out
 
 
@@ -183,21 +223,33 @@ class SessionLane:
             return False
         kwargs = {} if self.backend is None else {"backend": self.backend}
         sess = self.runtime.session(request.x, order=self.order, **kwargs)
+        total = int(sess.total_steps)
+        budget = total
+        if request.budget_steps is not None:
+            budget = max(1, min(int(request.budget_steps), total))
         self.entries.append({
             "request": request,
             "session": sess,
             "proba": np.asarray(sess.predict_proba()),  # 0-step prior boundary
             "steps": 0,
+            "budget": budget,  # degrade cap; == total when not degraded
         })
         return True
 
     def dispatch(self) -> int:
         stepped = 0
         for e in self.entries:
-            if e["session"].remaining:
-                e["session"].advance(self.chunk)
+            left = min(e["session"].remaining, e["budget"] - e["session"].pos)
+            if left > 0:
+                e["session"].advance(min(self.chunk, left))
                 stepped += 1
         return stepped
+
+    def _delivery(self, e: dict, completed: bool) -> Delivery:
+        total = e["session"].total_steps
+        budget = e["budget"] if e["budget"] < total else None
+        return Delivery(
+            e["request"], e["proba"], e["steps"], completed, budget=budget)
 
     def harvest(self, now: float) -> list[Delivery]:
         out: list[Delivery] = []
@@ -205,19 +257,28 @@ class SessionLane:
         for e in self.entries:
             req, sess = e["request"], e["session"]
             if req.t_deadline <= now:
-                out.append(Delivery(
-                    req, e["proba"], e["steps"],
-                    completed=e["steps"] >= sess.total_steps,
-                ))
+                out.append(self._delivery(e, e["steps"] >= sess.total_steps))
                 continue
             # refresh the boundary readout to the state after dispatch
             e["proba"] = np.asarray(sess.predict_proba())
             e["steps"] = int(sess.pos)
-            if sess.remaining == 0:
-                out.append(Delivery(req, e["proba"], e["steps"], completed=True))
+            if sess.remaining == 0 or e["steps"] >= e["budget"]:
+                out.append(self._delivery(e, sess.remaining == 0))
                 continue
             kept.append(e)
         self.entries = kept
+        return out
+
+    def flush(self) -> list[Delivery]:
+        """Shutdown drain: refresh every session's boundary readout and
+        retire it there (``AnytimeServer.stop()`` semantics)."""
+        out: list[Delivery] = []
+        for e in self.entries:
+            sess = e["session"]
+            e["proba"] = np.asarray(sess.predict_proba())
+            e["steps"] = int(sess.pos)
+            out.append(self._delivery(e, sess.remaining == 0))
+        self.entries = []
         return out
 
 
@@ -398,7 +459,8 @@ class Scheduler:
                 # already expired (zero-deadline or stale): the prior
                 # readout needs no lane — don't pay order generation or
                 # slot-batch construction for a request that cannot run
-                deliveries.append(Delivery(req, None, 0, False))
+                deliveries.append(
+                    Delivery(req, None, 0, False, budget=req.budget_steps))
                 continue
             try:
                 key = self._lane_key(req)
@@ -419,7 +481,9 @@ class Scheduler:
                     # expired while queued (or zero-deadline): prior
                     # readout, 0 steps
                     heapq.heappop(heap)
-                    deliveries.append(Delivery(head, None, 0, False))
+                    deliveries.append(
+                        Delivery(head, None, 0, False,
+                                 budget=head.budget_steps))
                     continue
                 try:
                     admitted = lane.admit(head)
@@ -448,8 +512,8 @@ class Scheduler:
            capacity for the next admission round.
         """
         for lane in sorted(
-            (l for l in self.lanes.values() if l.busy),
-            key=lambda l: l.min_deadline(),
+            (ln for ln in self.lanes.values() if ln.busy),
+            key=lambda ln: ln.min_deadline(),
         ):
             stepped = lane.dispatch()
             if stepped:
@@ -461,4 +525,26 @@ class Scheduler:
         for lane in self.lanes.values():
             deliveries.extend(lane.harvest(now))
         self._evict_idle_lanes()
+        return deliveries
+
+    def flush(self, queue: AdmissionQueue) -> list[Delivery]:
+        """Shutdown drain (``AnytimeServer.stop()``): answer EVERY
+        admitted request now — queued and slot-waiting requests get the
+        prior (0-step) readout, in-flight slots their last segment
+        boundary.  No new work is dispatched."""
+        deliveries: list[Delivery] = []
+        while True:
+            req = queue.pop()
+            if req is None:
+                break
+            self._note_dequeued(req)
+            deliveries.append(
+                Delivery(req, None, 0, False, budget=req.budget_steps))
+        for heap in self._waiting.values():
+            deliveries.extend(
+                Delivery(req, None, 0, False, budget=req.budget_steps)
+                for _, _, req in heap)
+        self._waiting.clear()
+        for lane in self.lanes.values():
+            deliveries.extend(lane.flush())
         return deliveries

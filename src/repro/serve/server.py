@@ -11,10 +11,25 @@ is answered with the last segment-boundary readout the host had seen at
 its deadline: bit-identical to a solo ``jnp-ref`` session advanced the
 same number of steps, never a torn mid-segment state.
 
+Two ways to drive the loop:
+
+*cooperative* (the PR-3 shape) — the caller pumps it::
+
     server = AnytimeServer(runtime, capacity=16)
     tickets = [server.submit(x, deadline_ms=2.0) for x in rows]
     server.drain()
     preds = [t.result().prediction for t in tickets]
+
+*threaded* — ``start()`` (or the context manager) hands the loop to a
+background :class:`~repro.serve.driver.ServeDriver` thread, ``submit``
+becomes a thread-safe fire-and-forget enqueue, and tickets behave like
+``concurrent.futures`` futures (``add_done_callback``, blocking
+``result(timeout=)``, :func:`~repro.serve.driver.as_completed`)::
+
+    with AnytimeServer(runtime, capacity=16) as server:
+        tickets = [server.submit(x, deadline_ms=2.0) for x in rows]
+        ...caller's own work overlaps device execution here...
+        preds = [t.result(timeout=5.0).prediction for t in tickets]
 
 Programs are pluggable: forests serve through masked slot batches
 (:class:`~repro.schedule.runtime.SessionBatch`); any other
@@ -24,12 +39,14 @@ per-request session lanes by the same loop, queue, and metrics.
 """
 from __future__ import annotations
 
+import threading
 import time
-from typing import Optional, Sequence, Union
+from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.schedule.runtime import AnytimeRuntime
+from repro.serve.driver import DriverDead, ServeDriver
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import (
     AdmissionQueue,
@@ -41,21 +58,36 @@ from repro.serve.queue import (
 from repro.serve.scheduler import Delivery, Scheduler
 
 
+def _invoke_callback(fn: Callable, ticket: "Ticket") -> None:
+    """Run one done-callback; a raising callback must not kill the
+    serving loop (``concurrent.futures`` semantics)."""
+    try:
+        fn(ticket)
+    except Exception:  # noqa: BLE001 - callbacks fail alone
+        import traceback
+
+        traceback.print_exc()
+
+
 class Ticket:
     """Handle to an in-flight request; resolves to a :class:`Result`.
 
+    ``concurrent.futures``-style: ``done``, blocking ``result(timeout=)``
+    and ``add_done_callback(fn)`` (fired exactly once with the ticket,
+    immediately if already done, from the delivering thread otherwise).
     Delivery writes the result directly onto the ticket (the server
     tracks only PENDING tickets), so a long-lived server's memory holds
     results exactly as long as their callers hold the tickets — whether
     collected via ``result()`` or via ``drain()``'s return value.
     """
 
-    __slots__ = ("_server", "request", "_result")
+    __slots__ = ("_server", "request", "_result", "_callbacks")
 
     def __init__(self, server: "AnytimeServer", request: Request):
         self._server = server
         self.request = request
         self._result: Optional[Result] = None
+        self._callbacks: list[Callable] = []
 
     @property
     def request_id(self) -> int:
@@ -65,11 +97,51 @@ class Ticket:
     def done(self) -> bool:
         return self._result is not None
 
-    def result(self) -> Result:
-        """The request's result, driving the server loop if needed."""
+    def add_done_callback(self, fn: Callable) -> None:
+        """Call ``fn(ticket)`` exactly once when the result lands —
+        immediately if it already has."""
+        with self._server._lock:
+            if self._result is None:
+                self._callbacks.append(fn)
+                return
+        _invoke_callback(fn, self)
+
+    def result(self, timeout: Optional[float] = None) -> Result:
+        """The request's result.
+
+        With a background driver running this blocks on the server's
+        condition variable (no spinning, no loop-driving) until delivery,
+        ``timeout`` seconds elapse (:class:`TimeoutError`), or the driver
+        thread dies (:class:`~repro.serve.driver.DriverDead`, carrying
+        the thread's exception as ``__cause__``).  Without a driver it
+        drives the cooperative loop itself, as before.
+        """
+        if self._result is not None:
+            return self._result
+        srv = self._server
+        if srv.driver_running:
+            with srv._cond:
+                # a clean stop() is NOT a wake condition: its shutdown
+                # flush answers every admitted request and notifies —
+                # waking on "driver not running" would race that flush
+                # into a spurious error.  Only delivery, driver death,
+                # or the timeout end this wait.
+                srv._cond.wait_for(
+                    lambda: self._result is not None or srv._driver_failed,
+                    timeout=timeout,
+                )
+            if self._result is None:
+                srv._raise_if_driver_dead()
+                raise TimeoutError(
+                    f"request {self.request_id} undelivered after "
+                    f"{timeout} s"
+                )
+            return self._result
+        # cooperative mode: drive the loop until delivered
         while self._result is None:
-            if not self._server.step() and self._result is None:
-                raise RuntimeError(  # pragma: no cover - defensive
+            srv._raise_if_driver_dead()
+            if not srv.step() and self._result is None:
+                raise RuntimeError(
                     f"server idle but request {self.request_id} undelivered"
                 )
         return self._result
@@ -84,16 +156,34 @@ class AnytimeServer:
     step granularity of session lanes (slot lanes use plan segments);
     ``clock`` must be monotonic — injectable for deterministic tests.
 
-    ``admission`` picks the overload policy: ``"edf"`` (default)
-    accepts everything and lets the EDF queue starve whoever it must —
-    a starved request is delivered its prior (0-step) readout;
-    ``"reject"`` sheds load at submission instead, raising
-    :class:`~repro.serve.queue.AdmissionRejected` whenever the
-    submitted request's LANE already has ``capacity * admission_k``
-    requests queued or waiting for a slot (per-lane: flooding one
-    program/policy must not shed load for an idle one) — the admitted
-    population keeps its anytime step quality and callers learn about
-    the overload at submit time rather than from a degraded result.
+    ``admission`` picks the overload policy:
+
+    * ``"edf"`` (default) accepts everything and lets the EDF queue
+      starve whoever it must — a starved request is delivered its prior
+      (0-step) readout;
+    * ``"reject"`` sheds load at submission instead, raising
+      :class:`~repro.serve.queue.AdmissionRejected` whenever the
+      submitted request's LANE already has ``capacity * admission_k``
+      requests queued or waiting for a slot (per-lane: flooding one
+      program/policy must not shed load for an idle one) — the admitted
+      population keeps its anytime step quality and callers learn about
+      the overload at submit time rather than from a degraded result;
+    * ``"degrade"`` accepts everything but shrinks the effective
+      per-request step budget once the lane backlog passes the same
+      ``capacity * admission_k`` bound — slots stop at a shorter exact
+      prefix boundary and recycle early, trading steps-at-deadline
+      against hit-rate smoothly instead of starving or rejecting.
+      Budgets are stamped from the instantaneous backlog at submit, so
+      they restore to the full plan as soon as pressure clears.
+      Delivered results carry ``degraded``/``budget_steps``; metrics
+      grow ``degraded_requests`` and budget-at-deadline percentiles.
+
+    Threaded serving: ``start()``/``stop()``/``close()`` (or the context
+    manager) run the dispatch → admit → harvest loop on a background
+    :class:`~repro.serve.driver.ServeDriver`; ``submit`` is then a
+    thread-safe enqueue that wakes the driver.  ``stop()`` drains
+    in-flight slots to their last segment-boundary readout, so every
+    admitted request is answered on shutdown.
     """
 
     def __init__(
@@ -113,9 +203,10 @@ class AnytimeServer:
             runtimes.setdefault("default", runtime)
         if not runtimes:
             raise ValueError("AnytimeServer needs a runtime or a programs dict")
-        if admission not in ("edf", "reject"):
+        if admission not in ("edf", "reject", "degrade"):
             raise ValueError(
-                f"admission must be 'edf' or 'reject', got {admission!r}"
+                "admission must be 'edf', 'reject' or 'degrade', "
+                f"got {admission!r}"
             )
         if admission_k <= 0:
             raise ValueError(f"admission_k must be > 0, got {admission_k}")
@@ -130,6 +221,97 @@ class AnytimeServer:
         )
         self._pending: dict[int, Ticket] = {}   # awaiting delivery
         self._drain_buffer: Optional[list[Result]] = None
+        self._step_seq = 0    # loop iterations served (threaded drain bound)
+        # threading: ONE lock guards queue/scheduler/pending/metrics;
+        # the condition (same lock) signals deliveries and submissions
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._driver: Optional[ServeDriver] = None
+        self._driver_error: Optional[BaseException] = None
+        self._closed = False
+
+    # -- driver lifecycle --------------------------------------------------
+
+    @property
+    def driver_running(self) -> bool:
+        """Whether a live background driver currently owns the loop."""
+        driver = self._driver
+        return (
+            driver is not None and driver.is_alive()
+            and driver.exception is None
+        )
+
+    @property
+    def _driver_failed(self) -> bool:
+        driver = self._driver
+        return self._driver_error is not None or (
+            driver is not None and driver.exception is not None
+        )
+
+    def _raise_if_driver_dead(self) -> None:
+        err = self._driver_error
+        if err is None and self._driver is not None:
+            err = self._driver.exception
+        if err is not None:
+            self._driver_error = err
+            raise DriverDead(
+                f"serving driver thread died: {err!r}") from err
+
+    def start(self) -> "AnytimeServer":
+        """Spawn the background driver (idempotent while it is alive)."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("AnytimeServer is closed")
+            self._raise_if_driver_dead()
+            if self._driver is None or not self._driver.is_alive():
+                self._driver = ServeDriver(self)
+                self._driver.start()
+        return self
+
+    def stop(self, timeout: Optional[float] = 10.0) -> list[Result]:
+        """Stop the driver and answer EVERY still-admitted request at
+        its last completed segment-boundary readout (queued requests get
+        the prior).  Returns the results delivered by this final flush.
+        Safe to call without a driver (pure flush) and more than once.
+        """
+        driver, self._driver = self._driver, None
+        if driver is not None:
+            driver.request_stop()
+            driver.join(timeout)
+            if driver.is_alive():  # pragma: no cover - defensive
+                self._driver = driver
+                raise RuntimeError("serving driver failed to stop in time")
+            if driver.exception is not None:
+                self._driver_error = driver.exception
+        callbacks: list[tuple[Callable, Ticket]] = []
+        flushed: list[Result] = []
+        with self._cond:
+            now = self.clock()
+            for d in self.scheduler.flush(self.queue):
+                res, cbs = self._finalize(d, now)
+                flushed.append(res)
+                callbacks.extend(cbs)
+            self._cond.notify_all()
+        for fn, ticket in callbacks:
+            _invoke_callback(fn, ticket)
+        return flushed
+
+    def close(self) -> None:
+        """``stop()`` + reject all future submissions.
+
+        The closed flag is set FIRST (under the lock), so no submit can
+        slip in between the shutdown flush and the flag — everything
+        admitted before close() is answered by the flush, everything
+        after raises."""
+        with self._lock:
+            self._closed = True
+        self.stop()
+
+    def __enter__(self) -> "AnytimeServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- submission --------------------------------------------------------
 
@@ -141,37 +323,63 @@ class AnytimeServer:
         backend: Optional[str] = None,
         program: str = "default",
     ) -> Ticket:
-        """Enqueue one request; returns a :class:`Ticket` immediately."""
+        """Enqueue one request; returns a :class:`Ticket` immediately.
+        Thread-safe; wakes the background driver if one is running."""
         return self.submit_request(Request(
             x=x, deadline_ms=deadline_ms, policy=policy,
             backend=backend, program=program,
         ))
 
     def submit_request(self, request: Request) -> Ticket:
-        if request.program not in self.scheduler.runtimes:
-            raise ValueError(
-                f"unknown program {request.program!r}; serving: "
-                f"{', '.join(self.scheduler.runtimes)}"
-            )
-        if self.admission == "reject":
-            # per-lane: flooding one (program, policy, backend) lane
-            # must not shed load for an idle one
-            backlog = self.scheduler.lane_backlog(request)
-            bound = self.scheduler.capacity * self.admission_k
-            if backlog >= bound:
-                raise AdmissionRejected(
-                    f"lane backlog {backlog} >= capacity "
-                    f"{self.scheduler.capacity} x admission_k "
-                    f"{self.admission_k}; shed load instead of starving "
-                    "admitted requests to prior readouts"
+        with self._cond:
+            if self._closed:
+                raise RuntimeError(
+                    "submit on a closed AnytimeServer (close() was called)")
+            self._raise_if_driver_dead()
+            if request.program not in self.scheduler.runtimes:
+                raise ValueError(
+                    f"unknown program {request.program!r}; serving: "
+                    f"{', '.join(self.scheduler.runtimes)}"
                 )
-        now = self.clock()
-        self.queue.submit(request, now)
-        self.scheduler.note_queued(request)
-        self.metrics.record_submit(now)
-        ticket = Ticket(self, request)
-        self._pending[request.request_id] = ticket
-        return ticket
+            if self.admission == "reject":
+                # per-lane: flooding one (program, policy, backend) lane
+                # must not shed load for an idle one
+                backlog = self.scheduler.lane_backlog(request)
+                bound = self.scheduler.capacity * self.admission_k
+                if backlog >= bound:
+                    raise AdmissionRejected(
+                        f"lane backlog {backlog} >= capacity "
+                        f"{self.scheduler.capacity} x admission_k "
+                        f"{self.admission_k}; shed load instead of starving "
+                        "admitted requests to prior readouts"
+                    )
+            elif self.admission == "degrade":
+                request.budget_steps = self._degrade_budget(request)
+            now = self.clock()
+            self.queue.submit(request, now)
+            self.scheduler.note_queued(request)
+            self.metrics.record_submit(now)
+            ticket = Ticket(self, request)
+            self._pending[request.request_id] = ticket
+            self._cond.notify_all()   # wake a parked driver
+            return ticket
+
+    def _degrade_budget(self, request: Request) -> Optional[int]:
+        """Effective step budget under ``admission="degrade"``: the full
+        plan while the lane backlog is under ``capacity * admission_k``,
+        then shrinking as ``bound / backlog`` — with a floor of one
+        unit's steps so every admitted request can complete at least one
+        whole tree.  Computed from the INSTANTANEOUS backlog, so budgets
+        restore automatically when pressure clears."""
+        backlog = self.scheduler.lane_backlog(request)
+        bound = self.scheduler.capacity * self.admission_k
+        if backlog < bound:
+            return None
+        total = self.scheduler.total_steps(request)
+        program = self.scheduler.runtimes[request.program].program
+        floor_steps = max(1, int(program.unit_steps))
+        budget = int(total * bound / (backlog + 1))
+        return max(floor_steps, min(budget, total))
 
     # -- the driver loop ---------------------------------------------------
 
@@ -181,18 +389,44 @@ class AnytimeServer:
 
     def step(self) -> bool:
         """One dispatch → admit → harvest iteration; returns whether any
-        work remains."""
-        now = self.clock()
-        deliveries = self.scheduler.step(self.queue, now)
-        if deliveries:
-            t_done = self.clock()
-            for d in deliveries:
-                self._finalize(d, t_done)
-        return self.busy
+        work remains.  Called by the background driver when one is
+        running, by the caller otherwise (both paths lock-guarded, so a
+        stray cooperative ``step`` alongside a driver is safe)."""
+        callbacks: list[tuple[Callable, Ticket]] = []
+        with self._cond:
+            now = self.clock()
+            self._step_seq += 1
+            deliveries = self.scheduler.step(self.queue, now)
+            if deliveries:
+                t_done = self.clock()
+                for d in deliveries:
+                    callbacks.extend(self._finalize(d, t_done)[1])
+            still_busy = self.busy
+            # notify EVERY iteration, not just delivering ones: the
+            # busy -> idle transition can happen in a later, delivery-
+            # less step (a lane's in-flight boundary draining), and a
+            # threaded drain() parked on "not busy" must see it
+            self._cond.notify_all()
+        for fn, ticket in callbacks:
+            _invoke_callback(fn, ticket)
+        return still_busy
 
     def drain(self, max_steps: Optional[int] = None) -> list[Result]:
         """Run the loop until idle; returns results delivered during the
-        drain, in delivery order."""
+        drain, in delivery order.  With a background driver running this
+        instead BLOCKS until the driver has gone idle (or has served
+        ``max_steps`` more loop iterations — the same bound as the
+        cooperative contract) and returns ``[]`` (results live on the
+        tickets)."""
+        if self.driver_running:
+            with self._cond:
+                start = self._step_seq
+                self._cond.wait_for(
+                    lambda: not self.busy or not self.driver_running
+                    or (max_steps is not None
+                        and self._step_seq - start >= max_steps))
+            self._raise_if_driver_dead()
+            return []
         self._drain_buffer = buffer = []
         try:
             steps = 0
@@ -214,7 +448,7 @@ class AnytimeServer:
         program: str = "default",
     ) -> list[Result]:
         """Batch convenience: submit every row, drain, return results in
-        submission order."""
+        submission order.  Works in both serving modes."""
         if np.isscalar(deadline_ms):
             deadline_ms = [float(deadline_ms)] * len(xs)
         if len(deadline_ms) != len(xs):
@@ -233,7 +467,12 @@ class AnytimeServer:
 
     # -- internals ---------------------------------------------------------
 
-    def _finalize(self, d: Delivery, now: float) -> None:
+    def _finalize(
+        self, d: Delivery, now: float
+    ) -> tuple[Result, list[tuple[Callable, Ticket]]]:
+        """Turn a delivery into a :class:`Result` on its ticket (under
+        the server lock) and return the done-callbacks to invoke once
+        the lock is released."""
         req = d.request
         proba, total = d.proba, 0
         try:
@@ -256,10 +495,16 @@ class AnytimeServer:
             ),
             latency_ms=(now - req.t_submit) * 1e3,
             error=d.error,
+            degraded=d.budget is not None,
+            budget_steps=int(d.budget) if d.budget is not None else total,
         )
         ticket = self._pending.pop(req.request_id, None)
+        callbacks: list[tuple[Callable, Ticket]] = []
         if ticket is not None:
             ticket._result = res
+            callbacks = [(fn, ticket) for fn in ticket._callbacks]
+            ticket._callbacks = []
         if self._drain_buffer is not None:
             self._drain_buffer.append(res)
         self.metrics.record_delivery(res, now)
+        return res, callbacks

@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.schedule import get_order_policy
@@ -61,7 +60,7 @@ def quality_table(members: Sequence[EnsembleMember], batch: dict,
         remap = {int(c): i for i, c in enumerate(keep)}
         mask = np.isin(labels, keep)
         pp = pp[mask][..., keep]
-        labels = np.asarray([remap[int(l)] for l in labels[mask]])
+        labels = np.asarray([remap[int(lab)] for lab in labels[mask]])
     return pp, labels
 
 
@@ -164,9 +163,9 @@ class AnytimeEnsembleSession:
                                     m.params.get("lm_head"), h)[:, 0]
         return jax.jit(ro)
 
-    def _layer(self, u: int, l: int):
+    def _layer(self, u: int, layer: int):
         m = self.members[u]
-        lp = jax.tree_util.tree_map(lambda a: a[l], m.params["layers"])
+        lp = jax.tree_util.tree_map(lambda a: a[layer], m.params["layers"])
         if m.cfg.family == "ssm":
             self.hidden[u] = T._mamba_block(m.cfg, lp, self.hidden[u])
         elif m.cfg.family == "moe":

@@ -9,7 +9,6 @@ single-sequence decode.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, Optional
 
@@ -64,7 +63,7 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
         return NamedSharding(mesh, P())
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_like)
-    return jax.tree_util.tree_unflatten(treedef, [mk(p, l) for p, l in flat])
+    return jax.tree_util.tree_unflatten(treedef, [mk(p, leaf) for p, leaf in flat])
 
 
 def abstract_cache(cfg: ModelConfig, batch: int, seq: int, shardings=None):
@@ -74,7 +73,7 @@ def abstract_cache(cfg: ModelConfig, batch: int, seq: int, shardings=None):
     if shardings is None:
         return cache_like
     return jax.tree_util.tree_map(
-        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        lambda leaf, s: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=s),
         cache_like, shardings)
 
 

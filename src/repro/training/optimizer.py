@@ -50,7 +50,8 @@ def init_state(params) -> AdamWState:
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def apply_updates(cfg: AdamWConfig, params, grads, state: AdamWState):

@@ -9,9 +9,8 @@ real arrays on a host mesh.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Callable, Iterator, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

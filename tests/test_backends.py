@@ -112,7 +112,7 @@ def test_step_plan_roundtrip_and_bucketing():
         [[u] * n for u, n in zip(plan.seg_units, plan.seg_lens)])
     np.testing.assert_array_equal(rebuilt, order)
     # every segment length is a power of two <= cap
-    assert all(int(l) & (int(l) - 1) == 0 for l in plan.seg_lens)
+    assert all(int(n) & (int(n) - 1) == 0 for n in plan.seg_lens)
     assert plan.trace_lengths == (1, 2, 4, 8)
     assert plan.total_steps == len(order)
     assert plan.seg_starts[-1] == len(order)

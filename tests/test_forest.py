@@ -1,6 +1,5 @@
 """CART / random-forest substrate invariants."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.forest import make_dataset, split_dataset, train_forest

@@ -5,7 +5,6 @@ d_model<=512, <=4 experts), run one forward + one train step on CPU,
 assert output shapes and no NaNs; decode-capable archs also run one
 serve (prefill + decode) step.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

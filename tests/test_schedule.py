@@ -13,9 +13,7 @@ from repro.schedule import (
     AnytimeRuntime,
     ForestProgram,
     OrderPolicy,
-    Session,
     check_order,
-    evaluate_orders,
     get_order_policy,
     list_orders,
     register_order,

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import engine
 from repro.forest import make_dataset, split_dataset, train_forest
-from repro.schedule import AnytimeRuntime, ForestProgram, SessionBatch
+from repro.schedule import AnytimeRuntime, ForestProgram
 from repro.serve import AdmissionQueue, AdmissionRejected, AnytimeServer, Request
 from repro.serve.scheduler import ForestLane, SessionLane
 
@@ -316,9 +316,105 @@ def test_reject_admission_is_per_lane(runtime, pipeline):
     assert other.result().completed
 
 
+def test_degrade_admission_shrinks_budgets_never_rejects(runtime, pipeline):
+    """admission="degrade": overload shrinks per-request step budgets
+    instead of rejecting; every delivered readout is still an exact
+    prefix boundary — bit-identical to a solo session advanced the same
+    number of steps (never torn)."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    total = len(order)
+    server = AnytimeServer(runtime, capacity=2,
+                           admission="degrade", admission_k=1.0)
+    tickets = [server.submit(te[i % te.shape[0]], 1e9) for i in range(12)]
+    server.drain()
+    results = [t.result() for t in tickets]
+    assert len(results) == 12                      # nothing rejected
+    assert all(r.deadline_hit for r in results)    # nothing starved
+    degraded = [r for r in results if r.degraded]
+    assert degraded                                # pressure did shrink budgets
+    for i, r in enumerate(results):
+        assert 0 < r.budget_steps <= total
+        assert r.steps_completed == r.budget_steps  # ran exactly to budget
+        assert r.completed == (r.steps_completed >= total)
+        solo = _solo(runtime, te[i % te.shape[0]], order, r.steps_completed)
+        np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+        np.testing.assert_array_equal(r.prediction, solo.predict()[0])
+    snap = server.metrics.snapshot()
+    assert snap["degraded_requests"] == len(degraded)
+    assert snap["budget_at_deadline"]["p50"] < total
+
+
+def test_degrade_budgets_restore_when_pressure_clears(runtime, pipeline):
+    """Budgets are stamped from the instantaneous backlog: once the
+    flood drains, a fresh submission gets the full plan again."""
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2,
+                           admission="degrade", admission_k=1.0)
+    for i in range(10):
+        server.submit(te[i % te.shape[0]], 1e9)
+    server.drain()
+    after = server.submit(te[0], 1e9)
+    server.drain()
+    r = after.result()
+    assert not r.degraded and r.completed
+    assert r.steps_completed == r.total_steps == r.budget_steps
+
+
+def test_degrade_dominates_reject_on_hit_rate_at_equal_load(runtime, pipeline):
+    """The frontier the policy exists for: at the same offered load,
+    degrade answers every request with >= 1 step (hit) where reject
+    sheds most of them at submit (miss from the caller's view)."""
+    fa, pp, yor, te, yte = pipeline
+    n = 12
+
+    def flood(server):
+        tickets, attempts = [], 0
+        for i in range(n):
+            attempts += 1
+            try:
+                tickets.append(server.submit(te[i % te.shape[0]], 1e9))
+            except AdmissionRejected:
+                pass
+        server.drain()
+        hits = sum(t.result().deadline_hit for t in tickets)
+        return hits / attempts
+
+    reject_rate = flood(AnytimeServer(
+        runtime, capacity=2, admission="reject", admission_k=1.0))
+    degrade_rate = flood(AnytimeServer(
+        runtime, capacity=2, admission="degrade", admission_k=1.0))
+    assert reject_rate < 1.0
+    assert degrade_rate == 1.0
+    assert degrade_rate > reject_rate
+
+
+def test_session_batch_budget_caps_dispatch(runtime, pipeline):
+    """A budget-capped slot stops dispatching at EXACTLY its budget (an
+    arbitrary step index, not a segment boundary) while an uncapped
+    neighbor runs the full plan."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    sb = runtime.program.make_slot_batch(order, 2, te.shape[1], backend="jnp-ref")
+    budget = sb.total_steps // 2 + 1
+    sb.admit(0, te[0], budget=budget)
+    sb.admit(1, te[1])
+    while sb.stepping_slots().size:
+        sb.advance_segment()
+    assert sb.pos[0] == budget
+    assert sb.pos[1] == sb.total_steps
+    # the capped slot's state is the exact budget-step prefix
+    solo = _solo(runtime, te[0], order, budget)
+    np.testing.assert_array_equal(
+        np.asarray(sb.readout())[0], solo.predict_proba()[0])
+    sb.retire(0)
+    with pytest.raises(ValueError, match="budget"):
+        sb.admit(0, te[0], budget=0)
+
+
 def test_admission_knob_validated_eagerly(runtime):
     with pytest.raises(ValueError, match="admission"):
-        AnytimeServer(runtime, admission="degrade")
+        AnytimeServer(runtime, admission="drop-tail")
     with pytest.raises(ValueError, match="admission_k"):
         AnytimeServer(runtime, admission="reject", admission_k=0)
 

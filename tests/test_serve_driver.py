@@ -1,0 +1,394 @@
+"""Threaded serving: the background ServeDriver, thread-safe submit,
+future-style Ticket semantics, clean shutdown, and the bit-parity
+guarantee under the thread.
+
+This is the suite the CI ``thread-stress`` job loops N times with
+``PYTHONFAULTHANDLER=1`` to shake out races the single-shot tier-1 run
+misses — keep every test here deterministic under repetition (generous
+deadlines, explicit timeouts, no sleeps-as-synchronization for
+correctness-critical assertions)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.forest import make_dataset, split_dataset, train_forest
+from repro.schedule import AnytimeRuntime, ForestProgram
+from repro.serve import AnytimeServer, DriverDead, as_completed
+
+#: generous per-result wait — a stuck driver fails the test, not the run
+WAIT_S = 120.0
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    X, y = make_dataset("magic", seed=1)
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=1)
+    rf = train_forest(tr[:800], ytr[:800], 2, n_trees=4, max_depth=5, seed=1)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx[:200])
+    return fa, pp, yor[:200], te, yte
+
+
+@pytest.fixture(scope="module")
+def runtime(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    return AnytimeRuntime(
+        ForestProgram(fa, y_order=yor, path_probs=pp, X_order=te[:8]))
+
+
+def _solo(runtime, x_row, order, steps):
+    """The jnp-ref oracle: a solo session advanced ``steps`` steps."""
+    sess = runtime.session(
+        np.asarray(x_row)[None, :], order=order, backend="jnp-ref")
+    sess.advance(steps)
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# Parity under the thread (the tentpole acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+BACKEND_OPTS = {
+    "jnp-ref": {},
+    "pallas": {"block_b": 16, "block_m": 8},
+    "sharded": {},
+}
+
+
+@pytest.mark.parametrize("backend", ["jnp-ref", "pallas", "sharded"])
+def test_threaded_parity_matches_solo_oracle(backend, runtime, pipeline):
+    """With the background driver owning the loop, every served
+    prediction is bit-identical to a solo jnp-ref session advanced the
+    same number of steps (pallas readouts to kernel tolerance)."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    with AnytimeServer(runtime, capacity=3,
+                       backend_opts=BACKEND_OPTS[backend]) as server:
+        assert server.driver_running
+        tickets = [server.submit(te[i], 60_000.0, backend=backend)
+                   for i in range(7)]
+        results = [t.result(timeout=WAIT_S) for t in tickets]
+    for i, r in enumerate(results):
+        assert r.completed and r.deadline_hit and r.error is None
+        assert r.steps_completed == r.total_steps == len(order)
+        solo = _solo(runtime, te[i], order, r.steps_completed)
+        np.testing.assert_array_equal(r.prediction, solo.predict()[0])
+        if backend == "pallas":
+            np.testing.assert_allclose(
+                r.proba, solo.predict_proba()[0], rtol=1e-5, atol=1e-5)
+        else:
+            np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+
+
+def test_threaded_degrade_never_returns_torn_readout(runtime, pipeline):
+    """Degrade admission under the driver thread: budgets shrink, but
+    every delivered readout is still an exact prefix boundary."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    with AnytimeServer(runtime, capacity=2, admission="degrade",
+                       admission_k=1.0) as server:
+        tickets = [server.submit(te[i % te.shape[0]], 60_000.0)
+                   for i in range(10)]
+        results = [t.result(timeout=WAIT_S) for t in tickets]
+    assert all(r.deadline_hit for r in results)
+    assert any(r.degraded for r in results)
+    for i, r in enumerate(results):
+        assert r.steps_completed <= r.budget_steps
+        solo = _solo(runtime, te[i % te.shape[0]], order, r.steps_completed)
+        np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: start/stop/close, submit-after-close, mid-drain stop
+# ---------------------------------------------------------------------------
+
+
+def test_context_manager_owns_driver_lifecycle(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    assert not server.driver_running
+    with server as srv:
+        assert srv is server and server.driver_running
+        assert srv.submit(te[0], 60_000.0).result(timeout=WAIT_S).completed
+    assert not server.driver_running
+
+
+def test_submit_after_close_raises(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    with server:
+        pass
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit(te[0], 60_000.0)
+    # close is idempotent; start after close refuses too
+    server.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        server.start()
+
+
+def test_start_is_idempotent(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    try:
+        server.start()
+        driver = server._driver
+        server.start()
+        assert server._driver is driver  # no second thread spawned
+    finally:
+        server.close()
+
+
+def test_stop_mid_flight_answers_every_admitted_request(runtime, pipeline):
+    """Clean shutdown: stop() drains in-flight slots to their last
+    segment-boundary readout and answers queued requests with the prior
+    — no admitted ticket is left pending, and nothing is torn."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    server = AnytimeServer(runtime, capacity=2).start()
+    tickets = [server.submit(te[i % te.shape[0]], 60_000.0)
+               for i in range(8)]
+    time.sleep(0.05)  # let the driver get some requests genuinely in flight
+    done_before_stop = {t.request_id for t in tickets if t.done}
+    flushed = server.stop()
+    # every admitted ticket answered; the flush delivered each remaining
+    # request exactly once and never re-delivered one the driver already
+    # had (together these pin flushed == tickets undelivered at stop —
+    # the in-between window belongs to the driver, so only subset and
+    # disjointness are deterministic)
+    assert all(t.done for t in tickets)
+    flushed_ids = [r.request_id for r in flushed]
+    assert len(flushed_ids) == len(set(flushed_ids))
+    assert set(flushed_ids) <= {t.request_id for t in tickets}
+    assert set(flushed_ids).isdisjoint(done_before_stop)
+    for i, t in enumerate(tickets):
+        r = t.result()
+        assert r.error is None
+        assert 0 <= r.steps_completed <= r.total_steps
+        solo = _solo(runtime, te[i % te.shape[0]], order, r.steps_completed)
+        np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+
+
+def test_stop_without_driver_flushes_cooperative_server(runtime, pipeline):
+    """stop() is also the cooperative shutdown: mid-drain, it answers
+    every admitted request at its last boundary."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    server = AnytimeServer(runtime, capacity=2)
+    tickets = [server.submit(te[i], 60_000.0) for i in range(5)]
+    for _ in range(4):  # a partial drain, then shutdown mid-flight
+        server.step()
+    server.stop()
+    for i, t in enumerate(tickets):
+        r = t.result()
+        assert 0 <= r.steps_completed <= r.total_steps
+        solo = _solo(runtime, te[i], order, r.steps_completed)
+        np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+
+
+def test_drain_blocks_until_idle_in_threaded_mode(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    with AnytimeServer(runtime, capacity=2) as server:
+        tickets = [server.submit(te[i], 60_000.0) for i in range(5)]
+        out = server.drain()
+        assert out == []            # results live on the tickets
+        assert not server.busy
+        assert all(t.done for t in tickets)
+
+
+def test_threaded_drain_returns_after_deadline_expiry():
+    """Deadlock regression: when the LAST deliveries happen at deadline
+    expiry, the busy -> idle transition lands in a later, delivery-less
+    iteration (the lane's in-flight boundary draining) — a threaded
+    drain() parked on the condition must still be woken."""
+    rt = AnytimeRuntime(_SlowProgram())
+    with AnytimeServer(rt, capacity=4, chunk=1) as server:
+        # deadlines fire mid-flight: 12 slow steps (~0.24 s) vs 60 ms
+        tickets = [server.submit(float(i), deadline_ms=60.0)
+                   for i in range(4)]
+        server.drain()              # must return, not hang
+        assert all(t.done for t in tickets)
+        assert all(t.result().steps_completed < 12 for t in tickets)
+
+
+# ---------------------------------------------------------------------------
+# Future semantics: callbacks, as_completed, result(timeout=)
+# ---------------------------------------------------------------------------
+
+
+def test_callbacks_fire_exactly_once_including_already_done(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    calls: list[tuple[str, object]] = []
+    fired = threading.Event()
+    with AnytimeServer(runtime, capacity=2) as server:
+        ticket = server.submit(te[0], 60_000.0)
+        ticket.add_done_callback(lambda t: (calls.append(("live", t)),
+                                            fired.set()))
+        assert fired.wait(WAIT_S)
+        ticket.result(timeout=WAIT_S)
+        # already-done ticket: callback fires immediately, exactly once
+        ticket.add_done_callback(lambda t: calls.append(("late", t)))
+    assert [tag for tag, _ in calls] == ["live", "late"]
+    assert all(t is ticket for _, t in calls)
+
+
+def test_raising_callback_does_not_kill_the_driver(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    with AnytimeServer(runtime, capacity=2) as server:
+        bad = server.submit(te[0], 60_000.0)
+        bad.add_done_callback(lambda t: 1 / 0)
+        assert bad.result(timeout=WAIT_S).completed
+        # the driver survived the raising callback and serves on
+        assert server.submit(te[1], 60_000.0).result(timeout=WAIT_S).completed
+
+
+def test_as_completed_yields_every_ticket(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    with AnytimeServer(runtime, capacity=3) as server:
+        tickets = [server.submit(te[i], 60_000.0) for i in range(6)]
+        seen = list(as_completed(tickets, timeout=WAIT_S))
+    assert set(seen) == set(tickets)
+    assert all(t.done for t in seen)
+
+
+def test_as_completed_drives_cooperative_servers(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)   # never started
+    tickets = [server.submit(te[i], 60_000.0) for i in range(4)]
+    seen = list(as_completed(tickets, timeout=WAIT_S))
+    assert set(seen) == set(tickets)
+
+
+# ---------------------------------------------------------------------------
+# Slow/raising programs: timeouts and driver-death propagation (session
+# lanes — the generic program path — driven by the same thread)
+# ---------------------------------------------------------------------------
+
+
+class _SlowSession:
+    """Fake step backend: each advance sleeps, state == steps taken."""
+
+    sleep_s = 0.02
+
+    def __init__(self, order, inputs):
+        self.order = np.asarray(order)
+        self.inputs = inputs
+        self.pos = 0
+
+    @property
+    def total_steps(self):
+        return len(self.order)
+
+    @property
+    def remaining(self):
+        return self.total_steps - self.pos
+
+    def advance(self, k):
+        k = min(k, self.remaining)
+        time.sleep(self.sleep_s)
+        self.pos += k
+        return k
+
+    def predict_proba(self):
+        return np.asarray([[float(self.pos), float(self.inputs)]])
+
+    def predict(self):
+        return self.predict_proba().argmax(axis=1)
+
+
+class _SlowProgram:
+    """Minimal AnytimeProgram without make_slot_batch -> session lane."""
+
+    n_units = 4
+    unit_steps = 3
+    session_cls = _SlowSession
+
+    def quality_table(self):
+        rng = np.random.default_rng(0)
+        return (rng.random((8, self.n_units, 4, 2)).astype(np.float32),
+                rng.integers(0, 2, 8))
+
+    def make_session(self, order, inputs):
+        return self.session_cls(order, inputs)
+
+
+class _BombSession(_SlowSession):
+    def advance(self, k):
+        raise RuntimeError("boom: device fell over")
+
+
+class _BombProgram(_SlowProgram):
+    session_cls = _BombSession
+
+
+def test_result_timeout_raises_then_succeeds():
+    rt = AnytimeRuntime(_SlowProgram())
+    with AnytimeServer(rt, capacity=1, chunk=1) as server:
+        ticket = server.submit(5.0, 60_000.0)
+        with pytest.raises(TimeoutError):
+            ticket.result(timeout=0.01)
+        r = ticket.result(timeout=WAIT_S)
+        assert r.completed and r.steps_completed == 12
+
+
+def test_driver_death_propagates_to_waiters_and_submitters():
+    rt = AnytimeRuntime(_BombProgram())
+    server = AnytimeServer(rt, capacity=1, chunk=1).start()
+    ticket = server.submit(5.0, 60_000.0)
+    with pytest.raises(DriverDead) as excinfo:
+        ticket.result(timeout=WAIT_S)
+    assert "boom" in repr(excinfo.value.__cause__)
+    with pytest.raises(DriverDead):
+        server.submit(6.0, 60_000.0)
+    # shutdown still answers the stranded ticket (last known boundary)
+    flushed = server.stop()
+    assert any(r.request_id == ticket.request_id for r in flushed)
+
+
+# ---------------------------------------------------------------------------
+# Thread-safety: concurrent submitters against one driver
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_submitters_all_served_exactly_once(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    n_threads, per_thread = 4, 5
+    results: dict[int, list] = {}
+    errors: list[BaseException] = []
+
+    def submitter(tid: int) -> None:
+        try:
+            tickets = [
+                runtime_server.submit(
+                    te[(tid * per_thread + j) % te.shape[0]], 60_000.0)
+                for j in range(per_thread)
+            ]
+            results[tid] = [t.result(timeout=WAIT_S) for t in tickets]
+        except BaseException as e:  # noqa: BLE001 - surfaced below
+            errors.append(e)
+
+    with AnytimeServer(runtime, capacity=4) as runtime_server:
+        threads = [threading.Thread(target=submitter, args=(tid,))
+                   for tid in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(WAIT_S)
+        snap = runtime_server.metrics.snapshot()
+    assert not errors
+    delivered = [r for rs in results.values() for r in rs]
+    assert len(delivered) == n_threads * per_thread
+    assert all(r.completed and r.error is None for r in delivered)
+    # every request got a distinct id and was delivered exactly once
+    assert len({r.request_id for r in delivered}) == len(delivered)
+    assert snap["delivered"] == len(delivered)
+    for tid, rs in results.items():
+        for j, r in enumerate(rs):
+            solo = _solo(runtime,
+                         te[(tid * per_thread + j) % te.shape[0]],
+                         order, r.steps_completed)
+            np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])

@@ -11,7 +11,6 @@ import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 from repro.launch.roofline import parse_collective_bytes, RooflineTerms

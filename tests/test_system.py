@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import AnytimeForest, engine
-from repro.core.metrics import mean_accuracy, normalized_mean_accuracy
+from repro.core.metrics import normalized_mean_accuracy
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.schedule import get_order_policy, list_orders
 

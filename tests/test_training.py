@@ -1,5 +1,4 @@
 """Optimizer, schedule, data pipeline and end-to-end training behaviour."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
