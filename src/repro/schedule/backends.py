@@ -51,6 +51,24 @@ from repro.core import engine
 from repro.kernels import ops as kops
 from repro.launch import mesh as mesh_lib
 
+__all__ = [
+    "check_order",
+    "rle_chunks",
+    "pow2_floor",
+    "pow2_decompose",
+    "StepPlan",
+    "register_backend",
+    "get_backend",
+    "list_backends",
+    "default_backend",
+    "ExecutorCore",
+    "ForestExecutor",
+    "JnpRefExecutor",
+    "PallasExecutor",
+    "ShardedExecutor",
+    "ForestStepBackend",
+]
+
 
 def check_order(order: np.ndarray, n_units: int, unit_steps: int) -> np.ndarray:
     """Validate a step order, raising a ValueError that names the first

@@ -31,6 +31,25 @@ import numpy as np
 # module level — repro.core.anytime depends on this registry, so a
 # top-level import here would be circular.
 
+__all__ = [
+    "OrderPolicy",
+    "register_order",
+    "list_orders",
+    "get_order_policy",
+    "iter_policies",
+    "PRUNE_METRICS",
+    "OptimalOrder",
+    "UnoptimalOrder",
+    "ForwardSquirrelOrder",
+    "BackwardSquirrelOrder",
+    "RandomOrder",
+    "DepthOrder",
+    "BreadthOrder",
+    "PruneOrder",
+    "QwycOrder",
+    "BanditSquirrelOrder",
+]
+
 
 @dataclasses.dataclass
 class OrderPolicy:
@@ -180,6 +199,8 @@ class BackwardSquirrelOrder(OrderPolicy):
 @register_order("random")
 @dataclasses.dataclass
 class RandomOrder(OrderPolicy):
+    """Uniformly random (seeded) valid order — the paper's floor baseline."""
+
     seed: int = 0
 
     def generate(self, path_probs, y):

@@ -54,10 +54,12 @@ class ServeDriver(threading.Thread):
         ServeDriver._seq += 1
         super().__init__(name=f"repro-serve-driver-{ServeDriver._seq}",
                          daemon=True)
-        self._server = server
-        self._idle_wait_s = float(idle_wait_s)
-        self._stop_requested = threading.Event()
-        self.exception: Optional[BaseException] = None
+        self._server = server        # unguarded: bound once, never reassigned
+        self._idle_wait_s = float(idle_wait_s)  # unguarded: immutable config
+        # Event is internally synchronized
+        self._stop_requested = threading.Event()  # unguarded: Event syncs itself
+        # write-once from the (single) driver thread, then only read
+        self.exception: Optional[BaseException] = None  # unguarded: write-once latch
 
     # -- control -----------------------------------------------------------
 

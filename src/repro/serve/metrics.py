@@ -33,7 +33,7 @@ class ServeMetrics:
     """
 
     def __init__(self, window: int = 100_000):
-        self._window = int(window)
+        self._window = int(window)  # unguarded: immutable after __init__
         # internal lock: the threaded driver records deliveries while
         # monitoring threads call snapshot() — deque iteration during a
         # concurrent append raises, so all access serializes here (the
@@ -45,23 +45,24 @@ class ServeMetrics:
         with self._lock:
             self._reset_locked()
 
-    def _reset_locked(self) -> None:
-        self.submitted = 0
-        self.delivered = 0
-        self.completed = 0
-        self.deadline_hits = 0
-        self.degraded_requests = 0
-        self.dispatches = 0
+    def _reset_locked(self) -> None:  # holds: _lock
+        self.submitted = 0           # guarded-by: _lock
+        self.delivered = 0           # guarded-by: _lock
+        self.completed = 0           # guarded-by: _lock
+        self.deadline_hits = 0       # guarded-by: _lock
+        self.degraded_requests = 0   # guarded-by: _lock
+        self.dispatches = 0          # guarded-by: _lock
         self.steps_at_deadline: collections.deque[int] = collections.deque(
-            maxlen=self._window)
+            maxlen=self._window)     # guarded-by: _lock
         # effective step budgets of delivered requests (== total_steps
         # when not degraded): the admission="degrade" frontier metric
         self.budget_at_deadline: collections.deque[int] = collections.deque(
-            maxlen=self._window)
-        self._occ_num = 0.0      # sum of active-slot counts over dispatches
-        self._occ_den = 0.0      # sum of capacities over dispatches
-        self._t_first_submit: Optional[float] = None
-        self._t_last_delivery: Optional[float] = None
+            maxlen=self._window)     # guarded-by: _lock
+        # sums of active-slot counts / capacities over dispatches
+        self._occ_num = 0.0          # guarded-by: _lock
+        self._occ_den = 0.0          # guarded-by: _lock
+        self._t_first_submit: Optional[float] = None    # guarded-by: _lock
+        self._t_last_delivery: Optional[float] = None   # guarded-by: _lock
 
     def record_submit(self, now: float) -> None:
         with self._lock:
@@ -75,7 +76,7 @@ class ServeMetrics:
             self._occ_num += n_active
             self._occ_den += capacity
 
-    def _record_delivery_locked(self, result, now: float) -> None:
+    def _record_delivery_locked(self, result, now: float) -> None:  # holds: _lock
         self.delivered += 1
         self.completed += bool(result.completed)
         self.deadline_hits += bool(result.deadline_hit)
@@ -90,20 +91,25 @@ class ServeMetrics:
         with self._lock:
             self._record_delivery_locked(result, now)
 
-    @property
-    def wall_s(self) -> float:
+    def _wall_s_locked(self) -> float:  # holds: _lock
         if self._t_first_submit is None or self._t_last_delivery is None:
             return 0.0
         return max(0.0, self._t_last_delivery - self._t_first_submit)
+
+    @property
+    def wall_s(self) -> float:
+        # the lock is NOT reentrant: locked paths use _wall_s_locked()
+        with self._lock:
+            return self._wall_s_locked()
 
     def snapshot(self) -> dict:
         with self._lock:
             return self._snapshot_locked()
 
-    def _snapshot_locked(self) -> dict:
+    def _snapshot_locked(self) -> dict:  # holds: _lock
         steps = np.asarray(list(self.steps_at_deadline), dtype=np.int64)
         budgets = np.asarray(list(self.budget_at_deadline), dtype=np.int64)
-        wall = self.wall_s
+        wall = self._wall_s_locked()
         return {
             "submitted": self.submitted,
             "delivered": self.delivered,

@@ -104,11 +104,14 @@ class AdmissionQueue:
     """EDF admission queue with monotonic-clock bookkeeping."""
 
     def __init__(self):
-        self._heap: list[tuple[float, int, Request]] = []
-        self._ids = itertools.count()
-        self.submitted = 0
+        # all queue state belongs to the owning AnytimeServer's lock: the
+        # server (and the Scheduler it drives) only touches the queue from
+        # locked sections, so the queue itself stays lock-free
+        self._heap: list[tuple[float, int, Request]] = []  # guarded-by: AnytimeServer._lock
+        self._ids = itertools.count()  # guarded-by: AnytimeServer._lock
+        self.submitted = 0             # guarded-by: AnytimeServer._lock
 
-    def submit(self, request: Request, now: float) -> Request:
+    def submit(self, request: Request, now: float) -> Request:  # holds: AnytimeServer._lock
         """Stamp and enqueue ``request``; returns it (id/deadline filled)."""
         if request.deadline_ms < 0:
             raise ValueError(f"deadline_ms must be >= 0, got {request.deadline_ms}")
@@ -119,19 +122,19 @@ class AdmissionQueue:
         self.push(request)
         return request
 
-    def push(self, request: Request) -> None:
+    def push(self, request: Request) -> None:  # holds: AnytimeServer._lock
         """(Re-)enqueue an already-stamped request (e.g. one that found
         no free slot this round)."""
         heapq.heappush(self._heap, (request.t_deadline, request.request_id, request))
 
-    def pop(self) -> Optional[Request]:
+    def pop(self) -> Optional[Request]:  # holds: AnytimeServer._lock
         """Earliest-deadline pending request, or None when empty."""
         if not self._heap:
             return None
         return heapq.heappop(self._heap)[2]
 
-    def __len__(self) -> int:
+    def __len__(self) -> int:  # holds: AnytimeServer._lock
         return len(self._heap)
 
-    def __bool__(self) -> bool:
+    def __bool__(self) -> bool:  # holds: AnytimeServer._lock
         return bool(self._heap)

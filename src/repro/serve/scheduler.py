@@ -68,11 +68,13 @@ class ForestLane:
     """Slot-batched lane over one :class:`SessionBatch` (double-buffered)."""
 
     def __init__(self, batch):
-        self.batch = batch
-        self.requests: list[Optional[Request]] = [None] * batch.capacity
-        self._front: Optional[_Boundary] = None
-        self._back: Optional[_Boundary] = None
-        self._host: Optional[_Boundary] = None
+        # lane state (the slot batch included) is owned by the server's
+        # lock: every mutating entry point below carries `# holds:`
+        self.batch = batch  # unguarded: reference immutable; state via holds-marked methods
+        self.requests: list[Optional[Request]] = [None] * batch.capacity  # guarded-by: AnytimeServer._lock
+        self._front: Optional[_Boundary] = None  # guarded-by: AnytimeServer._lock
+        self._back: Optional[_Boundary] = None   # guarded-by: AnytimeServer._lock
+        self._host: Optional[_Boundary] = None   # guarded-by: AnytimeServer._lock
 
     @property
     def capacity(self) -> int:
@@ -83,24 +85,24 @@ class ForestLane:
         return self.batch.n_active
 
     @property
-    def busy(self) -> bool:
+    def busy(self) -> bool:  # holds: AnytimeServer._lock
         return (
             any(r is not None for r in self.requests)
             or self._front is not None
             or self._back is not None
         )
 
-    def min_deadline(self) -> float:
+    def min_deadline(self) -> float:  # holds: AnytimeServer._lock
         deadlines = [r.t_deadline for r in self.requests if r is not None]
         return min(deadlines) if deadlines else float("inf")
 
-    def _owners(self) -> np.ndarray:
+    def _owners(self) -> np.ndarray:  # holds: AnytimeServer._lock
         return np.asarray(
             [r.request_id if r is not None else -1 for r in self.requests],
             dtype=np.int64,
         )
 
-    def admit(self, request: Request) -> bool:
+    def admit(self, request: Request) -> bool:  # holds: AnytimeServer._lock
         """Place ``request`` into a free slot (joining the batch at the
         next segment boundary); False when the lane is full.  A request
         carrying a degrade ``budget_steps`` gets its slot's plan cursor
@@ -114,7 +116,7 @@ class ForestLane:
         self.requests[slot] = request
         return True
 
-    def dispatch(self) -> int:
+    def dispatch(self) -> int:  # holds: AnytimeServer._lock
         """Advance every in-flight slot one fused masked segment with
         the new boundary's readout FUSED into the same dispatch (one
         kernel launch on ``pallas``); rotates the double buffer.
@@ -128,7 +130,7 @@ class ForestLane:
             self._front = None
         return stepped if L else 0
 
-    def harvest(self, now: float) -> list[Delivery]:
+    def harvest(self, now: float) -> list[Delivery]:  # holds: AnytimeServer._lock
         """Materialize the previous boundary on the host (overlapping the
         device's execution of the front segment) and retire slots that
         completed the plan or whose deadline has passed."""
@@ -155,7 +157,7 @@ class ForestLane:
                 self.requests[slot] = None
         return out
 
-    def flush(self) -> list[Delivery]:
+    def flush(self) -> list[Delivery]:  # holds: AnytimeServer._lock
         """Shutdown drain: materialize the NEWEST device boundary (the
         in-flight front dispatch included — the device has already been
         asked for it) and retire every slot with that readout.  Called
@@ -197,28 +199,28 @@ class SessionLane:
     """
 
     def __init__(self, runtime, order, backend, capacity: int, chunk: int):
-        self.runtime = runtime
-        self.order = order
-        self.backend = backend
-        self.capacity = int(capacity)
-        self.chunk = int(chunk)
+        self.runtime = runtime        # unguarded: immutable config
+        self.order = order            # unguarded: immutable config
+        self.backend = backend        # unguarded: immutable config
+        self.capacity = int(capacity)  # unguarded: immutable config
+        self.chunk = int(chunk)       # unguarded: immutable config
         #: slot -> (request, session, last boundary proba, steps at boundary)
-        self.entries: list[dict] = []
+        self.entries: list[dict] = []  # guarded-by: AnytimeServer._lock
 
     @property
-    def n_active(self) -> int:
+    def n_active(self) -> int:  # holds: AnytimeServer._lock
         return len(self.entries)
 
     @property
-    def busy(self) -> bool:
+    def busy(self) -> bool:  # holds: AnytimeServer._lock
         return bool(self.entries)
 
-    def min_deadline(self) -> float:
+    def min_deadline(self) -> float:  # holds: AnytimeServer._lock
         if not self.entries:
             return float("inf")
         return min(e["request"].t_deadline for e in self.entries)
 
-    def admit(self, request: Request) -> bool:
+    def admit(self, request: Request) -> bool:  # holds: AnytimeServer._lock
         if len(self.entries) >= self.capacity:
             return False
         kwargs = {} if self.backend is None else {"backend": self.backend}
@@ -236,7 +238,7 @@ class SessionLane:
         })
         return True
 
-    def dispatch(self) -> int:
+    def dispatch(self) -> int:  # holds: AnytimeServer._lock
         stepped = 0
         for e in self.entries:
             left = min(e["session"].remaining, e["budget"] - e["session"].pos)
@@ -251,7 +253,7 @@ class SessionLane:
         return Delivery(
             e["request"], e["proba"], e["steps"], completed, budget=budget)
 
-    def harvest(self, now: float) -> list[Delivery]:
+    def harvest(self, now: float) -> list[Delivery]:  # holds: AnytimeServer._lock
         out: list[Delivery] = []
         kept: list[dict] = []
         for e in self.entries:
@@ -269,7 +271,7 @@ class SessionLane:
         self.entries = kept
         return out
 
-    def flush(self) -> list[Delivery]:
+    def flush(self) -> list[Delivery]:  # holds: AnytimeServer._lock
         """Shutdown drain: refresh every session's boundary readout and
         retire it there (``AnytimeServer.stop()`` semantics)."""
         out: list[Delivery] = []
@@ -295,24 +297,26 @@ class Scheduler:
         backend_opts: Optional[dict] = None,
         max_idle_lanes: int = 32,
     ):
-        self.runtimes = dict(runtimes)
-        self.metrics = metrics
-        self.capacity = int(capacity)
-        self.chunk = int(chunk)
-        self.backend_opts = dict(backend_opts or {})
-        self.max_idle_lanes = int(max_idle_lanes)
-        self.lanes: dict[tuple, object] = {}
-        self._lane_last_used: dict[tuple, int] = {}
-        self._tick = 0
+        self.runtimes = dict(runtimes)   # unguarded: immutable after init
+        self.metrics = metrics           # unguarded: internally locked
+        self.capacity = int(capacity)    # unguarded: immutable config
+        self.chunk = int(chunk)          # unguarded: immutable config
+        self.backend_opts = dict(backend_opts or {})  # unguarded: immutable config
+        self.max_idle_lanes = int(max_idle_lanes)     # unguarded: immutable config
+        # all mutable scheduler state is owned by the server's lock; the
+        # methods below carry `# holds: AnytimeServer._lock`
+        self.lanes: dict[tuple, object] = {}          # guarded-by: AnytimeServer._lock
+        self._lane_last_used: dict[tuple, int] = {}   # guarded-by: AnytimeServer._lock
+        self._tick = 0                                # guarded-by: AnytimeServer._lock
         # per-lane EDF heaps of requests waiting for a free slot: each
         # request leaves the admission queue exactly ONCE (no per-
         # iteration pop/re-push churn proportional to the backlog)
-        self._waiting: dict[tuple, list] = {}
+        self._waiting: dict[tuple, list] = {}         # guarded-by: AnytimeServer._lock
         # still-queued requests per lane key, maintained at submit/pop —
         # reject admission reads lane_backlog() in O(1) per submit
         # instead of scanning the queue at exactly the overload moment
-        self._queued_by_lane: dict[tuple, int] = {}
-        self._prior_cache: dict[str, np.ndarray] = {}
+        self._queued_by_lane: dict[tuple, int] = {}   # guarded-by: AnytimeServer._lock
+        self._prior_cache: dict[str, np.ndarray] = {}  # guarded-by: AnytimeServer._lock
 
     # -- lane management ---------------------------------------------------
 
@@ -334,7 +338,7 @@ class Scheduler:
             backend = default_backend()
         return (req.program, req.policy_key(), str(backend))
 
-    def lane_for(self, req: Request):
+    def lane_for(self, req: Request):  # holds: AnytimeServer._lock
         key = self._lane_key(req)
         lane = self.lanes.get(key)
         if lane is None:
@@ -358,7 +362,7 @@ class Scheduler:
         self._lane_last_used[key] = self._tick
         return lane
 
-    def _evict_idle_lanes(self) -> None:
+    def _evict_idle_lanes(self) -> None:  # holds: AnytimeServer._lock
         """Bound device state on long-lived servers: a lane's slot batch
         (device arrays + jit traces) is worth keeping warm, but clients
         cycling through many distinct (program, policy, backend) keys
@@ -383,7 +387,7 @@ class Scheduler:
         prog = self._runtime(req).program
         return int(prog.n_units) * int(prog.unit_steps)
 
-    def prior_proba(self, req: Request) -> np.ndarray:
+    def prior_proba(self, req: Request) -> np.ndarray:  # holds: AnytimeServer._lock
         """The 0-step readout a starved/zero-deadline request receives.
 
         Program priors are input-independent constants, cached per
@@ -405,18 +409,18 @@ class Scheduler:
     # -- the serving iteration --------------------------------------------
 
     @property
-    def busy(self) -> bool:
+    def busy(self) -> bool:  # holds: AnytimeServer._lock
         return bool(self._waiting) or any(
             lane.busy for lane in self.lanes.values()
         )
 
     @property
-    def n_waiting(self) -> int:
+    def n_waiting(self) -> int:  # holds: AnytimeServer._lock
         """Requests admitted off the queue but still waiting for a free
         slot, across all lanes."""
         return sum(len(h) for h in self._waiting.values())
 
-    def lane_backlog(self, req: Request) -> int:
+    def lane_backlog(self, req: Request) -> int:  # holds: AnytimeServer._lock
         """How many requests are already queued or waiting for THIS
         request's lane — what the server's reject admission policy
         compares against capacity*k.  Per-lane, not global: flooding
@@ -425,14 +429,14 @@ class Scheduler:
         key = self._lane_key(req)
         return len(self._waiting.get(key, ())) + self._queued_by_lane.get(key, 0)
 
-    def note_queued(self, req: Request) -> None:
+    def note_queued(self, req: Request) -> None:  # holds: AnytimeServer._lock
         """Record that ``req`` entered the admission queue (the server
         calls this right after ``queue.submit``); balanced by
         :meth:`_note_dequeued` when ``_admit`` pops it."""
         key = self._lane_key(req)
         self._queued_by_lane[key] = self._queued_by_lane.get(key, 0) + 1
 
-    def _note_dequeued(self, req: Request) -> None:
+    def _note_dequeued(self, req: Request) -> None:  # holds: AnytimeServer._lock
         try:
             key = self._lane_key(req)
         except Exception:  # noqa: BLE001 - never let bookkeeping crash a pop
@@ -443,7 +447,7 @@ class Scheduler:
         else:
             self._queued_by_lane[key] = n - 1
 
-    def _admit(self, queue: AdmissionQueue, now: float,
+    def _admit(self, queue: AdmissionQueue, now: float,  # holds: AnytimeServer._lock
                deliveries: list[Delivery]) -> None:
         """Move arrivals into per-lane EDF waiting heaps (once each),
         then fill every lane's free slots earliest-deadline-first.
@@ -498,7 +502,7 @@ class Scheduler:
             if not heap:
                 del self._waiting[key]
 
-    def step(self, queue: AdmissionQueue, now: float) -> list[Delivery]:
+    def step(self, queue: AdmissionQueue, now: float) -> list[Delivery]:  # holds: AnytimeServer._lock
         """One scheduling iteration.
 
         1. **dispatch** — every busy lane, earliest deadline first,
@@ -527,7 +531,7 @@ class Scheduler:
         self._evict_idle_lanes()
         return deliveries
 
-    def flush(self, queue: AdmissionQueue) -> list[Delivery]:
+    def flush(self, queue: AdmissionQueue) -> list[Delivery]:  # holds: AnytimeServer._lock
         """Shutdown drain (``AnytimeServer.stop()``): answer EVERY
         admitted request now — queued and slot-waiting requests get the
         prior (0-step) readout, in-flight slots their last segment

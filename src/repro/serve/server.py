@@ -84,10 +84,12 @@ class Ticket:
     __slots__ = ("_server", "request", "_result", "_callbacks")
 
     def __init__(self, server: "AnytimeServer", request: Request):
-        self._server = server
-        self.request = request
-        self._result: Optional[Result] = None
-        self._callbacks: list[Callable] = []
+        self._server = server    # unguarded: bound once, never reassigned
+        self.request = request   # unguarded: bound once, never reassigned
+        # write-once from _finalize under the server lock; racy reads see
+        # either None or the final value (both correct future semantics)
+        self._result: Optional[Result] = None  # unguarded: write-once latch
+        self._callbacks: list[Callable] = []   # guarded-by: _server._lock
 
     @property
     def request_id(self) -> int:
@@ -210,25 +212,33 @@ class AnytimeServer:
             )
         if admission_k <= 0:
             raise ValueError(f"admission_k must be > 0, got {admission_k}")
-        self.admission = admission
-        self.admission_k = float(admission_k)
-        self.clock = clock
-        self.queue = AdmissionQueue()
-        self.metrics = ServeMetrics()
-        self.scheduler = Scheduler(
+        self.admission = admission          # unguarded: immutable config
+        self.admission_k = float(admission_k)  # unguarded: immutable config
+        self.clock = clock                  # unguarded: immutable callable
+        # queue/scheduler references never change; their MUTABLE state is
+        # guarded by this server's lock via `# holds:`-marked methods on
+        # AdmissionQueue/Scheduler (see queue.py/scheduler.py)
+        self.queue = AdmissionQueue()       # unguarded: reference immutable
+        self.metrics = ServeMetrics()       # unguarded: internally locked
+        self.scheduler = Scheduler(         # unguarded: reference immutable
             runtimes, self.metrics, capacity=capacity, chunk=chunk,
             backend_opts=backend_opts,
         )
-        self._pending: dict[int, Ticket] = {}   # awaiting delivery
-        self._drain_buffer: Optional[list[Result]] = None
-        self._step_seq = 0    # loop iterations served (threaded drain bound)
+        self._pending: dict[int, Ticket] = {}   # guarded-by: _lock
+        self._drain_buffer: Optional[list[Result]] = None  # guarded-by: _lock
+        # loop iterations served (threaded drain bound)
+        self._step_seq = 0                  # guarded-by: _lock
         # threading: ONE lock guards queue/scheduler/pending/metrics;
         # the condition (same lock) signals deliveries and submissions
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
-        self._driver: Optional[ServeDriver] = None
-        self._driver_error: Optional[BaseException] = None
-        self._closed = False
+        # snapshot reads everywhere; writes serialized by the callers of
+        # start()/stop() (stop() must NOT hold the lock while joining the
+        # driver — the driver needs it to finish its iteration)
+        self._driver: Optional[ServeDriver] = None  # unguarded: see above
+        # write-once error latch (idempotent re-writes of the same value)
+        self._driver_error: Optional[BaseException] = None  # unguarded: latch
+        self._closed = False                # guarded-by: _lock
 
     # -- driver lifecycle --------------------------------------------------
 
@@ -427,16 +437,24 @@ class AnytimeServer:
                         and self._step_seq - start >= max_steps))
             self._raise_if_driver_dead()
             return []
-        self._drain_buffer = buffer = []
+        with self._lock:
+            self._drain_buffer = buffer = []
         try:
             steps = 0
-            while self.busy:
+            while True:
+                # busy reads queue/scheduler state owned by the lock; a
+                # driver started concurrently must not race this check
+                with self._lock:
+                    busy = self.busy
+                if not busy:
+                    break
                 self.step()
                 steps += 1
                 if max_steps is not None and steps >= max_steps:
                     break
         finally:
-            self._drain_buffer = None
+            with self._lock:
+                self._drain_buffer = None
         return buffer
 
     def serve(
@@ -462,12 +480,13 @@ class AnytimeServer:
 
     def result(self, request_id: int) -> Optional[Result]:
         """Result of a still-tracked request, or None while pending."""
-        ticket = self._pending.get(request_id)
+        with self._lock:
+            ticket = self._pending.get(request_id)
         return ticket._result if ticket is not None else None
 
     # -- internals ---------------------------------------------------------
 
-    def _finalize(
+    def _finalize(  # holds: _lock
         self, d: Delivery, now: float
     ) -> tuple[Result, list[tuple[Callable, Ticket]]]:
         """Turn a delivery into a :class:`Result` on its ticket (under

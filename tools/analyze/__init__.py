@@ -1,0 +1,47 @@
+"""``tools.analyze`` — repo-specific static analysis for the serving and
+kernel invariants ruff cannot see.
+
+Four AST-based checkers, each encoding an invariant the codebase already
+promises (and, until now, only enforced dynamically):
+
+* :mod:`tools.analyze.locks` — **lock discipline** for ``repro.serve``:
+  fields declared ``# guarded-by: <lock>`` may only be touched inside
+  ``with self.<lock>`` blocks (or an alias such as the Condition built
+  over the same lock), in methods marked ``# holds: <lock>``, or in
+  ``__init__``; every serve-layer field must be annotated either
+  ``guarded-by`` or ``# unguarded: <reason>``.
+* :mod:`tools.analyze.traces` — **jit trace budget**: static ``length``
+  arguments of trace-minting call sites must be routed through the
+  shared ``pow2_floor``/``pow2_decompose`` bucketing (the ≤ 8-trace
+  invariant), and ``jax.jit`` closures must not be created inside loops
+  (retracing hazard).
+* :mod:`tools.analyze.vmem` — **Pallas kernel hygiene** for
+  ``repro.kernels``: ``pallas_call`` VMEM residency estimated from
+  BlockSpec shapes/dtypes must fit ``ops.VMEM_TABLE_BUDGET_BYTES`` or be
+  reachable only behind a budget-checked fallback, and kernel bodies
+  must not branch/loop in Python on tracer values.
+* :mod:`tools.analyze.registry` — **registry coherence**: every
+  ``@register_order``/``@register_backend`` target has a unique name, a
+  docstring, and its module exports it via ``__all__``.
+
+Run ``python -m tools.analyze [--json] [--baseline analyze-baseline.json]``.
+Pure stdlib ``ast`` — no JAX import at any analyzer module load, so it
+runs in seconds in the CI lint job.
+"""
+from tools.analyze.core import (
+    Config,
+    Finding,
+    SourceFile,
+    analyze_paths,
+    analyze_sources,
+    load_sources,
+)
+
+__all__ = [
+    "Config",
+    "Finding",
+    "SourceFile",
+    "analyze_paths",
+    "analyze_sources",
+    "load_sources",
+]

@@ -1,0 +1,121 @@
+"""Command line entry point: ``python -m tools.analyze``.
+
+Exit status is 0 when every finding is suppressed by the baseline (or
+there are none), 1 otherwise — the CI lint job runs exactly this.
+
+The baseline (``analyze-baseline.json``) is a list of finding keys with
+per-entry justifications; stale entries (keys no longer produced) are
+reported so the baseline shrinks over time instead of rotting:
+
+    {
+      "findings": [
+        {"key": "locks:unguarded-access:…", "justification": "why"}
+      ]
+    }
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.analyze.core import analyze_paths
+
+
+def _load_baseline(path: Path) -> dict[str, str]:
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    out = {}
+    for entry in data.get("findings", []):
+        out[entry["key"]] = entry.get("justification", "")
+    return out
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="Repo-specific static analysis: lock discipline, "
+        "jit trace budget, Pallas VMEM hygiene, registry coherence.",
+    )
+    parser.add_argument(
+        "--root",
+        default="src/repro",
+        help="directory tree to analyze (default: src/repro)",
+    )
+    parser.add_argument(
+        "--baseline",
+        default=None,
+        help="JSON baseline of suppressed finding keys",
+    )
+    parser.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="write all current findings to --baseline and exit 0",
+    )
+    parser.add_argument(
+        "--json",
+        action="store_true",
+        help="machine-readable JSON on stdout instead of text",
+    )
+    args = parser.parse_args(argv)
+
+    root = Path(args.root)
+    if not root.exists():
+        print(f"error: no such directory: {root}", file=sys.stderr)
+        return 2
+
+    findings = analyze_paths(root)
+
+    baseline_path = Path(args.baseline) if args.baseline else None
+    baseline = _load_baseline(baseline_path) if baseline_path else {}
+
+    if args.write_baseline:
+        if baseline_path is None:
+            print("error: --write-baseline requires --baseline", file=sys.stderr)
+            return 2
+        payload = {
+            "findings": [
+                {"key": f.key, "justification": "TODO: justify or fix"}
+                for f in findings
+            ]
+        }
+        baseline_path.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {len(findings)} finding(s) to {baseline_path}")
+        return 0
+
+    unsuppressed = [f for f in findings if f.key not in baseline]
+    live_keys = {f.key for f in findings}
+    stale = sorted(k for k in baseline if k not in live_keys)
+
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "findings": [f.to_dict() for f in unsuppressed],
+                    "suppressed": len(findings) - len(unsuppressed),
+                    "stale_baseline_keys": stale,
+                },
+                indent=2,
+            )
+        )
+    else:
+        for f in unsuppressed:
+            print(f.render())
+        if stale:
+            print(
+                f"note: {len(stale)} stale baseline entr"
+                f"{'y' if len(stale) == 1 else 'ies'} (fixed findings — "
+                f"remove from {baseline_path}):",
+                file=sys.stderr,
+            )
+            for k in stale:
+                print(f"  {k}", file=sys.stderr)
+        n_sup = len(findings) - len(unsuppressed)
+        summary = f"{len(unsuppressed)} finding(s)"
+        if n_sup:
+            summary += f", {n_sup} baseline-suppressed"
+        print(summary)
+
+    return 1 if unsuppressed else 0

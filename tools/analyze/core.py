@@ -1,0 +1,233 @@
+"""Shared infrastructure for the ``tools.analyze`` checkers.
+
+Everything here is pure stdlib (``ast`` + ``tokenize``): the analyzers
+parse source text, never import the analyzed modules, so the suite runs
+without JAX installed and cannot be skewed by import-time side effects.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import tokenize
+from pathlib import Path
+from typing import Iterable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer diagnostic, stable enough to baseline.
+
+    ``key`` identifies the finding across line churn: it is built from
+    the checker/rule/path and a symbol (class.field, function name, …)
+    rather than the line number whenever the checker can name one.
+    """
+
+    checker: str
+    rule: str
+    path: str
+    line: int
+    message: str
+    symbol: str = ""
+
+    @property
+    def key(self) -> str:
+        anchor = self.symbol if self.symbol else f"L{self.line}"
+        return f"{self.checker}:{self.rule}:{self.path}:{anchor}"
+
+    def to_dict(self) -> dict:
+        return {
+            "checker": self.checker,
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "symbol": self.symbol,
+            "message": self.message,
+            "key": self.key,
+        }
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.checker}/{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """One parsed source file: AST plus the comment map the annotation
+    conventions (``guarded-by:`` / ``holds:`` / ``unguarded:``) live in."""
+
+    path: str
+    text: str
+
+    def __post_init__(self):
+        self.path = Path(self.path).as_posix()
+        self.tree: ast.Module = ast.parse(self.text, filename=self.path)
+        self.comments: dict[int, str] = _comment_map(self.text)
+
+    @property
+    def module(self) -> str:
+        """Dotted module name, best effort (``src/repro/x.py`` →
+        ``repro.x``) — used to resolve cross-module references."""
+        parts = list(Path(self.path).with_suffix("").parts)
+        if "src" in parts:
+            parts = parts[parts.index("src") + 1:]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def comment(self, lineno: int) -> str:
+        return self.comments.get(lineno, "")
+
+
+def _comment_map(text: str) -> dict[int, str]:
+    out: dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                out[tok.start[0]] = tok.string
+    except tokenize.TokenError:  # unterminated construct: keep what we got
+        pass
+    return out
+
+
+@dataclasses.dataclass
+class Config:
+    """Knobs the checkers share.  Paths are matched as posix substrings
+    so in-memory fixtures can opt into per-layer rules by path."""
+
+    #: files whose classes MUST annotate every field (guarded/unguarded)
+    serve_prefix: str = "repro/serve/"
+    #: files subject to the Pallas kernel hygiene checker
+    kernels_prefix: str = "repro/kernels/"
+    #: fallback VMEM budget when no analyzed file defines the constant
+    vmem_budget_bytes: int = 4 * 2**20
+    #: name of the module-level constant that overrides the budget
+    vmem_budget_name: str = "VMEM_TABLE_BUDGET_BYTES"
+
+
+# ---------------------------------------------------------------------------
+# Small AST utilities shared by the checkers.
+# ---------------------------------------------------------------------------
+
+
+def attr_path(node: ast.AST) -> Optional[str]:
+    """Dotted path of a Name/Attribute chain (``self._server._lock`` →
+    that string); None for anything more complex."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """Last path component of the called expression (``a.b.f()`` → ``f``)."""
+    func = node.func
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def const_int(node: ast.AST, env: Optional[dict] = None) -> Optional[int]:
+    """Fold an int-valued constant expression (literals, +-*//**<<, and
+    names resolvable through ``env``); None when not statically known."""
+    env = env or {}
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return int(node.value)
+    if isinstance(node, ast.Name):
+        val = env.get(node.id)
+        return val if isinstance(val, int) else None
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = const_int(node.operand, env)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp):
+        lhs, rhs = const_int(node.left, env), const_int(node.right, env)
+        if lhs is None or rhs is None:
+            return None
+        op = node.op
+        if isinstance(op, ast.Add):
+            return lhs + rhs
+        if isinstance(op, ast.Sub):
+            return lhs - rhs
+        if isinstance(op, ast.Mult):
+            return lhs * rhs
+        if isinstance(op, ast.FloorDiv):
+            return lhs // rhs if rhs else None
+        if isinstance(op, ast.Pow):
+            return lhs**rhs if rhs >= 0 else None
+        if isinstance(op, ast.LShift):
+            return lhs << rhs
+    return None
+
+
+def module_int_constants(sf: SourceFile) -> dict[str, int]:
+    """Module-level ``NAME = <int expr>`` assignments, constant-folded
+    (later assignments win, matching execution order)."""
+    env: dict[str, int] = {}
+    for stmt in sf.tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Name):
+                val = const_int(stmt.value, env)
+                if val is not None:
+                    env[tgt.id] = val
+    return env
+
+
+def import_map(sf: SourceFile) -> dict[str, str]:
+    """Local name → fully-qualified dotted target for module-level
+    imports (``from repro.kernels import forest_run as _fused`` →
+    ``{'_fused': 'repro.kernels.forest_run'}``)."""
+    out: dict[str, str] = {}
+    for stmt in ast.walk(sf.tree):
+        if isinstance(stmt, ast.Import):
+            for alias in stmt.names:
+                out[alias.asname or alias.name.split(".")[0]] = alias.name
+        elif isinstance(stmt, ast.ImportFrom) and stmt.module and not stmt.level:
+            for alias in stmt.names:
+                out[alias.asname or alias.name] = f"{stmt.module}.{alias.name}"
+    return out
+
+
+def is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Entry points.
+# ---------------------------------------------------------------------------
+
+
+def load_sources(root) -> list[SourceFile]:
+    root = Path(root)
+    files = []
+    for p in sorted(root.rglob("*.py")):
+        if "__pycache__" in p.parts:
+            continue
+        files.append(SourceFile(str(p), p.read_text()))
+    return files
+
+
+def analyze_sources(
+    files: Iterable[SourceFile], config: Optional[Config] = None
+) -> list[Finding]:
+    """Run all four checkers over an in-memory file set (deterministic
+    order: checker registration, then path, then line)."""
+    # checker modules import lazily so `import tools.analyze` stays cheap
+    from tools.analyze import locks, registry, traces, vmem
+
+    files = list(files)
+    config = config or Config()
+    findings: list[Finding] = []
+    for checker in (locks.check, traces.check, vmem.check, registry.check):
+        findings.extend(checker(files, config))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.symbol))
+    return findings
+
+
+def analyze_paths(root, config: Optional[Config] = None) -> list[Finding]:
+    return analyze_sources(load_sources(root), config)

@@ -1,0 +1,280 @@
+"""Lock-discipline race detector for ``repro.serve``.
+
+Convention (enforced statically, documented in the README):
+
+* A field assigned in a method body declares its discipline with a
+  trailing comment on (one of) its assignment statements::
+
+      self._pending = {}      # guarded-by: _lock
+      self._driver = None     # unguarded: snapshot reads; writes caller-serialized
+
+  The guard spec is a dotted path; only its last component is matched
+  (so ``_server._lock`` and ``AnytimeServer._lock`` both mean "the
+  attribute named ``_lock``").  ``Condition`` objects constructed over a
+  lock (``self._cond = threading.Condition(self._lock)``) are aliases:
+  holding the condition *is* holding the lock.
+
+* A guarded field may be read or written only
+
+  - lexically inside ``with <expr>:`` where ``<expr>`` resolves (through
+    local aliases such as ``srv = self._server``) to the guard or an
+    alias of it, or
+  - inside a function whose ``def`` line (or the line above it) carries
+    ``# holds: <guard>``, or
+  - inside ``__init__`` (construction happens-before publication).
+
+* In files under the serve layer every ``self.<field>`` assignment must
+  be annotated ``guarded-by`` or ``unguarded`` — fields holding the
+  locks themselves (``threading.Lock/RLock/Condition/Event``) are
+  exempt.
+
+Known, deliberate under-approximations: call sites of ``# holds:``
+methods are trusted, not verified; accesses through another object
+(``other._pending``) are not tracked; nested functions inherit the
+lexical ``with`` context of their definition site even though they may
+run later.  These are documented in the README.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Optional
+
+from tools.analyze.core import Config, Finding, SourceFile, attr_path, call_name
+
+CHECKER = "locks"
+
+_GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([\w.|]+)")
+_UNGUARDED_RE = re.compile(r"#\s*unguarded:\s*(\S.*)")
+_HOLDS_RE = re.compile(r"#\s*holds:\s*([\w.|]+)")
+
+_LOCK_FACTORIES = {
+    "Lock", "RLock", "Condition", "Event", "Semaphore", "BoundedSemaphore",
+}
+
+
+def _last(spec: str) -> str:
+    return spec.split(".")[-1]
+
+
+def _normalize(spec: str, aliases: dict[str, str]) -> set[str]:
+    """A guard spec (possibly ``a|b`` alternatives) → canonical last
+    components, with Condition-over-lock aliases collapsed."""
+    out = set()
+    for alt in spec.split("|"):
+        last = _last(alt.strip())
+        out.add(aliases.get(last, last))
+    return out
+
+
+class _FieldDecl:
+    __slots__ = ("kind", "spec", "line")
+
+    def __init__(self, kind: str, spec: str, line: int):
+        self.kind = kind  # "guarded" | "unguarded" | "lock"
+        self.spec = spec
+        self.line = line
+
+
+def _self_assign_target(stmt: ast.stmt) -> Optional[ast.Attribute]:
+    """The ``self.<x>`` target of an Assign/AnnAssign/AugAssign, if any."""
+    targets: list[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    for tgt in targets:
+        if (
+            isinstance(tgt, ast.Attribute)
+            and isinstance(tgt.value, ast.Name)
+            and tgt.value.id == "self"
+        ):
+            return tgt
+    return None
+
+
+def _collect_class(sf: SourceFile, cls: ast.ClassDef):
+    """Field declarations and Condition→lock aliases for one class."""
+    decls: dict[str, _FieldDecl] = {}
+    first_assign: dict[str, int] = {}
+    aliases: dict[str, str] = {}
+    for method in cls.body:
+        if not isinstance(method, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for stmt in ast.walk(method):
+            if not isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                continue
+            tgt = _self_assign_target(stmt)
+            if tgt is None:
+                continue
+            name = tgt.attr
+            first_assign.setdefault(name, stmt.lineno)
+            value = getattr(stmt, "value", None)
+            if isinstance(value, ast.Call) and call_name(value) in _LOCK_FACTORIES:
+                decls.setdefault(name, _FieldDecl("lock", "", stmt.lineno))
+                if call_name(value) == "Condition" and value.args:
+                    src = attr_path(value.args[0])
+                    if src and src.startswith("self."):
+                        aliases[name] = _last(src)
+            # a declaration may span lines (call-style initializers); its
+            # annotation may sit on any of them
+            comment = " ".join(
+                sf.comment(ln)
+                for ln in range(stmt.lineno, (stmt.end_lineno or stmt.lineno) + 1)
+                if sf.comment(ln)
+            )
+            m = _GUARDED_RE.search(comment)
+            if m and decls.get(name, _FieldDecl("lock", "", 0)).kind != "guarded":
+                decls[name] = _FieldDecl("guarded", m.group(1), stmt.lineno)
+                continue
+            m = _UNGUARDED_RE.search(comment)
+            if m and name not in decls:
+                decls[name] = _FieldDecl("unguarded", m.group(1), stmt.lineno)
+    return decls, first_assign, aliases
+
+
+def _holds_specs(sf: SourceFile, fn: ast.AST) -> list[str]:
+    specs = []
+    for line in (fn.lineno, fn.lineno - 1):
+        m = _HOLDS_RE.search(sf.comment(line))
+        if m:
+            specs.append(m.group(1))
+    return specs
+
+
+class _AccessChecker(ast.NodeVisitor):
+    """Walk one method, tracking the lexical ``with``-acquired guard set
+    and local aliases of ``self``-rooted paths."""
+
+    def __init__(self, sf, cls_name, decls, aliases, findings):
+        self.sf = sf
+        self.cls_name = cls_name
+        self.decls = decls
+        self.aliases = aliases
+        self.findings = findings
+        self.held: list[str] = []  # canonical guard names currently held
+        self.holds_depth = 0  # >0 inside a `# holds:` function
+        self.local_paths: dict[str, str] = {}  # var -> dotted self path
+        self.reported: set[tuple[str, int]] = set()
+
+    # -- path resolution ---------------------------------------------------
+
+    def _resolve(self, node: ast.AST) -> Optional[str]:
+        path = attr_path(node)
+        if path is None:
+            return None
+        head, _, rest = path.partition(".")
+        if head in self.local_paths:
+            base = self.local_paths[head]
+            return f"{base}.{rest}" if rest else base
+        return path
+
+    # -- visitors ----------------------------------------------------------
+
+    def visit_Assign(self, node: ast.Assign):
+        # Track `srv = self._server`-style aliases for with-item matching.
+        if len(node.targets) == 1 and isinstance(node.targets[0], ast.Name):
+            resolved = self._resolve(node.value)
+            if resolved and resolved.startswith("self."):
+                self.local_paths[node.targets[0].id] = resolved
+        self.generic_visit(node)
+
+    def _with_guards(self, node) -> list[str]:
+        acquired = []
+        for item in node.items:
+            resolved = self._resolve(item.context_expr)
+            if resolved:
+                last = _last(resolved)
+                acquired.append(self.aliases.get(last, last))
+        return acquired
+
+    def visit_With(self, node: ast.With):
+        acquired = self._with_guards(node)
+        self.held.extend(acquired)
+        for item in node.items:
+            self.visit(item.context_expr)
+            if item.optional_vars is not None:
+                self.visit(item.optional_vars)
+        for stmt in node.body:
+            self.visit(stmt)
+        del self.held[len(self.held) - len(acquired):]
+
+    visit_AsyncWith = visit_With
+
+    def _enter_function(self, node):
+        specs = _holds_specs(self.sf, node)
+        entered = 0
+        for spec in specs:
+            for canon in _normalize(spec, self.aliases):
+                self.held.append(canon)
+                entered += 1
+        self.holds_depth += 1 if specs else 0
+        self.generic_visit(node)
+        self.holds_depth -= 1 if specs else 0
+        if entered:
+            del self.held[len(self.held) - entered:]
+
+    visit_FunctionDef = _enter_function
+    visit_AsyncFunctionDef = _enter_function
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if isinstance(node.value, ast.Name) and node.value.id == "self":
+            decl = self.decls.get(node.attr)
+            if decl is not None and decl.kind == "guarded":
+                wanted = _normalize(decl.spec, self.aliases)
+                if not (wanted & set(self.held)):
+                    key = (node.attr, node.lineno)
+                    if key not in self.reported:
+                        self.reported.add(key)
+                        self.findings.append(
+                            Finding(
+                                CHECKER,
+                                "unguarded-access",
+                                self.sf.path,
+                                node.lineno,
+                                f"{self.cls_name}.{node.attr} is "
+                                f"guarded-by {decl.spec!r} but accessed "
+                                f"outside `with` / `# holds:` scope",
+                                symbol=f"{self.cls_name}.{node.attr}:L{node.lineno}",
+                            )
+                        )
+        self.generic_visit(node)
+
+
+def check(files: list[SourceFile], config: Config) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in files:
+        in_serve = config.serve_prefix in sf.path
+        for cls in [n for n in ast.walk(sf.tree) if isinstance(n, ast.ClassDef)]:
+            decls, first_assign, aliases = _collect_class(sf, cls)
+            if in_serve:
+                for name, line in sorted(first_assign.items(), key=lambda kv: kv[1]):
+                    if name not in decls:
+                        findings.append(
+                            Finding(
+                                CHECKER,
+                                "unannotated-field",
+                                sf.path,
+                                line,
+                                f"{cls.name}.{name} has no `# guarded-by:` "
+                                f"or `# unguarded:` annotation",
+                                symbol=f"{cls.name}.{name}",
+                            )
+                        )
+            if not any(d.kind == "guarded" for d in decls.values()):
+                continue
+            for method in cls.body:
+                if not isinstance(method, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if method.name == "__init__":
+                    continue
+                checker = _AccessChecker(sf, cls.name, decls, aliases, findings)
+                # Apply the method's own holds-markers, then walk its body
+                # (visiting the def itself would re-read them; this keeps
+                # nested defs handled by the visitor).
+                specs = _holds_specs(sf, method)
+                for spec in specs:
+                    checker.held.extend(_normalize(spec, aliases))
+                for stmt in method.body:
+                    checker.visit(stmt)
+    return findings

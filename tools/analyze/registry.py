@@ -1,0 +1,257 @@
+"""Registry-coherence checker for ``@register_order`` / ``@register_backend``.
+
+The schedule layer's policies and executors are discovered by name
+through module-level registries.  This checker proves, per registry
+kind:
+
+* **duplicate-name** — no two registrations share a name (a later
+  registration would silently shadow the earlier one);
+* **missing-docstring** — every registered class documents itself (the
+  registries feed ``--help``/docs listings);
+* **missing-export** / **missing-all** — the defining module exports the
+  registered class via ``__all__`` so the public surface matches the
+  registry.
+
+Registration sites are found statically, including the module-level
+loops that stamp out families of orders::
+
+    for _metric in PRUNE_METRICS:
+        for _variant in ("depth", "breadth"):
+            register_order(f"prune_{_variant}_{_metric}", …)(PruneOrder)
+
+The loop iterables (inline tuples or module-level string-tuple
+constants) are unrolled and the f-string names evaluated, so the
+``prune_*``/``qwyc_*`` families are checked for collisions exactly like
+decorator registrations.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.analyze.core import Config, Finding, SourceFile, call_name
+
+CHECKER = "registry"
+
+_REGISTER_FNS = {"register_order", "register_backend"}
+
+
+def _str_tuple_constants(sf: SourceFile) -> dict[str, tuple]:
+    out: dict[str, tuple] = {}
+    for stmt in sf.tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Name) and isinstance(
+                stmt.value, (ast.Tuple, ast.List)
+            ):
+                vals = []
+                for el in stmt.value.elts:
+                    if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                        vals.append(el.value)
+                    else:
+                        break
+                else:
+                    out[tgt.id] = tuple(vals)
+    return out
+
+
+def _eval_name(node: ast.expr, env: dict[str, str]) -> Optional[str]:
+    """A registration-name expression → its value: string literals and
+    f-strings over loop variables bound in ``env``."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.JoinedStr):
+        parts = []
+        for piece in node.values:
+            if isinstance(piece, ast.Constant):
+                parts.append(str(piece.value))
+            elif isinstance(piece, ast.FormattedValue) and isinstance(
+                piece.value, ast.Name
+            ):
+                val = env.get(piece.value.id)
+                if val is None:
+                    return None
+                parts.append(val)
+            else:
+                return None
+        return "".join(parts)
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    return None
+
+
+class _Registration:
+    __slots__ = ("kind", "name", "target", "sf", "line")
+
+    def __init__(self, kind, name, target, sf, line):
+        self.kind = kind
+        self.name = name
+        self.target = target  # class name (str) or None
+        self.sf = sf
+        self.line = line
+
+
+def _collect(sf: SourceFile) -> list[_Registration]:
+    regs: list[_Registration] = []
+    str_consts = _str_tuple_constants(sf)
+
+    # Decorator registrations.
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, (ast.ClassDef, ast.FunctionDef)):
+            continue
+        for deco in node.decorator_list:
+            if isinstance(deco, ast.Call) and call_name(deco) in _REGISTER_FNS:
+                name = _eval_name(deco.args[0], {}) if deco.args else None
+                regs.append(
+                    _Registration(
+                        call_name(deco), name, node.name, sf, deco.lineno
+                    )
+                )
+
+    # Module-level call registrations, unrolling constant For loops.
+    def scan(stmts, env):
+        for stmt in stmts:
+            if isinstance(stmt, ast.For) and isinstance(stmt.target, ast.Name):
+                iterable = None
+                if isinstance(stmt.iter, (ast.Tuple, ast.List)):
+                    vals = [
+                        el.value
+                        for el in stmt.iter.elts
+                        if isinstance(el, ast.Constant)
+                        and isinstance(el.value, str)
+                    ]
+                    if len(vals) == len(stmt.iter.elts):
+                        iterable = vals
+                elif isinstance(stmt.iter, ast.Name):
+                    iterable = str_consts.get(stmt.iter.id)
+                if iterable:
+                    for val in iterable:
+                        scan(stmt.body, {**env, stmt.target.id: val})
+                else:
+                    scan(stmt.body, env)
+            elif isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+                outer = stmt.value
+                inner = outer.func
+                if isinstance(inner, ast.Call) and call_name(inner) in _REGISTER_FNS:
+                    name = _eval_name(inner.args[0], env) if inner.args else None
+                    target = None
+                    if outer.args and isinstance(outer.args[0], ast.Name):
+                        target = outer.args[0].id
+                    regs.append(
+                        _Registration(
+                            call_name(inner), name, target, sf, stmt.lineno
+                        )
+                    )
+
+    scan(sf.tree.body, {})
+    return regs
+
+
+def _module_all(sf: SourceFile) -> Optional[set[str]]:
+    for stmt in sf.tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Name) and tgt.id == "__all__":
+                if isinstance(stmt.value, (ast.Tuple, ast.List)):
+                    return {
+                        el.value
+                        for el in stmt.value.elts
+                        if isinstance(el, ast.Constant)
+                        and isinstance(el.value, str)
+                    }
+    return None
+
+
+def check(files: list[SourceFile], config: Config) -> list[Finding]:
+    findings: list[Finding] = []
+    seen: dict[tuple, _Registration] = {}
+    regs_by_file: dict[str, list[_Registration]] = {}
+
+    for sf in files:
+        regs = _collect(sf)
+        if regs:
+            regs_by_file[sf.path] = regs
+
+    for path in sorted(regs_by_file):
+        for reg in regs_by_file[path]:
+            if reg.name is None:
+                findings.append(
+                    Finding(
+                        CHECKER,
+                        "unresolvable-name",
+                        reg.sf.path,
+                        reg.line,
+                        f"{reg.kind}() registration name is not statically "
+                        f"resolvable — use a literal or a constant-tuple loop",
+                        symbol=f"{reg.kind}:L{reg.line}",
+                    )
+                )
+                continue
+            key = (reg.kind, reg.name)
+            if key in seen:
+                prev = seen[key]
+                findings.append(
+                    Finding(
+                        CHECKER,
+                        "duplicate-name",
+                        reg.sf.path,
+                        reg.line,
+                        f"{reg.kind}({reg.name!r}) already registered at "
+                        f"{prev.sf.path}:{prev.line} — this registration "
+                        f"silently shadows it",
+                        symbol=f"{reg.kind}:{reg.name}",
+                    )
+                )
+            else:
+                seen[key] = reg
+
+    # Per-class checks (docstring, export), deduplicated per target.
+    for path in sorted(regs_by_file):
+        sf = regs_by_file[path][0].sf
+        classes = {
+            n.name: n for n in ast.walk(sf.tree) if isinstance(n, ast.ClassDef)
+        }
+        exported = _module_all(sf)
+        targets = []
+        for reg in regs_by_file[path]:
+            if reg.target and reg.target not in [t for t, _ in targets]:
+                targets.append((reg.target, reg))
+        if exported is None and targets:
+            findings.append(
+                Finding(
+                    CHECKER,
+                    "missing-all",
+                    sf.path,
+                    1,
+                    f"module defines registered classes but no __all__ — "
+                    f"the registry surface must be exported",
+                    symbol=sf.module,
+                )
+            )
+        for target, reg in targets:
+            cls = classes.get(target)
+            if cls is None:
+                continue  # registered class imported from elsewhere
+            if not ast.get_docstring(cls):
+                findings.append(
+                    Finding(
+                        CHECKER,
+                        "missing-docstring",
+                        sf.path,
+                        cls.lineno,
+                        f"registered class {target} has no docstring",
+                        symbol=target,
+                    )
+                )
+            if exported is not None and target not in exported:
+                findings.append(
+                    Finding(
+                        CHECKER,
+                        "missing-export",
+                        sf.path,
+                        cls.lineno,
+                        f"registered class {target} is missing from __all__",
+                        symbol=f"{sf.module}.{target}",
+                    )
+                )
+    return findings

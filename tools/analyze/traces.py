@@ -1,0 +1,282 @@
+"""Trace-budget checker: the ≤ 8-cached-jit-trace invariant.
+
+The schedule layer bounds the number of distinct jit traces by routing
+every *static* segment length through power-of-two bucketing
+(``pow2_floor`` / ``pow2_decompose``), so lengths only ever take values
+in ``{1, 2, 4, …, cap}``.  This checker verifies the routing statically:
+
+* **unbucketed-length** — a call that mints a jit trace per distinct
+  ``length`` (an ``executor.run(...)``-style call, a function jitted
+  with a static argument named ``length``, or a kernel entry point with
+  a keyword-only ``length``) must receive a length that is provably
+  bucketed: a power-of-two literal, a direct ``pow2_floor(...)`` call, a
+  local previously assigned from ``pow2_floor``, the loop variable of
+  ``for p in pow2_decompose(...)``, or a parameter of the enclosing
+  function (forwarding — the caller is checked at its own site).
+
+* **jit-in-loop** — ``jax.jit(...)`` / ``functools.partial(jax.jit, …)``
+  call sites and jit-decorated ``def``\\ s lexically inside a ``for`` /
+  ``while`` body re-trace (or at best re-hash) per iteration; hoist them
+  out of the loop.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.analyze.core import (
+    Config,
+    Finding,
+    SourceFile,
+    attr_path,
+    call_name,
+    const_int,
+    is_pow2,
+)
+
+CHECKER = "traces"
+
+_BUCKET_FNS = {"pow2_floor", "pow2_decompose"}
+
+
+def _is_jax_jit(node: ast.expr) -> bool:
+    """``jax.jit`` / bare ``jit`` reference, or ``partial(jax.jit, …)``."""
+    path = attr_path(node)
+    if path in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call) and call_name(node) == "partial" and node.args:
+        return attr_path(node.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _static_param_names(fn: ast.FunctionDef, jit_call: ast.Call) -> set[str]:
+    """Names of ``fn``'s parameters marked static in ``jit_call``."""
+    params = [a.arg for a in fn.args.args]
+    out: set[str] = set()
+    for kw in jit_call.keywords:
+        if kw.arg == "static_argnames":
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    out.add(el.value)
+        elif kw.arg == "static_argnums":
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                    if 0 <= el.value < len(params):
+                        out.add(params[el.value])
+    return out
+
+
+def _jit_call_of(node: ast.expr) -> Optional[ast.Call]:
+    """The ``jax.jit(..)``/``partial(jax.jit, ..)`` Call carrying the
+    static-arg keywords, if ``node`` is one."""
+    if isinstance(node, ast.Call):
+        if attr_path(node.func) in ("jax.jit", "jit"):
+            return node
+        if call_name(node) == "partial" and node.args:
+            if attr_path(node.args[0]) in ("jax.jit", "jit"):
+                return node
+    return None
+
+
+def _discover_triggers(files: list[SourceFile], config: Config):
+    """(function name, length-param position) pairs whose calls must
+    receive bucketed lengths."""
+    triggers: dict[str, Optional[int]] = {}  # name -> positional index (None = kw only)
+
+    for sf in files:
+        defs = {
+            n.name: n
+            for n in ast.walk(sf.tree)
+            if isinstance(n, ast.FunctionDef)
+        }
+        for node in ast.walk(sf.tree):
+            # `g = jax.jit(f, static_argnums=…)` wrapping a local def.
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                jc = _jit_call_of(node.value)
+                if jc is not None and jc.args:
+                    inner = jc.args[0] if attr_path(jc.func) else jc.args[-1]
+                    fn = defs.get(attr_path(inner) or "")
+                    if fn is not None and "length" in _static_param_names(fn, jc):
+                        for tgt in node.targets:
+                            tname = attr_path(tgt)
+                            if tname:
+                                params = [a.arg for a in fn.args.args]
+                                idx = params.index("length") if "length" in params else None
+                                triggers[tname.split(".")[-1]] = idx
+            # jit-decorated defs with a static `length`.
+            if isinstance(node, ast.FunctionDef):
+                for deco in node.decorator_list:
+                    jc = _jit_call_of(deco)
+                    if jc is not None and "length" in _static_param_names(node, jc):
+                        params = [a.arg for a in node.args.args]
+                        idx = params.index("length") if "length" in params else None
+                        triggers[node.name] = idx
+            # kernel entry points with keyword-only `length`.
+            if (
+                isinstance(node, ast.FunctionDef)
+                and config.kernels_prefix in sf.path
+                and any(a.arg == "length" for a in node.args.kwonlyargs)
+            ):
+                triggers.setdefault(node.name, None)
+
+    # Second pass: aliases of discovered triggers — the codebase binds
+    # jitted closures onto instances (`self._generic_slots_jit = _generic_slots`).
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Name):
+                src = node.value.id
+                if src in triggers:
+                    for tgt in node.targets:
+                        tname = attr_path(tgt)
+                        if tname:
+                            triggers.setdefault(tname.split(".")[-1], triggers[src])
+    return triggers
+
+
+def _length_expr(call: ast.Call, pos: Optional[int]) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == "length":
+            return kw.value
+    if pos is not None and len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+class _FnContext:
+    """Per-enclosing-function facts needed to judge a length expression."""
+
+    def __init__(self, fn: Optional[ast.AST]):
+        self.params: set[str] = set()
+        self.bucketed: set[str] = set()
+        if fn is None or not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return
+        a = fn.args
+        for arg in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+            self.params.add(arg.arg)
+        if a.vararg:
+            self.params.add(a.vararg.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+                if isinstance(tgt, ast.Name) and isinstance(node.value, ast.Call):
+                    if call_name(node.value) in _BUCKET_FNS:
+                        self.bucketed.add(tgt.id)
+            if isinstance(node, ast.For) and isinstance(node.target, ast.Name):
+                if (
+                    isinstance(node.iter, ast.Call)
+                    and call_name(node.iter) == "pow2_decompose"
+                ):
+                    self.bucketed.add(node.target.id)
+
+    def length_ok(self, expr: ast.expr) -> bool:
+        lit = const_int(expr)
+        if lit is not None:
+            return is_pow2(lit)
+        if isinstance(expr, ast.Call) and call_name(expr) in _BUCKET_FNS:
+            return True
+        if isinstance(expr, ast.Name):
+            return expr.id in self.bucketed or expr.id in self.params
+        return False
+
+
+def _enclosing_function_map(tree: ast.Module) -> dict[ast.AST, ast.AST]:
+    """node -> nearest enclosing FunctionDef (or None)."""
+    owner: dict[ast.AST, ast.AST] = {}
+
+    def walk(node, fn):
+        for child in ast.iter_child_nodes(node):
+            owner[child] = fn
+            walk(
+                child,
+                child
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef))
+                else fn,
+            )
+
+    walk(tree, None)
+    return owner
+
+
+def check(files: list[SourceFile], config: Config) -> list[Finding]:
+    findings: list[Finding] = []
+    triggers = _discover_triggers(files, config)
+
+    for sf in files:
+        owner = _enclosing_function_map(sf.tree)
+        ctx_cache: dict[Optional[ast.AST], _FnContext] = {}
+
+        def fn_ctx(node) -> _FnContext:
+            fn = owner.get(node)
+            while fn is not None and not isinstance(
+                fn, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                fn = owner.get(fn)
+            if fn not in ctx_cache:
+                ctx_cache[fn] = _FnContext(fn)
+            return ctx_cache[fn]
+
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            cname = call_name(node)
+            expr = None
+            site = None
+            if cname in triggers:
+                expr = _length_expr(node, triggers[cname])
+                site = cname
+            elif cname == "run":
+                # executor.run(idx, units, mask, length, …) — the shared
+                # trace-minting entry point.
+                has_kw = any(kw.arg == "length" for kw in node.keywords)
+                fpath = attr_path(node.func) or ""
+                if has_kw or ("executor" in fpath and len(node.args) >= 4):
+                    expr = _length_expr(node, 3)
+                    site = fpath or "run"
+            if expr is None:
+                continue
+            if not fn_ctx(node).length_ok(expr):
+                findings.append(
+                    Finding(
+                        CHECKER,
+                        "unbucketed-length",
+                        sf.path,
+                        node.lineno,
+                        f"static `length` passed to {site}() is not routed "
+                        f"through pow2_floor/pow2_decompose bucketing "
+                        f"(got `{ast.unparse(expr)}`)",
+                        symbol=f"{site}:L{node.lineno}",
+                    )
+                )
+
+        # jit-in-loop retracing hazards.
+        seen_loop_jits: set[int] = set()
+        for loop in ast.walk(sf.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            for stmt in loop.body + loop.orelse:
+                for node in ast.walk(stmt):
+                    flagged = None
+                    if isinstance(node, ast.Call) and _is_jax_jit(node.func):
+                        flagged = node
+                    elif isinstance(node, ast.Call) and _jit_call_of(node):
+                        flagged = node
+                    elif isinstance(node, ast.FunctionDef) and any(
+                        _is_jax_jit(d) or _jit_call_of(d) is not None
+                        for d in node.decorator_list
+                    ):
+                        flagged = node
+                    if flagged is not None and flagged.lineno not in seen_loop_jits:
+                        seen_loop_jits.add(flagged.lineno)
+                        findings.append(
+                            Finding(
+                                CHECKER,
+                                "jit-in-loop",
+                                sf.path,
+                                flagged.lineno,
+                                "jax.jit closure created lexically inside a "
+                                "loop body — hoist it out to avoid "
+                                "per-iteration retracing",
+                                symbol=f"L{flagged.lineno}",
+                            )
+                        )
+    return findings

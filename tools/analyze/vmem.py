@@ -1,0 +1,381 @@
+"""Pallas kernel hygiene checker for ``repro.kernels``.
+
+Three rules, all computed from ``pl.pallas_call`` sites without
+importing JAX:
+
+* **oversized-resident** — BlockSpecs whose index map is constant (e.g.
+  ``lambda b: (0, 0)``) pin their block in VMEM for the whole launch.
+  When every dimension of such a block is statically known (literals,
+  module constants like ``NFIELDS``, parameter defaults, ``min(…)``
+  clamps), the f32 footprint is summed and checked against
+  ``ops.VMEM_TABLE_BUDGET_BYTES`` (read from the analyzed source, not
+  imported).
+
+* **missing-budget-guard** — a resident BlockSpec with a *symbolic*
+  dimension (``Mp``, ``T * Mp``, …) is unbounded at analysis time, so
+  every path reaching the ``pallas_call`` must be dominated by a budget
+  check (an ``if`` whose test mentions ``_tables_fit``/``…BUDGET…`` and
+  whose body returns or raises).  The guard may live in the enclosing
+  function itself or in every in-package caller (resolved through each
+  file's import map, so ``ops.forest_run`` and the kernel-module
+  ``forest_run`` stay distinct).  A kernel entry point with no in-scope
+  callers produces no finding — the budget contract then belongs to the
+  (external) caller, which this pass cannot see.
+
+* **tracer-control-flow** — Python ``if``/``while``/``for`` on values
+  derived from ``*_ref`` reads or ``pl.program_id`` inside a kernel body
+  traces data-dependently and fails (or silently specializes) under
+  Mosaic; use ``lax.cond``/``fori_loop``.  Static Python parameters
+  (``length``, ``block_m``) are fine and not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.analyze.core import (
+    Config,
+    Finding,
+    SourceFile,
+    attr_path,
+    call_name,
+    const_int,
+    import_map,
+    module_int_constants,
+)
+
+CHECKER = "vmem"
+
+_F32_BYTES = 4
+_GUARD_TOKENS = ("tables_fit", "BUDGET")
+
+
+def _enclosing_fn_map(tree: ast.Module) -> dict[ast.AST, Optional[ast.FunctionDef]]:
+    owner: dict[ast.AST, Optional[ast.FunctionDef]] = {}
+
+    def walk(node, fn):
+        for child in ast.iter_child_nodes(node):
+            owner[child] = fn
+            walk(child, child if isinstance(child, ast.FunctionDef) else fn)
+
+    walk(tree, None)
+    return owner
+
+
+def _cross_module_env(sf: SourceFile, by_module: dict[str, SourceFile]) -> dict[str, int]:
+    """Int constants visible in ``sf``: its own module-level ones plus
+    any imported from other analyzed modules (``NFIELDS`` et al.)."""
+    env = dict(module_int_constants(sf))
+    for local, fq in import_map(sf).items():
+        mod, _, name = fq.rpartition(".")
+        src = by_module.get(mod)
+        if src is not None and local not in env:
+            val = module_int_constants(src).get(name)
+            if val is not None:
+                env[local] = val
+    return env
+
+
+def _fn_env(fn: Optional[ast.FunctionDef], base: dict[str, int]) -> dict[str, int]:
+    """``base`` extended with parameter defaults and ``min(…)`` clamps —
+    the idiom ``block_b = min(block_b, max(8, B))`` bounds ``block_b``
+    by its (constant) default."""
+    env = dict(base)
+    if fn is None:
+        return env
+    args = fn.args
+    for arg, default in zip(args.args[len(args.args) - len(args.defaults):],
+                            args.defaults):
+        val = const_int(default, env)
+        if val is not None:
+            env.setdefault(arg.arg, val)
+    for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+        if default is not None:
+            val = const_int(default, env)
+            if val is not None:
+                env.setdefault(arg.arg, val)
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and isinstance(node.value, ast.Call)
+            and call_name(node.value) == "min"
+        ):
+            bounds = [const_int(a, env) for a in node.value.args]
+            known = [b for b in bounds if b is not None]
+            if known:
+                env[node.targets[0].id] = min(known)
+    return env
+
+
+def _block_specs(call: ast.Call) -> list[ast.Call]:
+    return [
+        n
+        for n in ast.walk(call)
+        if isinstance(n, ast.Call) and call_name(n) == "BlockSpec"
+    ]
+
+
+def _spec_parts(spec: ast.Call):
+    """(shape elements, index_map lambda-or-None) of one BlockSpec."""
+    shape = None
+    index_map = None
+    if spec.args:
+        shape = spec.args[0]
+    if len(spec.args) > 1:
+        index_map = spec.args[1]
+    for kw in spec.keywords:
+        if kw.arg in ("block_shape",):
+            shape = kw.value
+        elif kw.arg == "index_map":
+            index_map = kw.value
+    dims: list[ast.expr] = []
+    if isinstance(shape, (ast.Tuple, ast.List)):
+        dims = list(shape.elts)
+    elif shape is not None:
+        dims = [shape]
+    return dims, index_map
+
+
+def _is_resident(index_map: Optional[ast.expr]) -> bool:
+    """Constant index map ⇒ the same block is mapped at every grid step
+    (VMEM-resident).  No index map ⇒ whole-array block: resident too."""
+    if index_map is None:
+        return True
+    if not isinstance(index_map, ast.Lambda):
+        return False
+    body = index_map.body
+    elts = body.elts if isinstance(body, (ast.Tuple, ast.List)) else [body]
+    return all(const_int(e, {}) is not None for e in elts)
+
+
+def _mentions_guard_token(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        name = None
+        if isinstance(sub, ast.Name):
+            name = sub.id
+        elif isinstance(sub, ast.Attribute):
+            name = sub.attr
+        if name and any(tok in name for tok in _GUARD_TOKENS):
+            return True
+    return False
+
+
+def _has_dominating_guard(fn: Optional[ast.FunctionDef], target: ast.AST) -> bool:
+    """An ``if <…tables_fit/BUDGET…>: return/raise`` earlier in ``fn``
+    than ``target`` — the budget-checked fallback idiom."""
+    if fn is None:
+        return False
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.If) or node.lineno >= target.lineno:
+            continue
+        if not _mentions_guard_token(node.test):
+            continue
+        if any(
+            isinstance(s, (ast.Return, ast.Raise))
+            for stmt in node.body
+            for s in ast.walk(stmt)
+        ):
+            return True
+    return False
+
+
+def _call_sites(files, target_module: str, fname: str):
+    """In-package call sites of ``target_module.fname``, resolved through
+    each file's import map (module-aware: ``kops.forest_run`` and
+    ``_fused.forest_run`` resolve to different functions)."""
+    sites = []
+    for sf in files:
+        imap = import_map(sf)
+        owner = None
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            hit = False
+            if isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name):
+                if imap.get(func.value.id) == target_module and func.attr == fname:
+                    hit = True
+            elif isinstance(func, ast.Name):
+                fq = imap.get(func.id)
+                if fq == f"{target_module}.{fname}":
+                    hit = True
+                elif (
+                    func.id == fname
+                    and sf.module == target_module
+                    and fq is None
+                ):
+                    hit = True
+            if hit:
+                if owner is None:
+                    owner = _enclosing_fn_map(sf.tree)
+                sites.append((sf, node, owner.get(node)))
+    return sites
+
+
+def _kernel_fn_name(call: ast.Call) -> Optional[str]:
+    """Name of the kernel body passed to ``pallas_call`` (possibly via
+    ``functools.partial(kernel, …)``)."""
+    if not call.args:
+        for kw in call.keywords:
+            if kw.arg == "kernel":
+                target = kw.value
+                break
+        else:
+            return None
+    else:
+        target = call.args[0]
+    if isinstance(target, ast.Call) and call_name(target) == "partial" and target.args:
+        target = target.args[0]
+    if isinstance(target, ast.Name):
+        return target.id
+    if isinstance(target, ast.Attribute):
+        return target.attr
+    return None
+
+
+def _check_tracer_flow(sf: SourceFile, fn: ast.FunctionDef, findings):
+    tainted = {
+        a.arg
+        for a in (*fn.args.posonlyargs, *fn.args.args, *fn.args.kwonlyargs)
+        if a.arg.endswith("_ref")
+    }
+    # one propagation sweep per nesting level is plenty for kernel bodies
+    for _ in range(2):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                rhs_taint = any(
+                    (isinstance(s, ast.Name) and s.id in tainted)
+                    or (isinstance(s, ast.Call) and call_name(s) == "program_id")
+                    for s in ast.walk(node.value)
+                )
+                if rhs_taint:
+                    for tgt in node.targets:
+                        for s in ast.walk(tgt):
+                            if isinstance(s, ast.Name):
+                                tainted.add(s.id)
+
+    def taints(node: ast.AST) -> bool:
+        return any(
+            isinstance(s, ast.Name) and s.id in tainted for s in ast.walk(node)
+        )
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)) and taints(node.test):
+            kind = "if" if isinstance(node, ast.If) else "while"
+            findings.append(
+                Finding(
+                    CHECKER,
+                    "tracer-control-flow",
+                    sf.path,
+                    node.lineno,
+                    f"Python `{kind}` on a tracer-derived value inside "
+                    f"kernel body {fn.name}() — use lax.cond/lax.while_loop",
+                    symbol=f"{fn.name}:L{node.lineno}",
+                )
+            )
+        elif isinstance(node, ast.For) and taints(node.iter):
+            findings.append(
+                Finding(
+                    CHECKER,
+                    "tracer-control-flow",
+                    sf.path,
+                    node.lineno,
+                    f"Python `for` over a tracer-derived value inside "
+                    f"kernel body {fn.name}() — use lax.fori_loop",
+                    symbol=f"{fn.name}:L{node.lineno}",
+                )
+            )
+
+
+def check(files: list[SourceFile], config: Config) -> list[Finding]:
+    findings: list[Finding] = []
+    by_module = {sf.module: sf for sf in files}
+
+    budget = config.vmem_budget_bytes
+    for sf in files:
+        val = module_int_constants(sf).get(config.vmem_budget_name)
+        if val is not None:
+            budget = val
+            break
+
+    for sf in files:
+        if config.kernels_prefix not in sf.path:
+            continue
+        owner = _enclosing_fn_map(sf.tree)
+        base_env = _cross_module_env(sf, by_module)
+        checked_kernels: set[str] = set()
+        for call in ast.walk(sf.tree):
+            if not (isinstance(call, ast.Call) and call_name(call) == "pallas_call"):
+                continue
+            fn = owner.get(call)
+            env = _fn_env(fn, base_env)
+
+            const_bytes = 0
+            symbolic_dims: list[str] = []
+            for spec in _block_specs(call):
+                dims, index_map = _spec_parts(spec)
+                if not _is_resident(index_map) or not dims:
+                    continue
+                vals = [const_int(d, env) for d in dims]
+                if all(v is not None for v in vals):
+                    n = _F32_BYTES
+                    for v in vals:
+                        n *= v
+                    const_bytes += n
+                else:
+                    symbolic_dims.append(ast.unparse(spec.args[0] if spec.args else spec))
+
+            fname = fn.name if fn is not None else "<module>"
+            if const_bytes > budget:
+                findings.append(
+                    Finding(
+                        CHECKER,
+                        "oversized-resident",
+                        sf.path,
+                        call.lineno,
+                        f"resident BlockSpecs of pallas_call in {fname}() "
+                        f"pin ~{const_bytes} bytes in VMEM, over the "
+                        f"{budget}-byte table budget",
+                        symbol=f"{fname}:oversized",
+                    )
+                )
+
+            if symbolic_dims and not _has_dominating_guard(fn, call):
+                # the contract moves to the callers: each in-package call
+                # site must sit behind a budget-checked fallback.
+                sites = (
+                    _call_sites(files, sf.module, fn.name) if fn is not None else []
+                )
+                for csf, cnode, cfn in sites:
+                    if not _has_dominating_guard(cfn, cnode):
+                        cname = cfn.name if cfn is not None else "<module>"
+                        findings.append(
+                            Finding(
+                                CHECKER,
+                                "missing-budget-guard",
+                                sf.path,
+                                call.lineno,
+                                f"{fname}() keeps unbounded blocks "
+                                f"({', '.join(symbolic_dims)}) resident in "
+                                f"VMEM but caller {csf.path}:{cnode.lineno} "
+                                f"({cname}) has no budget-checked fallback",
+                                symbol=f"{fname}<-{csf.module}.{cname}",
+                            )
+                        )
+
+            kname = _kernel_fn_name(call)
+            if kname and kname not in checked_kernels:
+                checked_kernels.add(kname)
+                kfn = next(
+                    (
+                        n
+                        for n in ast.walk(sf.tree)
+                        if isinstance(n, ast.FunctionDef) and n.name == kname
+                    ),
+                    None,
+                )
+                if kfn is not None:
+                    _check_tracer_flow(sf, kfn, findings)
+    return findings
