@@ -100,9 +100,18 @@ def check_serve(fresh: dict, base: dict, failures: list[str]) -> None:
 
 
 def check_kernels(fresh: dict, base: dict, failures: list[str]) -> None:
-    # counts/parity always: the fused path must keep its one-launch-per-
-    # segment contract for every case the baseline covers
-    for section in ("fused_vs_scan", "slot_vs_gather"):
+    # counts/parity always: launch counts and analytical gather/residency
+    # counters are platform-independent — equality vs the baseline holds
+    # in interpret mode too, so these gate on EVERY platform
+    _COUNTER_KEYS = {
+        "fused_vs_scan": ("launches_fused", "launches_scanned",
+                          "gather_bytes_per_step", "resident_bytes"),
+        "slot_vs_gather": ("launches_kernel", "gather_bytes_per_step",
+                           "resident_bytes"),
+        "depth_vs_fused": ("gather_bytes_per_step_depth",
+                           "gather_bytes_per_step_fused"),
+    }
+    for section, keys in _COUNTER_KEYS.items():
         base_cases = base.get(section, [])
         fresh_cases = fresh.get(section, [])
         if len(fresh_cases) < len(base_cases):
@@ -111,11 +120,39 @@ def check_kernels(fresh: dict, base: dict, failures: list[str]) -> None:
                 f"baseline {len(base_cases)}")
             continue
         for ref, got in zip(base_cases, fresh_cases):
-            for key in ("launches_fused", "launches_scanned"):
+            for key in keys:
                 if key in ref and got.get(key) != ref.get(key):
                     failures.append(
                         f"kernels: {section} {key} = {got.get(key)}, "
                         f"baseline {ref.get(key)}")
+    # the depth variant must keep strictly undercutting the fused kernel
+    for got in fresh.get("depth_vs_fused", []):
+        d = got.get("gather_bytes_per_step_depth")
+        f = got.get("gather_bytes_per_step_fused")
+        if d is not None and f is not None and not d < f:
+            failures.append(
+                f"kernels: depth gather bytes/step {d} not strictly below "
+                f"fused ({f})")
+    # tuned selection may never lose to its conservative fallback — this
+    # is the dispatch contract (kernels selected only where they win)
+    base_sel = {r.get("key"): r for r in base.get("tuned_selection", [])}
+    fresh_sel = fresh.get("tuned_selection", [])
+    if base_sel and not fresh_sel:
+        failures.append("kernels: fresh run recorded no tuned_selection")
+    for got in fresh_sel:
+        sp = got.get("selected_speedup")
+        if sp is not None and float(sp) < 1.0:
+            failures.append(
+                f"kernels: tuned_selection {got.get('key')} selected "
+                f"{got.get('selected')} at {float(sp):.2f}x vs fallback "
+                f"{got.get('fallback')} (must be >= 1.0)")
+        ref = base_sel.get(got.get("key"))
+        if (ref is not None and fresh.get("platform") == base.get("platform")
+                and got.get("selected") != ref.get("selected")):
+            failures.append(
+                f"kernels: tuned_selection {got.get('key')} selects "
+                f"{got.get('selected')}, baseline {ref.get('selected')} "
+                "(tuning drift — regenerate BENCH_kernels.json)")
     if "gate" not in fresh:
         failures.append("kernels: fresh run recorded no gate result")
     # wall-clock only where measured: interpret-mode timings (any

@@ -1,26 +1,31 @@
-"""Kernel micro-benchmarks + the fused-kernel CI gate (BENCH_kernels.json).
+"""Kernel micro-benchmarks + the kernel CI gate (BENCH_kernels.json).
 
-Two comparisons, both written to ``BENCH_kernels.json`` by
+Four sections, all written to ``BENCH_kernels.json`` by
 ``benchmarks/run.py`` for cross-PR regression tracking:
 
 * **fused vs scanned** — the fused multi-step kernel
-  (:func:`repro.kernels.ops.forest_run`: ONE launch per plan segment,
-  node tables resident in VMEM) against the legacy path it replaced
-  (:func:`~repro.kernels.ops.forest_run_scanned`: ``length`` launches
-  of the single-step kernel under a scan);
-* **slot kernel vs gather** — the masked-slot kernel
-  (:func:`~repro.kernels.ops.slot_run`: per-slot tree ids on flattened
-  VMEM-resident tables) against the generic per-slot jnp gather it
-  replaced (:func:`~repro.kernels.ref.slot_run_ref`).
+  (:func:`repro.kernels.ops.forest_run` pinned to ``impl="fused"``)
+  against the legacy path it replaced (``impl="scan"``);
+* **slot kernel vs gather** — the flat masked-slot kernel
+  (``impl="flat"``) against the generic per-slot jnp gather
+  (``impl="gather"``);
+* **depth vs fused** — the depth-aware gather-eliminated variant
+  (:func:`repro.kernels.ops.forest_run_depth`, root-start) against the
+  full-width fused kernel, including the analytical gather counters the
+  variant exists to shrink;
+* **tuned selection** — every registered implementation timed per
+  shape, then the committed tuning record's pick re-measured against
+  the best conservative fallback.  ``selected_speedup`` is EXACTLY 1.0
+  when the record picks the fallback itself; the gate requires >= 1.0
+  everywhere — a kernel is only ever selected where it wins.
 
-Gate semantics (``gate=True``, wired into ``run.py --smoke``): on a
-real TPU the fused path must beat the scanned path by >=
-``fused_gate_speedup`` x wall-clock or the build fails.  On CPU the
-kernels execute in interpret mode, whose wall-clock is not
-performance-representative — there the gate degrades to the
-interpret-mode-safe assertion that both comparisons are BIT-IDENTICAL
-(index state) / tolerance-identical (readout), raising on divergence so
-a fused-kernel regression still fails the build.
+Every row also records the platform-independent analytical counters
+(``tools.perf.counters``: launches, gather rows/bytes per step,
+resident bytes), which is what the CPU gate and the baseline check
+compare — interpret-mode wall-clock is not performance-representative,
+so on CPU the gate asserts bit-parity between all impls plus the
+counter invariants (depth strictly below full width, tuned selection
+never slower than its fallback) instead of raw timings.
 """
 from __future__ import annotations
 
@@ -30,7 +35,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import layout as klayout
+from repro.kernels import ops, ref, tuning
+from tools.perf import counters as perfc
+
+#: shapes mirror tools.perf.report.SOLO_SHAPES / SLOT_SHAPES
+SOLO_CONFIGS = [(128, 16, 127, 32), (256, 32, 255, 64)]
+SLOT_CONFIGS = [(64, 8, 127, 16, 8), (128, 12, 255, 32, 16)]
+
+_SOLO_FALLBACK = "scan"
+_SLOT_FALLBACK = "gather"
 
 
 def _time(fn, *args, repeats=3, **kw):
@@ -51,12 +65,38 @@ def _tree_tables(rng, M, F):
     )
 
 
+def _structured_tree(rng, M, F):
+    """A real binary tree (heap topology) under a random node-label
+    permutation fixing the root — the shape the depth-aware layout has
+    to actually reorder, unlike the uniform-random tables above."""
+    perm = np.concatenate([[0], 1 + rng.permutation(M - 1)])
+    left = np.zeros(M, np.int64)
+    right = np.zeros(M, np.int64)
+    is_leaf = np.zeros(M, bool)
+    for i in range(M):
+        lo, hi = 2 * i + 1, 2 * i + 2
+        if hi < M:
+            left[i], right[i] = perm[lo], perm[hi]
+        else:
+            is_leaf[i] = True
+            left[i] = right[i] = perm[i]
+    inv = np.empty(M, np.int64)
+    inv[perm] = np.arange(M)
+    return (
+        jnp.asarray(rng.integers(0, F, size=M), jnp.int32),
+        jnp.asarray(rng.normal(size=M), jnp.float32),
+        jnp.asarray(left[inv], jnp.int32),
+        jnp.asarray(right[inv], jnp.int32),
+        jnp.asarray(is_leaf[inv]),
+    )
+
+
 def run_fused_vs_scan(configs=None, verbose: bool = True) -> list[dict]:
     """Fused multi-step launch vs ``length`` scanned single-step
-    launches; asserts bit-parity, reports wall-clock both ways."""
+    launches; asserts bit-parity, reports wall-clock + counters."""
     rng = np.random.default_rng(0)
     rows = []
-    for B, F, M, length in configs or [(128, 16, 127, 32), (256, 32, 255, 64)]:
+    for B, F, M, length in configs or SOLO_CONFIGS:
         idx = jnp.asarray(rng.integers(0, M, size=B), jnp.int32)
         X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
         tables = _tree_tables(rng, M, F)
@@ -64,9 +104,9 @@ def run_fused_vs_scan(configs=None, verbose: bool = True) -> list[dict]:
         # call these under jit, so per-call wrapper overhead
         # (pack_fields, budget check) must not pollute the gated ratio
         fused_j = jax.jit(lambda i, x, *t: ops.forest_run(
-            i, x, *t, length=length))
-        scan_j = jax.jit(lambda i, x, *t: ops.forest_run_scanned(
-            i, x, *t, length=length))
+            i, x, *t, length=length, impl="fused"))
+        scan_j = jax.jit(lambda i, x, *t: ops.forest_run(
+            i, x, *t, length=length, impl="scan"))
         fused = fused_j(idx, X, *tables)
         scanned = scan_j(idx, X, *tables)
         assert np.array_equal(np.asarray(fused), np.asarray(scanned)), (
@@ -74,9 +114,14 @@ def run_fused_vs_scan(configs=None, verbose: bool = True) -> list[dict]:
             f"B{B} M{M} L{length}")
         t_fused = _time(fused_j, idx, X, *tables)
         t_scan = _time(scan_j, idx, X, *tables)
+        c_fused = perfc.solo_counters("fused", M=M, length=length)
+        c_scan = perfc.solo_counters("scan", M=M, length=length)
         row = {
             "B": B, "F": F, "M": M, "length": length,
-            "launches_fused": 1, "launches_scanned": length,
+            "launches_fused": c_fused["launches"],
+            "launches_scanned": c_scan["launches"],
+            "gather_bytes_per_step": c_fused["gather_bytes_per_step"],
+            "resident_bytes": c_fused["resident_bytes"],
             "fused_us": t_fused * 1e6, "scanned_us": t_scan * 1e6,
             "speedup": t_scan / t_fused,
         }
@@ -90,12 +135,11 @@ def run_fused_vs_scan(configs=None, verbose: bool = True) -> list[dict]:
 
 
 def run_slot_vs_gather(configs=None, verbose: bool = True) -> list[dict]:
-    """Masked-slot kernel vs the generic per-slot gather path."""
+    """Flat masked-slot kernel vs the generic per-slot gather path."""
     rng = np.random.default_rng(1)
     rows = []
     gather = jax.jit(ref.slot_run_ref, static_argnames=("length",))
-    for S, T, M, F, length in configs or [(64, 8, 127, 16, 8),
-                                          (128, 12, 255, 32, 16)]:
+    for S, T, M, F, length in configs or SLOT_CONFIGS:
         idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
         X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
         tables = (
@@ -108,15 +152,19 @@ def run_slot_vs_gather(configs=None, verbose: bool = True) -> list[dict]:
         units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
         mask = jnp.asarray(rng.random(S) < 0.8)
         kernel_j = jax.jit(lambda i, x, *a: ops.slot_run(
-            i, x, *a, length=length))
+            i, x, *a, length=length, impl="flat"))
         kernel = kernel_j(idx, X, *tables, units, mask)
         generic = gather(idx, X, *tables, units, mask, length=length)
         assert np.array_equal(np.asarray(kernel), np.asarray(generic)), (
             f"slot kernel diverged from the gather path at S{S} T{T} M{M}")
         t_kernel = _time(kernel_j, idx, X, *tables, units, mask)
         t_gather = _time(gather, idx, X, *tables, units, mask, length=length)
+        c_flat = perfc.slot_counters("flat", T=T, M=M, length=length)
         row = {
             "S": S, "T": T, "M": M, "F": F, "length": length,
+            "launches_kernel": c_flat["launches"],
+            "gather_bytes_per_step": c_flat["gather_bytes_per_step"],
+            "resident_bytes": c_flat["resident_bytes"],
             "kernel_us": t_kernel * 1e6, "gather_us": t_gather * 1e6,
             "speedup": t_gather / t_kernel,
         }
@@ -129,6 +177,133 @@ def run_slot_vs_gather(configs=None, verbose: bool = True) -> list[dict]:
     return rows
 
 
+def run_depth_vs_fused(configs=None, verbose: bool = True) -> list[dict]:
+    """Depth-aware gather-eliminated run (fresh, root-start) vs the
+    full-width fused kernel: bit-parity, wall-clock, and the analytical
+    gather counters — the depth variant's gather bytes/step must be
+    STRICTLY below the fused kernel's (the row the CI counter gate
+    pins)."""
+    rng = np.random.default_rng(2)
+    rows = []
+    for B, F, M, length in configs or SOLO_CONFIGS:
+        X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        tables = _structured_tree(rng, M, F)
+        lay = klayout.build_depth_layout(*tables)
+        idx0 = jnp.zeros(B, jnp.int32)  # root start: the fresh shape
+        fused_j = jax.jit(lambda i, x, *t: ops.forest_run(
+            i, x, *t, length=length, impl="fused"))
+        depth_j = jax.jit(lambda i, x: ops.forest_run_depth(
+            i, x, lay, 0, length=length, start_step=0))
+        fused = fused_j(idx0, X, *tables)
+        depth = depth_j(idx0, X)
+        assert np.array_equal(np.asarray(depth), np.asarray(fused)), (
+            f"depth-aware forest_run diverged from fused at B{B} M{M} "
+            f"L{length}")
+        # real layout widths must stay within the analytical model
+        widths = lay.step_widths(0, length)
+        model = perfc.depth_step_widths(length, lay.Mp, levels=None)
+        assert all(w <= m for w, m in zip(widths, model)), (
+            f"layout widths {widths} exceed the counter model {model}")
+        t_fused = _time(fused_j, idx0, X, *tables)
+        t_depth = _time(depth_j, idx0, X)
+        c_fused = perfc.solo_counters("fused", M=M, length=length)
+        c_depth = perfc.solo_counters("depth", M=M, length=length)
+        row = {
+            "B": B, "F": F, "M": M, "length": length,
+            "unrolled_widths": [int(w) for w in widths],
+            "gather_bytes_per_step_depth": c_depth["gather_bytes_per_step"],
+            "gather_bytes_per_step_fused": c_fused["gather_bytes_per_step"],
+            "fused_us": t_fused * 1e6, "depth_us": t_depth * 1e6,
+            "speedup": t_fused / t_depth,
+        }
+        rows.append(row)
+        if verbose:
+            print(f"kernel,depth_vs_fused,B{B}xM{M}xL{length},"
+                  f"depth_us,{row['depth_us']:.0f},"
+                  f"fused_us,{row['fused_us']:.0f},"
+                  f"gather_bytes,{row['gather_bytes_per_step_depth']:g}"
+                  f"/{row['gather_bytes_per_step_fused']:g}")
+    return rows
+
+
+def run_tuned_selection(verbose: bool = True) -> list[dict]:
+    """Re-measure every registered impl per shape and audit the
+    committed tuning record's pick against the best conservative
+    fallback.
+
+    All impls are asserted BIT-IDENTICAL first (selection may only ever
+    change which one runs).  ``selected_speedup`` is the gated number:
+    exactly 1.0 when the record picks the fallback, else
+    ``fallback_us / selected_us`` — >= 1.0 means the kernel the record
+    selected actually wins on this platform, here, now.
+    """
+    rng = np.random.default_rng(3)
+    rows = []
+    for B, F, M, length in SOLO_CONFIGS:
+        idx = jnp.asarray(rng.integers(0, M, size=B), jnp.int32)
+        X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+        tables = _tree_tables(rng, M, F)
+        timings, outs = {}, {}
+        for name in sorted(tuning.SOLO_IMPLS):
+            fn = jax.jit(lambda i, x, *t, _n=name: ops.forest_run(
+                i, x, *t, length=length, impl=_n))
+            outs[name] = np.asarray(fn(idx, X, *tables))
+            timings[name] = _time(fn, idx, X, *tables) * 1e6
+        base = outs[_SOLO_FALLBACK]
+        for name, out in outs.items():
+            assert np.array_equal(out, base), (
+                f"solo impl {name} diverged at M{M} L{length}")
+        key = tuning.solo_key(perfc.pad_m(M), length)
+        selected, _ = tuning.select("solo", key)
+        speedup = (1.0 if selected == _SOLO_FALLBACK
+                   else timings[_SOLO_FALLBACK] / timings[selected])
+        rows.append({
+            "path": "solo", "key": key, "selected": selected,
+            "fallback": _SOLO_FALLBACK,
+            "timings_us": {k: round(v, 1) for k, v in timings.items()},
+            "selected_speedup": speedup,
+        })
+        if verbose:
+            print(f"kernel,tuned_selection,solo,{key},selected,{selected},"
+                  f"speedup,{speedup:.2f}x")
+    for S, T, M, F, length in SLOT_CONFIGS:
+        idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+        X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+        tables = (
+            jnp.asarray(rng.integers(0, F, size=(T, M)), jnp.int32),
+            jnp.asarray(rng.normal(size=(T, M)), jnp.float32),
+            jnp.asarray(rng.integers(0, M, size=(T, M)), jnp.int32),
+            jnp.asarray(rng.integers(0, M, size=(T, M)), jnp.int32),
+            jnp.asarray(rng.random((T, M)) < 0.3),
+        )
+        units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+        mask = jnp.asarray(rng.random(S) < 0.8)
+        timings, outs = {}, {}
+        for name in sorted(tuning.SLOT_IMPLS):
+            fn = jax.jit(lambda i, x, u, m, *t, _n=name: ops.slot_run(
+                i, x, *t, u, m, length=length, impl=_n))
+            outs[name] = np.asarray(fn(idx, X, units, mask, *tables))
+            timings[name] = _time(fn, idx, X, units, mask, *tables) * 1e6
+        base = outs[_SLOT_FALLBACK]
+        for name, out in outs.items():
+            assert np.array_equal(out, base), (
+                f"slot impl {name} diverged at T{T} M{M} L{length}")
+        key = tuning.slot_key(T, perfc.pad_m(M), length)
+        selected, _ = tuning.select("slot", key)
+        speedup = (1.0 if selected == _SLOT_FALLBACK
+                   else timings[_SLOT_FALLBACK] / timings[selected])
+        rows.append({
+            "path": "slot", "key": key, "selected": selected,
+            "fallback": _SLOT_FALLBACK,
+            "timings_us": {k: round(v, 1) for k, v in timings.items()},
+            "selected_speedup": speedup,
+        })
+        if verbose:
+            print(f"kernel,tuned_selection,slot,{key},selected,{selected},"
+                  f"speedup,{speedup:.2f}x")
+    return rows
+
+
 def run(verbose: bool = True, gate: bool = True,
         fused_gate_speedup: float = 1.5) -> dict:
     on_tpu = jax.default_backend() == "tpu"
@@ -136,21 +311,40 @@ def run(verbose: bool = True, gate: bool = True,
         "platform": jax.default_backend(),
         "fused_vs_scan": run_fused_vs_scan(verbose=verbose),
         "slot_vs_gather": run_slot_vs_gather(verbose=verbose),
+        "depth_vs_fused": run_depth_vs_fused(verbose=verbose),
+        "tuned_selection": run_tuned_selection(verbose=verbose),
     }
+    if gate:
+        # counter invariants hold on EVERY platform (analytical, not
+        # wall-clock): depth strictly undercuts full width, and the
+        # tuning record never selects an impl that loses to its fallback
+        for row in out["depth_vs_fused"]:
+            assert (row["gather_bytes_per_step_depth"]
+                    < row["gather_bytes_per_step_fused"]), (
+                f"depth variant gather bytes/step "
+                f"{row['gather_bytes_per_step_depth']} not below fused "
+                f"{row['gather_bytes_per_step_fused']}")
+        worst_sel = min(r["selected_speedup"] for r in out["tuned_selection"])
+        assert worst_sel >= 1.0, (
+            f"tuned selection regresses vs its fallback "
+            f"({worst_sel:.2f}x; the record must only select winners)")
     if gate and on_tpu:
         worst = min(r["speedup"] for r in out["fused_vs_scan"])
         assert worst >= fused_gate_speedup, (
             f"fused forest_run only {worst:.2f}x the scanned path "
             f"(gate: >= {fused_gate_speedup}x)")
         out["gate"] = {"mode": "tpu-wallclock", "min_speedup": worst,
+                       "min_selected_speedup": worst_sel,
                        "threshold": fused_gate_speedup}
     elif gate:
         # interpret-mode wall-clock is not performance-representative;
-        # the parity assertions above are the CPU gate (they raise —
-        # and fail the build — on any fused-kernel divergence)
-        out["gate"] = {"mode": "cpu-interpret-parity"}
+        # the parity assertions + analytical counter invariants above
+        # are the CPU gate (they raise — and fail the build — on any
+        # kernel divergence or counter regression)
+        out["gate"] = {"mode": "cpu-interpret-counters",
+                       "min_selected_speedup": worst_sel}
         if verbose:
-            print("kernel,gate,cpu-interpret-parity,ok")
+            print("kernel,gate,cpu-interpret-counters,ok")
     return out
 
 

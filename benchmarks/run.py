@@ -21,8 +21,11 @@ build fails).
 
 ``--check-baseline`` additionally regression-gates the fresh results
 against the committed BENCH_*.json files (benchmarks/baseline.py):
-counts and parity always, wall-clock only where actually measured —
-interpret-mode kernel timings are skipped.
+counts, parity, and the analytical kernel counters (launches, gather
+bytes/step, resident bytes, tuned-selection speedup >= 1.0) always —
+those are platform-independent and gate in interpret mode too;
+wall-clock only where actually measured (interpret-mode kernel timings
+are skipped).
 """
 from __future__ import annotations
 
@@ -122,10 +125,12 @@ def main() -> None:
     results["stepplan"] = bench_backends.run_stepplan_traces(
         n_trees=4 if args.smoke else 6, depth=8 if args.smoke else 12)
 
-    print("== Kernels: fused-vs-scan + slot-kernel-vs-gather (gated) ==",
-          flush=True)
+    print("== Kernels: fused/slot/depth variants + tuned selection "
+          "(gated) ==", flush=True)
     # gated: fused multi-step launch >= 1.5x the scanned single-step path
-    # on TPU; interpret-mode-safe bit-parity assertion on CPU
+    # on TPU; on every platform bit-parity across all registered impls,
+    # depth-variant gather counters strictly below fused, and tuned
+    # selection never slower than its conservative fallback
     results["kernels"] = bench_kernels.run(gate=True)
     _dump(args.kernels_out, results["kernels"])
 

@@ -76,6 +76,29 @@ def pad_fields(fields: jax.Array) -> jax.Array:
     return out
 
 
+def onehot_step_body(col, x, fields, m_ids, f_cols):
+    """One anytime step of one tree for a batch tile — THE step body
+    every stepping kernel shares (fused solo, depth-aware, bucketized):
+
+      * node gather    -> one-hot ``[Bb, W]`` x field-matrix ``[W, 8]``
+        matmul (MXU), where ``W`` is the gather width (``Mp`` for the
+        full table, narrower for a depth-bounded prefix);
+      * feature gather -> one-hot masked reduction over ``x`` (VPU);
+      * branch select  -> vectorized where; leaves self-loop.
+
+    ``fields`` and ``m_ids`` must agree on ``W`` — callers pick the
+    width; the arithmetic is bit-identical at any width that contains
+    every live node index.
+    """
+    onehot = (col[:, None] == m_ids).astype(jnp.float32)      # [Bb, W]
+    acc = jax.lax.dot(onehot, fields, preferred_element_type=jnp.float32)
+    f_onehot = (f_cols == acc[:, F_IDX][:, None]).astype(jnp.float32)
+    fv = jnp.sum(x * f_onehot, axis=1)                        # [Bb]
+    nxt = jnp.where(fv <= acc[:, THR], acc[:, LEFT], acc[:, RIGHT])
+    new = jnp.where(acc[:, LEAF] > 0.5, col.astype(jnp.float32), nxt)
+    return new.astype(jnp.int32)
+
+
 def accum_boundary_readout(new_idx, probs_ref, *, block_m: int,
                            n_trees: int, n_classes: int) -> jax.Array:
     """The fused ``prob_accum`` body shared by the run-readout kernels:

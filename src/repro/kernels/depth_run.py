@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: depth-aware fused run — gather elimination for the
+shallow levels of a fresh anytime walk.
+
+:mod:`repro.kernels.forest_run` contracts a one-hot ``[Bb, Mp]`` against
+the FULL node-field matrix every step.  But a dispatch that starts at
+the ROOT (the first segment a tree receives under the paper's step
+plans) provably cannot reach deep nodes early: after ``j`` steps every
+walker sits at BFS depth ≤ ``j``.  With the tables depth-ordered
+(:mod:`repro.kernels.layout`) those nodes occupy a PREFIX of the field
+matrix, so step ``j``'s gather narrows from ``Mp`` rows to the layout's
+``counts(j)`` rows — the first steps touch a handful of sublanes instead
+of the whole table, the register/cache service of shallow levels that
+Gossen & Steffen identify as the dominant win for large forests.
+
+Mechanics: the narrow prefix widths are a **static tuple** (computed
+host-side from the concrete layout), so the kernel simply unrolls one
+``onehot_step_body`` per width over ``fields_ref[pl.ds(0, w), :]`` and
+finishes the remaining steps with the usual full-width ``fori_loop``.
+Same arithmetic, same field matrix, strictly fewer rows gathered —
+bit-parity with :func:`repro.kernels.ops.forest_run` on the same layout
+is exact, and the analytical gather-bytes counter in :mod:`tools.perf`
+drops accordingly.
+
+Only valid when ``idx`` is in the layout's depth-ordered node space and
+every walker has taken at most ``start_step`` steps — the executor
+guards this by restricting the variant to *fresh* (offset-0) segments.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (
+    NFIELDS,
+    CompilerParams,
+    onehot_step_body,
+    round_up,
+)
+
+
+def _depth_run_kernel(
+    idx_ref,     # int32 [Bb, 1]  depth-space index column
+    x_ref,       # f32   [Bb, F]
+    fields_ref,  # f32   [Mp, NFIELDS]  depth-ordered resident fields
+    out_ref,     # int32 [Bb, 1]
+    *,
+    widths: tuple,
+    length: int,
+    block_m: int,
+):
+    x = x_ref[...]
+    f_cols = jax.lax.broadcasted_iota(jnp.float32, x.shape, 1)
+    col = idx_ref[:, 0]
+
+    # statically unrolled narrow-prefix steps: step j gathers widths[j]
+    # rows — every node reachable by then lives in that prefix
+    for w in widths:
+        m_ids = jax.lax.broadcasted_iota(jnp.int32, (1, w), 1)
+        col = onehot_step_body(col, x, fields_ref[pl.ds(0, w), :], m_ids, f_cols)
+
+    tail = length - len(widths)
+    if tail > 0:
+        fields = fields_ref[...]
+        m_ids = jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+
+        def body(_, c):
+            return onehot_step_body(c, x, fields, m_ids, f_cols)
+
+        col = jax.lax.fori_loop(0, tail, body, col)
+    out_ref[:, 0] = col
+
+
+@functools.partial(
+    jax.jit, static_argnames=("widths", "length", "block_b", "interpret")
+)
+def depth_run(
+    idx: jax.Array,     # int32 [B]  index column, DEPTH-ORDERED node space
+    X: jax.Array,       # f32   [B, F]
+    fields: jax.Array,  # f32   [Mp, NFIELDS]  depth-ordered, pad_fields'd
+    *,
+    widths: tuple,      # static per-step narrow gather widths (may be ())
+    length: int,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """``length`` fused steps of one depth-ordered tree in ONE launch,
+    the first ``len(widths)`` steps gathering only a table prefix.
+
+    ``widths`` must come from ``DepthLayout.step_widths`` for the same
+    start offset — each entry must cover every node reachable by that
+    step, or narrow gathers would drop live states.  ``widths=()``
+    degrades to exactly the full-width fused kernel.
+    """
+    B, F = X.shape
+    Mp = fields.shape[0]
+    if any(w > Mp for w in widths):
+        raise ValueError(f"narrow widths {widths} exceed table height {Mp}")
+    block_b = min(block_b, max(8, B))
+    Bp = round_up(B, block_b)
+    idx_p = jnp.pad(idx, (0, Bp - B)).reshape(Bp, 1)
+    x_p = jnp.pad(X, ((0, Bp - B), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _depth_run_kernel, widths=tuple(widths), length=length, block_m=Mp
+        ),
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, F), lambda b: (b, 0)),
+            pl.BlockSpec((Mp, NFIELDS), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(idx_p, x_p, fields)
+    return out[:B, 0]

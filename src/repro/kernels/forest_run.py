@@ -36,28 +36,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.common import (
-    F_IDX,
-    LEAF,
-    LEFT,
     NFIELDS,
-    RIGHT,
-    THR,
     CompilerParams,
     accum_boundary_readout,
+    onehot_step_body as _step_body,
     pad_fields,
     round_up,
 )
-
-
-def _step_body(col, x, fields, m_ids, f_cols):
-    """One anytime step of the resident tree for the whole batch tile."""
-    onehot = (col[:, None] == m_ids).astype(jnp.float32)      # [Bb, Mp]
-    acc = jax.lax.dot(onehot, fields, preferred_element_type=jnp.float32)
-    f_onehot = (f_cols == acc[:, F_IDX][:, None]).astype(jnp.float32)
-    fv = jnp.sum(x * f_onehot, axis=1)                        # [Bb]
-    nxt = jnp.where(fv <= acc[:, THR], acc[:, LEFT], acc[:, RIGHT])
-    new = jnp.where(acc[:, LEAF] > 0.5, col.astype(jnp.float32), nxt)
-    return new.astype(jnp.int32)
 
 
 def _forest_run_kernel(

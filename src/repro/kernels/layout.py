@@ -1,0 +1,218 @@
+"""Depth-ordered node layouts — the host-side precompute behind the
+gather-eliminating kernel variants.
+
+The PR-4 kernels gather node fields through a one-hot matmul against the
+FULL ``[Mp, NFIELDS]`` table every step, no matter where the walk
+actually is.  But anytime stepping starts every tree at its root, and
+after ``s`` steps a walker can only be at a node whose BFS distance from
+the root is ≤ ``s`` — for a binary tree that is at most ``2^(s+1) - 1``
+nodes.  Gossen & Steffen ("Large Random Forests: Optimisation for Rapid
+Evaluation") exploit exactly this: the shallow levels are served from
+registers/caches while only deep levels touch the big table.
+
+This module makes that bound usable by a Pallas kernel:
+
+* :func:`bfs_depths` — BFS distance of every node from the root,
+  following ``left``/``right`` of non-leaf nodes (unreachable nodes get
+  a sentinel depth and sort to the end — they can never be visited, so
+  excluding them from any gather is always safe);
+* :class:`DepthLayout` — per-forest relabeling ``new = rank by (depth,
+  id)`` with both permutations mirrored on device, the permuted packed
+  field matrices, and the static per-step prefix *widths* the kernels
+  unroll against (``step_widths``).  Because nodes are depth-sorted, all
+  nodes reachable within ``s`` steps occupy a PREFIX of the table —
+  the step-``s`` gather narrows from ``Mp`` rows to ``counts(s)`` rows.
+
+Widths are host-side Python ints (static under jit), computed from the
+concrete tables at executor-build time; ``complete_tree_width`` is the
+data-independent upper bound (``2^(s+1) - 1``) the analytical counters
+in ``tools/perf`` use — real layouts are never wider.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import NFIELDS, pack_fields, pad_fields, round_up
+
+#: sublane granularity the narrow gather widths round up to
+WIDTH_LANES = 8
+
+
+def bfs_depths(left: np.ndarray, right: np.ndarray, is_leaf: np.ndarray) -> np.ndarray:
+    """BFS distance from node 0 for one tree's tables ([M] each).
+
+    Leaves self-loop (no out-edges); nodes unreachable from the root get
+    depth ``M`` (beyond any real walk, so they sort after every
+    reachable node and never widen a prefix).
+    """
+    M = int(left.shape[0])
+    left = np.asarray(left)
+    right = np.asarray(right)
+    is_leaf = np.asarray(is_leaf).astype(bool)
+    dist = np.full(M, M, dtype=np.int64)
+    dist[0] = 0
+    frontier = [0]
+    d = 0
+    while frontier:
+        nxt = []
+        for n in frontier:
+            if is_leaf[n]:
+                continue
+            for c in (int(left[n]), int(right[n])):
+                if 0 <= c < M and dist[c] > d + 1:
+                    dist[c] = d + 1
+                    nxt.append(c)
+        frontier = nxt
+        d += 1
+    return dist
+
+
+def complete_tree_width(step: int, m_padded: int, lanes: int = WIDTH_LANES) -> int:
+    """Data-independent upper bound on the step-``step`` gather width:
+    a binary tree reaches at most ``2^(step+1) - 1`` nodes in ``step``
+    steps.  Shared with ``tools.perf.counters`` (cross-checked by test)."""
+    reachable = (1 << (step + 1)) - 1 if step < 62 else m_padded
+    return min(m_padded, round_up(min(reachable, m_padded), lanes))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DepthLayout:
+    """Depth-ordered relabeling of a whole forest's node tables.
+
+    Node ``m`` of tree ``t`` gets new id ``new_of_old[t, m]``; all
+    arrays below live in the NEW space.  ``fields`` stacks each tree's
+    permuted, padded ``[Mp, NFIELDS]`` field matrix; ``tables`` are the
+    permuted raw tables (for the streamed scan fallback).  ``counts`` is
+    the host-side per-depth prefix histogram behind :meth:`step_widths`.
+    """
+
+    fields: jax.Array          # f32   [T, Mp, NFIELDS] permuted + padded
+    tables: tuple              # permuted raw (feature, thr, left, right, leaf), [T, M]
+    old_of_new: jax.Array      # int32 [T, M]  new id -> original id
+    new_of_old: jax.Array      # int32 [T, M]  original id -> new id
+    counts: np.ndarray         # int64 [max_depth+1] forest-max nodes at depth <= d
+    M: int
+    Mp: int
+
+    @property
+    def n_trees(self) -> int:
+        return int(self.fields.shape[0])
+
+    def flat_fields(self) -> jax.Array:
+        """[T*Mp, NFIELDS] — the slot kernels' flat-table layout, in
+        depth order (row ``t*Mp + new_id``)."""
+        T, Mp, _ = self.fields.shape
+        return self.fields.reshape(T * Mp, NFIELDS)
+
+    def top_fields(self, rows: int) -> jax.Array:
+        """[T*rows, NFIELDS] compacted hot subtree tops: the first
+        ``rows`` depth-ordered rows of every tree, contiguously — the
+        small resident table the cached slot kernel hits when every
+        live walker is still shallow."""
+        rows = min(int(rows), self.Mp)
+        T = self.n_trees
+        return self.fields[:, :rows, :].reshape(T * rows, NFIELDS)
+
+    def max_count(self, depth: int) -> int:
+        """Forest-wide max #nodes within BFS distance ``depth``."""
+        d = min(int(depth), len(self.counts) - 1)
+        return int(self.counts[d])
+
+    def step_widths(
+        self,
+        start_step: int,
+        length: int,
+        levels: int | None = None,
+        lanes: int = WIDTH_LANES,
+    ) -> tuple[int, ...]:
+        """Static narrow-gather widths for steps ``start_step ..``.
+
+        Entry ``j`` bounds the gather at kernel step ``j`` given that
+        the walk has taken ``start_step + j`` steps from the root.  The
+        tuple stops at the first full-width step (the kernel's
+        ``fori_loop`` tail covers the rest) and is capped at ``levels``
+        unrolled steps.  Every width is lane-rounded and ≤ the
+        data-independent :func:`complete_tree_width` bound.
+        """
+        n = length if levels is None else min(int(levels), length)
+        widths = []
+        for j in range(n):
+            w = round_up(max(self.max_count(start_step + j), 1), lanes)
+            if w >= self.Mp:
+                break
+            widths.append(w)
+        return tuple(widths)
+
+
+def build_depth_layout(feature, threshold, left, right, is_leaf) -> DepthLayout:
+    """Depth-order a forest's stacked ``[T, M]`` tables (host-side —
+    requires CONCRETE arrays, so call it at executor/bench build time,
+    never under jit)."""
+    feature = np.asarray(feature)
+    threshold = np.asarray(threshold)
+    left = np.asarray(left)
+    right = np.asarray(right)
+    is_leaf = np.asarray(is_leaf)
+    if feature.ndim == 1:  # single tree -> T=1 forest
+        feature, threshold, left, right, is_leaf = (
+            a[None] for a in (feature, threshold, left, right, is_leaf)
+        )
+    T, M = feature.shape
+    Mp = round_up(max(M, 1), 128)
+
+    perms, invs, dists = [], [], []
+    for t in range(T):
+        dist = bfs_depths(left[t], right[t], is_leaf[t])
+        perm = np.argsort(dist, kind="stable")          # new -> old
+        inv = np.empty(M, dtype=np.int64)
+        inv[perm] = np.arange(M)
+        perms.append(perm)
+        invs.append(inv)
+        dists.append(dist)
+    perm = np.stack(perms)                              # [T, M]
+    inv = np.stack(invs)
+    dist = np.stack(dists)
+
+    # permuted raw tables: row new_id holds old node perm[new_id], with
+    # child pointers rewritten into the new space
+    t_ids = np.arange(T)[:, None]
+    p_feature = feature[t_ids, perm]
+    p_threshold = threshold[t_ids, perm]
+    p_left = np.take_along_axis(inv, left[t_ids, perm], axis=1)
+    p_right = np.take_along_axis(inv, right[t_ids, perm], axis=1)
+    p_leaf = is_leaf[t_ids, perm]
+
+    fields = jax.vmap(lambda *tree: pad_fields(pack_fields(*tree)))(
+        jnp.asarray(p_feature, jnp.int32),
+        jnp.asarray(p_threshold, jnp.float32),
+        jnp.asarray(p_left, jnp.int32),
+        jnp.asarray(p_right, jnp.int32),
+        jnp.asarray(p_leaf),
+    )
+
+    # forest-max prefix histogram: counts[d] = max_t #nodes(dist_t <= d)
+    reach = np.where(dist >= M, M, dist)                # sentinel stays M
+    max_d = int(reach[reach < M].max(initial=0))
+    counts = np.zeros(max_d + 1, dtype=np.int64)
+    for d in range(max_d + 1):
+        counts[d] = int((reach <= d).sum(axis=1).max())
+
+    return DepthLayout(
+        fields=fields,
+        tables=(
+            jnp.asarray(p_feature, jnp.int32),
+            jnp.asarray(p_threshold, jnp.float32),
+            jnp.asarray(p_left, jnp.int32),
+            jnp.asarray(p_right, jnp.int32),
+            jnp.asarray(p_leaf),
+        ),
+        old_of_new=jnp.asarray(perm, jnp.int32),
+        new_of_old=jnp.asarray(inv, jnp.int32),
+        counts=counts,
+        M=M,
+        Mp=Mp,
+    )

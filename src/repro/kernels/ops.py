@@ -1,5 +1,5 @@
 """Public jit'd wrappers around the Pallas kernels — the kernel-resident
-execution core.
+execution core, with tuning-record-driven implementation selection.
 
 On a real TPU these dispatch compiled Mosaic kernels; on CPU (this
 container) they run in interpret mode, which executes the same kernel
@@ -8,19 +8,34 @@ ref.py oracles.  Interpret-mode selection lives in ONE place
 (:func:`repro.kernels.common.resolve_interpret`) so it cannot drift
 between kernels.
 
+Dispatch: each execution shape has several registered, bit-exact
+implementations (:mod:`repro.kernels.tuning`); the public wrappers pick
+one per call from the platform's committed ``tuning/<platform>.json``
+record — or from the caller's explicit ``impl=`` override (how the
+parity tests pin each kernel) — and every kernel-backed impl still
+budget-checks its VMEM footprint and degrades to its streamed/generic
+sibling rather than failing Mosaic compilation.  Absent a tuning entry
+the defaults are conservative: ``fused`` for the solo path, ``gather``
+for the slot path (a kernel must MEASURE faster to be selected — no
+shape regresses vs the generic gather it replaced).
+
 Entry points, by execution shape:
 
 * :func:`forest_step` — one step of one tree (the PR-2 latency kernel).
-* :func:`forest_run` — L fused steps of one tree in ONE launch, node
-  tables resident in VMEM across the whole segment
-  (:mod:`repro.kernels.forest_run`); falls back to
-  :func:`forest_run_scanned` when the tables exceed the VMEM budget.
-* :func:`forest_run_readout` — same launch, plus the full anytime
-  read-out of the resulting state (segment-boundary fusion).
-* :func:`slot_run` / :func:`slot_run_readout` — the masked-slot
-  variants (:mod:`repro.kernels.slot_run`): per-slot tree ids + live
-  mask, flattened whole-forest tables resident in VMEM — the serving
-  hot path on the MXU; generic-gather fallback over the same budget.
+* :func:`forest_run` / :func:`forest_run_readout` — L fused steps of one
+  tree in ONE launch; impls ``fused`` (VMEM-resident tables,
+  :mod:`repro.kernels.forest_run`) and ``scan`` (streamed single-step
+  launches).
+* :func:`forest_run_depth` — the gather-eliminated variant over a
+  precomputed :class:`repro.kernels.layout.DepthLayout`: the first steps
+  of a fresh walk contract against a narrow table PREFIX
+  (:mod:`repro.kernels.depth_run`).
+* :func:`slot_run` / :func:`slot_run_readout` — masked per-slot trees;
+  impls ``gather`` (generic jnp), ``flat`` (whole-forest resident,
+  :mod:`repro.kernels.slot_run`), ``bucket`` (per-tree streamed grid,
+  :mod:`repro.kernels.slot_bucket`), ``cached`` (flat + hot subtree-top
+  fast path).  :func:`bucketize_slots` is the scheduler-side companion
+  permutation for gather coherence.
 * :func:`prob_accum` — the standalone read-out kernel.
 """
 from __future__ import annotations
@@ -29,8 +44,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref  # noqa: F401  (oracles re-exported below)
+from repro.kernels import depth_run as _depth
 from repro.kernels import forest_run as _fused
+from repro.kernels import slot_bucket as _bucket
 from repro.kernels import slot_run as _slots
+from repro.kernels import tuning
 from repro.kernels.common import (
     NFIELDS,
     on_tpu,
@@ -48,6 +66,10 @@ from repro.kernels.prob_accum import prob_accum as _prob_accum
 #: forests must not be forced through them.  ~4 MiB leaves headroom in a
 #: 16 MiB VMEM for the batch tile, one-hot blocks, and double buffering.
 VMEM_TABLE_BUDGET_BYTES = 4 * 2**20
+
+#: rows of each tree's depth-ordered tile the ``cached`` slot impl keeps
+#: in its compacted hot-top table when the tuning record doesn't say
+DEFAULT_TOP_ROWS = 32
 
 
 def _on_tpu() -> bool:  # retained alias: single source is common.on_tpu
@@ -107,13 +129,14 @@ def _block_rows(n_rows: int, kw: dict, default: int = 256) -> int:
 
 
 _SOLO_KW = frozenset({"block_b", "block_m", "interpret"})
-_SLOT_ALLOWED_KW = _SOLO_KW | {"block_s"}
+_SLOT_ALLOWED_KW = _SOLO_KW | {"block_s", "top_rows"}
 
 
 def _check_kw(kw: dict, allowed: frozenset = _SOLO_KW) -> None:
     """Reject tuning kwargs the target path cannot honor — eagerly and
-    identically on both sides of the VMEM budget, never silently
-    swallowed (block_s is slot-only; the solo wrappers reject it)."""
+    identically for every impl behind the shape, never silently
+    swallowed (block_s/top_rows are slot-only; the solo wrappers reject
+    them)."""
     unknown = set(kw) - allowed
     if unknown:
         raise TypeError(f"unknown kernel option(s): {sorted(unknown)}")
@@ -136,119 +159,322 @@ def _slot_kw(kw: dict) -> dict:
     return out
 
 
-def forest_run(idx, X, feature, threshold, left, right, is_leaf, *, length, **kw):
+def _resolve(kind: str, key: str, impl, kw: dict, allowed: frozenset):
+    """Pick the implementation for one dispatch: an explicit ``impl=``
+    wins (unknown names raise — tests must not silently re-route); else
+    the platform tuning record decides, its block parameters merging
+    UNDER any caller-supplied kwargs."""
+    registry = tuning.SOLO_IMPLS if kind == "solo" else tuning.SLOT_IMPLS
+    if impl is not None:
+        if impl not in registry:
+            raise ValueError(
+                f"unknown {kind} impl {impl!r} (registered: {sorted(registry)})"
+            )
+        return registry[impl], dict(kw)
+    name, params = tuning.select(kind, key)
+    merged = {k: v for k, v in params.items() if k in allowed}
+    merged.update(kw)
+    return registry[name], merged
+
+
+# --------------------------------------------------------------------------
+# solo path: one stepped tree, index COLUMN [B]
+# --------------------------------------------------------------------------
+
+@tuning.register_solo_impl("scan")
+def _solo_scan(idx, X, feature, threshold, left, right, is_leaf,
+               *, length, probs=None, unit=None, readout=False, **kw):
+    """Streamed baseline: ``length`` single-step launches (plus a
+    standalone ``prob_accum`` dispatch when a readout is fused in).
+    No residency requirement — serves any table size."""
+    fb = _fb_kw(kw)
+    if not readout:
+        return forest_run_scanned(
+            idx, X, feature, threshold, left, right, is_leaf,
+            length=length, **fb,
+        )
+    col = jnp.take(idx, unit, axis=1)
+    col = forest_run_scanned(
+        col, X, feature, threshold, left, right, is_leaf, length=length, **fb
+    )
+    new_idx = idx.at[:, unit].set(col)
+    return new_idx, prob_accum(new_idx, probs, **fb)
+
+
+@tuning.register_solo_impl("fused")
+def _solo_fused(idx, X, feature, threshold, left, right, is_leaf,
+                *, length, probs=None, unit=None, readout=False, **kw):
+    """VMEM-resident fused kernel: the whole segment in ONE launch
+    (:mod:`repro.kernels.forest_run`); degrades to ``scan`` when the
+    tables exceed the VMEM budget."""
+    M = feature.shape[0]
+    probs_trees = probs.shape[0] if readout else 0
+    C = probs.shape[2] if readout else 0
+    if not _tables_fit(M, probs_trees=probs_trees, C=C,
+                       onehot_rows=_block_rows(X.shape[0], kw)):
+        return _solo_scan(
+            idx, X, feature, threshold, left, right, is_leaf, length=length,
+            probs=probs, unit=unit, readout=readout, **_fb_kw(kw),
+        )
+    interpret = resolve_interpret(kw.pop("interpret", None))
+    bb = {k: v for k, v in kw.items() if k == "block_b"}
+    fields = pack_fields(feature, threshold, left, right, is_leaf)
+    if readout:
+        return _fused.forest_run_readout(
+            idx, X, fields, probs, unit, length=length, interpret=interpret,
+            **bb,
+        )
+    return _fused.forest_run(
+        idx, X, fields, length=length, interpret=interpret, **bb
+    )
+
+
+def forest_run(idx, X, feature, threshold, left, right, is_leaf,
+               *, length, impl=None, **kw):
     """RLE-fused run: ``length`` consecutive steps of ONE tree for a
-    batch in a single kernel launch with VMEM-resident node tables.
+    batch, via the tuned (or explicitly pinned) solo implementation.
 
     ``idx`` is the stepped tree's index COLUMN (int32 [B]); ``length``
     must be static under jit — the step-plan buckets it to powers of two
-    so at most log2(cap)+1 traces ever exist.  Falls back to the
-    streamed single-step scan when the tree exceeds the VMEM budget.
+    so at most log2(cap)+1 traces ever exist.
     """
     _check_kw(kw)
-    if not _tables_fit(feature.shape[0],
-                       onehot_rows=_block_rows(X.shape[0], kw)):
-        return forest_run_scanned(
-            idx, X, feature, threshold, left, right, is_leaf,
-            length=length, **_fb_kw(kw),
-        )
-    interpret = resolve_interpret(kw.pop("interpret", None))
-    fields = pack_fields(feature, threshold, left, right, is_leaf)
-    return _fused.forest_run(
-        idx, X, fields, length=length, interpret=interpret,
-        **{k: v for k, v in kw.items() if k == "block_b"},
-    )
+    Mp = round_up(max(feature.shape[0], 1), 128)
+    fn, kw = _resolve("solo", tuning.solo_key(Mp, length), impl, kw, _SOLO_KW)
+    return fn(idx, X, feature, threshold, left, right, is_leaf,
+              length=length, **kw)
 
 
 def forest_run_readout(
     idx, X, feature, threshold, left, right, is_leaf, probs, unit,
-    *, length, **kw,
+    *, length, impl=None, **kw,
 ):
     """Fused run + boundary read-out: advance ``unit``'s column of the
     FULL index array ``idx`` [B, T] by ``length`` steps and return
-    ``(new_idx, readout [B, C])`` from ONE launch.  Falls back to
-    scan + :func:`prob_accum` (two dispatches) over the VMEM budget.
+    ``(new_idx, readout [B, C])`` — one launch on the fused impl, a
+    scan + ``prob_accum`` pair on the streamed one.
     """
     _check_kw(kw)
-    M = feature.shape[0]
-    if not _tables_fit(M, probs_trees=probs.shape[0], C=probs.shape[2],
-                       onehot_rows=_block_rows(X.shape[0], kw)):
-        fb = _fb_kw(kw)
-        col = jnp.take(idx, unit, axis=1)
-        col = forest_run_scanned(
-            col, X, feature, threshold, left, right, is_leaf,
-            length=length, **fb,
+    Mp = round_up(max(feature.shape[0], 1), 128)
+    fn, kw = _resolve("solo", tuning.solo_key(Mp, length), impl, kw, _SOLO_KW)
+    return fn(idx, X, feature, threshold, left, right, is_leaf,
+              length=length, probs=probs, unit=unit, readout=True, **kw)
+
+
+def forest_run_depth(idx, X, layout, unit, *, length, start_step=0,
+                     levels=None, **kw):
+    """Depth-aware gather-eliminated run over a precomputed
+    :class:`~repro.kernels.layout.DepthLayout`.
+
+    ``idx`` [B] and the result are in the ORIGINAL node space — the
+    wrapper converts through the layout's permutations around the
+    kernel.  Only sound when every walker of ``unit`` has taken at most
+    ``start_step`` steps (both must be host ints; the executor restricts
+    the variant to fresh offset-0 segments).  ``levels`` caps how many
+    leading steps unroll narrow (None = as many as stay below full
+    width).  Falls back to the streamed scan over the permuted tables
+    when the VMEM budget is exceeded.
+    """
+    _check_kw(kw)
+    new_of_old = jnp.take(layout.new_of_old, unit, axis=0)
+    old_of_new = jnp.take(layout.old_of_new, unit, axis=0)
+    dcol = jnp.take(new_of_old, idx)
+    if not _tables_fit(layout.M, onehot_rows=_block_rows(X.shape[0], kw)):
+        feature, threshold, left, right, is_leaf = (
+            jnp.take(t, unit, axis=0) for t in layout.tables
         )
-        new_idx = idx.at[:, unit].set(col)
-        return new_idx, prob_accum(new_idx, probs, **fb)
+        out = forest_run_scanned(
+            dcol, X, feature, threshold, left, right, is_leaf,
+            length=length, **_fb_kw(kw),
+        )
+        return jnp.take(old_of_new, out)
     interpret = resolve_interpret(kw.pop("interpret", None))
-    fields = pack_fields(feature, threshold, left, right, is_leaf)
-    return _fused.forest_run_readout(
-        idx, X, fields, probs, unit, length=length, interpret=interpret,
+    widths = layout.step_widths(start_step, length, levels=levels)
+    fields = jnp.take(layout.fields, unit, axis=0)
+    out = _depth.depth_run(
+        dcol, X, fields, widths=widths, length=length, interpret=interpret,
         **{k: v for k, v in kw.items() if k == "block_b"},
     )
+    return jnp.take(old_of_new, out)
+
+
+# --------------------------------------------------------------------------
+# slot path: per-slot tree ids + live mask, index rows [S, T]
+# --------------------------------------------------------------------------
+
+def _tree_tables(feature, threshold, left, right, is_leaf):
+    """Stacked per-tree tables [T, M] -> padded field tiles
+    [T, Mp, NFIELDS], every tree through the shared pad_fields
+    invariant."""
+    return jax.vmap(
+        lambda *tree: pad_fields(pack_fields(*tree))
+    )(feature, threshold, left, right, is_leaf)
 
 
 def _flat_tables(feature, threshold, left, right, is_leaf):
-    """Stacked per-tree tables [T, M] -> resident flat fields [T*Mp, NF],
-    every tree's tile through the shared pad_fields invariant."""
-    T = feature.shape[0]
-    padded = jax.vmap(
-        lambda *tree: pad_fields(pack_fields(*tree))
-    )(feature, threshold, left, right, is_leaf)
-    Mp = padded.shape[1]
+    """Stacked per-tree tables [T, M] -> resident flat fields
+    [T*Mp, NFIELDS] (row ``t*Mp + m`` = node m of tree t)."""
+    padded = _tree_tables(feature, threshold, left, right, is_leaf)
+    T, Mp, _ = padded.shape
     return padded.reshape(T * Mp, NFIELDS), Mp
 
 
-def slot_run(
-    idx, X, feature, threshold, left, right, is_leaf, units, mask,
-    *, length, **kw,
-):
-    """Masked-slot fused run: slot s advances its OWN tree ``units[s]``
-    for ``length`` steps in one launch (``mask[s]`` False = frozen).
+def bucketize_slots(units):
+    """Tree-id bucketization of a slot batch: the stable permutation
+    that groups slots by their stepped tree, plus its inverse.
 
-    Tables for the WHOLE forest flatten into one VMEM-resident field
-    matrix, so the per-slot (tree, node) double gather is a single
-    one-hot MXU contraction.  Generic-gather fallback over the budget.
+    Dispatching on ``perm``-reordered rows gives every slot tile gather
+    coherence (few distinct trees per tile) for the bucketized kernel;
+    ``inv`` restores the scheduler's slot order afterwards.  Pure
+    in-graph (``argsort`` is stable) — safe under jit with traced units.
     """
-    _check_kw(kw, _SLOT_ALLOWED_KW)
+    perm = jnp.argsort(units)
+    inv = jnp.argsort(perm)
+    return perm, inv
+
+
+@tuning.register_slot_impl("gather")
+def _slot_gather(idx, X, feature, threshold, left, right, is_leaf,
+                 units, mask, *, length, probs=None, readout=False, **kw):
+    """PR-3 generic jnp gather — the conservative baseline every other
+    slot impl must beat to be selected.  No residency requirement."""
+    new_idx = ref.slot_run_ref(
+        idx, X, feature, threshold, left, right, is_leaf, units, mask,
+        length=length,
+    )
+    if not readout:
+        return new_idx
+    return new_idx, prob_accum(new_idx, probs, **_fb_kw(kw))
+
+
+@tuning.register_slot_impl("flat")
+def _slot_flat(idx, X, feature, threshold, left, right, is_leaf,
+               units, mask, *, length, probs=None, readout=False, **kw):
+    """PR-4 flat kernel: the WHOLE forest's tables resident as one
+    [T*Mp, NFIELDS] matrix, per-slot gathers as one-hot MXU
+    contractions; degrades to ``gather`` over the VMEM budget."""
     T, M = feature.shape
-    if not _tables_fit(M, field_trees=T,
+    probs_trees = T if readout else 0
+    C = probs.shape[2] if readout else 0
+    if not _tables_fit(M, field_trees=T, probs_trees=probs_trees, C=C,
                        onehot_rows=_block_rows(X.shape[0], kw)):
-        return ref.slot_run_ref(
+        return _slot_gather(
             idx, X, feature, threshold, left, right, is_leaf, units, mask,
-            length=length,
+            length=length, probs=probs, readout=readout, **_fb_kw(kw),
         )
     interpret = resolve_interpret(kw.pop("interpret", None))
     fields, Mp = _flat_tables(feature, threshold, left, right, is_leaf)
+    if readout:
+        probs_flat = _fused.flatten_probs(probs, Mp)
+        return _slots.slot_run_readout(
+            idx, X, fields, probs_flat, units, mask, mp=Mp, length=length,
+            interpret=interpret, **_slot_kw(kw),
+        )
     return _slots.slot_run(
         idx, X, fields, units, mask, mp=Mp, length=length,
         interpret=interpret, **_slot_kw(kw),
     )
 
 
-def slot_run_readout(
-    idx, X, feature, threshold, left, right, is_leaf, probs, units, mask,
-    *, length, **kw,
+@tuning.register_slot_impl("bucket")
+def _slot_bucket(idx, X, feature, threshold, left, right, is_leaf,
+                 units, mask, *, length, probs=None, readout=False, **kw):
+    """Tree-bucketized kernel: the grid streams ONE tree's [Mp, NFIELDS]
+    tile per step (:mod:`repro.kernels.slot_bucket`), dropping the
+    per-slot one-hot width by a factor of T and the residency need to a
+    single tree — the budget check is per TREE, so it serves forests the
+    flat kernel must refuse."""
+    T, M = feature.shape
+    probs_trees = 1 if readout else 0
+    C = probs.shape[2] if readout else 0
+    if not _tables_fit(M, field_trees=1, probs_trees=probs_trees, C=C,
+                       onehot_rows=_block_rows(X.shape[0], kw)):
+        return _slot_gather(
+            idx, X, feature, threshold, left, right, is_leaf, units, mask,
+            length=length, probs=probs, readout=readout, **_fb_kw(kw),
+        )
+    interpret = resolve_interpret(kw.pop("interpret", None))
+    tiles = _tree_tables(feature, threshold, left, right, is_leaf)
+    Mp = tiles.shape[1]
+    if readout:
+        probs_p = jnp.pad(
+            probs.astype(jnp.float32), ((0, 0), (0, Mp - M), (0, 0))
+        )
+        return _bucket.slot_bucket_run_readout(
+            idx, X, tiles, probs_p, units, mask, length=length,
+            interpret=interpret, **_slot_kw(kw),
+        )
+    return _bucket.slot_bucket_run(
+        idx, X, tiles, units, mask, length=length, interpret=interpret,
+        **_slot_kw(kw),
+    )
+
+
+@tuning.register_slot_impl("cached")
+def _slot_cached(idx, X, feature, threshold, left, right, is_leaf,
+                 units, mask, *, length, probs=None, readout=False, **kw):
+    """Flat kernel + hot subtree-top cache: steps where every live node
+    id is below ``top_rows`` contract against a compacted small top
+    table instead of the full flat tables (the fast path HITS when the
+    tables are depth-ordered — shallow nodes get small ids).  Readout
+    rides a second ``prob_accum`` dispatch; degrades to ``gather`` over
+    the VMEM budget."""
+    T, M = feature.shape
+    if not _tables_fit(M, field_trees=T,
+                       onehot_rows=_block_rows(X.shape[0], kw)):
+        return _slot_gather(
+            idx, X, feature, threshold, left, right, is_leaf, units, mask,
+            length=length, probs=probs, readout=readout, **_fb_kw(kw),
+        )
+    interpret = resolve_interpret(kw.pop("interpret", None))
+    top_rows = int(kw.pop("top_rows", DEFAULT_TOP_ROWS))
+    tiles = _tree_tables(feature, threshold, left, right, is_leaf)
+    Mp = tiles.shape[1]
+    top_rows = max(8, min(top_rows, Mp))
+    fields = tiles.reshape(T * Mp, NFIELDS)
+    top = tiles[:, :top_rows, :].reshape(T * top_rows, NFIELDS)
+    new_idx = _slots.slot_run_cached(
+        idx, X, fields, top, units, mask, mp=Mp, top_rows=top_rows,
+        length=length, interpret=interpret, **_slot_kw(kw),
+    )
+    if not readout:
+        return new_idx
+    return new_idx, prob_accum(new_idx, probs, interpret=interpret)
+
+
+def slot_run(
+    idx, X, feature, threshold, left, right, is_leaf, units, mask,
+    *, length, impl=None, **kw,
 ):
-    """Fused masked run + boundary read-out for the serving loop: ONE
-    launch returns ``(new_idx [S, T], readout [S, C])``."""
+    """Masked-slot fused run: slot s advances its OWN tree ``units[s]``
+    for ``length`` steps (``mask[s]`` False = frozen), via the tuned (or
+    explicitly pinned) slot implementation.
+
+    Selection is conservative: with no tuning entry for this platform
+    and shape the generic ``gather`` runs — a kernel is only dispatched
+    where the committed record says it measured faster.
+    """
     _check_kw(kw, _SLOT_ALLOWED_KW)
     T, M = feature.shape
-    if not _tables_fit(M, field_trees=T, probs_trees=T, C=probs.shape[2],
-                       onehot_rows=_block_rows(X.shape[0], kw)):
-        new_idx = ref.slot_run_ref(
-            idx, X, feature, threshold, left, right, is_leaf, units, mask,
-            length=length,
-        )
-        return new_idx, prob_accum(new_idx, probs, **_fb_kw(kw))
-    interpret = resolve_interpret(kw.pop("interpret", None))
-    fields, Mp = _flat_tables(feature, threshold, left, right, is_leaf)
-    probs_flat = _fused.flatten_probs(probs, Mp)
-    return _slots.slot_run_readout(
-        idx, X, fields, probs_flat, units, mask, mp=Mp, length=length,
-        interpret=interpret, **_slot_kw(kw),
-    )
+    key = tuning.slot_key(T, round_up(max(M, 1), 128), length)
+    fn, kw = _resolve("slot", key, impl, kw, _SLOT_ALLOWED_KW)
+    return fn(idx, X, feature, threshold, left, right, is_leaf, units, mask,
+              length=length, **kw)
+
+
+def slot_run_readout(
+    idx, X, feature, threshold, left, right, is_leaf, probs, units, mask,
+    *, length, impl=None, **kw,
+):
+    """Fused masked run + boundary read-out for the serving loop:
+    returns ``(new_idx [S, T], readout [S, C])`` — one launch on the
+    fused impls, a run + ``prob_accum`` pair on the others."""
+    _check_kw(kw, _SLOT_ALLOWED_KW)
+    T, M = feature.shape
+    key = tuning.slot_key(T, round_up(max(M, 1), 128), length)
+    fn, kw = _resolve("slot", key, impl, kw, _SLOT_ALLOWED_KW)
+    return fn(idx, X, feature, threshold, left, right, is_leaf, units, mask,
+              length=length, probs=probs, readout=True, **kw)
 
 
 def prob_accum(idx, probs, **kw):

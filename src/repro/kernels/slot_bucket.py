@@ -1,0 +1,220 @@
+"""Pallas TPU kernel: tree-bucketized masked-slot run.
+
+:mod:`repro.kernels.slot_run` pays for per-slot tree ids with a one-hot
+contraction over the WHOLE flattened forest — ``[Sb, T*Mp]`` per step —
+and demands every tree's table be VMEM-resident at once.  This variant
+restructures the launch around the tree id instead: the grid grows a
+second (innermost, "arbitrary") tree dimension, grid step ``(s, t)``
+advances only the slots of tile ``s`` whose unit is ``t``, and the
+BlockSpec index map streams exactly ONE tree's ``[Mp, NFIELDS]`` tile
+per grid step.  Consequences:
+
+* per-slot one-hot width drops from ``T*Mp`` to ``Mp`` — the gather
+  bytes-moved counter (:mod:`tools.perf`) falls by a factor of T;
+* no tree table is ever resident longer than its own grid step, so the
+  kernel serves forests whose FLAT tables blow the VMEM budget — the
+  shapes the flat kernel must refuse;
+* the output block is revisited across consecutive ``t`` steps
+  (initialized from the input at ``t == 0`` via ``pl.when``), the
+  standard Pallas accumulation pattern.
+
+Slots whose unit is not ``t`` pass through untouched at that grid step,
+so after the full ``t`` sweep every live slot has advanced its own tree
+by ``length`` steps — bit-exact with :func:`repro.core.engine.slot_run`.
+The scheduler-side companion (``ops.bucketize_slots``) stably sorts
+slots by unit first, giving each ``(s, t)`` tile gather coherence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (
+    NFIELDS,
+    CompilerParams,
+    onehot_step_body,
+    round_up,
+)
+
+
+def _bucket_loop(idx, x, units, live, fields, t, *, length, block_m):
+    """Advance columns of tree ``t`` only: slots with ``units == t`` and
+    live step ``length`` times against this tree's [Mp, NFIELDS] tile."""
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1)   # [Sb, T]
+    sel = (t_ids == t) & (units == t)[:, None] & live[:, None]
+    m_ids = jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+    f_cols = jax.lax.broadcasted_iota(jnp.float32, x.shape, 1)
+
+    def body(_, idx):
+        node = jnp.sum(jnp.where(sel, idx, 0), axis=1)          # idx[s, t]
+        new = onehot_step_body(node, x, fields, m_ids, f_cols)
+        return jnp.where(sel, new[:, None], idx)
+
+    return jax.lax.fori_loop(0, length, body, idx)
+
+
+def _slot_bucket_kernel(
+    idx_ref,     # int32 [Sb, T]
+    x_ref,       # f32   [Sb, F]
+    units_ref,   # int32 [Sb, 1]
+    mask_ref,    # int32 [Sb, 1]
+    fields_ref,  # f32   [1, Mp, NFIELDS]  tree t's tile (streamed per step)
+    out_ref,     # int32 [Sb, T]  revisited across the t sweep
+    *,
+    length: int,
+    block_m: int,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = idx_ref[...]
+
+    out_ref[...] = _bucket_loop(
+        out_ref[...], x_ref[...], units_ref[:, 0], mask_ref[:, 0] > 0,
+        fields_ref[0], t, length=length, block_m=block_m,
+    )
+
+
+def _slot_bucket_readout_kernel(
+    idx_ref, x_ref, units_ref, mask_ref,
+    fields_ref,  # f32 [1, Mp, NFIELDS]  tree t's fields (streamed)
+    probs_ref,   # f32 [1, Mp, C]        tree t's probs (streamed)
+    out_ref,     # int32 [Sb, T]
+    ro_out,      # f32   [Sb, C]  accumulated across the t sweep
+    *,
+    length: int,
+    block_m: int,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = idx_ref[...]
+        ro_out[...] = jnp.zeros_like(ro_out)
+
+    new_idx = _bucket_loop(
+        out_ref[...], x_ref[...], units_ref[:, 0], mask_ref[:, 0] > 0,
+        fields_ref[0], t, length=length, block_m=block_m,
+    )
+    out_ref[...] = new_idx
+
+    # tree t's column is final once its own grid step ran, so its
+    # readout term accumulates here — t-ascending, the same summation
+    # order as accum_boundary_readout (bit-exact readout parity)
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, new_idx.shape, 1)
+    col_t = jnp.sum(jnp.where(t_ids == t, new_idx, 0), axis=1)
+    m_ids = jax.lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+    onehot = (col_t[:, None] == m_ids).astype(jnp.float32)
+    ro_out[...] += jax.lax.dot(
+        onehot, probs_ref[0], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_slots(idx, X, units, mask, block_s):
+    S = X.shape[0]
+    Sp = round_up(S, block_s)
+    pad = Sp - S
+    return (
+        jnp.pad(idx, ((0, pad), (0, 0))),
+        jnp.pad(X, ((0, pad), (0, 0))),
+        jnp.pad(units.astype(jnp.int32), (0, pad)).reshape(Sp, 1),
+        jnp.pad(mask.astype(jnp.int32), (0, pad)).reshape(Sp, 1),
+        Sp,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("length", "block_s", "interpret"))
+def slot_bucket_run(
+    idx: jax.Array,     # int32 [S, T]
+    X: jax.Array,       # f32   [S, F]
+    fields: jax.Array,  # f32   [T, Mp, NFIELDS]  per-tree padded tiles
+    units: jax.Array,   # int32 [S]
+    mask: jax.Array,    # bool  [S]
+    *,
+    length: int,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """``length`` fused masked slot-steps with per-tree table streaming:
+    one launch, grid ``(slots, trees)``, tree ``t``'s table in VMEM only
+    during its own grid step."""
+    S, T = idx.shape
+    F = X.shape[1]
+    Mp = fields.shape[1]
+    block_s = min(block_s, max(8, S))
+    idx_p, x_p, units_p, mask_p, Sp = _pad_slots(idx, X, units, mask, block_s)
+
+    out = pl.pallas_call(
+        functools.partial(_slot_bucket_kernel, length=length, block_m=Mp),
+        grid=(Sp // block_s, T),
+        in_specs=[
+            pl.BlockSpec((block_s, T), lambda s, t: (s, 0)),
+            pl.BlockSpec((block_s, F), lambda s, t: (s, 0)),
+            pl.BlockSpec((block_s, 1), lambda s, t: (s, 0)),
+            pl.BlockSpec((block_s, 1), lambda s, t: (s, 0)),
+            pl.BlockSpec((1, Mp, NFIELDS), lambda s, t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, T), lambda s, t: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, T), jnp.int32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(idx_p, x_p, units_p, mask_p, fields)
+    return out[:S]
+
+
+@functools.partial(jax.jit, static_argnames=("length", "block_s", "interpret"))
+def slot_bucket_run_readout(
+    idx: jax.Array,
+    X: jax.Array,
+    fields: jax.Array,  # f32 [T, Mp, NFIELDS]
+    probs: jax.Array,   # f32 [T, Mp, C]  per-tree padded probability tiles
+    units: jax.Array,
+    mask: jax.Array,
+    *,
+    length: int,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused bucketized run + boundary read-out: the probability tiles
+    stream per tree alongside the fields, the readout accumulates across
+    the ``t`` sweep — one launch for the serving dispatch+readout pair."""
+    S, T = idx.shape
+    F = X.shape[1]
+    Mp = fields.shape[1]
+    C = probs.shape[2]
+    block_s = min(block_s, max(8, S))
+    idx_p, x_p, units_p, mask_p, Sp = _pad_slots(idx, X, units, mask, block_s)
+
+    new_idx, ro = pl.pallas_call(
+        functools.partial(
+            _slot_bucket_readout_kernel, length=length, block_m=Mp
+        ),
+        grid=(Sp // block_s, T),
+        in_specs=[
+            pl.BlockSpec((block_s, T), lambda s, t: (s, 0)),
+            pl.BlockSpec((block_s, F), lambda s, t: (s, 0)),
+            pl.BlockSpec((block_s, 1), lambda s, t: (s, 0)),
+            pl.BlockSpec((block_s, 1), lambda s, t: (s, 0)),
+            pl.BlockSpec((1, Mp, NFIELDS), lambda s, t: (t, 0, 0)),
+            pl.BlockSpec((1, Mp, C), lambda s, t: (t, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, T), lambda s, t: (s, 0)),
+            pl.BlockSpec((block_s, C), lambda s, t: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Sp, T), jnp.int32),
+            jax.ShapeDtypeStruct((Sp, C), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(idx_p, x_p, units_p, mask_p, fields, probs)
+    return new_idx[:S], ro[:S]

@@ -161,6 +161,119 @@ def slot_run(
     return out[:S]
 
 
+def _slot_cached_loop(
+    idx, x, units, live, fields, top, *, length, block_m, top_rows, n_trees
+):
+    """The flat masked step loop with a hot subtree-top fast path: per
+    step, when EVERY live node id in the tile is below ``top_rows``, the
+    gather contracts against the compacted ``[T*top_rows, NFIELDS]`` top
+    table instead of the full ``[T*Mp, NFIELDS]`` flat table.
+
+    ``top`` must hold rows ``0..top_rows-1`` of every tree's tile of
+    ``fields`` (``DepthLayout.top_fields``), which makes the two
+    branches bit-identical whenever the narrow one is taken — depth
+    ordering is what makes the fast path HIT (shallow nodes get small
+    ids), not what makes it correct.
+    """
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1)  # [Sb, T]
+    sel = (t_ids == units[:, None]) & live[:, None]
+    tm_ids = jax.lax.broadcasted_iota(jnp.int32, (1, n_trees * block_m), 1)
+    tr_ids = jax.lax.broadcasted_iota(jnp.int32, (1, n_trees * top_rows), 1)
+    f_cols = jax.lax.broadcasted_iota(jnp.float32, x.shape, 1)
+    base_full = units * block_m                                # [Sb]
+    base_top = units * top_rows
+
+    def body(_, idx):
+        node = jnp.sum(jnp.where(sel, idx, 0), axis=1)         # idx[s, units[s]]
+        shallow = jnp.max(jnp.where(live, node, 0)) < top_rows
+
+        def narrow(_):
+            onehot = ((base_top + node)[:, None] == tr_ids).astype(jnp.float32)
+            return jax.lax.dot(onehot, top, preferred_element_type=jnp.float32)
+
+        def wide(_):
+            onehot = ((base_full + node)[:, None] == tm_ids).astype(jnp.float32)
+            return jax.lax.dot(onehot, fields, preferred_element_type=jnp.float32)
+
+        acc = jax.lax.cond(shallow, narrow, wide, None)
+        f_onehot = (f_cols == acc[:, F_IDX][:, None]).astype(jnp.float32)
+        fv = jnp.sum(x * f_onehot, axis=1)
+        nxt = jnp.where(fv <= acc[:, THR], acc[:, LEFT], acc[:, RIGHT])
+        new = jnp.where(acc[:, LEAF] > 0.5, node.astype(jnp.float32), nxt)
+        return jnp.where(sel, new.astype(jnp.int32)[:, None], idx)
+
+    return jax.lax.fori_loop(0, length, body, idx)
+
+
+def _slot_cached_kernel(
+    idx_ref, x_ref, units_ref, mask_ref,
+    fields_ref,  # f32 [T*Mp, NFIELDS]  full flat tables
+    top_ref,     # f32 [T*R, NFIELDS]   compacted depth-ordered tops
+    out_ref,
+    *,
+    length: int,
+    block_m: int,
+    top_rows: int,
+    n_trees: int,
+):
+    out_ref[...] = _slot_cached_loop(
+        idx_ref[...], x_ref[...], units_ref[:, 0], mask_ref[:, 0] > 0,
+        fields_ref[...], top_ref[...], length=length, block_m=block_m,
+        top_rows=top_rows, n_trees=n_trees,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mp", "top_rows", "length", "block_s", "interpret")
+)
+def slot_run_cached(
+    idx: jax.Array,     # int32 [S, T]  (depth-ordered node space to hit)
+    X: jax.Array,       # f32   [S, F]
+    fields: jax.Array,  # f32   [T*Mp, NFIELDS]  flat depth-ordered tables
+    top: jax.Array,     # f32   [T*R, NFIELDS]   DepthLayout.top_fields(R)
+    units: jax.Array,   # int32 [S]
+    mask: jax.Array,    # bool  [S]
+    *,
+    mp: int,
+    top_rows: int,
+    length: int,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Masked slot run with hot subtree-top caching: steps where every
+    live walker is still shallow contract a T*``top_rows``-wide one-hot
+    against the small resident top table instead of the full flat
+    tables — the fresh segments of a slot batch never touch the deep
+    rows at all."""
+    S, T = idx.shape
+    F = X.shape[1]
+    block_s = min(block_s, max(8, S))
+    idx_p, x_p, units_p, mask_p, Sp = _pad_slots(idx, X, units, mask, block_s)
+    TM = fields.shape[0]
+    TR = top.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(
+            _slot_cached_kernel, length=length, block_m=mp,
+            top_rows=top_rows, n_trees=T,
+        ),
+        grid=(Sp // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, T), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, F), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, 1), lambda s: (s, 0)),
+            pl.BlockSpec((block_s, 1), lambda s: (s, 0)),
+            pl.BlockSpec((TM, NFIELDS), lambda s: (0, 0)),
+            pl.BlockSpec((TR, NFIELDS), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, T), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, T), jnp.int32),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(idx_p, x_p, units_p, mask_p, fields, top)
+    return out[:S]
+
+
 @functools.partial(jax.jit, static_argnames=("mp", "length", "block_s", "interpret"))
 def slot_run_readout(
     idx: jax.Array,

@@ -48,7 +48,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
+from repro.kernels import layout as klayout
 from repro.kernels import ops as kops
+from repro.kernels import tuning as ktuning
 from repro.launch import mesh as mesh_lib
 
 __all__ = [
@@ -158,6 +160,9 @@ class StepPlan:
     cumulative step position of each segment boundary (host-side, for
     the ``advance`` bookkeeping); ``units_dev`` mirrors the unit ids on
     device so per-segment dispatch never re-uploads scalars.
+    ``seg_fresh[i]`` marks the FIRST segment of its unit in the plan —
+    every walker of that unit is still at the root when it starts, the
+    precondition for the depth-aware gather-eliminated kernel.
     """
 
     order: np.ndarray                       # int32 [total_steps]
@@ -166,6 +171,7 @@ class StepPlan:
     seg_starts: np.ndarray                  # int64 [S+1], cumulative
     units_dev: jax.Array = dataclasses.field(repr=False)
     max_segment: int = 64
+    seg_fresh: Optional[np.ndarray] = None  # bool [S], None = all stale
 
     @classmethod
     def compile(
@@ -186,6 +192,11 @@ class StepPlan:
         seg_units = np.asarray(units, dtype=np.int32)
         seg_lens = np.asarray(lens, dtype=np.int32)
         seg_starts = np.concatenate([[0], np.cumsum(seg_lens, dtype=np.int64)])
+        seen: set[int] = set()
+        fresh = []
+        for u in units:
+            fresh.append(u not in seen)
+            seen.add(u)
         return cls(
             order=order,
             seg_units=seg_units,
@@ -193,6 +204,7 @@ class StepPlan:
             seg_starts=seg_starts,
             units_dev=jnp.asarray(seg_units),
             max_segment=max_segment,
+            seg_fresh=np.asarray(fresh, dtype=bool),
         )
 
     @property
@@ -311,15 +323,24 @@ class ExecutorCore:
         *,
         X=None,
         readout: bool = False,
+        fresh: bool = False,
     ) -> tuple[jax.Array, Optional[jax.Array]]:
         """``length`` fused steps of one plan segment; returns
         ``(new_idx, probs)`` where ``probs`` is the fused boundary
         read-out when ``readout`` else None.  ``units`` scalar selects
         the lockstep shape, vector the masked-slot shape (the rank
         check is static, so both shapes share this entry point without
-        a runtime branch)."""
+        a runtime branch).
+
+        ``fresh=True`` asserts that the stepped unit's walkers are all
+        still at the ROOT (a plan's first segment for that unit, offset
+        0) — backends with a depth-aware variant may then eliminate the
+        shallow-level table gathers; it is purely a performance hint and
+        must never change results."""
         X = self.X if X is None else jnp.asarray(X)
         if jnp.ndim(units) == 0:
+            if fresh and not readout:
+                return self._segment_fresh(idx, X, units, length, readout)
             return self._segment(idx, X, units, length, readout)
         if mask is None:
             mask = jnp.ones(idx.shape[0], dtype=bool)
@@ -343,6 +364,12 @@ class ExecutorCore:
                 self._in_legacy_segment = False
             return idx, (self.readout(idx) if readout else None)
         raise NotImplementedError
+
+    def _segment_fresh(self, idx, X, unit, length, readout):
+        """Hook for root-start solo segments (``fresh=True``); defaults
+        to the plain segment path — only backends with a depth-aware
+        variant override it."""
+        return self._segment(idx, X, unit, length, readout)
 
     def _slots(self, idx, X, units, mask, length, readout):
         if type(self).run_slots is not ExecutorCore.run_slots:
@@ -441,26 +468,58 @@ class PallasExecutor(ExecutorCore):
     * solo segments dispatch the fused multi-step kernel
       (:func:`repro.kernels.ops.forest_run`): one launch per plan
       segment, the tree's node tables resident in VMEM across all steps;
-    * masked slot segments dispatch the masked-slot kernel
-      (:func:`repro.kernels.ops.slot_run`): per-slot tree ids + live
-      mask on the flattened whole-forest tables — the serving hot path
-      on the MXU instead of the generic gather;
+    * masked slot segments dispatch through the TUNED slot
+      implementation (:func:`repro.kernels.ops.slot_run`): the
+      platform's committed tuning record picks gather / flat / bucket /
+      cached per shape (conservative default: the generic gather), and
+      when the bucketized kernel is selected the slot batch is first
+      tree-id-bucketized (``ops.bucketize_slots``) for gather coherence;
+    * **fresh** solo segments (every walker still at the unit's root —
+      the plan's first segment for that unit) dispatch the depth-aware
+      gather-eliminated kernel (:func:`repro.kernels.ops.
+      forest_run_depth`) over a depth-ordered layout precomputed once at
+      construction; ``depth_levels=0`` (or a tuning record saying so)
+      disables the variant;
     * ``readout=True`` fuses the ``prob_accum`` boundary read-out into
       the SAME launch (``forest_run_readout`` / ``slot_run_readout``).
 
-    Interpret mode on CPU — same kernel bodies, element-for-element;
-    oversized forests fall back to the streamed/generic paths inside
-    :mod:`repro.kernels.ops` (VMEM residency budget).
+    Block defaults come from the tuning record's ``executor`` section
+    (explicit constructor arguments win).  Interpret mode on CPU — same
+    kernel bodies, element-for-element; oversized forests fall back to
+    the streamed/generic paths inside :mod:`repro.kernels.ops` (VMEM
+    residency budget).
     """
 
-    def __init__(self, device, X, plan, *, block_b: int = 256,
-                 block_m: int = 512, interpret: Optional[bool] = None):
+    def __init__(self, device, X, plan, *, block_b: Optional[int] = None,
+                 block_m: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 depth_levels: Optional[int] = None):
         super().__init__(device, X, plan)
+        tuned = ktuning.executor_params()
+        block_b = int(tuned.get("block_b", 256) if block_b is None else block_b)
+        block_m = int(tuned.get("block_m", 512) if block_m is None else block_m)
+        depth_levels = int(
+            tuned.get("depth_levels", 4) if depth_levels is None
+            else depth_levels
+        )
         kw = {"block_b": block_b, "block_m": block_m}
         if interpret is not None:
             kw["interpret"] = interpret
         self._kernel_kw = kw
+        self.depth_levels = depth_levels
         d = self.device
+        T = int(d.feature.shape[0])
+        Mp = kops.round_up(max(int(d.feature.shape[1]), 1), 128)
+
+        # depth-ordered layout for the fresh-segment variant: a one-time
+        # host-side BFS over the concrete device tables
+        self.layout = (
+            klayout.build_depth_layout(
+                d.feature, d.threshold, d.left, d.right, d.is_leaf
+            )
+            if depth_levels > 0 else None
+        )
+        lay, levels = self.layout, depth_levels
 
         def _tables(unit):
             return tuple(
@@ -480,21 +539,46 @@ class PallasExecutor(ExecutorCore):
             )
             return idx.at[:, unit].set(col), None
 
+        @partial(jax.jit, static_argnums=(3,))
+        def _seg_fresh(idx, X, unit, length):
+            col = kops.forest_run_depth(
+                jnp.take(idx, unit, axis=1), X, lay, unit, length=length,
+                start_step=0, levels=levels, **kw,
+            )
+            return idx.at[:, unit].set(col), None
+
         @partial(jax.jit, static_argnums=(4, 5))
         def _slt(idx, X, units, mask, length, readout):
             tables = (d.feature, d.threshold, d.left, d.right, d.is_leaf)
+            # tuned-impl peek at trace time: bucketized dispatch prefers
+            # tree-sorted slots (pure in-graph permutation, bit-neutral)
+            name, _ = ktuning.select(
+                "slot", ktuning.slot_key(T, Mp, length)
+            )
+            perm = inv = None
+            if name == "bucket":
+                perm, inv = kops.bucketize_slots(units)
+                idx, X = idx[perm], X[perm]
+                units, mask = units[perm], mask[perm]
             if readout:
-                return kops.slot_run_readout(
+                new_idx, ro = kops.slot_run_readout(
                     idx, X, *tables, d.probs, units, mask, length=length, **kw
                 )
-            return kops.slot_run(
+                return (new_idx, ro) if inv is None else (new_idx[inv], ro[inv])
+            new_idx = kops.slot_run(
                 idx, X, *tables, units, mask, length=length, **kw
-            ), None
+            )
+            return (new_idx if inv is None else new_idx[inv]), None
 
-        self._seg, self._slt = _seg, _slt
+        self._seg, self._seg_fresh_jit, self._slt = _seg, _seg_fresh, _slt
 
     def _segment(self, idx, X, unit, length, readout):
         return self._seg(idx, X, unit, length, readout)
+
+    def _segment_fresh(self, idx, X, unit, length, readout):
+        if self.layout is None:
+            return self._seg(idx, X, unit, length, readout)
+        return self._seg_fresh_jit(idx, X, unit, length)
 
     def _slots(self, idx, X, units, mask, length, readout):
         return self._slt(idx, X, units, mask, length, readout)
@@ -533,9 +617,10 @@ class ShardedExecutor(JnpRefExecutor):
     def init_state(self):
         return jax.device_put(super().init_state(), self._batch_sharding)
 
-    def run(self, idx, units, mask=None, length=1, *, X=None, readout=False):
+    def run(self, idx, units, mask=None, length=1, *, X=None, readout=False,
+            fresh=False):
         idx, probs = super().run(
-            idx, units, mask, length, X=X, readout=readout
+            idx, units, mask, length, X=X, readout=readout, fresh=fresh
         )
         if probs is not None:
             probs = probs[: self._true_batch]
@@ -612,8 +697,19 @@ class ForestStepBackend:
             seg_end = int(self.plan.seg_starts[s + 1])
             step = min(k - taken, seg_end - self.pos)
             unit = self.plan.units_dev[s]
+            # fresh = this dispatch starts the unit's FIRST plan segment
+            # at offset 0 (every walker still at the root); only the
+            # first power-of-two piece of a split keeps the property
+            fresh = bool(
+                self.plan.seg_fresh is not None
+                and self.plan.seg_fresh[s]
+                and self.pos == int(self.plan.seg_starts[s])
+            )
             for p in pow2_decompose(step, cap=self.plan.max_segment):
-                self.idx, _ = self.executor.run(self.idx, unit, length=p)
+                self.idx, _ = self.executor.run(
+                    self.idx, unit, length=p, fresh=fresh
+                )
+                fresh = False
                 self.dispatched_lengths.add(p)
             self.pos += step
             taken += step

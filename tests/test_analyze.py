@@ -345,6 +345,29 @@ def test_registry_clean_module_passes():
     assert run_on("src/repro/schedule/fx_reg_ok.py", text) == []
 
 
+def test_registry_covers_kernel_impl_registrations():
+    """The tuning impl registries are first-class registration sites:
+    duplicate impl names collide, undocumented impls are flagged, and
+    underscore-private adapters are exempt from the export checks (they
+    are reached through the registry, never imported)."""
+    text = """
+        @tuning.register_solo_impl("warp")
+        def _warp(idx):
+            \"\"\"doc.\"\"\"
+
+        @tuning.register_solo_impl("warp")
+        def _warp2(idx):
+            pass
+
+        @tuning.register_slot_impl("warp")
+        def _slot_warp(idx):
+            \"\"\"doc (same name, different registry kind: no clash).\"\"\"
+    """
+    findings = run_on("src/repro/kernels/fx_impl_reg.py", text)
+    assert sorted(rules(findings)) == ["duplicate-name", "missing-docstring"]
+    # no missing-all/missing-export: every target is private
+
+
 # ---------------------------------------------------------------------------
 # CLI / end-to-end
 # ---------------------------------------------------------------------------

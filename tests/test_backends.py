@@ -474,3 +474,86 @@ def test_advance_until_non_positive_deadline(pipeline):
     assert sess.advance_until(0.0) == 0
     assert sess.advance_until(-3.0) == 0
     assert sess.pos == 0
+
+
+# ---------------------------------------------------------------------------
+# Fresh (root-start) segments: the depth-aware dispatch path
+# ---------------------------------------------------------------------------
+
+
+def test_step_plan_marks_first_segment_fresh():
+    order = np.array([0] * 5 + [1] * 3 + [0] * 2, dtype=np.int32)
+    plan = StepPlan.compile(order)
+    assert plan.seg_fresh is not None
+    # exactly one fresh segment per unit, and it is the unit's first
+    for u in (0, 1):
+        owned = [i for i, su in enumerate(plan.seg_units) if su == u]
+        assert [bool(plan.seg_fresh[i]) for i in owned] == (
+            [True] + [False] * (len(owned) - 1))
+    # freshness follows PLAN order: unit 0's run of 5 splits [4, 1] and
+    # only the head piece starts at the root
+    np.testing.assert_array_equal(plan.seg_lens[:2], [4, 1])
+    assert bool(plan.seg_fresh[0]) and not bool(plan.seg_fresh[1])
+
+
+def test_pallas_fresh_segment_dispatches_depth_kernel(monkeypatch, pipeline):
+    """The FIRST plan segment of each unit (walkers at the root) must
+    route through the depth-aware gather-eliminated kernel; later
+    segments through the full-width fused run."""
+    from repro.schedule import backends as B
+
+    calls = {"depth": 0}
+    real = B.kops.forest_run_depth
+    monkeypatch.setattr(
+        B.kops, "forest_run_depth",
+        lambda *a, **k: (calls.__setitem__("depth", calls["depth"] + 1),
+                         real(*a, **k))[1])
+    rt = _runtime(pipeline)
+    fa, pp, yor, te, yte = pipeline
+    ref = rt.session(te[:9], "depth", backend="jnp-ref")
+    sess = rt.session(te[:9], "depth", backend="pallas",
+                      block_b=16, block_m=8)
+    assert sess.backend.executor.layout is not None
+    ref.advance(10_000)
+    sess.advance(10_000)
+    # one fresh dispatch per unit's opening segment (traced once per
+    # pow2 length; counted at trace time)
+    assert calls["depth"] >= 1
+    np.testing.assert_array_equal(
+        np.asarray(sess.idx)[:9], np.asarray(ref.idx))
+    np.testing.assert_allclose(
+        sess.predict_proba(), ref.predict_proba(), rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_depth_levels_zero_disables_variant(monkeypatch, pipeline):
+    from repro.schedule import backends as B
+
+    monkeypatch.setattr(
+        B.kops, "forest_run_depth",
+        lambda *a, **k: (_ for _ in ()).throw(
+            AssertionError("depth_levels=0 must not build/dispatch the "
+                           "depth variant")))
+    rt = _runtime(pipeline)
+    fa, pp, yor, te, yte = pipeline
+    ref = rt.session(te[:7], "depth", backend="jnp-ref")
+    sess = rt.session(te[:7], "depth", backend="pallas", depth_levels=0,
+                      block_b=16, block_m=8)
+    assert sess.backend.executor.layout is None
+    ref.advance(20)
+    sess.advance(20)
+    np.testing.assert_array_equal(
+        np.asarray(sess.idx)[:7], np.asarray(ref.idx))
+
+
+def test_executor_run_fresh_flag_is_correctness_neutral(pipeline):
+    """fresh=True on a genuinely root-start column must be bit-identical
+    to the plain fused dispatch (it only changes the kernel used)."""
+    fa, pp, yor, te, yte = pipeline
+    rt = _runtime(pipeline)
+    sess = rt.session(te[:9], "depth", backend="pallas",
+                      block_b=16, block_m=8)
+    core = sess.backend.executor
+    idx0 = core.init_state()
+    plain, _ = core.run(idx0, 1, length=4)
+    fresh, _ = core.run(idx0, 1, length=4, fresh=True)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(fresh))

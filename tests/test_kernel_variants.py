@@ -1,0 +1,332 @@
+"""Parity sweeps for the mined kernel variants (depth-aware
+gather-elimination, tree-bucketized slots, cached subtree tops) and the
+depth-layout precompute behind them — all in interpret mode against the
+jnp oracles, including the edges the variants' static structure makes
+dangerous: odd batches, B=1, mixed live/dead lanes, and run lengths at
+or past the tree depth (every walker parked on a leaf before the
+unrolled prefix ends)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels import layout as klayout
+from repro.kernels import ops, ref
+
+
+def _heap_forest(rng, T, M, F, shuffle=True):
+    """Stacked [T, M] tables of real binary trees (heap topology), each
+    under an independent random node relabeling fixing the root."""
+    feature = np.zeros((T, M), np.int64)
+    threshold = np.zeros((T, M), np.float64)
+    left = np.zeros((T, M), np.int64)
+    right = np.zeros((T, M), np.int64)
+    is_leaf = np.zeros((T, M), bool)
+    for t in range(T):
+        perm = (np.concatenate([[0], 1 + rng.permutation(M - 1)])
+                if shuffle and M > 1 else np.arange(M))
+        inv = np.empty(M, np.int64)
+        inv[perm] = np.arange(M)
+        f = rng.integers(0, F, size=M)
+        th = rng.normal(size=M)
+        lf = np.zeros(M, bool)
+        lt = np.zeros(M, np.int64)
+        rt = np.zeros(M, np.int64)
+        for i in range(M):
+            lo, hi = 2 * i + 1, 2 * i + 2
+            if hi < M:
+                lt[i], rt[i] = perm[lo], perm[hi]
+            else:
+                lf[i] = True
+                lt[i] = rt[i] = perm[i]
+        feature[t] = f[inv]
+        threshold[t] = th[inv]
+        left[t] = lt[inv]
+        right[t] = rt[inv]
+        is_leaf[t] = lf[inv]
+    return (
+        jnp.asarray(feature, jnp.int32),
+        jnp.asarray(threshold, jnp.float32),
+        jnp.asarray(left, jnp.int32),
+        jnp.asarray(right, jnp.int32),
+        jnp.asarray(is_leaf),
+    )
+
+
+def _rand_forest_tables(rng, T, M, F):
+    return (
+        jnp.asarray(rng.integers(0, F, size=(T, M)), jnp.int32),
+        jnp.asarray(rng.normal(size=(T, M)), jnp.float32),
+        jnp.asarray(rng.integers(0, M, size=(T, M)), jnp.int32),
+        jnp.asarray(rng.integers(0, M, size=(T, M)), jnp.int32),
+        jnp.asarray(rng.random((T, M)) < 0.3),
+    )
+
+
+# ---------------------------------------------------------------------------
+# depth layout precompute
+# ---------------------------------------------------------------------------
+
+
+def test_bfs_depths_heap_tree():
+    # unshuffled heap: node i sits at depth floor(log2(i+1))
+    rng = np.random.default_rng(0)
+    M = 15
+    _, _, left, right, leaf = _heap_forest(rng, 1, M, 4, shuffle=False)
+    d = klayout.bfs_depths(np.asarray(left[0]), np.asarray(right[0]),
+                           np.asarray(leaf[0]))
+    exp = np.floor(np.log2(np.arange(M) + 1)).astype(np.int64)
+    np.testing.assert_array_equal(d, exp)
+
+
+def test_bfs_depths_unreachable_get_sentinel():
+    # node 3 is orphaned: a 1-level tree over {0,1,2} plus a stray node
+    left = np.array([1, 1, 2, 3])
+    right = np.array([2, 1, 2, 3])
+    leaf = np.array([False, True, True, True])
+    d = klayout.bfs_depths(left, right, leaf)
+    np.testing.assert_array_equal(d, [0, 1, 1, 4])
+
+
+def test_depth_layout_orders_nodes_by_depth():
+    rng = np.random.default_rng(1)
+    tables = _heap_forest(rng, 3, 31, 6)
+    lay = klayout.build_depth_layout(*tables)
+    for t in range(3):
+        d = klayout.bfs_depths(np.asarray(tables[2][t]),
+                               np.asarray(tables[3][t]),
+                               np.asarray(tables[4][t]))
+        ordered = d[np.asarray(lay.old_of_new[t])]
+        assert (np.diff(ordered) >= 0).all(), "new ids not depth-sorted"
+    # permutations are inverses
+    for t in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(lay.new_of_old[t])[np.asarray(lay.old_of_new[t])],
+            np.arange(31))
+    # prefix widths grow like the complete-tree bound, never past it
+    widths = lay.step_widths(0, 8)
+    for j, w in enumerate(widths):
+        assert w <= klayout.complete_tree_width(j, lay.Mp)
+
+
+def test_step_widths_start_step_and_levels():
+    rng = np.random.default_rng(2)
+    tables = _heap_forest(rng, 1, 127, 5)
+    lay = klayout.build_depth_layout(*tables)
+    full = lay.step_widths(0, 32)
+    assert len(full) >= 1 and all(w < lay.Mp for w in full)
+    # levels caps the unroll; start_step shifts into wider prefixes
+    assert len(lay.step_widths(0, 32, levels=2)) <= 2
+    shifted = lay.step_widths(2, 32)
+    assert all(s >= f for s, f in zip(shifted, full[2:]))
+    # a walk deeper than the tree has no narrow steps left
+    assert lay.step_widths(64, 8) == ()
+
+
+def test_counter_width_model_matches_layout_bound():
+    """The pure-stdlib tools.perf width model IS the kernel-side bound —
+    pinned here so the two cannot drift apart."""
+    from tools.perf import counters as perfc
+    for Mp in (128, 256, 1024):
+        for step in (0, 1, 3, 6, 20, 64):
+            assert (perfc.complete_tree_width(step, Mp)
+                    == klayout.complete_tree_width(step, Mp))
+
+
+# ---------------------------------------------------------------------------
+# depth-aware gather-eliminated run
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B", [1, 33, 128])
+@pytest.mark.parametrize("length", [1, 4, 16])
+def test_depth_run_parity_from_root(B, length):
+    rng = np.random.default_rng(B * 100 + length)
+    T, M, F = 3, 31, 6
+    tables = _heap_forest(rng, T, M, F)
+    lay = klayout.build_depth_layout(*tables)
+    X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    idx0 = jnp.zeros(B, jnp.int32)
+    for unit in range(T):
+        per_tree = tuple(t[unit] for t in tables)
+        exp = ref.forest_run_ref(idx0, X, *per_tree, length=length)
+        out = ops.forest_run_depth(idx0, X, lay, unit, length=length)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_depth_run_length_past_tree_depth():
+    """K >= tree depth: every walker reaches (and self-loops on) a leaf
+    inside the narrow prefix — the unrolled steps and the full-width
+    tail must both preserve the parked state bit-exactly."""
+    rng = np.random.default_rng(5)
+    M = 15  # depth-3 heap: any walk parks within 3 steps
+    tables = _heap_forest(rng, 1, M, 4)
+    lay = klayout.build_depth_layout(*tables)
+    X = jnp.asarray(rng.normal(size=(9, 4)), jnp.float32)
+    idx0 = jnp.zeros(9, jnp.int32)
+    per_tree = tuple(t[0] for t in tables)
+    for length in (3, 8, 32):
+        exp = ref.forest_run_ref(idx0, X, *per_tree, length=length)
+        out = ops.forest_run_depth(idx0, X, lay, 0, length=length)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_depth_run_mid_walk_start_step():
+    """start_step > 0 (resuming a fresh walk split across pow2 pieces):
+    widths shift to the deeper bounds and parity must hold given idx
+    really is start_step steps from the root."""
+    rng = np.random.default_rng(6)
+    tables = _heap_forest(rng, 2, 63, 5)
+    lay = klayout.build_depth_layout(*tables)
+    X = jnp.asarray(rng.normal(size=(17, 5)), jnp.float32)
+    idx0 = jnp.zeros(17, jnp.int32)
+    per_tree = tuple(t[1] for t in tables)
+    mid = ops.forest_run_depth(idx0, X, lay, 1, length=2, start_step=0)
+    exp = ref.forest_run_ref(idx0, X, *per_tree, length=6)
+    out = ops.forest_run_depth(mid, X, lay, 1, length=4, start_step=2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_depth_run_levels_cap_and_oversized_fallback(monkeypatch):
+    rng = np.random.default_rng(7)
+    tables = _heap_forest(rng, 1, 31, 4)
+    lay = klayout.build_depth_layout(*tables)
+    X = jnp.asarray(rng.normal(size=(5, 4)), jnp.float32)
+    idx0 = jnp.zeros(5, jnp.int32)
+    exp = ref.forest_run_ref(idx0, X, *(t[0] for t in tables), length=6)
+    out = ops.forest_run_depth(idx0, X, lay, 0, length=6, levels=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    # over-budget layouts stream through the scan over permuted tables
+    monkeypatch.setattr(ops, "VMEM_TABLE_BUDGET_BYTES", 64)
+    out = ops.forest_run_depth(idx0, X, lay, 0, length=6)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+# ---------------------------------------------------------------------------
+# bucketized and cached slot kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S", [1, 13, 33])
+@pytest.mark.parametrize("length", [1, 4])
+@pytest.mark.parametrize("impl", ["bucket", "cached"])
+def test_slot_variant_parity_mixed_live_dead(S, length, impl):
+    rng = np.random.default_rng(S * 17 + length)
+    T, M, F = 5, 31, 6
+    idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    tables = _rand_forest_tables(rng, T, M, F)
+    units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+    mask = jnp.asarray(rng.random(S) < 0.6)
+    out = ops.slot_run(idx, X, *tables, units, mask, length=length,
+                       impl=impl, block_s=8)
+    exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=length)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    dead = ~np.asarray(mask)
+    np.testing.assert_array_equal(np.asarray(out)[dead],
+                                  np.asarray(idx)[dead])
+
+
+@pytest.mark.parametrize("impl", ["bucket", "cached"])
+def test_slot_variant_readout_matches_refs(impl):
+    rng = np.random.default_rng(23)
+    S, T, M, F, C = 17, 4, 31, 6, 3
+    idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    tables = _rand_forest_tables(rng, T, M, F)
+    probs = jnp.asarray(rng.random((T, M, C)), jnp.float32)
+    units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+    mask = jnp.asarray(rng.random(S) < 0.7)
+    new_idx, ro = ops.slot_run_readout(
+        idx, X, *tables, probs, units, mask, length=2, impl=impl)
+    exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=2)
+    np.testing.assert_array_equal(np.asarray(new_idx), np.asarray(exp))
+    np.testing.assert_allclose(
+        np.asarray(ro), np.asarray(ref.prob_accum_ref(exp, probs)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_cached_slot_kernel_hits_top_on_depth_ordered_forest():
+    """On a depth-ordered forest with shallow walkers the cached impl's
+    narrow path actually executes (top_rows covers every live node) —
+    parity must hold through the fast path, not just the wide one."""
+    rng = np.random.default_rng(29)
+    S, T, M, F = 13, 3, 63, 5
+    tables = _heap_forest(rng, T, M, F)
+    lay = klayout.build_depth_layout(*tables)
+    dtables = lay.tables  # depth-ordered: shallow nodes have small ids
+    idx = jnp.asarray(rng.integers(0, 7, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+    mask = jnp.ones(S, bool)
+    out = ops.slot_run(idx, X, *dtables, units, mask, length=2,
+                       impl="cached", top_rows=32)
+    exp = ref.slot_run_ref(idx, X, *dtables, units, mask, length=2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_cached_top_rows_at_least_tree_height(monkeypatch):
+    # top_rows >= Mp clamps to Mp (the whole tree is "the top")
+    rng = np.random.default_rng(31)
+    S, T, M, F = 5, 2, 15, 4
+    tables = _rand_forest_tables(rng, T, M, F)
+    idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+    mask = jnp.asarray(rng.random(S) < 0.5)
+    out = ops.slot_run(idx, X, *tables, units, mask, length=3,
+                       impl="cached", top_rows=10_000)
+    exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("impl", ["bucket", "cached"])
+def test_slot_variant_oversized_falls_back_to_gather(impl, monkeypatch):
+    monkeypatch.setattr(ops, "VMEM_TABLE_BUDGET_BYTES", 64)
+    rng = np.random.default_rng(37)
+    S, T, M, F = 9, 3, 40, 5
+    tables = _rand_forest_tables(rng, T, M, F)
+    idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+    mask = jnp.asarray(rng.random(S) < 0.5)
+    out = ops.slot_run(idx, X, *tables, units, mask, length=3, impl=impl)
+    exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_bucketize_slots_roundtrip_and_coherence():
+    rng = np.random.default_rng(41)
+    units = jnp.asarray(rng.integers(0, 4, size=23), jnp.int32)
+    perm, inv = ops.bucketize_slots(units)
+    sorted_units = np.asarray(jnp.take(units, perm))
+    assert (np.diff(sorted_units) >= 0).all()
+    np.testing.assert_array_equal(
+        np.asarray(jnp.take(perm, inv)), np.arange(23))
+    # round-trip any slot-indexed payload
+    payload = jnp.asarray(rng.normal(size=(23, 3)), jnp.float32)
+    back = jnp.take(jnp.take(payload, perm, axis=0), inv, axis=0)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(payload))
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(1, 40), T=st.integers(1, 5), seed=st.integers(0, 1000))
+def test_bucketized_dispatch_is_permutation_invariant(S, T, seed):
+    """The scheduler-side bucket transform (sort, dispatch, unsort) is
+    bit-neutral for ANY slot impl — the property the executor relies on
+    when the tuning record selects ``bucket``."""
+    rng = np.random.default_rng(seed)
+    M, F = 15, 4
+    tables = _rand_forest_tables(rng, T, M, F)
+    idx = jnp.asarray(rng.integers(0, M, size=(S, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+    units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
+    mask = jnp.asarray(rng.random(S) < 0.6)
+    direct = ops.slot_run(idx, X, *tables, units, mask, length=2,
+                          impl="bucket")
+    perm, inv = ops.bucketize_slots(units)
+    routed = ops.slot_run(
+        jnp.take(idx, perm, axis=0), jnp.take(X, perm, axis=0), *tables,
+        jnp.take(units, perm), jnp.take(mask, perm), length=2, impl="bucket")
+    np.testing.assert_array_equal(
+        np.asarray(jnp.take(routed, inv, axis=0)), np.asarray(direct))

@@ -169,8 +169,10 @@ def test_slot_kernel_parity_mixed_live_dead(S, length):
     tables = _rand_forest_tables(rng, T, M, F)
     units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
     mask = jnp.asarray(rng.random(S) < 0.6)
+    # impl pinned: the committed cpu tuning record selects the gather
+    # fallback, and this test must exercise the flat kernel itself
     out = ops.slot_run(idx, X, *tables, units, mask, length=length,
-                       block_b=8)
+                       block_b=8, impl="flat")
     exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=length)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
     # dead rows are bit-frozen
@@ -187,7 +189,7 @@ def test_slot_kernel_all_dead_is_identity():
     tables = _rand_forest_tables(rng, T, M, F)
     units = jnp.zeros(S, jnp.int32)
     mask = jnp.zeros(S, bool)
-    out = ops.slot_run(idx, X, *tables, units, mask, length=4)
+    out = ops.slot_run(idx, X, *tables, units, mask, length=4, impl="flat")
     np.testing.assert_array_equal(np.asarray(out), np.asarray(idx))
 
 
@@ -201,7 +203,8 @@ def test_slot_kernel_fused_readout_matches_refs():
     units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
     mask = jnp.asarray(rng.random(S) < 0.7)
     new_idx, ro = ops.slot_run_readout(
-        idx, X, *tables, probs, units, mask, length=2, block_b=8)
+        idx, X, *tables, probs, units, mask, length=2, block_b=8,
+        impl="flat")
     exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=2)
     np.testing.assert_array_equal(np.asarray(new_idx), np.asarray(exp))
     np.testing.assert_allclose(
@@ -243,7 +246,8 @@ def test_slot_readout_oversized_falls_back_to_gather(monkeypatch):
     units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
     mask = jnp.asarray(rng.random(S) < 0.5)
     new_idx, ro = ops.slot_run_readout(
-        idx, X, *tables, probs, units, mask, length=3, block_b=8, block_m=64)
+        idx, X, *tables, probs, units, mask, length=3, block_b=8,
+        block_m=64, impl="flat")
     exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=3)
     np.testing.assert_array_equal(np.asarray(new_idx), np.asarray(exp))
     np.testing.assert_allclose(
@@ -273,7 +277,7 @@ def test_slot_kernel_oversized_forest_falls_back_to_gather(monkeypatch):
     tables = _rand_forest_tables(rng, T, M, F)
     units = jnp.asarray(rng.integers(0, T, size=S), jnp.int32)
     mask = jnp.asarray(rng.random(S) < 0.5)
-    out = ops.slot_run(idx, X, *tables, units, mask, length=3)
+    out = ops.slot_run(idx, X, *tables, units, mask, length=3, impl="flat")
     exp = ref.slot_run_ref(idx, X, *tables, units, mask, length=3)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
 

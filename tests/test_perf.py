@@ -1,0 +1,254 @@
+"""tools.perf (analytical counters, inefficiency report, CLI gates) and
+the tuning subsystem's dispatch contract: a tuning record may change
+WHICH impl runs, never WHAT it computes."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref, tuning
+from tools.perf import counters as perfc
+from tools.perf import report as perfr
+from tools.perf.autotune import WIN_MARGIN, _pick
+from tools.perf.cli import main as perf_main
+
+
+# ---------------------------------------------------------------------------
+# counters
+# ---------------------------------------------------------------------------
+
+
+def test_counter_impl_names_match_dispatch_registries():
+    """The pure-stdlib counter model must describe exactly the impls the
+    jax-side registries dispatch (plus the non-registry depth variant)."""
+    assert set(perfc.SOLO_IMPLS) == set(tuning.SOLO_IMPLS) | {"depth"}
+    assert set(perfc.SLOT_IMPLS) == set(tuning.SLOT_IMPLS)
+    assert perfc.DEFAULT_VMEM_BUDGET == ops.VMEM_TABLE_BUDGET_BYTES
+    assert perfc.NFIELDS == ops.NFIELDS
+
+
+def test_solo_counters_shape():
+    fused = perfc.solo_counters("fused", M=127, length=32)
+    scan = perfc.solo_counters("scan", M=127, length=32)
+    depth = perfc.solo_counters("depth", M=127, length=32)
+    assert fused["launches"] == 1 and scan["launches"] == 32
+    assert fused["gather_rows_per_step"] == 128
+    # depth: same single launch, strictly narrower average gather
+    assert depth["launches"] == 1
+    assert depth["gather_bytes_per_step"] < fused["gather_bytes_per_step"]
+    # short runs never unroll past full width
+    wide = perfc.solo_counters("depth", M=7, length=2)
+    assert wide["gather_rows_per_step"] <= 8
+    with pytest.raises(ValueError):
+        perfc.solo_counters("nope", M=8, length=1)
+
+
+def test_slot_counters_ordering():
+    kw = dict(T=8, M=127, length=8)
+    gather = perfc.slot_counters("gather", **kw)
+    flat = perfc.slot_counters("flat", **kw)
+    bucket = perfc.slot_counters("bucket", **kw)
+    cached = perfc.slot_counters("cached", **kw)
+    assert gather["launches"] == 0 and gather["resident_bytes"] == 0
+    # bucket's one-hot is T-fold narrower than flat's, and it streams
+    # one tile instead of pinning the forest
+    assert bucket["gather_rows_per_step"] * 8 == flat["gather_rows_per_step"]
+    assert bucket["resident_bytes"] * 8 == flat["resident_bytes"]
+    # cached counts conservatively: >= flat residency (tables + top)
+    assert cached["resident_bytes"] > flat["resident_bytes"]
+    with pytest.raises(ValueError):
+        perfc.slot_counters("nope", **kw)
+
+
+def test_depth_step_widths_levels_cap():
+    w = perfc.depth_step_widths(8, 1024, levels=3)
+    assert len(w) == 8
+    assert w[3:] == [1024] * 5
+    assert all(a <= b for a, b in zip(w[:3], w[1:4]))
+
+
+# ---------------------------------------------------------------------------
+# report + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_build_report_and_render(tmp_path):
+    rec = {"solo": {"default": {"impl": "fused"}},
+           "slot": {"default": {"impl": "gather"}}}
+    (tmp_path / "faketpu.json").write_text(json.dumps(rec))
+    rep = perfr.build_report(tmp_path)
+    assert rep["tuning_platforms"] == ["faketpu"]
+    for row in rep["solo"]:
+        assert set(row["impls"]) == set(perfc.SOLO_IMPLS)
+        assert row["selected"] == {"faketpu": "fused"}
+    table = perfr.render_table(rep)
+    assert "depth" in table and "bucket" in table
+
+
+def test_check_report_passes_on_fresh_recompute(tmp_path):
+    rep = perfr.build_report(tmp_path)
+    path = tmp_path / "kernels.json"
+    perfr.write_report(rep, path)
+    assert perfr.check_report(rep, path) == []
+
+
+def test_check_report_flags_divergence_and_bad_selection(tmp_path):
+    rep = perfr.build_report(tmp_path)
+    path = tmp_path / "kernels.json"
+    perfr.write_report(rep, path)
+    stale = json.loads(path.read_text())
+    stale["solo"][0]["impls"]["depth"]["gather_bytes_per_step"] = 10**9
+    path.write_text(json.dumps(stale))
+    errs = perfr.check_report(rep, path)
+    assert any("diverges" in e for e in errs)
+    # a record selecting an unknown impl is caught even though the
+    # runtime would degrade it to the default
+    (tmp_path / "weird.json").write_text(json.dumps(
+        {"solo": {"default": {"impl": "warp"}}}))
+    rep2 = perfr.build_report(tmp_path)
+    errs2 = perfr.check_report(rep2, committed_path=None)
+    assert any("unknown impl" in e for e in errs2)
+
+
+def test_cli_check_exit_codes(tmp_path, capsys):
+    # the report must live OUTSIDE the tuning dir (as in the repo):
+    # tuning/*.json are all treated as platform records
+    report = tmp_path / "reports" / "kernels.json"
+    tdir = tmp_path / "tuning"
+    tdir.mkdir()
+    args = ["--tuning-dir", str(tdir), "--report", str(report)]
+    # no committed report yet: --check fails, --write then --check passes
+    assert perf_main([*args, "--check"]) == 1
+    assert perf_main([*args, "--write"]) == 0
+    assert perf_main([*args, "--check"]) == 0
+    out = json.loads(report.read_text())
+    assert out["schema"] == 1
+    capsys.readouterr()
+    assert perf_main([*args, "--json"]) == 0
+    assert json.loads(capsys.readouterr().out)["schema"] == 1
+
+
+def test_committed_report_matches_recompute():
+    """The repo's own reports/perf/kernels.json must stay regenerated —
+    the same invariant CI's `python -m tools.perf --check` enforces."""
+    assert perfr.check_report(perfr.build_report()) == []
+
+
+# ---------------------------------------------------------------------------
+# autotune selection rule
+# ---------------------------------------------------------------------------
+
+
+def test_pick_requires_win_margin():
+    timings = {"scan": [({}, 100.0)],
+               "fused": [({"block_b": 128}, 95.0), ({"block_b": 256}, 90.0)]}
+    # 100/90 = 1.11x < WIN_MARGIN: the fallback keeps the shape
+    assert _pick(timings, "scan")[0] == "scan"
+    timings["fused"][1] = ({"block_b": 256}, 100.0 / (WIN_MARGIN + 0.05))
+    name, params, _ = _pick(timings, "scan")
+    assert name == "fused" and params == {"block_b": 256}
+
+
+# ---------------------------------------------------------------------------
+# tuning-driven selection never changes numerics
+# ---------------------------------------------------------------------------
+
+
+def _write_record(tmp_path, solo_impl, slot_impl, **slot_params):
+    rec = {
+        "solo": {"default": {"impl": solo_impl}},
+        "slot": {"default": {"impl": slot_impl, **slot_params}},
+    }
+    (tmp_path / "cpu.json").write_text(json.dumps(rec))
+
+
+@pytest.fixture
+def tuning_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNING_DIR", str(tmp_path))
+    tuning.clear_cache()
+    yield tmp_path
+    tuning.clear_cache()
+
+
+def test_tuning_selection_never_changes_numerics(tuning_dir):
+    """Every (solo_impl, slot_impl) a tuning record could select yields
+    bit-identical states — selection is a pure performance decision."""
+    rng = np.random.default_rng(3)
+    B, T, M, F = 21, 3, 31, 5
+    idx_col = jnp.asarray(rng.integers(0, M, size=B), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    tree = (
+        jnp.asarray(rng.integers(0, F, size=M), jnp.int32),
+        jnp.asarray(rng.normal(size=M), jnp.float32),
+        jnp.asarray(rng.integers(0, M, size=M), jnp.int32),
+        jnp.asarray(rng.integers(0, M, size=M), jnp.int32),
+        jnp.asarray(rng.random(M) < 0.3),
+    )
+    forest = tuple(jnp.stack([t] * T) for t in tree)
+    idx = jnp.asarray(rng.integers(0, M, size=(B, T)), jnp.int32)
+    units = jnp.asarray(rng.integers(0, T, size=B), jnp.int32)
+    mask = jnp.asarray(rng.random(B) < 0.6)
+    solo_exp = ref.forest_run_ref(idx_col, X, *tree, length=5)
+    slot_exp = ref.slot_run_ref(idx, X, *forest, units, mask, length=3)
+    for solo_impl in tuning.SOLO_IMPLS:
+        for slot_impl in tuning.SLOT_IMPLS:
+            _write_record(tuning_dir, solo_impl, slot_impl)
+            tuning.clear_cache()
+            got = ops.forest_run(idx_col, X, *tree, length=5)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(solo_exp),
+                err_msg=f"solo impl {solo_impl} diverged via tuning")
+            got = ops.slot_run(idx, X, *forest, units, mask, length=3)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(slot_exp),
+                err_msg=f"slot impl {slot_impl} diverged via tuning")
+
+
+def test_tuning_selected_params_flow_and_caller_kw_wins(tuning_dir):
+    _write_record(tuning_dir, "fused", "cached", block_s=8, top_rows=16)
+    tuning.clear_cache()
+    name, params = tuning.select("slot", "T3_M128_L3")
+    assert name == "cached"
+    assert params == {"block_s": 8, "top_rows": 16}
+    rng = np.random.default_rng(9)
+    B, T, M, F = 9, 3, 20, 4
+    forest = (
+        jnp.asarray(rng.integers(0, F, size=(T, M)), jnp.int32),
+        jnp.asarray(rng.normal(size=(T, M)), jnp.float32),
+        jnp.asarray(rng.integers(0, M, size=(T, M)), jnp.int32),
+        jnp.asarray(rng.integers(0, M, size=(T, M)), jnp.int32),
+        jnp.asarray(rng.random((T, M)) < 0.3),
+    )
+    idx = jnp.asarray(rng.integers(0, M, size=(B, T)), jnp.int32)
+    X = jnp.asarray(rng.normal(size=(B, F)), jnp.float32)
+    units = jnp.asarray(rng.integers(0, T, size=B), jnp.int32)
+    mask = jnp.ones(B, bool)
+    # tuned params apply, and an explicit caller kwarg overrides them
+    got = ops.slot_run(idx, X, *forest, units, mask, length=3)
+    got2 = ops.slot_run(idx, X, *forest, units, mask, length=3, top_rows=64)
+    exp = ref.slot_run_ref(idx, X, *forest, units, mask, length=3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(exp))
+
+
+def test_malformed_or_missing_record_degrades_to_defaults(tuning_dir):
+    (tuning_dir / "cpu.json").write_text("{not json")
+    tuning.clear_cache()
+    assert tuning.select("solo", "M128_L4") == ("fused", {})
+    assert tuning.select("slot", "T3_M128_L4") == ("gather", {})
+    # a record naming an unregistered impl degrades too
+    (tuning_dir / "cpu.json").write_text(json.dumps(
+        {"slot": {"default": {"impl": "warp"}}}))
+    tuning.clear_cache()
+    assert tuning.select("slot", "T3_M128_L4")[0] == "gather"
+
+
+def test_register_duplicate_impl_raises():
+    with pytest.raises(ValueError):
+        tuning.register_solo_impl("fused")(lambda: None)
+    with pytest.raises(ValueError):
+        ops.forest_run(jnp.zeros(1, jnp.int32), jnp.zeros((1, 1)),
+                       jnp.zeros(1, jnp.int32), jnp.zeros(1),
+                       jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+                       jnp.zeros(1, bool), length=1, impl="warp")

@@ -33,7 +33,14 @@ from tools.analyze.core import Config, Finding, SourceFile, call_name
 
 CHECKER = "registry"
 
-_REGISTER_FNS = {"register_order", "register_backend"}
+_REGISTER_FNS = {
+    "register_order",
+    "register_backend",
+    # kernel implementation registries (repro.kernels.tuning): dispatch
+    # adapters the tuning records select between
+    "register_solo_impl",
+    "register_slot_impl",
+}
 
 
 def _str_tuple_constants(sf: SourceFile) -> dict[str, tuple]:
@@ -205,18 +212,24 @@ def check(files: list[SourceFile], config: Config) -> list[Finding]:
             else:
                 seen[key] = reg
 
-    # Per-class checks (docstring, export), deduplicated per target.
+    # Per-target checks (docstring, export), deduplicated per target.
+    # Kernel-impl registrations target FUNCTIONS; underscore-private
+    # targets (the impl adapters — selected via the registry, never
+    # imported) are exempt from the export checks but still need docs.
     for path in sorted(regs_by_file):
         sf = regs_by_file[path][0].sf
         classes = {
-            n.name: n for n in ast.walk(sf.tree) if isinstance(n, ast.ClassDef)
+            n.name: n
+            for n in ast.walk(sf.tree)
+            if isinstance(n, (ast.ClassDef, ast.FunctionDef))
         }
         exported = _module_all(sf)
         targets = []
         for reg in regs_by_file[path]:
             if reg.target and reg.target not in [t for t, _ in targets]:
                 targets.append((reg.target, reg))
-        if exported is None and targets:
+        public_targets = [t for t in targets if not t[0].startswith("_")]
+        if exported is None and public_targets:
             findings.append(
                 Finding(
                     CHECKER,
@@ -233,17 +246,19 @@ def check(files: list[SourceFile], config: Config) -> list[Finding]:
             if cls is None:
                 continue  # registered class imported from elsewhere
             if not ast.get_docstring(cls):
+                kind = "class" if isinstance(cls, ast.ClassDef) else "function"
                 findings.append(
                     Finding(
                         CHECKER,
                         "missing-docstring",
                         sf.path,
                         cls.lineno,
-                        f"registered class {target} has no docstring",
+                        f"registered {kind} {target} has no docstring",
                         symbol=target,
                     )
                 )
-            if exported is not None and target not in exported:
+            if (exported is not None and target not in exported
+                    and not target.startswith("_")):
                 findings.append(
                     Finding(
                         CHECKER,

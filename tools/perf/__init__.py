@@ -1,0 +1,27 @@
+"""Kernel inefficiency-report suite (sibling of :mod:`tools.analyze`).
+
+Wall-clock on this container is meaningless for kernel work — the Pallas
+kernels run in interpret mode on CPU, where a Mosaic-compiled TPU launch
+is emulated element-for-element.  What IS platform-independent is the
+*analytical* cost of each implementation: how many kernel launches a
+dispatched segment costs, how many node-table rows each step's gathers
+address, and how many table bytes must sit resident in VMEM.  This
+package computes those counters from the dispatch shapes alone (pure
+stdlib — no jax import, so it runs in the lint/CI environment exactly
+like ``tools.analyze``), renders them as a machine-readable report
+(``reports/perf/kernels.json``) plus a human table, and gates CI on
+them:
+
+* ``python -m tools.perf``          — print the table;
+* ``python -m tools.perf --write``  — regenerate the committed report;
+* ``python -m tools.perf --check``  — recompute and fail (exit 1) on
+  any counter regression vs the committed report, on a depth-aware
+  variant that stopped strictly beating the full-width kernels on
+  gather bytes/step, or on a tuning record selecting unknown impls.
+
+``tools.perf.autotune`` (the only jax-importing module here, run as
+``PYTHONPATH=src python -m tools.perf.autotune``) is the measured side:
+it times every registered implementation per shape on the CURRENT
+platform and persists the winners to ``tuning/<platform>.json`` — the
+record :mod:`repro.kernels.ops` consults at dispatch time.
+"""

@@ -1,0 +1,4 @@
+"""``python -m tools.perf`` — see :mod:`tools.perf.cli`."""
+from tools.perf.cli import main
+
+raise SystemExit(main())

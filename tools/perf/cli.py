@@ -1,0 +1,70 @@
+"""Command line entry point: ``python -m tools.perf``.
+
+Pure stdlib (no jax) — runnable in the same environment as the lint
+job.  Exit status under ``--check`` is 0 only when every counter gate
+passes AND the committed ``reports/perf/kernels.json`` matches a fresh
+recompute; the CI bench-smoke job runs exactly that.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.perf import report as report_mod
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.perf",
+        description="Kernel inefficiency report: analytical launch/"
+        "gather/residency counters per implementation, tuned-selection "
+        "audit, CI counter gate.",
+    )
+    parser.add_argument(
+        "--tuning-dir", default="tuning",
+        help="directory of committed tuning/<platform>.json records",
+    )
+    parser.add_argument(
+        "--report", default=str(report_mod.REPORT_PATH),
+        help="committed report path (default: reports/perf/kernels.json)",
+    )
+    parser.add_argument(
+        "--write", action="store_true",
+        help="regenerate the committed report and exit 0",
+    )
+    parser.add_argument(
+        "--check", action="store_true",
+        help="gate: fail on counter regressions vs the committed report",
+    )
+    parser.add_argument(
+        "--json", action="store_true",
+        help="machine-readable JSON on stdout instead of the table",
+    )
+    args = parser.parse_args(argv)
+
+    report = report_mod.build_report(Path(args.tuning_dir))
+    report_path = Path(args.report)
+
+    if args.write:
+        report_mod.write_report(report, report_path)
+        print(f"wrote {report_path}")
+        return 0
+
+    if args.json:
+        print(json.dumps(report, indent=2, sort_keys=True))
+    else:
+        print(report_mod.render_table(report))
+
+    if args.check:
+        errors = report_mod.check_report(report, report_path)
+        for e in errors:
+            print(f"perf-check: {e}", file=sys.stderr)
+        print(
+            f"perf-check: {len(errors)} failure(s)"
+            if errors else "perf-check: ok",
+            file=sys.stderr,
+        )
+        return 1 if errors else 0
+    return 0

@@ -1,0 +1,133 @@
+"""Analytical cost counters for every kernel implementation — pure
+stdlib, valid on any platform (interpret mode included).
+
+The model attributes one dispatched plan segment (``length`` fused
+steps of one shape) to four platform-independent quantities:
+
+* ``launches`` — Pallas kernel launches the dispatch costs (the
+  per-launch overhead the fused kernels exist to amortize);
+* ``gather_rows_per_step`` — node-table rows ADDRESSABLE by one step's
+  gather per sample/slot row: the width of the one-hot contraction for
+  the matmul-gather kernels, 1 for the true-gather jnp path.  This is
+  the gather-pressure axis the depth-aware variant attacks;
+* ``gather_bytes_per_step`` — the same in table bytes
+  (``rows * NFIELDS * 4``);
+* ``resident_bytes`` — the table footprint the kernel pins in VMEM for
+  the whole launch (0 for non-resident/streaming paths).
+
+The depth-aware width model uses the data-independent complete-tree
+bound: after ``j`` root-relative steps at most ``2^(j+1) - 1`` nodes are
+reachable, so the step-``j`` gather needs at most that many rows
+(lane-rounded).  ``repro.kernels.layout.complete_tree_width`` implements
+the SAME formula from real tables — a parity test pins the two together
+and asserts real layouts never exceed the model.
+"""
+from __future__ import annotations
+
+# mirrors repro.kernels.common (pure-stdlib copy; cross-checked by test)
+NFIELDS = 8
+LANE_ROUND = 128
+WIDTH_LANES = 8
+BYTES = 4  # all tables are f32
+#: mirrors repro.kernels.ops.VMEM_TABLE_BUDGET_BYTES
+DEFAULT_VMEM_BUDGET = 4 * 2**20
+
+#: the implementation names the dispatch registries expose (a test pins
+#: these to repro.kernels.tuning.SOLO_IMPLS/SLOT_IMPLS)
+SOLO_IMPLS = ("fused", "scan", "depth")
+SLOT_IMPLS = ("gather", "flat", "bucket", "cached")
+
+
+def round_up(n: int, multiple: int) -> int:
+    return -(-int(n) // multiple) * multiple
+
+
+def pad_m(M: int) -> int:
+    """Padded table height (mirrors ``common.pad_fields``)."""
+    return round_up(max(int(M), 1), LANE_ROUND)
+
+
+def complete_tree_width(step: int, m_padded: int,
+                        lanes: int = WIDTH_LANES) -> int:
+    """Upper bound on the depth-aware gather width at root-relative
+    ``step``: a binary tree reaches at most ``2^(step+1) - 1`` nodes."""
+    reachable = (1 << (step + 1)) - 1 if step < 62 else m_padded
+    return min(m_padded, round_up(min(reachable, m_padded), lanes))
+
+
+def depth_step_widths(length: int, m_padded: int,
+                      levels: int | None = None) -> list[int]:
+    """Per-step gather widths of a fresh depth-aware dispatch: narrow
+    complete-tree-bounded widths while they stay below full width (capped
+    at ``levels`` unrolled steps), full width for the tail."""
+    widths = []
+    for j in range(length):
+        if levels is not None and j >= levels:
+            widths.append(m_padded)
+            continue
+        w = complete_tree_width(j, m_padded)
+        widths.append(w if w < m_padded else m_padded)
+    return widths
+
+
+def _counters(launches: int, rows_per_step: float, resident: int,
+              length: int) -> dict:
+    return {
+        "launches": launches,
+        "gather_rows_per_step": round(rows_per_step, 3),
+        "gather_bytes_per_step": round(rows_per_step * NFIELDS * BYTES, 3),
+        "resident_bytes": resident,
+        "length": length,
+    }
+
+
+def solo_counters(impl: str, *, M: int, length: int,
+                  levels: int | None = 4) -> dict:
+    """Counters for one solo-path dispatch (index column [B], one tree).
+
+    ``depth`` models the FRESH (root-start) dispatch — its only valid
+    use; ``levels`` is the executor's unroll cap (None = unlimited).
+    """
+    Mp = pad_m(M)
+    resident = Mp * NFIELDS * BYTES
+    if impl == "fused":
+        return _counters(1, Mp, resident, length)
+    if impl == "scan":
+        return _counters(length, Mp, resident, length)
+    if impl == "depth":
+        widths = depth_step_widths(length, Mp, levels)
+        return _counters(1, sum(widths) / max(length, 1), resident, length)
+    raise ValueError(f"unknown solo impl {impl!r} (have {SOLO_IMPLS})")
+
+
+def slot_counters(impl: str, *, T: int, M: int, length: int,
+                  top_rows: int = 32) -> dict:
+    """Counters for one slot-path dispatch (index rows [S, T], per-slot
+    tree ids).
+
+    * ``gather`` — no kernel launch, a true 1-row gather per slot-step;
+    * ``flat``   — one launch, whole forest resident, T*Mp-wide one-hot;
+    * ``bucket`` — one launch, per-tree streamed tiles (resident_bytes
+      counts only the single streamed tile), Mp-wide one-hot;
+    * ``cached`` — one launch, flat tables + compacted top resident;
+      the width model is conservative (full T*Mp — the narrow top path
+      is data-dependent, so the analytical counter never credits it).
+    """
+    Mp = pad_m(M)
+    tile = Mp * NFIELDS * BYTES
+    if impl == "gather":
+        return _counters(0, 1, 0, length)
+    if impl == "flat":
+        return _counters(1, T * Mp, T * tile, length)
+    if impl == "bucket":
+        return _counters(1, Mp, tile, length)
+    if impl == "cached":
+        top = min(max(int(top_rows), 1), Mp)
+        return _counters(1, T * Mp, T * tile + T * top * NFIELDS * BYTES,
+                         length)
+    raise ValueError(f"unknown slot impl {impl!r} (have {SLOT_IMPLS})")
+
+
+def fits_budget(resident_bytes: int,
+                budget: int = DEFAULT_VMEM_BUDGET) -> bool:
+    return resident_bytes <= budget

@@ -1,0 +1,218 @@
+"""Build the kernel inefficiency report: analytical counters per shape
+per implementation, plus what the committed tuning records select.
+
+The report is deterministic (pure arithmetic over the benchmark shape
+matrix + a JSON read of ``tuning/``), so the committed copy under
+``reports/perf/kernels.json`` doubles as a regression baseline: --check
+recomputes it and fails on ANY divergence — a counter that silently grew
+(someone widened a gather), a tuning record selecting an unknown impl,
+or a depth-aware variant that no longer strictly undercuts the
+full-width kernels.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from tools.perf import counters as C
+
+REPORT_PATH = Path("reports/perf/kernels.json")
+
+#: the shape matrix — mirrors benchmarks/bench_kernels.py configs
+SOLO_SHAPES = [
+    {"B": 128, "F": 16, "M": 127, "length": 32},
+    {"B": 256, "F": 32, "M": 255, "length": 64},
+]
+SLOT_SHAPES = [
+    {"S": 64, "T": 8, "M": 127, "F": 16, "length": 8},
+    {"S": 128, "T": 12, "M": 255, "F": 32, "length": 16},
+]
+
+_DEFAULT_SOLO = "fused"
+_DEFAULT_SLOT = "gather"
+
+
+def _load_tuning_records(tuning_dir: Path) -> dict:
+    """All committed ``tuning/<platform>.json`` records, by platform."""
+    recs = {}
+    if tuning_dir.is_dir():
+        for p in sorted(tuning_dir.glob("*.json")):
+            try:
+                rec = json.loads(p.read_text())
+            except (OSError, json.JSONDecodeError, ValueError):
+                rec = None
+            if isinstance(rec, dict):
+                recs[p.stem] = rec
+    return recs
+
+
+def _select(record: dict, kind: str, key: str) -> str:
+    """Mirror of ``repro.kernels.tuning.select`` name resolution (pure
+    JSON — no jax): exact key, then ``default``, then the conservative
+    built-in.  Unlike the runtime (which degrades unknown names to the
+    default at dispatch), this returns the record's RAW pick so
+    ``check_report`` can flag a corrupt record instead of hiding it."""
+    builtin = _DEFAULT_SOLO if kind == "solo" else _DEFAULT_SLOT
+    section = record.get(kind, {}) if isinstance(record, dict) else {}
+    if not isinstance(section, dict):
+        section = {}
+    entry = section.get(key) or section.get("default") or {}
+    if not isinstance(entry, dict):
+        entry = {}
+    name = entry.get("impl", builtin)
+    return name if isinstance(name, str) else builtin
+
+
+def build_report(tuning_dir: Path = Path("tuning")) -> dict:
+    records = _load_tuning_records(tuning_dir)
+    solo_rows = []
+    for shape in SOLO_SHAPES:
+        Mp = C.pad_m(shape["M"])
+        key = f"M{Mp}_L{shape['length']}"
+        row = {
+            "shape": dict(shape),
+            "key": key,
+            "impls": {
+                name: C.solo_counters(
+                    name, M=shape["M"], length=shape["length"]
+                )
+                for name in C.SOLO_IMPLS
+            },
+            "selected": {
+                plat: _select(rec, "solo", key)
+                for plat, rec in records.items()
+            },
+        }
+        solo_rows.append(row)
+    slot_rows = []
+    for shape in SLOT_SHAPES:
+        Mp = C.pad_m(shape["M"])
+        key = f"T{shape['T']}_M{Mp}_L{shape['length']}"
+        row = {
+            "shape": dict(shape),
+            "key": key,
+            "impls": {
+                name: C.slot_counters(
+                    name, T=shape["T"], M=shape["M"], length=shape["length"]
+                )
+                for name in C.SLOT_IMPLS
+            },
+            "selected": {
+                plat: _select(rec, "slot", key)
+                for plat, rec in records.items()
+            },
+        }
+        slot_rows.append(row)
+    return {
+        "schema": 1,
+        "budget_bytes": C.DEFAULT_VMEM_BUDGET,
+        "solo": solo_rows,
+        "slot": slot_rows,
+        "tuning_platforms": sorted(records),
+    }
+
+
+def render_table(report: dict) -> str:
+    """The human table à la ``benchmarks/roofline_report.py``."""
+    lines = [
+        "| path | shape | impl | launches | gather rows/step | "
+        "gather bytes/step | resident | fits | selected |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    budget = report["budget_bytes"]
+    for kind in ("solo", "slot"):
+        for row in report[kind]:
+            s = row["shape"]
+            if kind == "solo":
+                shape = f"B{s['B']} M{s['M']} L{s['length']}"
+            else:
+                shape = f"S{s['S']} T{s['T']} M{s['M']} L{s['length']}"
+            sel_by = {
+                plat: name for plat, name in row.get("selected", {}).items()
+            }
+            for name, c in row["impls"].items():
+                plats = ",".join(p for p, n in sel_by.items() if n == name)
+                mark = f"**{plats}**" if plats else ""
+                fits = "y" if C.fits_budget(c["resident_bytes"], budget) else "NO"
+                lines.append(
+                    f"| {kind} | {shape} | {name} | {c['launches']} | "
+                    f"{c['gather_rows_per_step']:g} | "
+                    f"{c['gather_bytes_per_step']:g} | "
+                    f"{c['resident_bytes']} | {fits} | {mark} |"
+                )
+    return "\n".join(lines)
+
+
+def check_report(report: dict, committed_path: Path = REPORT_PATH) -> list[str]:
+    """The counter gates.  Returns a list of failure messages (empty =
+    pass):
+
+    1. depth-aware gather bytes/step STRICTLY below fused and scan on
+       every solo shape (the PR's headline claim, kept true by math);
+    2. bucketized gather bytes/step strictly below the flat slot kernel;
+    3. every tuning-record selection resolves to a known impl whose
+       resident footprint fits the VMEM budget;
+    4. the committed report matches a fresh recompute (counters and
+       selections are deterministic — divergence means someone changed
+       the cost model or the tuning records without regenerating, or a
+       real counter regression).
+    """
+    errors = []
+    for row in report["solo"]:
+        d = row["impls"]["depth"]["gather_bytes_per_step"]
+        for other in ("fused", "scan"):
+            o = row["impls"][other]["gather_bytes_per_step"]
+            if not d < o:
+                errors.append(
+                    f"solo {row['key']}: depth gather bytes/step {d} not "
+                    f"strictly below {other} ({o})"
+                )
+    for row in report["slot"]:
+        b = row["impls"]["bucket"]["gather_bytes_per_step"]
+        f = row["impls"]["flat"]["gather_bytes_per_step"]
+        if not b < f:
+            errors.append(
+                f"slot {row['key']}: bucket gather bytes/step {b} not "
+                f"strictly below flat ({f})"
+            )
+    budget = report["budget_bytes"]
+    for kind in ("solo", "slot"):
+        known = C.SOLO_IMPLS if kind == "solo" else C.SLOT_IMPLS
+        for row in report[kind]:
+            for plat, name in row.get("selected", {}).items():
+                if name not in known:
+                    errors.append(
+                        f"{kind} {row['key']}: tuning[{plat}] selects "
+                        f"unknown impl {name!r}"
+                    )
+                    continue
+                c = row["impls"][name]
+                if not C.fits_budget(c["resident_bytes"], budget):
+                    errors.append(
+                        f"{kind} {row['key']}: tuning[{plat}] selects "
+                        f"{name} whose resident {c['resident_bytes']}B "
+                        f"exceeds the {budget}B budget"
+                    )
+    if committed_path is not None:
+        if not committed_path.exists():
+            errors.append(
+                f"no committed report at {committed_path} — run "
+                f"`python -m tools.perf --write`"
+            )
+        else:
+            try:
+                committed = json.loads(committed_path.read_text())
+            except (OSError, json.JSONDecodeError, ValueError):
+                committed = None
+            if committed != report:
+                errors.append(
+                    f"committed report {committed_path} diverges from "
+                    f"recompute — counter regression, or regenerate with "
+                    f"`python -m tools.perf --write`"
+                )
+    return errors
+
+
+def write_report(report: dict, path: Path = REPORT_PATH) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
