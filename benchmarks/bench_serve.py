@@ -40,6 +40,7 @@ import time
 import numpy as np
 
 from benchmarks.common import build_pipeline, runtime_for
+from repro.obs import Tracer, write_chrome_trace
 from repro.serve import AdmissionRejected, AnytimeServer
 
 
@@ -78,9 +79,10 @@ def _result_stats(results, dt, snap):
     }
 
 
-def _batched_loop(rt, rows, deadline_ms, capacity, warmup: bool = False):
+def _batched_loop(rt, rows, deadline_ms, capacity, warmup: bool = False,
+                  tracer=None):
     """Cooperative mode: the caller pumps the loop via ``serve()``."""
-    server = AnytimeServer(rt, capacity=capacity)
+    server = AnytimeServer(rt, capacity=capacity, tracer=tracer)
     if warmup:
         # compile the slot batch's fused-segment traces before timing —
         # millisecond deadlines are meaningless against cold jit compiles
@@ -146,10 +148,33 @@ def _overload_loop(rt, rows, deadline_ms, capacity, n_requests,
     }
 
 
+def _obs_loops(rt, rows, capacity):
+    """Tracing cost and completeness, all runs warmed (compiles would
+    swamp the percent-level overhead being measured):
+
+    * **off** — server holds a *disabled* ``Tracer``: instrumentation
+      sites take the compiled-out fast path (one attribute read).  Gated
+      to stay within noise of the untraced server (``NULL_TRACER``).
+    * **on** — full tracing with margin telemetry; the exported trace is
+      the record→export→schema-validate round-trip artifact CI feeds to
+      ``python -m tools.obs --check``.
+    """
+    generous = 300_000.0
+    untraced = _batched_loop(rt, rows, generous, capacity, warmup=True)
+    off = _batched_loop(rt, rows, generous, capacity, warmup=True,
+                        tracer=Tracer(enabled=False))
+    traced = Tracer(margins=True)
+    on = _batched_loop(rt, rows, generous, capacity, warmup=True,
+                       tracer=traced)
+    return untraced, off, on, traced
+
+
 def run(dataset: str = "magic", n_trees: int = 10, depth: int = 6,
         capacity: int = 16, n_requests: int = 48,
         tight_deadline_ms: float = 30.0, overload_deadline_ms: float = 5_000.0,
         seed: int = 0, min_speedup: float = 3.0, min_hit_rate: float = 0.99,
+        min_trace_off_ratio: float = 0.6,
+        trace_path: str = "reports/obs/serve_trace_smoke.json",
         gate: bool = True, verbose: bool = True) -> dict:
     """Serving comparison; raises (failing the smoke build) when the
     gated thresholds are missed."""
@@ -179,6 +204,26 @@ def run(dataset: str = "magic", n_trees: int = 10, depth: int = 6,
         "batched": _batched_loop(rt, rows[:capacity], tight_deadline_ms,
                                  capacity, warmup=True),
     }
+    # observability: disabled-tracer overhead gate + traced export
+    untraced, off, on, traced = _obs_loops(rt, rows, capacity)
+    attrs = list(traced.attributions)
+    out["obs"] = {
+        "untraced_rps": untraced["requests_per_sec"],
+        "disabled_rps": off["requests_per_sec"],
+        "traced_rps": on["requests_per_sec"],
+        "disabled_ratio":
+            off["requests_per_sec"] / untraced["requests_per_sec"],
+        "attributions": len(attrs),
+        "attribution_sum_fail": sum(1 for a in attrs if not a.check()),
+        "events": len(traced.events()),
+        "dropped": traced.dropped,
+    }
+    if trace_path:
+        doc = write_chrome_trace(traced, trace_path, meta={
+            "bench": "bench_serve", "dataset": dataset,
+            "capacity": capacity, "n_requests": len(rows)})
+        out["obs"]["trace_path"] = trace_path
+        out["obs"]["trace_events"] = len(doc["traceEvents"])
     # overload frontier: reject sheds at submit, degrade shrinks budgets
     overload_n = 6 * capacity
     out["overload"] = {
@@ -209,6 +254,10 @@ def run(dataset: str = "magic", n_trees: int = 10, depth: int = 6,
             print(f"serve,overload_{mode},hit_rate,{o['hit_rate']:.3f},"
                   f"rejected,{o['rejected']},degraded,"
                   f"{o['degraded_requests']},steps_p50,{o['steps_p50']:.0f}")
+        ob = out["obs"]
+        print(f"serve,obs,disabled_ratio,{ob['disabled_ratio']:.3f},"
+              f"traced_rps,{ob['traced_rps']:.1f},attributions,"
+              f"{ob['attributions']},sum_fail,{ob['attribution_sum_fail']}")
 
     if gate:
         assert out["speedup"] >= min_speedup, (
@@ -227,6 +276,18 @@ def run(dataset: str = "magic", n_trees: int = 10, depth: int = 6,
         assert degrade_hit > reject_hit, (
             f"admission='degrade' hit-rate {degrade_hit:.3f} does not "
             f"dominate 'reject' {reject_hit:.3f} at equal load")
+        ob = out["obs"]
+        assert ob["disabled_ratio"] >= min_trace_off_ratio, (
+            f"disabled-tracer serving at {ob['disabled_ratio']:.2f}x the "
+            f"untraced throughput (gate: >= {min_trace_off_ratio}x — the "
+            f"trace=off fast path must stay within noise)")
+        expected = len(rows) + min(capacity, len(rows))  # stream + warmup
+        assert ob["attributions"] == expected, (
+            f"traced run delivered {expected} requests (incl. warmup) but "
+            f"produced {ob['attributions']} attribution records")
+        assert ob["attribution_sum_fail"] == 0, (
+            f"{ob['attribution_sum_fail']} attribution record(s) whose "
+            f"components do not sum to end-to-end latency")
     return out
 
 

@@ -27,6 +27,7 @@ from repro import AnytimeRuntime, AnytimeServer, ForestProgram, as_completed
 from repro.configs.registry import get_config
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.models import model as MD
+from repro.obs import Tracer
 from repro.serving.anytime_depth import EnsembleMember, EnsembleProgram
 
 
@@ -80,9 +81,12 @@ def threaded_serving():
 
     # the context manager starts the background driver; submit() is a
     # thread-safe enqueue and this thread's own work (here: feature
-    # prep for the NEXT batch) overlaps device execution
+    # prep for the NEXT batch) overlaps device execution.  The tracer
+    # records the full span timeline + per-request deadline-budget
+    # attribution (queue/dispatch/compile/harvest/slack)
+    tracer = Tracer(margins=True)
     with AnytimeServer(rt, capacity=8, admission="degrade",
-                       admission_k=1.0) as server:
+                       admission_k=1.0, tracer=tracer) as server:
         tickets = [server.submit(x, deadline_ms=60_000.0) for x in Xte[:32]]
         tickets[0].add_done_callback(
             lambda t: print(f"  first completion callback: request "
@@ -101,6 +105,18 @@ def threaded_serving():
     # leaving the block stop()s the driver: in-flight slots drained to
     # their last boundary readout, every admitted ticket answered
     print(f"  after close: all done = {all(t.done for t in tickets)}")
+    # where did one request's latency actually go?  Every delivered
+    # ticket has an attribution record; components sum to the
+    # end-to-end latency (jit compiles are split out of dispatch, so a
+    # request that paid for a trace mint shows it)
+    attr = next(a for a in tracer.attributions
+                if a.request_id == tickets[0].request_id)
+    print("  one-request deadline-budget attribution:")
+    for line in attr.format().splitlines():
+        print(f"    {line}")
+    print(f"  ({len(list(tracer.attributions))} attribution records, "
+          f"{len(tracer.events())} spans recorded — export with "
+          f"repro.obs.write_chrome_trace for Perfetto)")
 
 
 def transformer_serving():

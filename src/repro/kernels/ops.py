@@ -59,6 +59,8 @@ from repro.kernels.common import (
 )
 from repro.kernels.forest_step import forest_step as _forest_step
 from repro.kernels.prob_accum import prob_accum as _prob_accum
+from repro.obs import annotate as _obs_annotate
+from repro.obs import tracing_active as _obs_tracing_active
 
 #: Soft cap on the VMEM-resident table footprint of the fused kernels.
 #: Above it the wrappers fall back to the streamed/generic paths — the
@@ -170,10 +172,18 @@ def _resolve(kind: str, key: str, impl, kw: dict, allowed: frozenset):
             raise ValueError(
                 f"unknown {kind} impl {impl!r} (registered: {sorted(registry)})"
             )
-        return registry[impl], dict(kw)
-    name, params = tuning.select(kind, key)
-    merged = {k: v for k, v in params.items() if k in allowed}
-    merged.update(kw)
+        name, merged = impl, dict(kw)
+    else:
+        name, params = tuning.select(kind, key)
+        merged = {k: v for k, v in params.items() if k in allowed}
+        merged.update(kw)
+    if _obs_tracing_active():
+        # this Python only runs while jax TRACES the enclosing jitted
+        # body — steady-state dispatches replay the cached trace and
+        # never reach here — so firing inside an active dispatch span
+        # marks that dispatch as the one that minted a jit trace, with
+        # the registry's authoritative impl name
+        _obs_annotate(impl=name, jit_trace=True)
     return registry[name], merged
 
 

@@ -10,6 +10,11 @@ accuracy of the predictions actually delivered at the deadline.
         --n-trees 10 --depth 6 --requests 64 --deadline-ms 5 \
         --capacity 16 --policy backward_squirrel \
         --threaded --admission degrade
+
+With ``--trace PATH`` the run records the full span timeline
+(:mod:`repro.obs`) and writes Chrome trace-event JSON on exit — load it
+at https://ui.perfetto.dev, or feed it to ``python -m tools.obs report``
+for the deadline-budget attribution and segment-latency tables.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ import argparse
 import numpy as np
 
 from repro.forest import make_dataset, split_dataset, train_forest
+from repro.obs import Tracer, write_chrome_trace
 from repro.schedule import AnytimeRuntime, ForestProgram
 from repro.serve import AdmissionRejected, AnytimeServer
 
@@ -44,6 +50,10 @@ def main():
                     help="serve through the background driver thread "
                          "(fire-and-forget submits) instead of the "
                          "cooperative drain loop")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the span timeline and write Chrome "
+                         "trace-event JSON (Perfetto-loadable) to PATH "
+                         "on exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -54,9 +64,11 @@ def main():
                       max_depth=args.depth, seed=args.seed)
     rt = AnytimeRuntime(
         ForestProgram(rf.as_arrays(), y_order=yor[:300], X_order=orx[:300]))
+    tracer = Tracer(margins=True) if args.trace else None
     server = AnytimeServer(rt, capacity=args.capacity,
                            admission=args.admission,
-                           admission_k=args.admission_k)
+                           admission_k=args.admission_k,
+                           tracer=tracer)
     if args.threaded:
         server.start()
 
@@ -103,6 +115,17 @@ def main():
               f"(budget p50 {snap['budget_at_deadline']['p50']:.0f})")
     print(f"  requests/sec          {snap['requests_per_sec']:.1f}")
     print(f"  slot occupancy        {snap['slot_occupancy']:.2f}")
+    if tracer is not None:
+        doc = write_chrome_trace(tracer, args.trace, meta={
+            "dataset": args.dataset, "policy": args.policy,
+            "deadline_ms": args.deadline_ms, "capacity": args.capacity,
+            "admission": args.admission,
+            "threaded": bool(args.threaded),
+        })
+        print(f"  trace                 {args.trace} "
+              f"({len(doc['traceEvents'])} events, "
+              f"{len(doc['otherData']['attributions'])} attributions, "
+              f"{doc['otherData']['dropped']} dropped)")
 
 
 if __name__ == "__main__":

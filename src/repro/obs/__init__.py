@@ -1,0 +1,48 @@
+"""repro.obs — cross-layer tracing with deadline-budget attribution.
+
+A span-based, thread-safe tracing subsystem for the serving stack:
+every request's path (submit → admission → queue → slot → segment
+dispatches → harvest → delivery) records as spans that roll up into a
+per-request deadline-budget attribution (``queue_ms / dispatch_ms /
+compile_ms / harvest_ms / slack_ms``), plus per-(backend, impl,
+pow2-length) segment-latency histograms and optional per-step margin
+traces.  Exports Chrome trace-event JSON (Perfetto-loadable); analyzed
+and gated by ``python -m tools.obs``.
+
+This package is import-light by design — no jax, no numpy — so the
+kernel dispatch layer (``repro.kernels.ops``) can call
+:func:`annotate`/:func:`tracing_active` without import-order or
+device-init concerns.
+"""
+from repro.obs.attribution import Attribution, summarize
+from repro.obs.export import (
+    export_chrome_trace,
+    segment_histograms,
+    write_chrome_trace,
+)
+from repro.obs.names import ATTRIBUTION_FIELDS, CATEGORIES, SPAN_NAMES
+from repro.obs.tracer import (
+    NULL_TRACER,
+    Span,
+    Tracer,
+    annotate,
+    current_span,
+    tracing_active,
+)
+
+__all__ = [
+    "Attribution",
+    "summarize",
+    "export_chrome_trace",
+    "segment_histograms",
+    "write_chrome_trace",
+    "ATTRIBUTION_FIELDS",
+    "CATEGORIES",
+    "SPAN_NAMES",
+    "NULL_TRACER",
+    "Span",
+    "Tracer",
+    "annotate",
+    "current_span",
+    "tracing_active",
+]

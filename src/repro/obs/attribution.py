@@ -1,0 +1,125 @@
+"""Deadline-budget attribution: where one request's latency went.
+
+One :class:`Attribution` record decomposes a delivered request's
+end-to-end latency into the pipeline components the tentpole names::
+
+    latency_ms == queue_ms + dispatch_ms + compile_ms
+                  + harvest_ms + slack_ms        (within tolerance)
+
+* ``queue_ms`` — submit until the request won a lane slot (EDF queue
+  wait; the whole latency if it was flushed before ever running).
+* ``dispatch_ms`` — wall time of its lane's segment dispatches while
+  the request occupied a slot (asynchronous device enqueue + trace-time
+  Python, minus reclassified compiles).
+* ``compile_ms`` — the subset of dispatch wall spent minting new jit
+  traces (first dispatch of a pow2 segment length).  Separated because
+  it is a warmup artifact, not steady-state cost — a request unlucky
+  enough to trigger compilation should show it, not hide it in
+  dispatch.
+* ``harvest_ms`` — boundary materialization (the device sync) and slot
+  retirement for its lane.
+* ``slack_ms`` — the in-flight residual: serving-loop bookkeeping,
+  other lanes' turns, host scheduling gaps.  Non-negative by
+  construction (all accounted intervals lie inside the in-flight
+  window and run sequentially on the serving thread).
+
+Records are produced by :meth:`repro.obs.tracer.Tracer.
+request_delivered`, surfaced through ``ServeMetrics.snapshot()
+["attribution"]``, exported into the Chrome trace's ``otherData``, and
+checked by ``python -m tools.obs --check``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.obs.names import ATTRIBUTION_FIELDS
+
+__all__ = ["Attribution", "summarize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Attribution:
+    """One delivered request's latency decomposition (milliseconds)."""
+
+    request_id: int
+    program: str
+    lane: Optional[str]       # None if flushed before reaching a slot
+    backend: Optional[str]
+    decision: Optional[str]   # admission decision (edf/reject/degrade)
+    backlog: int              # lane backlog observed at admission
+    budget_steps: Optional[int]
+    steps: int                # steps completed at delivery
+    total_steps: int
+    deadline_hit: bool
+    t_submit: float           # server-clock timestamps (seconds)
+    t_admit: Optional[float]
+    t_deliver: float
+    latency_ms: float
+    queue_ms: float
+    dispatch_ms: float
+    compile_ms: float
+    harvest_ms: float
+    slack_ms: float
+
+    def components(self) -> dict[str, float]:
+        """The latency decomposition, in report order."""
+        return {f: getattr(self, f) for f in ATTRIBUTION_FIELDS}
+
+    def check(self, tol_ms: float = 1.0, rel_tol: float = 0.05) -> bool:
+        """Do the components sum back to the end-to-end latency?
+
+        Tolerance is ``tol_ms`` absolute or ``rel_tol`` of the latency,
+        whichever is larger — timestamps come from one monotonic clock
+        but components are accumulated across span boundaries, so exact
+        equality is not guaranteed at float precision.
+        """
+        total = sum(self.components().values())
+        return abs(total - self.latency_ms) <= max(
+            tol_ms, rel_tol * self.latency_ms)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def format(self) -> str:
+        """A one-request human-readable breakdown (the example demo)."""
+        parts = [
+            f"request {self.request_id} [{self.program}"
+            + (f" @ {self.backend}" if self.backend else "")
+            + "]:",
+            f"  latency   {self.latency_ms:8.3f} ms"
+            f"  ({self.steps}/{self.total_steps} steps,"
+            f" deadline {'hit' if self.deadline_hit else 'MISS'},"
+            f" decision={self.decision})",
+        ]
+        for field in ATTRIBUTION_FIELDS:
+            v = getattr(self, field)
+            share = v / self.latency_ms if self.latency_ms > 0 else 0.0
+            parts.append(
+                f"  {field.removesuffix('_ms'):<9} {v:8.3f} ms"
+                f"  ({share:5.1%})")
+        return "\n".join(parts)
+
+
+def summarize(records) -> dict:
+    """Aggregate attribution records for ``ServeMetrics.snapshot()``.
+
+    Returns component means plus the mean fraction of latency each
+    component explains — the fleet-level "where do deadlines go" view.
+    Well-defined for zero and one record.
+    """
+    records = list(records)
+    n = len(records)
+    out: dict = {"count": n, "complete": 0}
+    if n == 0:
+        for field in ATTRIBUTION_FIELDS:
+            out[f"mean_{field}"] = 0.0
+        out["mean_latency_ms"] = 0.0
+        out["sum_check_fail"] = 0
+        return out
+    out["complete"] = sum(1 for r in records if r.t_admit is not None)
+    out["mean_latency_ms"] = sum(r.latency_ms for r in records) / n
+    for field in ATTRIBUTION_FIELDS:
+        out[f"mean_{field}"] = sum(getattr(r, field) for r in records) / n
+    out["sum_check_fail"] = sum(1 for r in records if not r.check())
+    return out

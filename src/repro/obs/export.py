@@ -1,0 +1,150 @@
+"""Chrome trace-event export + segment-latency aggregation.
+
+:func:`export_chrome_trace` turns a :class:`~repro.obs.tracer.Tracer`'s
+ring into the Chrome trace-event JSON object format —
+``{"traceEvents": [...], "displayTimeUnit": "ms", "otherData": {...}}``
+— loadable directly in Perfetto (https://ui.perfetto.dev) or
+``chrome://tracing``.  Events are keyed to display tracks: each lane
+gets its own named track (so a lane's dispatch/harvest cadence reads as
+one swimlane), and track-less events fall back to their recording
+thread.  ``otherData`` carries the non-timeline payload: the
+per-request attribution records and the per-(backend, impl,
+pow2-length) segment-latency histograms.
+
+:func:`segment_histograms` is the WCET calibration half (ROADMAP item
+3): it aggregates every steady-state ``serve.dispatch`` span into a
+latency histogram per ``backend/impl/L<length>`` cell, with jit-compile
+dispatches tabulated separately (compiles are warmup, and folding their
+wall time into a worst-case estimate would poison it).
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+from repro.obs.names import ATTRIBUTION_FIELDS, SPAN_NAMES
+
+__all__ = ["export_chrome_trace", "segment_histograms", "write_chrome_trace"]
+
+_PID = 1
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank percentile over an already-sorted non-empty list."""
+    idx = min(len(sorted_vals) - 1, max(0, round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def segment_histograms(events) -> dict[str, dict]:
+    """Per-(backend, impl, pow2-length) dispatch-latency histograms.
+
+    Input is a span iterable (:meth:`Tracer.events` or re-parsed
+    ``traceEvents`` dicts via :mod:`tools.obs`).  Returns
+    ``{"<backend>/<impl>/L<len>": {count, mean_ms, p50_ms, p95_ms,
+    max_ms, compile_count, compile_mean_ms}}`` — steady-state
+    statistics in the main fields, compiles counted and timed apart.
+    """
+    cells: dict[str, dict[str, list[float]]] = {}
+    for ev in events:
+        if ev.name != "serve.dispatch" or ev.ph != "X" or ev.t1 is None:
+            continue
+        backend = ev.args.get("backend", "?")
+        impl = ev.args.get("impl", backend)
+        length = ev.args.get("length", 0)
+        key = f"{backend}/{impl}/L{length}"
+        cell = cells.setdefault(key, {"steady": [], "compile": []})
+        bucket = "compile" if ev.args.get("compile") else "steady"
+        cell[bucket].append(ev.dur_s * 1e3)
+    out: dict[str, dict] = {}
+    for key in sorted(cells):
+        steady = sorted(cells[key]["steady"])
+        compile_ = cells[key]["compile"]
+        row: dict = {
+            "count": len(steady),
+            "mean_ms": sum(steady) / len(steady) if steady else 0.0,
+            "p50_ms": _percentile(steady, 0.50) if steady else 0.0,
+            "p95_ms": _percentile(steady, 0.95) if steady else 0.0,
+            "max_ms": max(steady) if steady else 0.0,
+            "compile_count": len(compile_),
+            "compile_mean_ms":
+                sum(compile_) / len(compile_) if compile_ else 0.0,
+        }
+        out[key] = row
+    return out
+
+
+def export_chrome_trace(tracer, meta: Optional[dict] = None) -> dict:
+    """Render the tracer's ring + attribution table as a Chrome
+    trace-event JSON object (``dict``, ready for ``json.dump``)."""
+    events = tracer.events()
+    t_base = min((ev.t0 for ev in events), default=0.0)
+
+    # display tracks: named lanes first (stable order), then raw threads
+    track_tid: dict[str, int] = {}
+    thread_tid: dict[int, int] = {}
+    for ev in events:
+        if ev.track is not None:
+            track_tid.setdefault(ev.track, 0)
+        else:
+            thread_tid.setdefault(ev.thread, 0)
+    tid = 1
+    trace_events: list[dict] = [{
+        "name": "process_name", "ph": "M", "pid": _PID, "tid": 0,
+        "args": {"name": "repro.serve"},
+    }]
+    for name in sorted(track_tid):
+        track_tid[name] = tid
+        trace_events.append({
+            "name": "thread_name", "ph": "M", "pid": _PID, "tid": tid,
+            "args": {"name": name},
+        })
+        tid += 1
+    for ident in sorted(thread_tid):
+        thread_tid[ident] = tid
+        trace_events.append({
+            "name": "thread_name", "ph": "M", "pid": _PID, "tid": tid,
+            "args": {"name": f"thread-{ident}"},
+        })
+        tid += 1
+
+    for ev in events:
+        rec: dict = {
+            "name": ev.name,
+            "cat": ev.cat,
+            "ph": ev.ph,
+            "ts": (ev.t0 - t_base) * 1e6,  # trace-event unit: microseconds
+            "pid": _PID,
+            "tid": (track_tid[ev.track] if ev.track is not None
+                    else thread_tid[ev.thread]),
+            "args": dict(ev.args),
+        }
+        if ev.ph == "X":
+            rec["dur"] = ev.dur_s * 1e6
+        elif ev.ph == "i":
+            rec["s"] = "t"  # instant scope: thread
+        trace_events.append(rec)
+
+    other: dict = {
+        "attribution_fields": list(ATTRIBUTION_FIELDS),
+        "attributions": [a.to_dict() for a in list(tracer.attributions)],
+        "segment_histograms": segment_histograms(events),
+        "event_count": len(events),
+        "dropped": tracer.dropped,
+        "span_names": sorted(SPAN_NAMES),
+    }
+    if meta:
+        other["meta"] = dict(meta)
+    return {
+        "traceEvents": trace_events,
+        "displayTimeUnit": "ms",
+        "otherData": other,
+    }
+
+
+def write_chrome_trace(tracer, path, meta: Optional[dict] = None) -> dict:
+    """Export and write to ``path``; returns the exported object."""
+    doc = export_chrome_trace(tracer, meta=meta)
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return doc

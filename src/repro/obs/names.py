@@ -1,0 +1,49 @@
+"""Pinned span-name registry — the trace-consumer contract.
+
+Every span/instant/counter the serving stack records MUST use a name
+from this table (enforced statically by ``tools/analyze``'s ``obs``
+checker, and at runtime by :class:`~repro.obs.tracer.Tracer` in strict
+mode).  Trace consumers — the committed ``reports/obs/
+serve_trace_schema.json``, ``tools/obs`` report aggregation, Perfetto
+queries — key on these strings, so renaming one is a breaking change
+and must update the schema and this table together.
+"""
+from __future__ import annotations
+
+__all__ = ["SPAN_NAMES", "CATEGORIES", "ATTRIBUTION_FIELDS"]
+
+#: name -> one-line meaning.  ``serve.*`` events carry the request path;
+#: ``kernel.*`` events carry execution-layer detail annotated onto the
+#: enclosing dispatch span.
+SPAN_NAMES: dict[str, str] = {
+    # instants (ph = "i")
+    "serve.submit": "request entered the admission queue",
+    "serve.admission": "admission decision at submit "
+                       "(edf/reject/degrade, with backlog and stamped budget)",
+    "serve.slot_admit": "request placed into a lane slot "
+                        "(joins the batch at the next segment boundary)",
+    "serve.deliver": "result finalized onto its ticket "
+                     "(args carry the deadline-budget attribution)",
+    # spans (ph = "X")
+    "serve.step": "one dispatch -> admit -> harvest loop iteration",
+    "serve.dispatch": "one lane's fused masked segment dispatch "
+                      "(asynchronous device enqueue; args: backend, impl, "
+                      "length, compile flag)",
+    "serve.harvest": "one lane's boundary materialization (device sync) "
+                     "+ slot retirement",
+    "serve.flush": "shutdown flush answering every admitted request",
+    # counters (ph = "C")
+    "serve.margin": "per-slot readout margin (top1 - top2 probability) at "
+                    "a segment boundary — the online NMA trajectory",
+}
+
+#: trace-event categories (the Chrome ``cat`` field)
+CATEGORIES: tuple[str, ...] = ("serve", "kernel", "quality")
+
+#: component keys of one deadline-budget attribution record, in report
+#: order.  They partition a request's end-to-end latency:
+#: ``queue + dispatch + compile + harvest + slack == latency`` (within
+#: clock tolerance; ``tools/obs --check`` gates it).
+ATTRIBUTION_FIELDS: tuple[str, ...] = (
+    "queue_ms", "dispatch_ms", "compile_ms", "harvest_ms", "slack_ms",
+)

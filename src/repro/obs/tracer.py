@@ -1,0 +1,430 @@
+"""Span-based, thread-safe trace recorder for the serving stack.
+
+One :class:`Tracer` instruments one :class:`~repro.serve.server.
+AnytimeServer` request path end to end: submit → admission decision →
+queue wait → slot admission → every segment dispatch → harvest →
+delivery.  Three event shapes:
+
+* **spans** — ``with tracer.span("serve.dispatch", ...) as sp`` records
+  a complete ``[t0, t1]`` interval (Chrome ``ph="X"``).  Spans nest per
+  thread; :func:`annotate` lets lower layers (the execution backends,
+  ``repro.kernels.ops``) attach args to the innermost active span of
+  the current thread without holding a tracer reference — this is how a
+  dispatch span learns its kernel impl name and whether it minted a jit
+  trace (a compile), without any plumbing through jit boundaries.
+* **instants** — point events (``ph="i"``): submissions, admission
+  decisions, deliveries.
+* **counters** — time series (``ph="C"``): the per-slot readout margin
+  after each segment boundary (the online NMA trajectory).
+
+The recorder is a bounded ring buffer (``capacity`` most recent events;
+``dropped`` counts evictions) so a long-lived traced server's memory
+stays flat.  Thread safety: the ring and the attribution table are
+guarded by one internal lock; the active-span stack is thread-local, so
+concurrent driver/submitter threads never tear each other's spans.
+
+**Disabled fast path.**  Every instrumentation site in the serving loop
+is guarded by a single ``tracer.enabled`` attribute read; a disabled
+tracer (or the shared :data:`NULL_TRACER` default) therefore costs one
+boolean check per site — no clock reads, no allocation, no locking —
+and :func:`tracing_active` lets hot leaf code (kernel dispatch) skip
+its annotation entirely.  ``bench_serve.py`` gates that this overhead
+stays within noise of the untraced baseline.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Optional
+
+from repro.obs.attribution import Attribution
+from repro.obs.names import SPAN_NAMES
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "NULL_TRACER",
+    "annotate",
+    "current_span",
+    "tracing_active",
+]
+
+# -- module-global fast-path state ------------------------------------------
+
+#: number of *enabled* tracers alive: the one-word flag kernel-dispatch
+#: annotation checks before doing ANY work.  Guarded by _ACTIVE_LOCK for
+#: the (rare) enable/disable transitions; the hot read is unlocked — a
+#: stale read costs at most one spurious (harmless) annotate attempt.
+_ACTIVE_COUNT = 0
+_ACTIVE_LOCK = threading.Lock()
+
+_TLS = threading.local()  # .stack: list[Span] — per-thread active spans
+
+
+def tracing_active() -> bool:
+    """Whether any enabled tracer exists — the zero-cost guard for leaf
+    instrumentation (one global read)."""
+    return _ACTIVE_COUNT > 0
+
+
+def _span_stack() -> list:
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    return stack
+
+
+def current_span() -> Optional["Span"]:
+    """The current thread's innermost active span, or None."""
+    stack = getattr(_TLS, "stack", None)
+    return stack[-1] if stack else None
+
+
+def annotate(**args) -> None:
+    """Attach ``args`` to the current thread's innermost active span.
+
+    The hook lower layers use to report execution detail upward — e.g.
+    ``repro.kernels.ops`` reporting the tuned impl name, and the jit
+    boundary reporting a compile — with no tracer reference and no-op
+    cost when nothing is being traced.
+    """
+    stack = getattr(_TLS, "stack", None)
+    if stack:
+        stack[-1].args.update(args)
+
+
+class Span:
+    """One in-flight or completed trace interval."""
+
+    __slots__ = ("name", "cat", "ph", "t0", "t1", "thread", "track", "args")
+
+    def __init__(self, name: str, cat: str, ph: str, t0: float,
+                 thread: int, track: Optional[str], args: dict):
+        self.name = name
+        self.cat = cat
+        self.ph = ph          # "X" span | "i" instant | "C" counter
+        self.t0 = t0
+        self.t1: Optional[float] = None  # None while still open
+        self.thread = thread
+        self.track = track    # display track (lane key); None = thread
+        self.args = args
+
+    @property
+    def dur_s(self) -> float:
+        return (self.t1 - self.t0) if self.t1 is not None else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name, "cat": self.cat, "ph": self.ph,
+            "t0": self.t0, "t1": self.t1, "thread": self.thread,
+            "track": self.track, "args": dict(self.args),
+        }
+
+
+class _SpanCtx:
+    """Context manager recording one span (the ONLY way to open one —
+    ``tools/analyze``'s obs checker rejects bare ``tracer.span(...)``
+    calls, so begin/end can never unbalance)."""
+
+    __slots__ = ("_tracer", "_span")
+
+    def __init__(self, tracer: "Tracer", span: Span):
+        self._tracer = tracer
+        self._span = span
+
+    def __enter__(self) -> Span:
+        _span_stack().append(self._span)
+        return self._span
+
+    def __exit__(self, *exc) -> None:
+        span = self._span
+        stack = _span_stack()
+        # pop THIS span even if an exception unwound nested ones
+        while stack and stack[-1] is not span:
+            stack.pop()
+        if stack:
+            stack.pop()
+        span.t1 = self._tracer.clock()
+        self._tracer._append(span)
+
+
+class _NullCtx:
+    """Reusable no-op span context (the disabled fast path)."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc) -> None:
+        return None
+
+
+_NULL_CTX = _NullCtx()
+
+
+class _ReqAcc:
+    """Per-request attribution accumulator (internal)."""
+
+    __slots__ = ("t_submit", "t_admit", "program", "lane", "backend",
+                 "dispatch_s", "compile_s", "harvest_s", "decision",
+                 "backlog", "budget")
+
+    def __init__(self, t_submit: float, program: str):
+        self.t_submit = t_submit
+        self.t_admit: Optional[float] = None
+        self.program = program
+        self.lane: Optional[str] = None
+        self.backend: Optional[str] = None
+        self.dispatch_s = 0.0
+        self.compile_s = 0.0
+        self.harvest_s = 0.0
+        self.decision: Optional[str] = None
+        self.backlog = 0
+        self.budget: Optional[int] = None
+
+
+class Tracer:
+    """Bounded, thread-safe recorder of serving trace events plus the
+    per-request deadline-budget attribution table.
+
+    ``capacity`` bounds the event ring (oldest events evict; ``dropped``
+    counts them) and the delivered-attribution window.  ``margins=True``
+    additionally records the per-slot readout margin after each
+    harvested segment boundary — the online confidence-vs-steps curve —
+    at zero extra kernel launches (the serving loop already materializes
+    boundary readouts; the margin is computed from that host array).
+    ``clock`` must match the owning server's monotonic clock so span
+    timestamps and request deadlines share one timeline.
+
+    ``strict`` (default True) rejects event names missing from the
+    pinned :data:`~repro.obs.names.SPAN_NAMES` registry — trace
+    consumers must never silently break.
+    """
+
+    def __init__(self, capacity: int = 65536, clock=time.monotonic,
+                 margins: bool = False, enabled: bool = True,
+                 strict: bool = True):
+        self.clock = clock
+        self.margins = bool(margins)
+        self.strict = bool(strict)
+        self._lock = threading.Lock()
+        self._events: collections.deque[Span] = collections.deque(
+            maxlen=int(capacity))
+        self._appended = 0
+        self._requests: dict[int, _ReqAcc] = {}
+        self.attributions: collections.deque[Attribution] = collections.deque(
+            maxlen=int(capacity))
+        self._enabled = False
+        if enabled:
+            self.enable()
+
+    # -- enable/disable (the fast-path switch) ---------------------------
+
+    @property
+    def enabled(self) -> bool:
+        return self._enabled
+
+    def enable(self) -> None:
+        global _ACTIVE_COUNT
+        with _ACTIVE_LOCK:
+            if not self._enabled:
+                self._enabled = True
+                _ACTIVE_COUNT += 1
+
+    def disable(self) -> None:
+        global _ACTIVE_COUNT
+        with _ACTIVE_LOCK:
+            if self._enabled:
+                self._enabled = False
+                _ACTIVE_COUNT -= 1
+
+    # -- raw event recording --------------------------------------------
+
+    def _check_name(self, name: str) -> None:
+        if self.strict and name not in SPAN_NAMES:
+            raise ValueError(
+                f"unregistered trace event name {name!r}; add it to "
+                "repro.obs.names.SPAN_NAMES (and the committed trace "
+                "schema) first"
+            )
+
+    def _append(self, span: Span) -> None:
+        with self._lock:
+            self._events.append(span)
+            self._appended += 1
+
+    def span(self, name: str, cat: str = "serve",
+             track: Optional[str] = None, **args):
+        """Open one timed span as a context manager::
+
+            with tracer.span("serve.dispatch", track=lane, backend=b) as sp:
+                ...                     # sp.args may be annotated upward
+            wall_s = sp.dur_s           # closed span stays readable
+
+        Must be used in a ``with`` statement (statically enforced)."""
+        if not self._enabled:
+            return _NULL_CTX
+        self._check_name(name)
+        return _SpanCtx(self, Span(
+            name, cat, "X", self.clock(), threading.get_ident(), track, args,
+        ))
+
+    def instant(self, name: str, cat: str = "serve",
+                track: Optional[str] = None, **args) -> None:
+        if not self._enabled:
+            return
+        self._check_name(name)
+        now = self.clock()
+        span = Span(name, cat, "i", now, threading.get_ident(), track, args)
+        span.t1 = now
+        self._append(span)
+
+    def counter(self, name: str, value: float, cat: str = "quality",
+                track: Optional[str] = None, **args) -> None:
+        if not self._enabled:
+            return
+        self._check_name(name)
+        now = self.clock()
+        args = dict(args)
+        args["value"] = float(value)
+        span = Span(name, cat, "C", now, threading.get_ident(), track, args)
+        span.t1 = now
+        self._append(span)
+
+    # -- introspection ---------------------------------------------------
+
+    def events(self) -> list[Span]:
+        """Snapshot of the ring (oldest first); safe under concurrent
+        recording."""
+        with self._lock:
+            return list(self._events)
+
+    @property
+    def dropped(self) -> int:
+        """Events evicted by the ring bound so far."""
+        with self._lock:
+            return self._appended - len(self._events)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self._appended = 0
+            self._requests.clear()
+            self.attributions.clear()
+
+    # -- per-request deadline-budget accounting --------------------------
+    #
+    # The serving loop calls these at the request lifecycle points; the
+    # tracer turns them into one Attribution per delivered request.
+    # All bookkeeping is under the tracer lock — the threaded driver
+    # and concurrent submitters may interleave freely.
+
+    def request_submitted(self, request_id: int, t_submit: float,
+                          program: str) -> None:
+        with self._lock:
+            self._requests[request_id] = _ReqAcc(t_submit, program)
+
+    def request_admission(self, request_id: int, decision: str,
+                          backlog: int, budget: Optional[int]) -> None:
+        with self._lock:
+            acc = self._requests.get(request_id)
+            if acc is not None:
+                acc.decision = decision
+                acc.backlog = int(backlog)
+                acc.budget = budget
+
+    def request_slot(self, request_id: int, t_admit: float, lane: str,
+                     backend: str) -> None:
+        with self._lock:
+            acc = self._requests.get(request_id)
+            if acc is not None and acc.t_admit is None:
+                acc.t_admit = t_admit
+                acc.lane = lane
+                acc.backend = backend
+
+    def account(self, request_ids, field: str, dt_s: float) -> None:
+        """Add ``dt_s`` seconds of ``field`` ("dispatch" | "compile" |
+        "harvest") to every listed in-flight request — how a lane's
+        batched span wall time becomes per-request attribution (from
+        each request's own timeline the whole span elapsed while it was
+        in flight, so the full duration attributes to each)."""
+        attr = field + "_s"
+        with self._lock:
+            for rid in request_ids:
+                acc = self._requests.get(rid)
+                if acc is not None:
+                    setattr(acc, attr, getattr(acc, attr) + dt_s)
+
+    def request_delivered(self, request_id: int, t_deliver: float,
+                          steps: int, total_steps: int,
+                          deadline_hit: bool) -> Optional[Attribution]:
+        """Finalize the request's attribution record; returns it (and
+        retains it in the bounded ``attributions`` window)."""
+        with self._lock:
+            acc = self._requests.pop(request_id, None)
+            if acc is None:
+                return None
+            t_admit = acc.t_admit
+            latency_s = max(0.0, t_deliver - acc.t_submit)
+            if t_admit is None:
+                # never reached a slot: the whole latency was queue wait
+                queue_s, inflight_s = latency_s, 0.0
+            else:
+                queue_s = max(0.0, t_admit - acc.t_submit)
+                inflight_s = max(0.0, t_deliver - t_admit)
+            accounted = acc.dispatch_s + acc.compile_s + acc.harvest_s
+            attr = Attribution(
+                request_id=request_id,
+                program=acc.program,
+                lane=acc.lane,
+                backend=acc.backend,
+                decision=acc.decision,
+                backlog=acc.backlog,
+                budget_steps=acc.budget,
+                steps=int(steps),
+                total_steps=int(total_steps),
+                deadline_hit=bool(deadline_hit),
+                t_submit=acc.t_submit,
+                t_admit=t_admit,
+                t_deliver=t_deliver,
+                latency_ms=latency_s * 1e3,
+                queue_ms=queue_s * 1e3,
+                dispatch_ms=acc.dispatch_s * 1e3,
+                compile_ms=acc.compile_s * 1e3,
+                harvest_ms=acc.harvest_s * 1e3,
+                # the residual of the in-flight window: loop bookkeeping,
+                # other lanes' dispatches, host scheduling gaps
+                slack_ms=max(0.0, inflight_s - accounted) * 1e3,
+            )
+            self.attributions.append(attr)
+            return attr
+
+
+class _NullTracer(Tracer):
+    """The shared always-off tracer: every untraced server holds it, so
+    instrumentation sites need no None checks — just the one ``enabled``
+    read.  Recording methods are hard no-ops and it can never be
+    enabled (callers wanting tracing construct a real :class:`Tracer`).
+    """
+
+    def __init__(self):
+        super().__init__(capacity=1, enabled=False)
+
+    def enable(self) -> None:  # pragma: no cover - guard
+        raise RuntimeError(
+            "NULL_TRACER cannot be enabled; pass a Tracer() to the server")
+
+    def span(self, name, cat="serve", track=None, **args):
+        return _NULL_CTX
+
+    def instant(self, name, cat="serve", track=None, **args) -> None:
+        return None
+
+    def counter(self, name, value, cat="quality", track=None, **args) -> None:
+        return None
+
+
+#: the default tracer of every server: permanently disabled, shared.
+NULL_TRACER = _NullTracer()

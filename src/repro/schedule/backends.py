@@ -52,6 +52,8 @@ from repro.kernels import layout as klayout
 from repro.kernels import ops as kops
 from repro.kernels import tuning as ktuning
 from repro.launch import mesh as mesh_lib
+from repro.obs import annotate as obs_annotate
+from repro.obs import tracing_active as obs_tracing_active
 
 __all__ = [
     "check_order",
@@ -308,6 +310,11 @@ class ExecutorCore:
             return engine.slot_run(self.device, X, idx, units, mask, length)
 
         self._generic_slots_jit = _generic_slots
+        # dispatch shapes already seen by THIS executor — the first run
+        # of a (kind, length, readout, fresh) combination is the one
+        # that mints its jit trace, which is what trace spans must count
+        # as compile_ms rather than steady-state dispatch
+        self._traced_shapes: set[tuple] = set()
 
     def init_state(self) -> jax.Array:
         return engine.init_state(self.device, self.batch)
@@ -338,7 +345,11 @@ class ExecutorCore:
         shallow-level table gathers; it is purely a performance hint and
         must never change results."""
         X = self.X if X is None else jnp.asarray(X)
-        if jnp.ndim(units) == 0:
+        solo = jnp.ndim(units) == 0
+        if obs_tracing_active():
+            self._annotate_dispatch(
+                "solo" if solo else "slot", length, readout, fresh)
+        if solo:
             if fresh and not readout:
                 return self._segment_fresh(idx, X, units, length, readout)
             return self._segment(idx, X, units, length, readout)
@@ -346,6 +357,34 @@ class ExecutorCore:
             mask = jnp.ones(idx.shape[0], dtype=bool)
         units, mask = self._place_unit_mask(jnp.asarray(units), jnp.asarray(mask))
         return self._slots(idx, X, units, mask, length, readout)
+
+    def _annotate_dispatch(self, kind: str, length: int, readout: bool,
+                           fresh: bool) -> None:
+        """Report this dispatch onto the enclosing trace span (eager —
+        ``run`` itself is never jitted, only the per-backend hooks it
+        calls are): backend, tuned impl, segment length, fresh flag, and
+        whether this (kind, length, readout, fresh) shape is the first
+        of its kind on this executor — i.e. the dispatch that mints its
+        jit trace, which attribution counts as compile not dispatch."""
+        shape = (kind, int(length), bool(readout), bool(fresh))
+        compiled = shape not in self._traced_shapes
+        if compiled:
+            self._traced_shapes.add(shape)
+        # the depth variant only takes solo fresh segments WITHOUT a
+        # fused readout (run()'s routing) — impl naming must match
+        eff_fresh = bool(fresh) and kind == "solo" and not readout
+        obs_annotate(
+            backend=self.name, kind=kind, length=int(length),
+            fresh=bool(fresh), compile=compiled,
+            impl=self.impl_name(kind, int(length), fresh=eff_fresh),
+        )
+
+    def impl_name(self, kind: str, length: int, fresh: bool = False) -> str:
+        """Registry name of the implementation a ``kind`` ("solo" |
+        "slot") segment of ``length`` steps dispatches to — trace-span
+        metadata (the tuning-registry kernel choice on ``pallas``); the
+        backend name where there is no per-shape selection."""
+        return self.name
 
     # -- per-backend hooks ----------------------------------------------
     #
@@ -510,6 +549,7 @@ class PallasExecutor(ExecutorCore):
         d = self.device
         T = int(d.feature.shape[0])
         Mp = kops.round_up(max(int(d.feature.shape[1]), 1), 128)
+        self._tuning_shape = (T, Mp)  # impl_name keys the tuning record
 
         # depth-ordered layout for the fresh-segment variant: a one-time
         # host-side BFS over the concrete device tables
@@ -582,6 +622,19 @@ class PallasExecutor(ExecutorCore):
 
     def _slots(self, idx, X, units, mask, length, readout):
         return self._slt(idx, X, units, mask, length, readout)
+
+    def impl_name(self, kind: str, length: int, fresh: bool = False) -> str:
+        """The committed tuning record's kernel choice for this shape —
+        what trace spans report as ``impl`` on every dispatch, compiled
+        or steady-state (the same ``tuning.select`` the jitted bodies
+        consult at trace time)."""
+        T, Mp = self._tuning_shape
+        if kind == "slot":
+            return ktuning.select(
+                "slot", ktuning.slot_key(T, Mp, int(length)))[0]
+        if fresh and self.layout is not None:
+            return "depth"
+        return ktuning.select("solo", ktuning.solo_key(Mp, int(length)))[0]
 
     def readout(self, idx):
         return kops.prob_accum(idx, self.device.probs, **self._kernel_kw)

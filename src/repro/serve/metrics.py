@@ -21,6 +21,23 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs.attribution import summarize as _summarize_attribution
+
+
+def _pctls(values: collections.deque) -> dict:
+    """p50/p99/mean of a delivery population — well-defined at EVERY
+    window size: an empty window reports zeros (not NaN), a single
+    delivery reports that delivery at both percentiles (nearest-rank
+    semantics, no interpolation surprises)."""
+    if not values:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    arr = np.asarray(list(values), dtype=np.float64)
+    return {
+        "p50": float(np.percentile(arr, 50)),
+        "p99": float(np.percentile(arr, 99)),
+        "mean": float(arr.mean()),
+    }
+
 
 class ServeMetrics:
     """Counters the :class:`~repro.serve.server.AnytimeServer` feeds.
@@ -63,6 +80,10 @@ class ServeMetrics:
         self._occ_den = 0.0          # guarded-by: _lock
         self._t_first_submit: Optional[float] = None    # guarded-by: _lock
         self._t_last_delivery: Optional[float] = None   # guarded-by: _lock
+        # deadline-budget attributions from a traced server (window-
+        # bounded like the percentile populations; empty when untraced)
+        self.attributions: collections.deque = collections.deque(
+            maxlen=self._window)     # guarded-by: _lock
 
     def record_submit(self, now: float) -> None:
         with self._lock:
@@ -91,6 +112,13 @@ class ServeMetrics:
         with self._lock:
             self._record_delivery_locked(result, now)
 
+    def record_attribution(self, attribution) -> None:
+        """One delivered request's deadline-budget attribution
+        (:class:`repro.obs.attribution.Attribution`), fed by a traced
+        server alongside :meth:`record_delivery`."""
+        with self._lock:
+            self.attributions.append(attribution)
+
     def _wall_s_locked(self) -> float:  # holds: _lock
         if self._t_first_submit is None or self._t_last_delivery is None:
             return 0.0
@@ -107,8 +135,6 @@ class ServeMetrics:
             return self._snapshot_locked()
 
     def _snapshot_locked(self) -> dict:  # holds: _lock
-        steps = np.asarray(list(self.steps_at_deadline), dtype=np.int64)
-        budgets = np.asarray(list(self.budget_at_deadline), dtype=np.int64)
         wall = self._wall_s_locked()
         return {
             "submitted": self.submitted,
@@ -118,18 +144,11 @@ class ServeMetrics:
             "deadline_hit_rate": (
                 self.deadline_hits / self.delivered if self.delivered else 0.0
             ),
-            "steps_at_deadline": {
-                "p50": float(np.percentile(steps, 50)) if steps.size else 0.0,
-                "p99": float(np.percentile(steps, 99)) if steps.size else 0.0,
-                "mean": float(steps.mean()) if steps.size else 0.0,
-            },
-            "budget_at_deadline": {
-                "p50": float(np.percentile(budgets, 50)) if budgets.size else 0.0,
-                "p99": float(np.percentile(budgets, 99)) if budgets.size else 0.0,
-                "mean": float(budgets.mean()) if budgets.size else 0.0,
-            },
+            "steps_at_deadline": _pctls(self.steps_at_deadline),
+            "budget_at_deadline": _pctls(self.budget_at_deadline),
             "slot_occupancy": self._occ_num / self._occ_den if self._occ_den else 0.0,
             "dispatches": self.dispatches,
             "wall_s": wall,
             "requests_per_sec": self.delivered / wall if wall > 0 else 0.0,
+            "attribution": _summarize_attribution(self.attributions),
         }

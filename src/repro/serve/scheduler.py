@@ -35,8 +35,21 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
 from repro.schedule.backends import default_backend
 from repro.serve.queue import AdmissionQueue, Request
+
+
+def _readout_margin(row: np.ndarray) -> float:
+    """top1 − top2 probability of one slot's boundary readout — the
+    per-step confidence the online NMA curve tracks.  Computed from the
+    ALREADY-materialized host boundary, so recording margins adds no
+    kernel launches."""
+    row = np.asarray(row).reshape(-1)
+    if row.shape[0] < 2:
+        return float(row[0]) if row.shape[0] else 0.0
+    top2 = np.partition(row, -2)[-2:]
+    return float(top2[1] - top2[0])
 
 
 class _Boundary(NamedTuple):
@@ -67,10 +80,12 @@ class Delivery(NamedTuple):
 class ForestLane:
     """Slot-batched lane over one :class:`SessionBatch` (double-buffered)."""
 
-    def __init__(self, batch):
+    def __init__(self, batch, tracer=NULL_TRACER, label: str = "lane"):
         # lane state (the slot batch included) is owned by the server's
         # lock: every mutating entry point below carries `# holds:`
         self.batch = batch  # unguarded: reference immutable; state via holds-marked methods
+        self.tracer = tracer  # unguarded: internally locked
+        self.label = label    # unguarded: immutable config
         self.requests: list[Optional[Request]] = [None] * batch.capacity  # guarded-by: AnytimeServer._lock
         self._front: Optional[_Boundary] = None  # guarded-by: AnytimeServer._lock
         self._back: Optional[_Boundary] = None   # guarded-by: AnytimeServer._lock
@@ -114,7 +129,18 @@ class ForestLane:
         slot = slots[0]
         self.batch.admit(slot, request.x, budget=request.budget_steps)
         self.requests[slot] = request
+        tracer = self.tracer
+        if tracer.enabled:
+            tracer.request_slot(
+                request.request_id, tracer.clock(), self.label,
+                self.batch.backend_name)
+            tracer.instant(
+                "serve.slot_admit", track=self.label,
+                request_id=request.request_id, slot=slot)
         return True
+
+    def _inflight_ids(self) -> list[int]:  # holds: AnytimeServer._lock
+        return [r.request_id for r in self.requests if r is not None]
 
     def dispatch(self) -> int:  # holds: AnytimeServer._lock
         """Advance every in-flight slot one fused masked segment with
@@ -122,7 +148,19 @@ class ForestLane:
         kernel launch on ``pallas``); rotates the double buffer.
         Returns the number of slots stepped."""
         stepped = int(self.batch.stepping_slots().size)
-        L, probs = self.batch.advance_segment(readout=True)
+        tracer = self.tracer
+        if tracer.enabled and stepped:
+            # the executor annotates backend/impl/length/compile onto
+            # this span from inside the dispatch (repro.obs.annotate)
+            with tracer.span("serve.dispatch", track=self.label,
+                             stepped=stepped) as sp:
+                L, probs = self.batch.advance_segment(readout=True)
+            tracer.account(
+                self._inflight_ids(),
+                "compile" if sp.args.get("compile") else "dispatch",
+                sp.dur_s)
+        else:
+            L, probs = self.batch.advance_segment(readout=True)
         self._back = self._front
         if L:
             self._front = _Boundary(probs, self.batch.pos.copy(), self._owners())
@@ -130,13 +168,29 @@ class ForestLane:
             self._front = None
         return stepped if L else 0
 
-    def harvest(self, now: float) -> list[Delivery]:  # holds: AnytimeServer._lock
-        """Materialize the previous boundary on the host (overlapping the
-        device's execution of the front segment) and retire slots that
-        completed the plan or whose deadline has passed."""
+    def _materialize(self) -> None:  # holds: AnytimeServer._lock
+        """Pull the previous boundary to the host — the device sync."""
         back, self._back = self._back, None
         if back is not None:
             self._host = _Boundary(np.asarray(back.probs), back.pos, back.owner)
+
+    def _record_margins(self, tracer) -> None:  # holds: AnytimeServer._lock
+        """Per-slot readout margins at the just-materialized boundary
+        (``Tracer(margins=True)``) — piggybacks on the harvested host
+        array, zero extra kernel launches."""
+        host = self._host
+        if host is None:
+            return
+        probs = np.asarray(host.probs)
+        for slot, req in enumerate(self.requests):
+            if req is None or host.owner[slot] != req.request_id:
+                continue
+            tracer.counter(
+                "serve.margin", _readout_margin(probs[slot]),
+                track=self.label, request_id=req.request_id,
+                steps=int(host.pos[slot]))
+
+    def _retire(self, now: float) -> list[Delivery]:  # holds: AnytimeServer._lock
         out: list[Delivery] = []
         for slot, req in enumerate(self.requests):
             if req is None:
@@ -155,6 +209,25 @@ class ForestLane:
                 ))
                 self.batch.retire(slot)
                 self.requests[slot] = None
+        return out
+
+    def harvest(self, now: float) -> list[Delivery]:  # holds: AnytimeServer._lock
+        """Materialize the previous boundary on the host (overlapping the
+        device's execution of the front segment) and retire slots that
+        completed the plan or whose deadline has passed."""
+        tracer = self.tracer
+        if not tracer.enabled:
+            self._materialize()
+            return self._retire(now)
+        inflight = self._inflight_ids()
+        with tracer.span("serve.harvest", track=self.label,
+                         lane_active=len(inflight)) as sp:
+            self._materialize()
+            if tracer.margins:
+                self._record_margins(tracer)
+            out = self._retire(now)
+        if inflight:
+            tracer.account(inflight, "harvest", sp.dur_s)
         return out
 
     def flush(self) -> list[Delivery]:  # holds: AnytimeServer._lock
@@ -198,12 +271,15 @@ class SessionLane:
     path, at per-session granularity.
     """
 
-    def __init__(self, runtime, order, backend, capacity: int, chunk: int):
+    def __init__(self, runtime, order, backend, capacity: int, chunk: int,
+                 tracer=NULL_TRACER, label: str = "lane"):
         self.runtime = runtime        # unguarded: immutable config
         self.order = order            # unguarded: immutable config
         self.backend = backend        # unguarded: immutable config
         self.capacity = int(capacity)  # unguarded: immutable config
         self.chunk = int(chunk)       # unguarded: immutable config
+        self.tracer = tracer          # unguarded: internally locked
+        self.label = label            # unguarded: immutable config
         #: slot -> (request, session, last boundary proba, steps at boundary)
         self.entries: list[dict] = []  # guarded-by: AnytimeServer._lock
 
@@ -236,9 +312,17 @@ class SessionLane:
             "steps": 0,
             "budget": budget,  # degrade cap; == total when not degraded
         })
+        tracer = self.tracer
+        if tracer.enabled:
+            tracer.request_slot(
+                request.request_id, tracer.clock(), self.label,
+                str(self.backend))
+            tracer.instant(
+                "serve.slot_admit", track=self.label,
+                request_id=request.request_id, slot=len(self.entries) - 1)
         return True
 
-    def dispatch(self) -> int:  # holds: AnytimeServer._lock
+    def _dispatch(self) -> int:  # holds: AnytimeServer._lock
         stepped = 0
         for e in self.entries:
             left = min(e["session"].remaining, e["budget"] - e["session"].pos)
@@ -247,13 +331,26 @@ class SessionLane:
                 stepped += 1
         return stepped
 
+    def dispatch(self) -> int:  # holds: AnytimeServer._lock
+        tracer = self.tracer
+        if not tracer.enabled or not self.entries:
+            return self._dispatch()
+        ids = [e["request"].request_id for e in self.entries]
+        with tracer.span("serve.dispatch", track=self.label,
+                         stepped=len(ids)) as sp:
+            stepped = self._dispatch()
+        tracer.account(
+            ids, "compile" if sp.args.get("compile") else "dispatch",
+            sp.dur_s)
+        return stepped
+
     def _delivery(self, e: dict, completed: bool) -> Delivery:
         total = e["session"].total_steps
         budget = e["budget"] if e["budget"] < total else None
         return Delivery(
             e["request"], e["proba"], e["steps"], completed, budget=budget)
 
-    def harvest(self, now: float) -> list[Delivery]:  # holds: AnytimeServer._lock
+    def _harvest(self, now: float) -> list[Delivery]:  # holds: AnytimeServer._lock
         out: list[Delivery] = []
         kept: list[dict] = []
         for e in self.entries:
@@ -269,6 +366,24 @@ class SessionLane:
                 continue
             kept.append(e)
         self.entries = kept
+        return out
+
+    def harvest(self, now: float) -> list[Delivery]:  # holds: AnytimeServer._lock
+        tracer = self.tracer
+        if not tracer.enabled:
+            return self._harvest(now)
+        ids = [e["request"].request_id for e in self.entries]
+        with tracer.span("serve.harvest", track=self.label,
+                         lane_active=len(ids)) as sp:
+            out = self._harvest(now)
+        if ids:
+            tracer.account(ids, "harvest", sp.dur_s)
+        if tracer.margins:
+            for e in self.entries:  # still-in-flight boundary margins
+                tracer.counter(
+                    "serve.margin", _readout_margin(e["proba"].reshape(-1)),
+                    track=self.label,
+                    request_id=e["request"].request_id, steps=e["steps"])
         return out
 
     def flush(self) -> list[Delivery]:  # holds: AnytimeServer._lock
@@ -296,9 +411,11 @@ class Scheduler:
         chunk: int = 8,
         backend_opts: Optional[dict] = None,
         max_idle_lanes: int = 32,
+        tracer=None,
     ):
         self.runtimes = dict(runtimes)   # unguarded: immutable after init
         self.metrics = metrics           # unguarded: internally locked
+        self.tracer = tracer if tracer is not None else NULL_TRACER  # unguarded: internally locked
         self.capacity = int(capacity)    # unguarded: immutable config
         self.chunk = int(chunk)          # unguarded: immutable config
         self.backend_opts = dict(backend_opts or {})  # unguarded: immutable config
@@ -345,6 +462,9 @@ class Scheduler:
             rt = self._runtime(req)
             order = rt.order(req.policy)
             backend = req.backend if req.backend is not None else rt.backend
+            # trace display track: one swimlane per (program, policy,
+            # backend) lane in the exported Chrome trace
+            label = f"{key[0]}:{key[1]}:{key[2]}"
             if hasattr(rt.program, "make_slot_batch"):
                 # prefer the program's own input width — a malformed
                 # first request must not define the lane for everyone
@@ -355,9 +475,10 @@ class Scheduler:
                     order, self.capacity, n_features,
                     backend=backend, **self.backend_opts,
                 )
-                lane = ForestLane(batch)
+                lane = ForestLane(batch, tracer=self.tracer, label=label)
             else:
-                lane = SessionLane(rt, order, backend, self.capacity, self.chunk)
+                lane = SessionLane(rt, order, backend, self.capacity,
+                                   self.chunk, tracer=self.tracer, label=label)
             self.lanes[key] = lane
         self._lane_last_used[key] = self._tick
         return lane

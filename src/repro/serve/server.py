@@ -45,6 +45,7 @@ from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
 from repro.schedule.runtime import AnytimeRuntime
 from repro.serve.driver import DriverDead, ServeDriver
 from repro.serve.metrics import ServeMetrics
@@ -199,6 +200,7 @@ class AnytimeServer:
         backend_opts: Optional[dict] = None,
         admission: str = "edf",
         admission_k: float = 2.0,
+        tracer=None,
     ):
         runtimes = dict(programs or {})
         if runtime is not None:
@@ -220,9 +222,15 @@ class AnytimeServer:
         # AdmissionQueue/Scheduler (see queue.py/scheduler.py)
         self.queue = AdmissionQueue()       # unguarded: reference immutable
         self.metrics = ServeMetrics()       # unguarded: internally locked
+        self.tracer = tracer if tracer is not None else NULL_TRACER  # unguarded: internally locked
+        if tracer is not None:
+            # span timestamps and request deadlines must share ONE
+            # timeline — the tracer adopts the server's (injectable,
+            # monotonic) clock
+            tracer.clock = clock
         self.scheduler = Scheduler(         # unguarded: reference immutable
             runtimes, self.metrics, capacity=capacity, chunk=chunk,
-            backend_opts=backend_opts,
+            backend_opts=backend_opts, tracer=self.tracer,
         )
         self._pending: dict[int, Ticket] = {}   # guarded-by: _lock
         self._drain_buffer: Optional[list[Result]] = None  # guarded-by: _lock
@@ -297,7 +305,12 @@ class AnytimeServer:
         flushed: list[Result] = []
         with self._cond:
             now = self.clock()
-            for d in self.scheduler.flush(self.queue):
+            if self.tracer.enabled:
+                with self.tracer.span("serve.flush"):
+                    deliveries = self.scheduler.flush(self.queue)
+            else:
+                deliveries = self.scheduler.flush(self.queue)
+            for d in deliveries:
                 res, cbs = self._finalize(d, now)
                 flushed.append(res)
                 callbacks.extend(cbs)
@@ -351,12 +364,19 @@ class AnytimeServer:
                     f"unknown program {request.program!r}; serving: "
                     f"{', '.join(self.scheduler.runtimes)}"
                 )
+            tracer = self.tracer
             if self.admission == "reject":
                 # per-lane: flooding one (program, policy, backend) lane
                 # must not shed load for an idle one
                 backlog = self.scheduler.lane_backlog(request)
                 bound = self.scheduler.capacity * self.admission_k
                 if backlog >= bound:
+                    if tracer.enabled:
+                        # no request id yet (never enters the queue)
+                        tracer.instant(
+                            "serve.admission", request_id=-1,
+                            decision="reject", backlog=backlog,
+                            program=request.program)
                     raise AdmissionRejected(
                         f"lane backlog {backlog} >= capacity "
                         f"{self.scheduler.capacity} x admission_k "
@@ -365,10 +385,27 @@ class AnytimeServer:
                     )
             elif self.admission == "degrade":
                 request.budget_steps = self._degrade_budget(request)
+            # the backlog the admission decision actually saw — before
+            # this request itself is counted
+            trace_backlog = (
+                self.scheduler.lane_backlog(request) if tracer.enabled else 0)
             now = self.clock()
             self.queue.submit(request, now)
             self.scheduler.note_queued(request)
             self.metrics.record_submit(now)
+            if tracer.enabled:
+                tracer.request_submitted(
+                    request.request_id, now, request.program)
+                tracer.request_admission(
+                    request.request_id, self.admission, trace_backlog,
+                    request.budget_steps)
+                tracer.instant(
+                    "serve.submit", request_id=request.request_id,
+                    program=request.program, deadline_ms=request.deadline_ms)
+                tracer.instant(
+                    "serve.admission", request_id=request.request_id,
+                    decision=self.admission, backlog=trace_backlog,
+                    budget=request.budget_steps)
             ticket = Ticket(self, request)
             self._pending[request.request_id] = ticket
             self._cond.notify_all()   # wake a parked driver
@@ -406,7 +443,11 @@ class AnytimeServer:
         with self._cond:
             now = self.clock()
             self._step_seq += 1
-            deliveries = self.scheduler.step(self.queue, now)
+            if self.tracer.enabled:
+                with self.tracer.span("serve.step", seq=self._step_seq):
+                    deliveries = self.scheduler.step(self.queue, now)
+            else:
+                deliveries = self.scheduler.step(self.queue, now)
             if deliveries:
                 t_done = self.clock()
                 for d in deliveries:
@@ -526,4 +567,14 @@ class AnytimeServer:
         if self._drain_buffer is not None:
             self._drain_buffer.append(res)
         self.metrics.record_delivery(res, now)
+        if self.tracer.enabled:
+            attr = self.tracer.request_delivered(
+                req.request_id, now, res.steps_completed, total,
+                res.deadline_hit)
+            if attr is not None:
+                self.metrics.record_attribution(attr)
+                self.tracer.instant(
+                    "serve.deliver", request_id=req.request_id,
+                    latency_ms=attr.latency_ms, steps=res.steps_completed,
+                    deadline_hit=res.deadline_hit, **attr.components())
         return res, callbacks

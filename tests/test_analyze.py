@@ -369,6 +369,85 @@ def test_registry_covers_kernel_impl_registrations():
 
 
 # ---------------------------------------------------------------------------
+# obs: tracing-call hygiene
+# ---------------------------------------------------------------------------
+
+OBS_NAMES_FIXTURE = """
+    SPAN_NAMES = {
+        "serve.dispatch": "one fused-segment dispatch",
+        "serve.submit": "request entered the queue",
+    }
+"""
+
+
+def test_obs_span_must_be_a_with_item():
+    text = """
+        def ok(tracer):
+            with tracer.span("serve.dispatch") as sp:
+                return sp
+
+        def bad(tracer):
+            sp = tracer.span("serve.dispatch")
+            return sp
+    """
+    findings = run_on("src/repro/serve/fx_obs_span.py", text)
+    assert rules(findings, "obs") == ["span-without-with"]
+
+
+def test_obs_flags_tracing_inside_kernel_bodies():
+    text = """
+        from repro.obs import annotate as _obs_annotate
+
+        def _traced_kernel(x_ref, o_ref, tracer):
+            tracer.instant("serve.dispatch")
+            _obs_annotate(impl="slot")
+            o_ref[...] = x_ref[...]
+
+        def dispatch_layer(tracer):
+            # the same calls OUTSIDE a kernel body are the intended
+            # instrumentation points
+            tracer.instant("serve.dispatch")
+            _obs_annotate(impl="slot")
+    """
+    findings = run_on("src/repro/kernels/fx_obs_kernel.py", text)
+    assert rules(findings, "obs") == ["trace-in-kernel", "trace-in-kernel"]
+    assert all("_traced_kernel" in f.message for f in findings
+               if f.checker == "obs")
+    # outside the kernels layer the same function is not a kernel body
+    assert rules(
+        run_on("src/repro/serve/fx_obs_kernel.py", text), "obs") == []
+
+
+def test_obs_span_names_checked_against_registry_when_present():
+    use = """
+        def f(tracer):
+            tracer.instant("serve.unknown")
+            tracer.instant("serve.submit")
+            with tracer.span("serve.dispatch"):
+                pass
+    """
+    findings = analyze_sources([
+        SourceFile("src/repro/obs/names.py",
+                   textwrap.dedent(OBS_NAMES_FIXTURE)),
+        SourceFile("src/repro/serve/fx_obs_names.py", textwrap.dedent(use)),
+    ])
+    assert rules(findings, "obs") == ["unknown-span-name"]
+    assert "serve.unknown" in findings[-1].message
+    # without the registry in the file set, the rule stays silent
+    assert rules(run_on("src/repro/serve/fx_obs_names.py", use), "obs") == []
+
+
+def test_obs_ignores_non_tracer_receivers():
+    text = """
+        def f(doc, tracer):
+            doc.span("whatever")           # not a tracer receiver
+            events = tracer.events()       # not a recording call
+            return doc.span, events
+    """
+    assert rules(run_on("src/repro/serve/fx_obs_recv.py", text), "obs") == []
+
+
+# ---------------------------------------------------------------------------
 # CLI / end-to-end
 # ---------------------------------------------------------------------------
 
@@ -438,7 +517,8 @@ def test_analyzer_imports_without_jax():
     code = (
         "import sys\n"
         "import tools.analyze\n"
-        "from tools.analyze import cli, core, locks, registry, traces, vmem\n"
+        "from tools.analyze import cli, core, locks, obs, registry, traces, vmem\n"
+        "from tools.obs import cli as obs_cli, report, schema\n"
         "assert 'jax' not in sys.modules, 'analyzer must not import jax'\n"
         "assert 'numpy' not in sys.modules, 'analyzer must stay stdlib-only'\n"
     )

@@ -1,0 +1,555 @@
+"""Cross-layer tracing (`repro.obs`): tracer semantics, deadline-budget
+attribution, Chrome-trace export + schema round-trip, traced-server
+completeness on all three backends, tracer thread-safety under the
+driver, and the ServeMetrics percentile edge cases.
+
+The thread-safety cases here ride the CI ``thread-stress`` loop next to
+``test_serve_driver.py`` — keep them deterministic under repetition
+(generous deadlines, explicit timeouts)."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.forest import make_dataset, split_dataset, train_forest
+from repro.obs import (
+    ATTRIBUTION_FIELDS,
+    NULL_TRACER,
+    SPAN_NAMES,
+    Tracer,
+    annotate,
+    current_span,
+    export_chrome_trace,
+    segment_histograms,
+    tracing_active,
+    write_chrome_trace,
+)
+from repro.obs.attribution import summarize
+from repro.schedule import AnytimeRuntime, ForestProgram
+from repro.serve import AnytimeServer
+from repro.serve.metrics import ServeMetrics
+
+WAIT_S = 120.0
+
+
+class ManualClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    X, y = make_dataset("magic", seed=1)
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=1)
+    rf = train_forest(tr[:800], ytr[:800], 2, n_trees=4, max_depth=5, seed=1)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx[:200])
+    return fa, pp, yor[:200], te, yte
+
+
+@pytest.fixture(scope="module")
+def runtime(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    return AnytimeRuntime(
+        ForestProgram(fa, y_order=yor, path_probs=pp, X_order=te[:8]))
+
+
+# ---------------------------------------------------------------------------
+# Tracer semantics
+# ---------------------------------------------------------------------------
+
+
+def test_span_records_interval_args_and_upward_annotation():
+    clock = ManualClock()
+    tr = Tracer(clock=clock)
+    with tr.span("serve.dispatch", track="lane0", stepped=True) as sp:
+        assert current_span() is sp
+        clock.advance(0.25)
+        annotate(impl="slot_v2", compile=False)  # a lower layer reporting up
+    assert current_span() is None
+    (ev,) = tr.events()
+    assert ev.name == "serve.dispatch" and ev.ph == "X"
+    assert ev.t0 == 0.0 and ev.t1 == 0.25 and ev.dur_s == 0.25
+    assert ev.track == "lane0"
+    assert ev.args == {"stepped": True, "impl": "slot_v2", "compile": False}
+    tr.disable()
+
+
+def test_annotate_targets_innermost_nested_span():
+    tr = Tracer()
+    with tr.span("serve.step") as outer:
+        with tr.span("serve.dispatch") as inner:
+            annotate(backend="pallas")
+        annotate(seq=7)
+    assert inner.args == {"backend": "pallas"}
+    assert outer.args == {"seq": 7}
+    tr.disable()
+
+
+def test_span_survives_exception_and_still_records():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("serve.harvest"):
+            raise RuntimeError("boom")
+    (ev,) = tr.events()
+    assert ev.t1 is not None
+    assert current_span() is None  # stack unwound cleanly
+    tr.disable()
+
+
+def test_strict_mode_rejects_unregistered_names():
+    tr = Tracer()
+    with pytest.raises(ValueError, match="unregistered"):
+        tr.span("serve.bogus")
+    with pytest.raises(ValueError, match="unregistered"):
+        tr.instant("serve.bogus")
+    tr.disable()
+    assert Tracer(strict=False, enabled=False) is not None  # opt-out exists
+
+
+def test_counter_and_instant_shapes():
+    tr = Tracer(margins=True)
+    tr.instant("serve.submit", request_id=3)
+    tr.counter("serve.margin", 0.75, track="lane", request_id=3, steps=4)
+    inst, ctr = tr.events()
+    assert inst.ph == "i" and inst.args["request_id"] == 3
+    assert ctr.ph == "C" and ctr.cat == "quality"
+    assert ctr.args["value"] == 0.75 and ctr.args["steps"] == 4
+    tr.disable()
+
+
+def test_ring_bound_evicts_oldest_and_counts_drops():
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.instant("serve.submit", i=i)
+    events = tr.events()
+    assert len(events) == 4
+    assert [e.args["i"] for e in events] == [6, 7, 8, 9]
+    assert tr.dropped == 6
+    tr.disable()
+
+
+def test_disabled_tracer_and_global_flag():
+    base = tracing_active()
+    tr = Tracer(enabled=False)
+    with tr.span("serve.step") as sp:
+        assert sp is None          # the reusable null context
+    tr.instant("serve.submit")
+    assert tr.events() == [] and tracing_active() == base
+    tr.enable()
+    assert tracing_active()
+    tr.disable()
+    assert tracing_active() == base
+
+
+def test_null_tracer_is_hard_noop_and_unenablable():
+    with NULL_TRACER.span("anything-goes"):   # no strict check, no record
+        pass
+    NULL_TRACER.instant("whatever")
+    assert NULL_TRACER.events() == []
+    assert not NULL_TRACER.enabled
+    with pytest.raises(RuntimeError):
+        NULL_TRACER.enable()
+
+
+# ---------------------------------------------------------------------------
+# Deadline-budget attribution accounting
+# ---------------------------------------------------------------------------
+
+
+def test_attribution_lifecycle_components_sum():
+    clock = ManualClock()
+    tr = Tracer(clock=clock)
+    tr.request_submitted(1, clock(), "forest")
+    tr.request_admission(1, "edf", backlog=2, budget=20)
+    clock.advance(0.010)                       # 10 ms queued
+    tr.request_slot(1, clock(), "forest:backward_squirrel:jnp-ref", "jnp-ref")
+    tr.account([1], "compile", 0.050)
+    tr.account([1], "dispatch", 0.030)
+    tr.account([1], "harvest", 0.005)
+    clock.advance(0.100)                       # 100 ms in flight
+    attr = tr.request_delivered(1, clock(), steps=20, total_steps=20,
+                                deadline_hit=True)
+    assert attr.queue_ms == pytest.approx(10.0)
+    assert attr.compile_ms == pytest.approx(50.0)
+    assert attr.dispatch_ms == pytest.approx(30.0)
+    assert attr.harvest_ms == pytest.approx(5.0)
+    assert attr.slack_ms == pytest.approx(15.0)   # 100 - 85 accounted
+    assert attr.latency_ms == pytest.approx(110.0)
+    assert attr.check()
+    assert sum(attr.components().values()) == pytest.approx(attr.latency_ms)
+    assert attr.decision == "edf" and attr.backlog == 2
+    assert list(tr.attributions) == [attr]
+    tr.disable()
+
+
+def test_attribution_never_admitted_is_pure_queue_wait():
+    clock = ManualClock()
+    tr = Tracer(clock=clock)
+    tr.request_submitted(5, clock(), "forest")
+    clock.advance(0.200)
+    attr = tr.request_delivered(5, clock(), steps=0, total_steps=20,
+                                deadline_hit=False)
+    assert attr.t_admit is None and attr.lane is None
+    assert attr.queue_ms == pytest.approx(200.0)
+    assert attr.slack_ms == 0.0 and attr.dispatch_ms == 0.0
+    assert attr.check()
+    tr.disable()
+
+
+def test_attribution_slack_never_negative():
+    clock = ManualClock()
+    tr = Tracer(clock=clock)
+    tr.request_submitted(2, clock(), "forest")
+    tr.request_slot(2, clock(), "lane", "jnp-ref")
+    # over-account relative to the in-flight window (clock never moved)
+    tr.account([2], "dispatch", 1.0)
+    attr = tr.request_delivered(2, clock(), steps=1, total_steps=2,
+                                deadline_hit=True)
+    assert attr.slack_ms == 0.0
+    tr.disable()
+
+
+def test_summarize_well_defined_at_zero_and_one():
+    empty = summarize([])
+    assert empty["count"] == 0 and empty["sum_check_fail"] == 0
+    assert empty["mean_latency_ms"] == 0.0
+    for f in ATTRIBUTION_FIELDS:
+        assert empty[f"mean_{f}"] == 0.0
+
+    clock = ManualClock()
+    tr = Tracer(clock=clock)
+    tr.request_submitted(1, clock(), "p")
+    clock.advance(0.05)
+    tr.request_delivered(1, clock(), 0, 10, False)
+    one = summarize(tr.attributions)
+    assert one["count"] == 1
+    assert one["mean_queue_ms"] == pytest.approx(50.0)
+    assert one["sum_check_fail"] == 0
+    tr.disable()
+
+
+# ---------------------------------------------------------------------------
+# Export + schema round-trip
+# ---------------------------------------------------------------------------
+
+
+def _tiny_traced_run():
+    clock = ManualClock()
+    tr = Tracer(clock=clock, margins=True)
+    tr.request_submitted(1, clock(), "forest")
+    tr.request_admission(1, "edf", 0, None)
+    tr.instant("serve.submit", request_id=1)
+    clock.advance(0.001)
+    tr.request_slot(1, clock(), "laneA", "jnp-ref")
+    with tr.span("serve.dispatch", track="laneA") as sp:
+        annotate(backend="jnp-ref", impl="jnp-ref", length=4, compile=True)
+        clock.advance(0.004)
+    tr.account([1], "compile", sp.dur_s)
+    with tr.span("serve.dispatch", track="laneA") as sp:
+        annotate(backend="jnp-ref", impl="jnp-ref", length=4, compile=False)
+        clock.advance(0.002)
+    tr.account([1], "dispatch", sp.dur_s)
+    tr.counter("serve.margin", 0.5, track="laneA", request_id=1, steps=4)
+    attr = tr.request_delivered(1, clock(), 4, 4, True)
+    tr.instant("serve.deliver", request_id=1, **attr.components())
+    return tr
+
+
+def test_export_chrome_trace_structure():
+    tr = _tiny_traced_run()
+    doc = export_chrome_trace(tr, meta={"test": True})
+    tr.disable()
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    meta_names = [e["args"]["name"] for e in evs if e["ph"] == "M"]
+    assert "repro.serve" in meta_names and "laneA" in meta_names
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert len(xs) == 2 and all(e["dur"] > 0 and e["ts"] >= 0 for e in xs)
+    lane_tids = {e["tid"] for e in evs
+                 if e["ph"] == "M" and e["args"]["name"] == "laneA"}
+    assert {e["tid"] for e in xs} == lane_tids  # tracked events share a tid
+    assert all(e["s"] == "t" for e in evs if e["ph"] == "i")
+    other = doc["otherData"]
+    assert other["attribution_fields"] == list(ATTRIBUTION_FIELDS)
+    assert len(other["attributions"]) == 1 and other["dropped"] == 0
+    assert other["meta"] == {"test": True}
+    hist = other["segment_histograms"]["jnp-ref/jnp-ref/L4"]
+    assert hist["count"] == 1 and hist["compile_count"] == 1
+    assert hist["mean_ms"] == pytest.approx(2.0)
+    assert hist["compile_mean_ms"] == pytest.approx(4.0)
+
+
+def test_exported_trace_validates_against_committed_schema(tmp_path):
+    from tools.obs import report as obs_report
+    from tools.obs import schema as obs_schema
+
+    tr = _tiny_traced_run()
+    path = tmp_path / "trace.json"
+    doc = write_chrome_trace(tr, path)
+    tr.disable()
+    schema = obs_report.load_schema()
+    assert obs_schema.validate(doc, schema) == []
+    reloaded = json.loads(path.read_text())
+    assert obs_report.check(reloaded, schema) == []     # full CI gate
+    # tools.obs recomputes the histograms from raw events and must agree
+    fresh = obs_report.segment_histograms(reloaded["traceEvents"])
+    assert fresh == doc["otherData"]["segment_histograms"]
+
+
+def test_schema_validator_subset_semantics():
+    from tools.obs.schema import SchemaError, validate
+
+    schema = {
+        "type": "object",
+        "required": ["a"],
+        "additionalProperties": False,
+        "properties": {
+            "a": {"type": "integer", "minimum": 0},
+            "b": {"type": ["string", "null"]},
+            "c": {"type": "array", "items": {"enum": ["x", "y"]},
+                  "minItems": 1},
+        },
+    }
+    assert validate({"a": 1, "b": None, "c": ["x"]}, schema) == []
+    assert validate({"a": True}, schema)          # bool is NOT an integer
+    assert validate({}, schema)                   # missing required
+    assert validate({"a": 0, "z": 1}, schema)     # additionalProperties
+    assert validate({"a": 0, "c": []}, schema)    # minItems
+    assert validate({"a": 0, "c": ["z"]}, schema)  # enum
+    with pytest.raises(SchemaError):
+        validate({}, {"patternProperties": {}})   # unsupported keyword
+    ref_schema = {
+        "definitions": {"pos": {"type": "number", "minimum": 0}},
+        "type": "object",
+        "properties": {"v": {"$ref": "#/definitions/pos"}},
+    }
+    assert validate({"v": 2.5}, ref_schema) == []
+    assert validate({"v": -1}, ref_schema)
+
+
+def test_tools_obs_mirror_of_attribution_fields():
+    from tools.obs import report as obs_report
+
+    assert tuple(obs_report.ATTRIBUTION_FIELDS) == tuple(ATTRIBUTION_FIELDS)
+
+
+def test_committed_sample_passes_the_gate():
+    from tools.obs import report as obs_report
+
+    doc = obs_report.load_trace(obs_report.SAMPLE_PATH)
+    schema = obs_report.load_schema()
+    assert obs_report.check(doc, schema) == []
+    assert obs_report.render_report(doc)  # renders without raising
+
+
+# ---------------------------------------------------------------------------
+# Traced server end to end: every delivered ticket attributes, on all
+# three backends (the tentpole acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+BACKEND_OPTS = {
+    "jnp-ref": {},
+    "pallas": {"block_b": 16, "block_m": 8},
+    "sharded": {},
+}
+
+
+@pytest.mark.parametrize("backend", ["jnp-ref", "pallas", "sharded"])
+def test_traced_server_complete_attribution(backend, runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    tracer = Tracer(margins=True)
+    with AnytimeServer(runtime, capacity=3, tracer=tracer,
+                       backend_opts=BACKEND_OPTS[backend]) as server:
+        tickets = [server.submit(te[i], 60_000.0, backend=backend)
+                   for i in range(7)]
+        results = [t.result(timeout=WAIT_S) for t in tickets]
+    tracer.disable()
+    assert all(r.deadline_hit for r in results)
+
+    by_id = {a.request_id: a for a in tracer.attributions}
+    assert len(by_id) == len(tickets)           # exactly one per ticket
+    for t, r in zip(tickets, results):
+        a = by_id[t.request_id]
+        assert a.check(), a.format()
+        assert a.steps == r.steps_completed
+        assert a.backend == backend and a.lane and a.decision == "edf"
+        assert a.t_admit is not None and a.compile_ms >= 0.0
+
+    events = tracer.events()
+    deliver_ids = [e.args["request_id"] for e in events
+                   if e.name == "serve.deliver"]
+    assert sorted(deliver_ids) == sorted(by_id)  # one deliver instant each
+    dispatches = [e for e in events if e.name == "serve.dispatch"]
+    assert dispatches
+    for d in dispatches:
+        assert d.args.get("backend") == backend
+        assert "impl" in d.args and "length" in d.args
+        assert d.t1 is not None
+    # the calibration table has cells for this backend, and at least one
+    # jit compile was tabulated separately from steady state
+    hist = segment_histograms(events)
+    assert hist and all(k.startswith(backend + "/") for k in hist)
+    assert sum(row["compile_count"] for row in hist.values()) >= 1
+    # margin telemetry: the online confidence curve, per request
+    margin_ids = {e.args["request_id"] for e in events
+                  if e.name == "serve.margin"}
+    assert margin_ids and margin_ids <= set(by_id)
+    # the metrics surface carries the same accounting
+    snap = server.metrics.snapshot()
+    assert snap["attribution"]["count"] == len(tickets)
+    assert snap["attribution"]["sum_check_fail"] == 0
+    assert snap["attribution"]["complete"] == len(tickets)
+
+
+def test_tracer_thread_safety_concurrent_submitters(runtime, pipeline):
+    """Multiple submitter threads + the driver thread share one ring:
+    no torn spans, every delivered ticket attributes exactly once."""
+    fa, pp, yor, te, yte = pipeline
+    tracer = Tracer(margins=True)
+    n_threads, per_thread = 4, 6
+    all_tickets = []
+    tick_lock = threading.Lock()
+    with AnytimeServer(runtime, capacity=3, tracer=tracer) as server:
+        def submitter(k):
+            mine = [server.submit(te[(k * per_thread + j) % te.shape[0]],
+                                  60_000.0)
+                    for j in range(per_thread)]
+            with tick_lock:
+                all_tickets.extend(mine)
+
+        threads = [threading.Thread(target=submitter, args=(k,))
+                   for k in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        results = [t.result(timeout=WAIT_S) for t in all_tickets]
+    tracer.disable()
+    assert len(results) == n_threads * per_thread
+
+    events = tracer.events()
+    for ev in events:                       # no torn/incomplete events
+        assert ev.ph in ("X", "i", "C")
+        assert ev.t1 is not None and ev.t1 >= ev.t0
+    deliver_ids = sorted(e.args["request_id"] for e in events
+                         if e.name == "serve.deliver")
+    assert deliver_ids == sorted(t.request_id for t in all_tickets)
+    by_id = {a.request_id: a for a in tracer.attributions}
+    assert sorted(by_id) == deliver_ids
+    assert all(a.check() for a in by_id.values())
+
+
+def test_tracer_survives_stop_midflight(runtime, pipeline):
+    """stop() drains in-flight slots; every admitted ticket still gets
+    answered AND attributed, and the ring holds only complete events."""
+    fa, pp, yor, te, yte = pipeline
+    tracer = Tracer()
+    server = AnytimeServer(runtime, capacity=2, tracer=tracer)
+    server.start()
+    tickets = [server.submit(te[i], 60_000.0) for i in range(6)]
+    server.stop()                      # mid-flight: no drain() first
+    tracer.disable()
+    assert all(t.done for t in tickets)
+    by_id = {a.request_id: a for a in tracer.attributions}
+    assert sorted(by_id) == sorted(t.request_id for t in tickets)
+    assert all(a.check() for a in by_id.values())
+    assert all(e.t1 is not None for e in tracer.events())
+
+
+# ---------------------------------------------------------------------------
+# ServeMetrics percentile edge cases (satellite regression tests)
+# ---------------------------------------------------------------------------
+
+
+class _FakeResult:
+    def __init__(self, steps=5, total=10, budget=None, degraded=False,
+                 hit=True, completed=False):
+        self.steps_completed = steps
+        self.total_steps = total
+        self.budget_steps = budget
+        self.degraded = degraded
+        self.deadline_hit = hit
+        self.completed = completed
+
+
+def test_metrics_empty_snapshot_is_well_defined():
+    snap = ServeMetrics().snapshot()
+    assert snap["delivered"] == 0 and snap["deadline_hit_rate"] == 0.0
+    for key in ("steps_at_deadline", "budget_at_deadline"):
+        assert snap[key] == {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+        for v in snap[key].values():
+            assert np.isfinite(v)
+    assert snap["requests_per_sec"] == 0.0 and snap["slot_occupancy"] == 0.0
+    assert snap["attribution"]["count"] == 0
+    assert snap["attribution"]["sum_check_fail"] == 0
+
+
+def test_metrics_single_delivery_snapshot():
+    m = ServeMetrics()
+    m.record_submit(now=1.0)
+    m.record_delivery(_FakeResult(steps=7, total=10), now=1.0)  # zero wall
+    snap = m.snapshot()
+    assert snap["delivered"] == 1 and snap["deadline_hit_rate"] == 1.0
+    st = snap["steps_at_deadline"]
+    assert st["p50"] == st["p99"] == st["mean"] == 7.0
+    # budget defaults to total_steps when the request wasn't degraded
+    assert snap["budget_at_deadline"]["p50"] == 10.0
+    assert snap["requests_per_sec"] == 0.0      # zero wall: defined, not inf
+
+
+def test_metrics_reset_clears_every_population():
+    m = ServeMetrics()
+    m.record_submit(now=0.0)
+    m.record_dispatch(3, 4)
+    m.record_delivery(
+        _FakeResult(steps=3, total=10, budget=5, degraded=True), now=2.0)
+    clock = ManualClock()
+    tr = Tracer(clock=clock)
+    tr.request_submitted(9, clock(), "p")
+    clock.advance(0.01)
+    m.record_attribution(tr.request_delivered(9, clock(), 3, 10, True))
+    tr.disable()
+
+    snap = m.snapshot()
+    assert snap["degraded_requests"] == 1
+    assert snap["budget_at_deadline"]["p50"] == 5.0
+    assert snap["attribution"]["count"] == 1
+
+    m.reset()
+    snap = m.snapshot()
+    assert snap["submitted"] == snap["delivered"] == snap["dispatches"] == 0
+    assert snap["degraded_requests"] == 0
+    assert snap["steps_at_deadline"] == {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    assert snap["budget_at_deadline"] == {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    assert snap["attribution"]["count"] == 0
+    assert snap["wall_s"] == 0.0 and snap["requests_per_sec"] == 0.0
+
+
+def test_untraced_server_snapshot_has_empty_attribution(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    assert server.tracer is NULL_TRACER
+    server.serve(list(te[:2]), deadline_ms=60_000.0)
+    snap = server.metrics.snapshot()
+    assert snap["attribution"]["count"] == 0
+    assert snap["delivered"] == 2
+
+
+def test_span_names_registry_is_closed_and_categorized():
+    from repro.obs.names import CATEGORIES
+
+    assert set(SPAN_NAMES) >= {
+        "serve.submit", "serve.admission", "serve.slot_admit",
+        "serve.deliver", "serve.step", "serve.dispatch", "serve.harvest",
+        "serve.flush", "serve.margin"}
+    assert set(CATEGORIES) == {"serve", "kernel", "quality"}

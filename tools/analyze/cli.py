@@ -37,7 +37,8 @@ def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m tools.analyze",
         description="Repo-specific static analysis: lock discipline, "
-        "jit trace budget, Pallas VMEM hygiene, registry coherence.",
+        "jit trace budget, Pallas VMEM hygiene, registry coherence, "
+        "tracing-call hygiene.",
     )
     parser.add_argument(
         "--root",

@@ -215,15 +215,16 @@ def load_sources(root) -> list[SourceFile]:
 def analyze_sources(
     files: Iterable[SourceFile], config: Optional[Config] = None
 ) -> list[Finding]:
-    """Run all four checkers over an in-memory file set (deterministic
+    """Run all five checkers over an in-memory file set (deterministic
     order: checker registration, then path, then line)."""
     # checker modules import lazily so `import tools.analyze` stays cheap
-    from tools.analyze import locks, registry, traces, vmem
+    from tools.analyze import locks, obs, registry, traces, vmem
 
     files = list(files)
     config = config or Config()
     findings: list[Finding] = []
-    for checker in (locks.check, traces.check, vmem.check, registry.check):
+    for checker in (locks.check, traces.check, vmem.check, registry.check,
+                    obs.check):
         findings.extend(checker(files, config))
     findings.sort(key=lambda f: (f.path, f.line, f.rule, f.symbol))
     return findings

@@ -1,0 +1,159 @@
+"""Observability hygiene checker: tracing-call discipline.
+
+Three rules keep the :mod:`repro.obs` instrumentation sound:
+
+* **span-without-with** — ``tracer.span(...)`` returns a context
+  manager; calling it outside a ``with`` statement records an enter
+  with no exit (the span never lands in the ring, and the thread-local
+  active stack stays balanced only because ``__enter__`` never ran).
+  Every ``.span(...)`` call on a tracer-ish receiver must be a
+  ``with``-item.
+
+* **trace-in-kernel** — Pallas kernel bodies (functions taking
+  ``*_ref`` arguments) execute on-device via the Mosaic compiler;
+  tracing calls there would either fail to lower or silently run at
+  trace time only, recording garbage.  Instrumentation belongs at the
+  dispatch layer (``ExecutorCore.run``), never inside a kernel body.
+
+* **unknown-span-name** — span/instant/counter names are a closed
+  registry (``repro.obs.names.SPAN_NAMES``): the committed trace schema
+  enumerates them, so an unregistered literal name would export events
+  that fail ``python -m tools.obs --check``.  Checked only when the
+  analyzed file set contains the registry (fixture sets without it are
+  exempt).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.analyze.core import (
+    Config,
+    Finding,
+    SourceFile,
+    attr_path,
+    call_name,
+    import_map,
+)
+
+CHECKER = "obs"
+
+#: tracer method names that record events
+_TRACE_METHODS = {"span", "instant", "counter"}
+#: names whose first positional argument is a registered span name
+_NAMED_METHODS = {"span", "instant", "counter"}
+
+
+def _tracer_receiver(node: ast.Call) -> bool:
+    """Is this call's receiver tracer-ish (``tracer.span``,
+    ``self.tracer.instant``, ``self._tracer.counter``, …)?"""
+    path = attr_path(node.func)
+    if path is None or "." not in path:
+        return False
+    owner = path.rsplit(".", 1)[0].rsplit(".", 1)[-1]
+    return "tracer" in owner.lower()
+
+
+def _span_name_registry(files: list[SourceFile]) -> Optional[set[str]]:
+    """Keys of ``SPAN_NAMES`` if the registry module is in the analyzed
+    set; None otherwise (rule 3 then stays silent)."""
+    for sf in files:
+        if not sf.path.endswith("obs/names.py"):
+            continue
+        for stmt in sf.tree.body:
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and stmt.targets[0].id == "SPAN_NAMES"
+                    and isinstance(stmt.value, ast.Dict)):
+                return {
+                    k.value for k in stmt.value.keys
+                    if isinstance(k, ast.Constant)
+                    and isinstance(k.value, str)
+                }
+    return None
+
+
+def _with_item_calls(tree: ast.Module) -> set[int]:
+    """ids of Call nodes used as ``with``-item context expressions."""
+    out: set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                if isinstance(item.context_expr, ast.Call):
+                    out.add(id(item.context_expr))
+    return out
+
+
+def _obs_call(node: ast.Call, imports: dict[str, str]) -> Optional[str]:
+    """The tracing-API name this call invokes, or None.
+
+    Catches both method calls on tracer-ish receivers and module-level
+    helpers imported (possibly aliased) from ``repro.obs``.
+    """
+    cname = call_name(node)
+    if cname in _TRACE_METHODS and _tracer_receiver(node):
+        return cname
+    if isinstance(node.func, ast.Name):
+        target = imports.get(node.func.id, "")
+        if target.startswith("repro.obs"):
+            return target.rsplit(".", 1)[-1]
+    return None
+
+
+def check(files: list[SourceFile], config: Config) -> list[Finding]:
+    findings: list[Finding] = []
+    registry = _span_name_registry(files)
+
+    for sf in files:
+        imports = import_map(sf)
+        with_calls = _with_item_calls(sf.tree)
+
+        # kernel bodies: functions taking *_ref arguments in kernel files
+        kernel_fns = []
+        if config.kernels_prefix in sf.path:
+            kernel_fns = [
+                fn for fn in ast.walk(sf.tree)
+                if isinstance(fn, ast.FunctionDef)
+                and any(a.arg.endswith("_ref")
+                        for a in (*fn.args.args, *fn.args.kwonlyargs))
+            ]
+        for fn in kernel_fns:
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                api = _obs_call(node, imports)
+                if api is not None:
+                    findings.append(Finding(
+                        CHECKER, "trace-in-kernel", sf.path, node.lineno,
+                        f"tracing call `{api}(...)` inside Pallas kernel "
+                        f"body `{fn.name}` — kernel bodies lower through "
+                        f"Mosaic; instrument the dispatch layer instead",
+                        symbol=f"{fn.name}:{api}",
+                    ))
+
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            cname = call_name(node)
+            if cname == "span" and _tracer_receiver(node) \
+                    and id(node) not in with_calls:
+                findings.append(Finding(
+                    CHECKER, "span-without-with", sf.path, node.lineno,
+                    "tracer.span(...) must be a `with` context item — a "
+                    "bare call opens a span that never closes or records",
+                    symbol=f"span:L{node.lineno}",
+                ))
+            if registry is not None and cname in _NAMED_METHODS \
+                    and _tracer_receiver(node) and node.args:
+                first = node.args[0]
+                if isinstance(first, ast.Constant) \
+                        and isinstance(first.value, str) \
+                        and first.value not in registry:
+                    findings.append(Finding(
+                        CHECKER, "unknown-span-name", sf.path, node.lineno,
+                        f"span name {first.value!r} is not registered in "
+                        f"repro.obs.names.SPAN_NAMES — the exported trace "
+                        f"would fail schema validation",
+                        symbol=f"{cname}:{first.value}",
+                    ))
+    return findings

@@ -1,0 +1,14 @@
+"""tools.obs — offline analysis of exported serving traces.
+
+``python -m tools.obs report`` renders the deadline-budget attribution
+summary and the per-(backend, impl, pow2-length) segment-latency
+calibration table from a Chrome trace-event JSON exported by
+:mod:`repro.obs`; ``python -m tools.obs --check`` is the CI gate —
+schema validation against the committed
+``reports/obs/serve_trace_schema.json`` plus the attribution-accounting
+invariant (components sum to end-to-end latency within tolerance).
+
+Pure stdlib by design: the tools operate on the EXPORTED trace file
+(the contract the schema pins), never on live tracer objects, so they
+run in the same jax-free environment as the lint job.
+"""

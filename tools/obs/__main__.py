@@ -1,0 +1,3 @@
+from tools.obs.cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,80 @@
+"""Command line entry point: ``python -m tools.obs``.
+
+Pure stdlib (no jax) — runnable in the same environment as the lint
+job.  ``report`` renders the attribution + calibration tables for a
+trace; ``--check`` exits non-zero unless the trace validates against
+the committed schema AND every attribution's components sum to its
+end-to-end latency within tolerance (the CI bench-smoke job runs this
+against a freshly exported trace and against the committed sample).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.obs import report as report_mod
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.obs",
+        description="Serving-trace analysis: deadline-budget attribution "
+        "report, per-(backend, impl, pow2-length) segment-latency "
+        "calibration table, schema + accounting CI gate.",
+    )
+    parser.add_argument(
+        "command", nargs="?", choices=["report"], default="report",
+        help="what to do (default: report)",
+    )
+    parser.add_argument(
+        "--trace", default=str(report_mod.SAMPLE_PATH),
+        help="trace JSON to analyze "
+        "(default: the committed sample, reports/obs/serve_trace_sample.json)",
+    )
+    parser.add_argument(
+        "--schema", default=str(report_mod.SCHEMA_PATH),
+        help="schema to validate against "
+        "(default: reports/obs/serve_trace_schema.json)",
+    )
+    parser.add_argument(
+        "--check", action="store_true",
+        help="gate: fail unless the trace validates against the schema "
+        "and attribution components sum to end-to-end latency",
+    )
+    parser.add_argument(
+        "--json", action="store_true",
+        help="machine-readable JSON summary on stdout instead of the table",
+    )
+    args = parser.parse_args(argv)
+
+    trace_path = Path(args.trace)
+    if not trace_path.exists():
+        print(f"no trace at {trace_path}", file=sys.stderr)
+        return 2
+    doc = report_mod.load_trace(trace_path)
+
+    if args.check:
+        schema = report_mod.load_schema(Path(args.schema))
+        failures = report_mod.check(doc, schema)
+        if failures:
+            print(f"tools.obs --check: {len(failures)} failure(s) "
+                  f"in {trace_path}:")
+            for f in failures:
+                print(f"  FAIL {f}")
+            return 1
+        n = len(doc.get("otherData", {}).get("attributions", []))
+        print(f"tools.obs --check: OK ({trace_path}: schema valid, "
+              f"{n} attribution records sum within tolerance)")
+        return 0
+
+    if args.json:
+        print(json.dumps({
+            "attribution": report_mod.summarize_attributions(doc),
+            "segment_histograms":
+                doc.get("otherData", {}).get("segment_histograms", {}),
+        }, indent=2, sort_keys=True))
+    else:
+        print(report_mod.render_report(doc))
+    return 0

@@ -1,0 +1,206 @@
+"""Trace analysis: attribution accounting + segment-latency calibration.
+
+Operates on the exported Chrome trace JSON (``repro.obs.export``), not
+on live tracer state — the committed schema pins that contract.  Two
+products:
+
+* the **deadline-budget attribution report** — where delivered
+  requests' latency went (queue / dispatch / compile / harvest /
+  slack), with the accounting invariant that components sum to the
+  measured end-to-end latency within tolerance;
+* the **segment-latency calibration table** — per-(backend, impl,
+  pow2-length) dispatch-wall histograms, jit compiles tabulated apart
+  from steady state.  This is the measured per-segment cost table
+  ROADMAP item 3's WCET-certified admission consumes.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from tools.obs import schema as schema_mod
+
+REPORTS_DIR = Path("reports/obs")
+SCHEMA_PATH = REPORTS_DIR / "serve_trace_schema.json"
+SAMPLE_PATH = REPORTS_DIR / "serve_trace_sample.json"
+
+#: attribution components, report order.  Kept in lockstep with
+#: ``repro.obs.names.ATTRIBUTION_FIELDS`` (tools stay stdlib-only, so
+#: the constant is mirrored here; tests assert the two match).
+ATTRIBUTION_FIELDS = (
+    "queue_ms", "dispatch_ms", "compile_ms", "harvest_ms", "slack_ms",
+)
+
+#: accounting tolerance: |sum(components) - latency| must stay within
+#: max(SUM_TOL_MS, SUM_REL_TOL * latency) — one monotonic clock, but
+#: components accumulate across span boundaries.
+SUM_TOL_MS = 1.0
+SUM_REL_TOL = 0.05
+
+
+def load_trace(path: Path | str) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def load_schema(path: Path | str = SCHEMA_PATH) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    idx = min(len(sorted_vals) - 1, max(0, round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def segment_histograms(trace_events: list[dict]) -> dict[str, dict]:
+    """Recompute the per-(backend, impl, pow2-length) dispatch-latency
+    table from raw trace events (``ts``/``dur`` in microseconds) —
+    independently of the exporter's own ``otherData`` aggregation, so
+    ``--check`` can cross-validate the two."""
+    cells: dict[str, dict[str, list[float]]] = {}
+    for ev in trace_events:
+        if ev.get("name") != "serve.dispatch" or ev.get("ph") != "X":
+            continue
+        args = ev.get("args", {})
+        backend = args.get("backend", "?")
+        impl = args.get("impl", backend)
+        key = f"{backend}/{impl}/L{args.get('length', 0)}"
+        cell = cells.setdefault(key, {"steady": [], "compile": []})
+        bucket = "compile" if args.get("compile") else "steady"
+        cell[bucket].append(float(ev.get("dur", 0.0)) / 1e3)  # µs -> ms
+    out: dict[str, dict] = {}
+    for key in sorted(cells):
+        steady = sorted(cells[key]["steady"])
+        compile_ = cells[key]["compile"]
+        out[key] = {
+            "count": len(steady),
+            "mean_ms": sum(steady) / len(steady) if steady else 0.0,
+            "p50_ms": _percentile(steady, 0.50) if steady else 0.0,
+            "p95_ms": _percentile(steady, 0.95) if steady else 0.0,
+            "max_ms": max(steady) if steady else 0.0,
+            "compile_count": len(compile_),
+            "compile_mean_ms":
+                sum(compile_) / len(compile_) if compile_ else 0.0,
+        }
+    return out
+
+
+def attribution_failures(doc: dict, tol_ms: float = SUM_TOL_MS,
+                         rel_tol: float = SUM_REL_TOL) -> list[str]:
+    """Violations of the attribution accounting invariant."""
+    failures: list[str] = []
+    attributions = doc.get("otherData", {}).get("attributions", [])
+    by_id = {}
+    for rec in attributions:
+        rid = rec.get("request_id")
+        by_id[rid] = rec
+        total = sum(float(rec.get(f, 0.0)) for f in ATTRIBUTION_FIELDS)
+        latency = float(rec.get("latency_ms", 0.0))
+        if abs(total - latency) > max(tol_ms, rel_tol * latency):
+            failures.append(
+                f"request {rid}: components sum to {total:.3f} ms but "
+                f"latency is {latency:.3f} ms (tolerance "
+                f"{max(tol_ms, rel_tol * latency):.3f} ms)")
+        for f in ATTRIBUTION_FIELDS:
+            if float(rec.get(f, 0.0)) < 0:
+                failures.append(f"request {rid}: negative {f}")
+    # every delivery the ring retained must have its attribution record
+    # (only checkable when nothing was evicted)
+    if doc.get("otherData", {}).get("dropped", 0) == 0:
+        for ev in doc.get("traceEvents", []):
+            if ev.get("name") == "serve.deliver":
+                rid = ev.get("args", {}).get("request_id")
+                if rid not in by_id:
+                    failures.append(
+                        f"delivery instant for request {rid} has no "
+                        "attribution record")
+    return failures
+
+
+def histogram_failures(doc: dict) -> list[str]:
+    """Exporter aggregation vs independent recompute from the events."""
+    committed = doc.get("otherData", {}).get("segment_histograms", {})
+    fresh = segment_histograms(doc.get("traceEvents", []))
+    failures: list[str] = []
+    if set(committed) != set(fresh):
+        failures.append(
+            f"histogram cells differ: exported {sorted(committed)} vs "
+            f"recomputed {sorted(fresh)}")
+        return failures
+    for key, row in fresh.items():
+        got = committed[key]
+        for field in ("count", "compile_count"):
+            if got.get(field) != row[field]:
+                failures.append(
+                    f"{key}: {field} exported {got.get(field)} != "
+                    f"recomputed {row[field]}")
+        for field in ("mean_ms", "p50_ms", "p95_ms", "max_ms",
+                      "compile_mean_ms"):
+            a, b = float(got.get(field, 0.0)), row[field]
+            if abs(a - b) > max(1e-6, 1e-6 * abs(b)):
+                failures.append(
+                    f"{key}: {field} exported {a} != recomputed {b}")
+    return failures
+
+
+def check(doc: dict, schema: dict) -> list[str]:
+    """Every gate ``--check`` enforces, as human-readable failures."""
+    failures = [f"schema: {e}" for e in schema_mod.validate(doc, schema)]
+    if failures:
+        return failures  # structure is wrong; content checks would lie
+    failures.extend(attribution_failures(doc))
+    failures.extend(histogram_failures(doc))
+    return failures
+
+
+def summarize_attributions(doc: dict) -> dict:
+    records = doc.get("otherData", {}).get("attributions", [])
+    n = len(records)
+    out = {"count": n}
+    for field in ("latency_ms",) + ATTRIBUTION_FIELDS:
+        vals = [float(r.get(field, 0.0)) for r in records]
+        out[f"mean_{field}"] = sum(vals) / n if n else 0.0
+    out["deadline_hits"] = sum(1 for r in records if r.get("deadline_hit"))
+    return out
+
+
+def render_report(doc: dict) -> str:
+    lines: list[str] = []
+    other = doc.get("otherData", {})
+    summary = summarize_attributions(doc)
+    n = summary["count"]
+    lines.append("deadline-budget attribution "
+                 f"({n} delivered, {summary['deadline_hits']} deadline hits)")
+    if n:
+        lat = summary["mean_latency_ms"]
+        lines.append(f"  mean latency {lat:9.3f} ms")
+        for field in ATTRIBUTION_FIELDS:
+            v = summary[f"mean_{field}"]
+            share = v / lat if lat > 0 else 0.0
+            lines.append(
+                f"  mean {field.removesuffix('_ms'):<9} {v:9.3f} ms"
+                f"  ({share:5.1%})")
+    lines.append("")
+    lines.append("segment-latency calibration "
+                 "(backend/impl/pow2-length, steady-state | compiles)")
+    hist = other.get("segment_histograms", {})
+    if not hist:
+        lines.append("  (no dispatch spans in trace)")
+    for key in sorted(hist):
+        row = hist[key]
+        lines.append(
+            f"  {key:<28} n={row['count']:<5} "
+            f"mean={row['mean_ms']:8.3f} p50={row['p50_ms']:8.3f} "
+            f"p95={row['p95_ms']:8.3f} max={row['max_ms']:8.3f} ms"
+            f"  | compiles n={row['compile_count']} "
+            f"mean={row['compile_mean_ms']:.3f} ms")
+    margins = sum(
+        1 for ev in doc.get("traceEvents", [])
+        if ev.get("name") == "serve.margin")
+    lines.append("")
+    lines.append(
+        f"events: {other.get('event_count', 0)} recorded, "
+        f"{other.get('dropped', 0)} dropped by the ring, "
+        f"{margins} margin samples")
+    return "\n".join(lines)

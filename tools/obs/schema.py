@@ -1,0 +1,124 @@
+"""Minimal JSON-Schema-subset validator (pure stdlib).
+
+Supports exactly the keywords ``reports/obs/serve_trace_schema.json``
+uses — ``type`` (plus lists of types), ``enum``, ``const``,
+``required``, ``properties``, ``additionalProperties`` (``false`` or a
+schema applied to non-listed properties), ``items``, ``minimum``,
+``minItems``, and in-document ``$ref`` to ``#/definitions/...`` — so
+the CI gate needs no third-party schema library.  Unknown keywords raise instead of silently passing: a schema
+edit that drifts outside the supported subset must fail loudly, not
+validate vacuously.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+__all__ = ["validate", "SchemaError"]
+
+_KNOWN_KEYWORDS = {
+    "$schema", "$ref", "title", "description", "definitions",
+    "type", "enum", "const", "required", "properties",
+    "additionalProperties", "items", "minimum", "minItems",
+}
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+class SchemaError(ValueError):
+    """The schema itself is malformed or uses an unsupported keyword."""
+
+
+def _type_ok(value: Any, name: str) -> bool:
+    if name == "integer":
+        return isinstance(value, int) and not isinstance(value, bool)
+    if name == "number":
+        return (isinstance(value, (int, float))
+                and not isinstance(value, bool))
+    py = _TYPES.get(name)
+    if py is None:
+        raise SchemaError(f"unsupported type name {name!r}")
+    if py is dict or py is list:
+        return isinstance(value, py)
+    # bool is an int subclass: "string"/"boolean"/"null" stay exact
+    return type(value) is py or (py is not bool and isinstance(value, py)
+                                 and not isinstance(value, bool))
+
+
+def _resolve_ref(ref: str, root: dict) -> dict:
+    if not ref.startswith("#/"):
+        raise SchemaError(f"only in-document refs supported, got {ref!r}")
+    node: Any = root
+    for part in ref[2:].split("/"):
+        if not isinstance(node, dict) or part not in node:
+            raise SchemaError(f"unresolvable $ref {ref!r}")
+        node = node[part]
+    return node
+
+
+def validate(instance: Any, schema: dict, root: dict | None = None,
+             path: str = "$") -> list[str]:
+    """All violations of ``schema`` by ``instance`` (empty = valid)."""
+    root = schema if root is None else root
+    if "$ref" in schema:
+        return validate(instance, _resolve_ref(schema["$ref"], root),
+                        root, path)
+    unknown = set(schema) - _KNOWN_KEYWORDS
+    if unknown:
+        raise SchemaError(
+            f"unsupported schema keyword(s) at {path}: {sorted(unknown)}")
+
+    errors: list[str] = []
+    if "type" in schema:
+        names = schema["type"]
+        names = [names] if isinstance(names, str) else list(names)
+        if not any(_type_ok(instance, n) for n in names):
+            errors.append(
+                f"{path}: expected type {'/'.join(names)}, "
+                f"got {type(instance).__name__}")
+            return errors  # structural checks below would just cascade
+    if "enum" in schema and instance not in schema["enum"]:
+        errors.append(f"{path}: {instance!r} not in enum {schema['enum']}")
+    if "const" in schema and instance != schema["const"]:
+        errors.append(f"{path}: {instance!r} != const {schema['const']!r}")
+    if "minimum" in schema and isinstance(instance, (int, float)) \
+            and not isinstance(instance, bool) \
+            and instance < schema["minimum"]:
+        errors.append(f"{path}: {instance} < minimum {schema['minimum']}")
+
+    if isinstance(instance, dict):
+        props = schema.get("properties", {})
+        for name in schema.get("required", ()):
+            if name not in instance:
+                errors.append(f"{path}: missing required property {name!r}")
+        for name, sub in props.items():
+            if name in instance:
+                errors.extend(
+                    validate(instance[name], sub, root, f"{path}.{name}"))
+        addl = schema.get("additionalProperties")
+        if addl is False:
+            extra = set(instance) - set(props)
+            if extra:
+                errors.append(
+                    f"{path}: unexpected propert"
+                    f"{'ies' if len(extra) > 1 else 'y'} {sorted(extra)}")
+        elif isinstance(addl, dict):
+            for name in sorted(set(instance) - set(props)):
+                errors.extend(validate(
+                    instance[name], addl, root, f"{path}.{name}"))
+
+    if isinstance(instance, list):
+        if "minItems" in schema and len(instance) < schema["minItems"]:
+            errors.append(
+                f"{path}: {len(instance)} items < minItems "
+                f"{schema['minItems']}")
+        if "items" in schema:
+            for i, item in enumerate(instance):
+                errors.extend(
+                    validate(item, schema["items"], root, f"{path}[{i}]"))
+    return errors
