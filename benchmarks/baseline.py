@@ -34,6 +34,8 @@ HIT_RATE_TOL = 0.02
 #: measured wall-clock speedups must stay within this factor of the
 #: committed baseline (catches order-of-magnitude regressions, not noise)
 WALL_CLOCK_FACTOR = 0.25
+#: the pooled-tier knee-scaling gate (4 pools vs 1 at equal good-rate)
+MIN_POOL_SCALING = 3.0
 
 
 def _load(path: str) -> Optional[dict]:
@@ -97,6 +99,38 @@ def check_serve(fresh: dict, base: dict, failures: list[str]) -> None:
                 failures.append(
                     f"serve: {key} {float(got):.2f}x below "
                     f"{WALL_CLOCK_FACTOR}x baseline ({float(ref):.2f}x)")
+    # the pooled-tier frontier: knee scaling is a RATIO of virtual-time
+    # knees off one shared calibration, so it is machine-stable — the
+    # >= 3x gate holds absolutely, not just relative to the baseline
+    b_front = base.get("frontier")
+    if b_front is not None:
+        f_front = fresh.get("frontier")
+        if f_front is None:
+            failures.append("serve: fresh run produced no frontier section")
+        else:
+            scaling = float(f_front.get("pool_scaling", 0.0))
+            if scaling < MIN_POOL_SCALING:
+                failures.append(
+                    f"serve: frontier pool_scaling {scaling:.2f}x below "
+                    f"the {MIN_POOL_SCALING}x gate")
+            if len(f_front.get("points", [])) < len(b_front.get("points", [])):
+                failures.append(
+                    f"serve: frontier covers {len(f_front.get('points', []))}"
+                    f" rate points, baseline "
+                    f"{len(b_front.get('points', []))}")
+            # knee rates derive from this machine's calibrated step cost:
+            # wall-clock comparison, generous factor
+            for pools, ref_knee in b_front.get("knee_rps", {}).items():
+                got_knee = f_front.get("knee_rps", {}).get(pools)
+                if got_knee is None:
+                    failures.append(
+                        f"serve: frontier knee for {pools} pool(s) missing")
+                elif float(got_knee) < float(ref_knee) * WALL_CLOCK_FACTOR:
+                    failures.append(
+                        f"serve: frontier knee({pools} pools) "
+                        f"{float(got_knee):.0f} rps below "
+                        f"{WALL_CLOCK_FACTOR}x baseline "
+                        f"({float(ref_knee):.0f} rps)")
 
 
 def check_kernels(fresh: dict, base: dict, failures: list[str]) -> None:

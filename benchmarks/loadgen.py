@@ -1,0 +1,504 @@
+"""Trace-driven open-loop traffic harness for the pooled serving tier.
+
+Generates arrival-stamped request streams — Poisson or bursty MMPP
+(2-state Markov-modulated Poisson) inter-arrivals, mixed deadline
+distributions, mixed order policies — and drives a
+:class:`~repro.serve.pool.PooledAnytimeServer` with them in one of two
+execution modes:
+
+* **sim** (default; the frontier's mode) — *virtual time*.  The pooled
+  server runs cooperatively under a manual clock; each pool owns its own
+  virtual timeline, advanced by a **calibrated** per-iteration step cost
+  measured from a real, warmed run of the same lanes on this machine.
+  Pools progress in parallel in virtual time — exactly the concurrency
+  a multi-device deployment gets from N real devices — so the
+  sustained-throughput-vs-p99-latency frontier and the pool-scaling
+  gate are measurable on a single-core CI container, where N OS threads
+  time-slicing one core could never show a wall-clock speedup.  All
+  deadline/latency accounting is against the virtual clock; the actual
+  device math still runs for real (results stay bit-exact, steals still
+  migrate real slot state).
+* **real** — wall-clock, threaded drivers, ``time.sleep`` pacing.  An
+  open-loop stream submits at its scheduled arrival times no matter how
+  far completions lag (the load a server cannot push back on); a
+  closed-loop stream caps in-flight requests at a fixed concurrency.
+  Used by the ``serve-scale`` CI smoke (under
+  ``--xla_force_host_platform_device_count=8``) to exercise the real
+  thread/driver/steal machinery end to end.
+
+The **frontier** sweep offers each pool-count a ladder of arrival rates
+(multiples of the calibrated single-pool service rate) and reports, per
+point: offered rate, sustained delivery throughput, the anytime
+deadline-hit rate (>= 1 segment by deadline — EDF keeps this near 1.0
+deep into overload; quality degrades instead of requests missing), the
+**good rate** (full plan served inside the deadline — the saturation
+signal), p50/p99 virtual latency, and steal counts.  The *knee* of a
+configuration is the highest offered rate whose good rate stays >=
+``hit_floor`` (0.99); ``pool_scaling = knee(4 pools) / knee(1 pool)``
+is the gated number: >= ``min_pool_scaling`` (3.0) or the build fails.
+
+    PYTHONPATH=src python -m benchmarks.loadgen --smoke
+    PYTHONPATH=src python -m benchmarks.loadgen --mode real --pools 4
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import random
+import time
+
+import numpy as np
+
+from benchmarks.common import build_pipeline, runtime_for
+from repro.serve import PooledAnytimeServer, Request
+
+#: default deadline mix, in units of one request's calibrated solo
+#: service time: (weight, lo, hi) — a loose majority plus a tight tail,
+#: sampled uniformly inside each band.  The bands sit a small factor
+#: above the service time, so queue wait beyond a few service times
+#: turns into missed completions — that is what makes the knee visible;
+#: deadlines many times the service time would hide saturation behind
+#: the EDF queue's elasticity for any finite stream.
+DEADLINE_MIX = ((0.7, 2.0, 4.0), (0.3, 1.5, 2.5))
+#: default policy mix (weight, order-policy name)
+POLICY_MIX = ((1.0, "backward_squirrel"),)
+#: offered-rate ladder, in multiples of the calibrated base rate —
+#: dense around the single-pool knee, extended past 4x for the pooled
+#: configurations
+RATE_MULTIPLIERS = (0.5, 0.75, 1.0, 1.25, 1.5, 2.0, 3.0, 4.0, 5.0, 6.0)
+
+
+class ManualClock:
+    """Monotonic clock under harness control (seconds)."""
+
+    def __init__(self, t: float = 1000.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes and request-stream synthesis
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(rate_rps: float, n: int, rng: random.Random) -> list[float]:
+    """Cumulative arrival offsets (s) of a Poisson stream at ``rate_rps``."""
+    t, out = 0.0, []
+    for _ in range(n):
+        t += rng.expovariate(rate_rps)
+        out.append(t)
+    return out
+
+
+def mmpp_arrivals(rate_rps: float, n: int, rng: random.Random,
+                  burst_factor: float = 4.0, switch_hz: float = 2.0,
+                  ) -> list[float]:
+    """2-state MMPP at mean ``rate_rps``: a *burst* state at
+    ``burst_factor`` x the quiet state's rate, state residencies
+    exponential with mean ``1/switch_hz`` seconds.  Same average load as
+    the Poisson stream, very different short-term queue pressure."""
+    # mean rate = (lo + hi) / 2 with equal mean residencies
+    lo = 2.0 * rate_rps / (1.0 + burst_factor)
+    hi = lo * burst_factor
+    t, out = 0.0, []
+    state_hi = rng.random() < 0.5
+    while len(out) < n:
+        # competing exponentials: whichever fires first — the next
+        # arrival at the current state's rate, or a state switch —
+        # advances time; memorylessness makes the discard-and-redraw of
+        # the loser exact
+        dt_arr = rng.expovariate(hi if state_hi else lo)
+        dt_switch = rng.expovariate(switch_hz)
+        if dt_switch < dt_arr:
+            t += dt_switch
+            state_hi = not state_hi
+        else:
+            t += dt_arr
+            out.append(t)
+    return out
+
+
+def sample_mix(mix, n: int, rng: random.Random) -> list:
+    """n draws from a ((weight, *payload), ...) mixture."""
+    weights = [m[0] for m in mix]
+    total = sum(weights)
+    out = []
+    for _ in range(n):
+        u, acc = rng.random() * total, 0.0
+        for m in mix:
+            acc += m[0]
+            if u <= acc:
+                out.append(m[1:])
+                break
+    return out
+
+
+def make_schedule(rows, *, rate_rps: float, n: int, svc_ms: float,
+                  deadline_mix=DEADLINE_MIX, policy_mix=POLICY_MIX,
+                  arrival: str = "poisson", backend=None, seed: int = 0,
+                  ) -> list[tuple[float, Request]]:
+    """An arrival-stamped request stream: ``[(t_offset_s, Request)]``.
+
+    Deadlines are sampled from ``deadline_mix`` in units of ``svc_ms``
+    (one request's calibrated solo service time), policies from
+    ``policy_mix``."""
+    rng = random.Random(seed)
+    if arrival == "poisson":
+        times = poisson_arrivals(rate_rps, n, rng)
+    elif arrival == "mmpp":
+        times = mmpp_arrivals(rate_rps, n, rng)
+    else:
+        raise ValueError(f"arrival must be 'poisson' or 'mmpp', got {arrival!r}")
+    deadlines = [rng.uniform(lo, hi) * svc_ms
+                 for (lo, hi) in sample_mix(deadline_mix, n, rng)]
+    policies = [p for (p,) in sample_mix(policy_mix, n, rng)]
+    return [
+        (times[i], Request(x=rows[i % len(rows)], deadline_ms=deadlines[i],
+                           policy=policies[i], backend=backend))
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Virtual-time simulation
+# ---------------------------------------------------------------------------
+
+
+def _warm(srv: PooledAnytimeServer, rows, policy_mix, backend) -> None:
+    """Compile every pool's lane traces before any timed point: submit
+    directly to each pool (bypassing the router) so ALL pools warm."""
+    for pool in srv.pools:
+        for mix_entry in policy_mix:
+            policy = mix_entry[1]
+            for i in range(min(srv.pools[0].scheduler.capacity, len(rows))):
+                pool.submit_request(Request(
+                    x=rows[i], deadline_ms=300_000.0, policy=policy,
+                    backend=backend))
+    while srv.busy:
+        srv.step()
+    srv.metrics.reset()
+
+
+def drive_sim(srv: PooledAnytimeServer, clock: ManualClock, schedule,
+              step_cost_s: float) -> list:
+    """Event-driven virtual-time drive of one arrival schedule.
+
+    Each pool owns a virtual timeline: a ``pool.step()`` — one real
+    dispatch->admit->harvest iteration — costs ``step_cost_s`` of that
+    pool's virtual time only, so N busy pools advance N iterations per
+    ``step_cost_s`` of virtual wall time, the parallelism N devices
+    would give.  Arrivals interleave at their stamped offsets; work
+    stealing runs whenever a pool goes idle, charged one step cost on
+    the thief's timeline (the migration sync).  Returns the tickets.
+    """
+    t0 = clock.t
+    next_t = {p: t0 for p in srv.pools}
+    tickets = []
+    i, n = 0, len(schedule)
+    guard = 0
+    limit = 1000 * (n + 10)
+    while True:
+        guard += 1
+        if guard > limit:
+            raise RuntimeError("virtual-time drive failed to converge")
+        t_arr = t0 + schedule[i][0] if i < n else math.inf
+        t_pool, pool = math.inf, None
+        for p in srv.pools:
+            if p.busy:
+                tp = max(next_t[p], clock.t)
+                if tp < t_pool:
+                    t_pool, pool = tp, p
+        if pool is None and i >= n:
+            break
+        if t_arr <= t_pool:
+            clock.t = max(clock.t, t_arr)
+            tickets.append(srv.submit_request(schedule[i][1]))
+            i += 1
+            continue
+        clock.t = t_pool
+        pool.step()
+        next_t[pool] = clock.t + step_cost_s
+        if srv.steal:
+            for p in srv.pools:
+                if not p.busy and srv.router.steal_into(p):
+                    next_t[p] = max(next_t[p], clock.t) + step_cost_s
+    return tickets
+
+
+def _point_stats(tickets, snap, *, rate_rps: float, span_s: float) -> dict:
+    results = [t.result() for t in tickets]
+    lat = np.asarray([r.latency_ms for r in results])
+    return {
+        "offered_rps": rate_rps,
+        "requests": len(results),
+        "throughput_rps": len(results) / span_s if span_s > 0 else 0.0,
+        # the anytime hit bar (>= 1 segment by deadline): EDF keeps this
+        # near 1.0 deep into overload — quality degrades instead
+        "hit_rate": float(np.mean([r.deadline_hit for r in results])),
+        # the frontier's saturation signal: full plan served inside the
+        # deadline.  Collapses once offered load passes pool capacity.
+        "good_rate": float(np.mean([r.completed for r in results])),
+        "latency_p50_ms": float(np.percentile(lat, 50)),
+        "latency_p99_ms": float(np.percentile(lat, 99)),
+        "steals": snap["steals"],
+        "routed": snap["routed"],
+    }
+
+
+def run_sim_point(srv: PooledAnytimeServer, clock: ManualClock, rows, *,
+                  rate_rps: float, n_requests: int, svc_ms: float,
+                  step_cost_s: float, deadline_mix=DEADLINE_MIX,
+                  policy_mix=POLICY_MIX, arrival: str = "poisson",
+                  backend=None, seed: int = 0) -> dict:
+    """One frontier point: drive one schedule through a (pre-warmed)
+    pooled server in virtual time."""
+    schedule = make_schedule(
+        rows, rate_rps=rate_rps, n=n_requests, svc_ms=svc_ms,
+        deadline_mix=deadline_mix, policy_mix=policy_mix, arrival=arrival,
+        backend=backend, seed=seed)
+    srv.metrics.reset()
+    t_start = clock.t
+    tickets = drive_sim(srv, clock, schedule, step_cost_s)
+    span_s = max(clock.t - t_start, 1e-9)
+    point = _point_stats(tickets, srv.metrics.snapshot(),
+                         rate_rps=rate_rps, span_s=span_s)
+    point["arrival"] = arrival
+    return point
+
+
+# ---------------------------------------------------------------------------
+# Calibration: the measured cost model the simulation runs on
+# ---------------------------------------------------------------------------
+
+
+def calibrate(rt, rows, *, capacity: int, backend=None,
+              policy: str = "backward_squirrel") -> dict:
+    """Measure, on a real warmed single server, (a) the wall cost of one
+    serving-loop iteration and (b) the end-to-end service time of one
+    full batch — the constants the virtual-time frontier runs on."""
+    from repro.serve import AnytimeServer
+
+    server = AnytimeServer(rt, capacity=capacity)
+    server.serve(list(rows[:capacity]), deadline_ms=300_000.0,
+                 policy=policy, backend=backend)  # compile traces
+    server.metrics.reset()
+    t0 = time.perf_counter()
+    results = server.serve(list(rows[:capacity]), deadline_ms=300_000.0,
+                           policy=policy, backend=backend)
+    wall_s = time.perf_counter() - t0
+    steps = server._step_seq
+    assert all(r.completed for r in results)
+    step_cost_s = wall_s / max(steps, 1)
+    # iterations one request occupies a slot for (full batch admitted at
+    # once: every request rides every iteration)
+    segs_per_request = steps
+    svc_ms = segs_per_request * step_cost_s * 1e3
+    return {
+        "capacity": capacity,
+        "wall_s": wall_s,
+        "loop_iterations": steps,
+        "step_cost_s": step_cost_s,
+        "segments_per_request": segs_per_request,
+        "svc_ms": svc_ms,
+        # one pool's sustainable rate: capacity requests per batch time
+        "base_rate_rps": capacity / wall_s,
+    }
+
+
+# ---------------------------------------------------------------------------
+# The frontier sweep (sim mode) and the real-mode smoke
+# ---------------------------------------------------------------------------
+
+
+def sweep_frontier(rt, rows, *, pools_list=(1, 4), capacity: int = 8,
+                   n_requests: int = 96, rate_multipliers=RATE_MULTIPLIERS,
+                   deadline_mix=DEADLINE_MIX, policy_mix=POLICY_MIX,
+                   backend="jnp-ref", queue_shards: int = 2,
+                   hit_floor: float = 0.99, seed: int = 0,
+                   verbose: bool = True) -> dict:
+    """Sustained-throughput-vs-p99-latency frontier across pool counts.
+
+    One warmed pooled server per pool count serves every rate point
+    (virtual time; the manual clock only moves forward).  Returns the
+    per-point ladder, each configuration's knee, and the gated
+    ``pool_scaling`` ratio."""
+    cal = calibrate(rt, rows, capacity=capacity, backend=backend,
+                    policy=policy_mix[0][1])
+    base = cal["base_rate_rps"]
+    out = {"mode": "sim", "calibration": cal, "hit_floor": hit_floor,
+           "deadline_mix": [list(m) for m in deadline_mix],
+           "policy_mix": [list(m) for m in policy_mix],
+           "n_requests": n_requests, "capacity": capacity,
+           "points": [], "knee_rps": {}, "knee_multiplier": {}}
+    for pools in pools_list:
+        clock = ManualClock()
+        srv = PooledAnytimeServer(
+            rt, pools=pools, capacity=capacity, clock=clock,
+            queue_shards=queue_shards)
+        _warm(srv, rows, policy_mix, backend)
+        knee, knee_mult = 0.0, 0.0
+        for mult in rate_multipliers:
+            rate = mult * base
+            point = run_sim_point(
+                srv, clock, rows, rate_rps=rate, n_requests=n_requests,
+                svc_ms=cal["svc_ms"], step_cost_s=cal["step_cost_s"],
+                deadline_mix=deadline_mix, policy_mix=policy_mix,
+                backend=backend, seed=seed + int(mult * 100))
+            point["pools"] = pools
+            point["rate_multiplier"] = mult
+            out["points"].append(point)
+            if point["good_rate"] >= hit_floor and rate > knee:
+                knee, knee_mult = rate, mult
+            if verbose:
+                print(f"loadgen,pools,{pools},mult,{mult:.2f},"
+                      f"offered_rps,{rate:.1f},good_rate,"
+                      f"{point['good_rate']:.3f},hit_rate,"
+                      f"{point['hit_rate']:.3f},p99_ms,"
+                      f"{point['latency_p99_ms']:.2f},steals,"
+                      f"{point['steals']}", flush=True)
+        out["knee_rps"][str(pools)] = knee
+        out["knee_multiplier"][str(pools)] = knee_mult
+    lo, hi = str(min(pools_list)), str(max(pools_list))
+    lo_knee = out["knee_rps"][lo]
+    out["pool_scaling"] = (out["knee_rps"][hi] / lo_knee) if lo_knee else 0.0
+    # one bursty sanity point at the large config's knee: same mean rate,
+    # MMPP short-term pressure (reported, not gated)
+    clock = ManualClock()
+    srv = PooledAnytimeServer(
+        rt, pools=max(pools_list), capacity=capacity, clock=clock,
+        queue_shards=queue_shards)
+    _warm(srv, rows, policy_mix, backend)
+    burst_rate = max(out["knee_rps"][hi], base)
+    burst = run_sim_point(
+        srv, clock, rows, rate_rps=burst_rate, n_requests=n_requests,
+        svc_ms=cal["svc_ms"], step_cost_s=cal["step_cost_s"],
+        deadline_mix=deadline_mix, policy_mix=policy_mix, arrival="mmpp",
+        backend=backend, seed=seed)
+    burst["pools"] = max(pools_list)
+    out["burst_point"] = burst
+    if verbose:
+        print(f"loadgen,mmpp,pools,{burst['pools']},offered_rps,"
+              f"{burst_rate:.1f},good_rate,{burst['good_rate']:.3f},"
+              f"p99_ms,{burst['latency_p99_ms']:.2f}", flush=True)
+        print(f"loadgen,knee_rps,{out['knee_rps']},pool_scaling,"
+              f"{out['pool_scaling']:.2f}", flush=True)
+    return out
+
+
+def run_real(rt, rows, *, pools: int, capacity: int = 8,
+             n_requests: int = 32, rate_rps: float = 50.0,
+             deadline_ms: float = 250.0, loop: str = "open",
+             concurrency: int = 16, backend="jnp-ref",
+             queue_shards: int = 2, seed: int = 0) -> dict:
+    """Wall-clock smoke: threaded pooled serving under a paced stream.
+
+    ``loop="open"`` submits at the schedule's arrival offsets no matter
+    how completions lag; ``loop="closed"`` caps in-flight requests at
+    ``concurrency``.  Exercises the real driver/steal machinery (the
+    ``serve-scale`` CI job runs this under 8 emulated devices)."""
+    rng = random.Random(seed)
+    srv = PooledAnytimeServer(rt, pools=pools, capacity=capacity,
+                              queue_shards=queue_shards)
+    with srv:
+        _warm(srv, rows, ((1.0, "backward_squirrel"),), backend)
+        t0 = time.perf_counter()
+        tickets = []
+        if loop == "open":
+            times = poisson_arrivals(rate_rps, n_requests, rng)
+            for i, t_arr in enumerate(times):
+                lag = t0 + t_arr - time.perf_counter()
+                if lag > 0:
+                    time.sleep(lag)
+                tickets.append(srv.submit(
+                    rows[i % len(rows)], deadline_ms, backend=backend))
+            results = [t.result(timeout=120.0) for t in tickets]
+        elif loop == "closed":
+            results, inflight, i = [], [], 0
+            while i < n_requests or inflight:
+                while i < n_requests and len(inflight) < concurrency:
+                    inflight.append(srv.submit(
+                        rows[i % len(rows)], deadline_ms, backend=backend))
+                    i += 1
+                results.append(inflight.pop(0).result(timeout=120.0))
+        else:
+            raise ValueError(f"loop must be 'open' or 'closed', got {loop!r}")
+        wall_s = time.perf_counter() - t0
+        snap = srv.metrics.snapshot()
+    lat = np.asarray([r.latency_ms for r in results])
+    return {
+        "mode": "real", "loop": loop, "pools": pools,
+        "requests": len(results), "wall_s": wall_s,
+        "throughput_rps": len(results) / wall_s,
+        "hit_rate": float(np.mean([r.deadline_hit for r in results])),
+        "latency_p50_ms": float(np.percentile(lat, 50)),
+        "latency_p99_ms": float(np.percentile(lat, 99)),
+        "steals": snap["steals"],
+        "routed": snap["routed"],
+        "errors": sum(1 for r in results if r.error is not None),
+    }
+
+
+def run(dataset: str = "magic", n_trees: int = 6, depth: int = 5,
+        capacity: int = 8, n_requests: int = 96, pools_list=(1, 4),
+        backend: str = "jnp-ref", seed: int = 0,
+        min_pool_scaling: float = 3.0, hit_floor: float = 0.99,
+        gate: bool = True, verbose: bool = True) -> dict:
+    """Frontier sweep + gate: >= ``min_pool_scaling`` x knee scaling from
+    the smallest to the largest pool count at equal (>= ``hit_floor``)
+    hit rate, or the build fails."""
+    fa, pp, yor, te, yte = build_pipeline(
+        dataset, n_trees, depth, seed=seed, n_order=200, n_test=128)
+    rt = runtime_for(fa, pp, yor)
+    out = sweep_frontier(
+        rt, te, pools_list=pools_list, capacity=capacity,
+        n_requests=n_requests, backend=backend, hit_floor=hit_floor,
+        seed=seed, verbose=verbose)
+    if gate:
+        lo, hi = str(min(pools_list)), str(max(pools_list))
+        assert out["knee_rps"][lo] > 0, (
+            f"single-pool config never reached good-rate >= {hit_floor} — "
+            "the rate ladder starts above its capacity (re-calibrate)")
+        assert out["pool_scaling"] >= min_pool_scaling, (
+            f"{hi}-pool knee only {out['pool_scaling']:.2f}x the {lo}-pool "
+            f"knee at >= {hit_floor:.0%} good rate "
+            f"(gate: >= {min_pool_scaling}x)")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="sim", choices=("sim", "real"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CI-sized)")
+    ap.add_argument("--dataset", default="magic")
+    ap.add_argument("--pools", type=int, default=4,
+                    help="real mode: pool count")
+    ap.add_argument("--loop", default="open", choices=("open", "closed"),
+                    help="real mode: open- vs closed-loop pacing")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="real mode: offered requests/sec")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.mode == "sim":
+        n = args.requests or (64 if args.smoke else 96)
+        out = run(dataset=args.dataset, n_requests=n, seed=args.seed)
+        print(f"loadgen,gate,ok,pool_scaling,{out['pool_scaling']:.2f}")
+    else:
+        fa, pp, yor, te, yte = build_pipeline(
+            args.dataset, 6, 5, seed=args.seed, n_order=200, n_test=128)
+        rt = runtime_for(fa, pp, yor)
+        n = args.requests or (24 if args.smoke else 64)
+        out = run_real(rt, te, pools=args.pools, n_requests=n,
+                       rate_rps=args.rate, loop=args.loop, seed=args.seed)
+        assert out["errors"] == 0, f"{out['errors']} request(s) errored"
+        print(f"loadgen,real,{args.loop},pools,{out['pools']},"
+              f"throughput_rps,{out['throughput_rps']:.1f},hit_rate,"
+              f"{out['hit_rate']:.3f},p99_ms,{out['latency_p99_ms']:.2f},"
+              f"steals,{out['steals']}")
+
+
+if __name__ == "__main__":
+    main()

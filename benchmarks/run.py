@@ -146,6 +146,15 @@ def main() -> None:
     results["serve"] = bench_serve.run(
         n_trees=6 if small else 10, depth=5 if small else 6,
         capacity=8 if small else 16, n_requests=24 if small else 48)
+
+    print("== Serving frontier: pooled tier under open-loop load "
+          "(virtual time, gated >= 3x pool scaling) ==", flush=True)
+    from benchmarks import loadgen
+
+    # gated: the 4-pool knee (highest offered rate at >= 99% full-plan
+    # completion inside deadline) must be >= 3x the single-pool knee
+    results["serve"]["frontier"] = loadgen.run(
+        n_requests=64 if small else 96)
     _dump(args.serve_out, results["serve"])
 
     results["total_s"] = time.perf_counter() - t0

@@ -51,6 +51,23 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     return make_mesh((data, model), ("data", "model"))
 
 
+def make_single_device_mesh(device) -> Mesh:
+    """Degenerate 1x1 ("data", "model") mesh pinned to ONE device.
+
+    The serving tier's per-device pools use this so every pool can run
+    the same ``sharded`` executor code path — ``batch_pspec`` placement,
+    replicated tables — while all of its dispatches land on its own
+    device.  Built directly (not via ``jax.make_mesh``, which picks
+    devices itself) so the caller controls WHICH device."""
+    import numpy as np
+
+    devices = np.asarray([device], dtype=object).reshape(1, 1)
+    auto = _auto(2)
+    if auto is None:
+        return Mesh(devices, ("data", "model"))
+    return Mesh(devices, ("data", "model"), axis_types=auto)
+
+
 def batch_axes(mesh: Mesh) -> tuple[str, ...]:
     """Mesh axes that shard the batch dimension."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -11,6 +11,14 @@ accuracy of the predictions actually delivered at the deadline.
         --capacity 16 --policy backward_squirrel \
         --threaded --admission degrade
 
+With ``--pools N`` (N > 1) the stream serves through the multi-device
+tier instead — :class:`repro.serve.PooledAnytimeServer`: one
+device-pinned pool per device (wrapping when N exceeds the device
+count), a backlog-aware router, and segment-boundary work stealing;
+the summary then also reports routed/stolen counts.  Pair with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU to
+emulate a multi-device host.
+
 With ``--trace PATH`` the run records the full span timeline
 (:mod:`repro.obs`) and writes Chrome trace-event JSON on exit — load it
 at https://ui.perfetto.dev, or feed it to ``python -m tools.obs report``
@@ -25,7 +33,7 @@ import numpy as np
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.obs import Tracer, write_chrome_trace
 from repro.schedule import AnytimeRuntime, ForestProgram
-from repro.serve import AdmissionRejected, AnytimeServer
+from repro.serve import AdmissionRejected, AnytimeServer, PooledAnytimeServer
 
 
 def main():
@@ -36,6 +44,12 @@ def main():
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--deadline-ms", type=float, default=5.0)
     ap.add_argument("--capacity", type=int, default=16)
+    ap.add_argument("--pools", type=int, default=1,
+                    help="> 1 serves through the pooled multi-device tier "
+                         "(per-device slot pools + router + work stealing)")
+    ap.add_argument("--queue-shards", type=int, default=1,
+                    help="admission-queue shards per pool (lock striping "
+                         "for concurrent submitters)")
     ap.add_argument("--policy", default="backward_squirrel")
     ap.add_argument("--backend", default=None,
                     help="jnp-ref | pallas | sharded (default: auto)")
@@ -65,10 +79,19 @@ def main():
     rt = AnytimeRuntime(
         ForestProgram(rf.as_arrays(), y_order=yor[:300], X_order=orx[:300]))
     tracer = Tracer(margins=True) if args.trace else None
-    server = AnytimeServer(rt, capacity=args.capacity,
-                           admission=args.admission,
-                           admission_k=args.admission_k,
-                           tracer=tracer)
+    if args.pools > 1:
+        server = PooledAnytimeServer(rt, pools=args.pools,
+                                     capacity=args.capacity,
+                                     admission=args.admission,
+                                     admission_k=args.admission_k,
+                                     tracer=tracer,
+                                     queue_shards=args.queue_shards)
+    else:
+        server = AnytimeServer(rt, capacity=args.capacity,
+                               admission=args.admission,
+                               admission_k=args.admission_k,
+                               tracer=tracer,
+                               queue_shards=args.queue_shards)
     if args.threaded:
         server.start()
 
@@ -102,9 +125,12 @@ def main():
     acc = float((preds == np.asarray(kept_labels)).mean())
     snap = server.metrics.snapshot()
     mode = "threaded driver" if args.threaded else "cooperative loop"
+    tier = f"{args.pools} pools, " if args.pools > 1 else ""
     print(f"served {len(results)} requests @ {args.deadline_ms} ms deadline "
-          f"(policy={args.policy}, capacity={args.capacity}, {mode}, "
+          f"(policy={args.policy}, capacity={args.capacity}, {tier}{mode}, "
           f"admission={args.admission})")
+    if args.pools > 1:
+        print(f"  routed / stolen       {snap['routed']} / {snap['steals']}")
     print(f"  accuracy-at-deadline  {acc:.4f}")
     print(f"  deadline-hit-rate     {snap['deadline_hit_rate']:.3f}")
     print(f"  steps-at-deadline     p50={snap['steps_at_deadline']['p50']:.0f} "

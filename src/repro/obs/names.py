@@ -24,6 +24,8 @@ SPAN_NAMES: dict[str, str] = {
                         "(joins the batch at the next segment boundary)",
     "serve.deliver": "result finalized onto its ticket "
                      "(args carry the deadline-budget attribution)",
+    "serve.route": "router placed a request on a pool "
+                   "(at submit, or after a steal re-homed it)",
     # spans (ph = "X")
     "serve.step": "one dispatch -> admit -> harvest loop iteration",
     "serve.dispatch": "one lane's fused masked segment dispatch "
@@ -32,6 +34,9 @@ SPAN_NAMES: dict[str, str] = {
     "serve.harvest": "one lane's boundary materialization (device sync) "
                      "+ slot retirement",
     "serve.flush": "shutdown flush answering every admitted request",
+    "serve.steal": "idle pool pulling one request from a loaded sibling "
+                   "at a segment-boundary-aligned point "
+                   "(args: victim, thief, moved)",
     # counters (ph = "C")
     "serve.margin": "per-slot readout margin (top1 - top2 probability) at "
                     "a segment boundary — the online NMA trajectory",

@@ -65,6 +65,7 @@ __all__ = [
     "get_backend",
     "list_backends",
     "default_backend",
+    "resolve_device",
     "ExecutorCore",
     "ForestExecutor",
     "JnpRefExecutor",
@@ -265,6 +266,23 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "jnp-ref"
 
 
+def resolve_device(pin_device) -> jax.Device:
+    """Normalize a ``pin_device`` backend option to a ``jax.Device``.
+
+    Accepts a device object (passed through) or an integer index into
+    ``jax.devices()`` — the index form is what serving configs and CLIs
+    carry, since device objects aren't serializable."""
+    if isinstance(pin_device, int):
+        devices = jax.devices()
+        if not 0 <= pin_device < len(devices):
+            raise ValueError(
+                f"pin_device index {pin_device} out of range; "
+                f"{len(devices)} device(s) visible"
+            )
+        return devices[pin_device]
+    return pin_device
+
+
 # ---------------------------------------------------------------------------
 # Executors: the ExecutorCore interface (the ExecutionBackend protocol).
 # ---------------------------------------------------------------------------
@@ -295,7 +313,17 @@ class ExecutorCore:
 
     name = "abstract"
 
-    def __init__(self, device: engine.DeviceForest, X, plan: StepPlan):
+    def __init__(self, device: engine.DeviceForest, X, plan: StepPlan,
+                 pin_device=None):
+        if pin_device is not None:
+            pin_device = resolve_device(pin_device)
+            # commit the forest tables AND the input batch to the pinned
+            # device: a serving tier runs one executor per device, and
+            # every downstream dispatch must land there, not on jax's
+            # process-default device
+            device = jax.device_put(device, pin_device)
+            X = jax.device_put(jnp.asarray(X), pin_device)
+        self._pin = pin_device
         self.device = device
         self.X = jnp.asarray(X)
         self.plan = plan
@@ -317,7 +345,8 @@ class ExecutorCore:
         self._traced_shapes: set[tuple] = set()
 
     def init_state(self) -> jax.Array:
-        return engine.init_state(self.device, self.batch)
+        state = engine.init_state(self.device, self.batch)
+        return state if self._pin is None else jax.device_put(state, self._pin)
 
     # -- the single plan-segment entry point -----------------------------
 
@@ -436,9 +465,12 @@ class ExecutorCore:
 
     def place_slots(self, *arrays) -> tuple:
         """Placement hook for slot-batch state arrays whose leading dim
-        is the slot axis (identity by default; the sharded executor puts
-        the slot axis on the mesh).  Always returns a tuple."""
-        return arrays
+        is the slot axis (identity by default, re-committed to the
+        pinned device when one was given; the sharded executor puts the
+        slot axis on the mesh).  Always returns a tuple."""
+        if self._pin is None:
+            return arrays
+        return tuple(jax.device_put(a, self._pin) for a in arrays)
 
     # -- legacy shims (pre-ExecutorCore call surface) --------------------
 
@@ -477,8 +509,8 @@ class JnpRefExecutor(ExecutorCore):
     fuses ``predict_from_state`` into the same XLA computation.
     """
 
-    def __init__(self, device, X, plan):
-        super().__init__(device, X, plan)
+    def __init__(self, device, X, plan, pin_device=None):
+        super().__init__(device, X, plan, pin_device=pin_device)
 
         @partial(jax.jit, static_argnums=(4, 5))
         def _run(idx, X, units, mask, length, readout):
@@ -532,8 +564,9 @@ class PallasExecutor(ExecutorCore):
     def __init__(self, device, X, plan, *, block_b: Optional[int] = None,
                  block_m: Optional[int] = None,
                  interpret: Optional[bool] = None,
-                 depth_levels: Optional[int] = None):
-        super().__init__(device, X, plan)
+                 depth_levels: Optional[int] = None,
+                 pin_device=None):
+        super().__init__(device, X, plan, pin_device=pin_device)
         tuned = ktuning.executor_params()
         block_b = int(tuned.get("block_b", 256) if block_b is None else block_b)
         block_m = int(tuned.get("block_m", 512) if block_m is None else block_m)
@@ -652,10 +685,18 @@ class ShardedExecutor(JnpRefExecutor):
     count are padded internally and sliced at read-out.
     """
 
-    def __init__(self, device, X, plan, *, mesh=None):
-        self.mesh = mesh if mesh is not None else mesh_lib.make_host_mesh(
-            data=len(jax.devices())
-        )
+    def __init__(self, device, X, plan, *, mesh=None, pin_device=None):
+        if mesh is not None:
+            self.mesh = mesh
+        elif pin_device is not None:
+            # device-pinned executor selection for the serving tier:
+            # a per-device pool gets a degenerate one-device mesh, so
+            # the SAME backend_opts dict works for every pool and the
+            # mesh placement machinery does the committing
+            self.mesh = mesh_lib.make_single_device_mesh(
+                resolve_device(pin_device))
+        else:
+            self.mesh = mesh_lib.make_host_mesh(data=len(jax.devices()))
         self._shards = mesh_lib.n_batch_shards(self.mesh)
         X = jnp.asarray(X)
         self._true_batch = int(X.shape[0])

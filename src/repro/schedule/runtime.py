@@ -194,10 +194,18 @@ class SessionBatch:
             # slots divide evenly (a few extra recyclable slots, never
             # fewer than asked for)
             from repro.launch import mesh as mesh_lib
+            from repro.schedule.backends import resolve_device
 
             mesh = backend_opts.get("mesh")
             if mesh is None:
-                mesh = mesh_lib.make_host_mesh(data=len(jax.devices()))
+                pin = backend_opts.get("pin_device")
+                if pin is not None:
+                    # device-pinned pool: a degenerate one-device mesh,
+                    # NOT the all-devices host mesh
+                    mesh = mesh_lib.make_single_device_mesh(
+                        resolve_device(pin))
+                else:
+                    mesh = mesh_lib.make_host_mesh(data=len(jax.devices()))
                 backend_opts = {**backend_opts, "mesh": mesh}
             shards = mesh_lib.n_batch_shards(mesh)
             capacity += (-capacity) % shards
@@ -217,8 +225,11 @@ class SessionBatch:
         self.dispatched_lengths: set[int] = set()
         # admissions buffer host-side and flush as ONE fused scatter at
         # the next dispatch/readout — per-slot eager device writes would
-        # cost a dispatch per admitted request
+        # cost a dispatch per admitted request.  _pending_idx holds the
+        # resumed index rows of mid-flight (work-stolen) admissions;
+        # absent slots start from the all-roots state.
         self._pending_rows: dict[int, np.ndarray] = {}
+        self._pending_idx: dict[int, np.ndarray] = {}
 
     @property
     def total_steps(self) -> int:
@@ -236,7 +247,14 @@ class SessionBatch:
         step budget."""
         return np.flatnonzero(self.active & (self.pos < self.budget))
 
-    def admit(self, slot: int, x_row, budget: Optional[int] = None) -> None:
+    def admit(
+        self,
+        slot: int,
+        x_row,
+        budget: Optional[int] = None,
+        idx_row=None,
+        pos: int = 0,
+    ) -> None:
         """Recycle ``slot`` for a new request: reset its index row to the
         all-roots state and install its input row.  Must be called
         between dispatches (always true for host callers); the device
@@ -245,7 +263,17 @@ class SessionBatch:
         ``budget`` caps how many plan steps the slot may execute
         (``admission="degrade"``): the slot stops dispatching exactly at
         ``budget`` steps — an exact prefix boundary — and is then ready
-        to retire.  None = the full plan."""
+        to retire.  None = the full plan.
+
+        ``idx_row``/``pos`` resume a MID-FLIGHT request (work stealing
+        between pools): the slot starts from the given index-array row
+        at plan position ``pos`` instead of the all-roots state.  The
+        index row must be exactly the state a solo session holds after
+        ``pos`` steps of this batch's plan — since node indices are a
+        deterministic function of (input row, plan prefix), the resumed
+        slot's every future boundary readout stays bit-identical to an
+        unstolen run, which is what preserves the parity guarantee
+        across pools sharing a content-addressed plan."""
         if self.active[slot]:
             raise ValueError(f"slot {slot} is still occupied")
         x_row = np.asarray(x_row, dtype=self.X.dtype).reshape(-1)
@@ -255,13 +283,26 @@ class SessionBatch:
                 f"{self.X.shape[1]}"
             )
         total = self.plan.total_steps
+        pos = int(pos)
+        if pos < 0 or pos > total:
+            raise ValueError(f"resume position {pos} outside [0, {total}]")
+        if pos and idx_row is None:
+            raise ValueError("resuming at pos > 0 requires idx_row")
         if budget is None:
             budget = total
         budget = int(budget)
         if budget < 1:
             raise ValueError(f"budget must be >= 1 step, got {budget}")
+        if idx_row is not None:
+            idx_row = np.asarray(idx_row).reshape(-1)
+            if idx_row.shape[0] != int(self.idx.shape[1]):
+                raise ValueError(
+                    f"resumed index row has {idx_row.shape[0]} trees, batch "
+                    f"expects {int(self.idx.shape[1])}"
+                )
+            self._pending_idx[slot] = idx_row
         self._pending_rows[slot] = x_row
-        self.pos[slot] = 0
+        self.pos[slot] = pos
         self.budget[slot] = min(budget, total)
         self.active[slot] = True
 
@@ -269,15 +310,45 @@ class SessionBatch:
         self.active[slot] = False
         self.budget[slot] = self.plan.total_steps
         self._pending_rows.pop(slot, None)
+        self._pending_idx.pop(slot, None)
+
+    def pending_admission(self, slot: int) -> bool:
+        """Whether ``slot``'s admission is still buffered host-side (its
+        device state is stale until the next flush) — a pending slot can
+        be re-queued by :meth:`cancel_admit` at zero device cost."""
+        return slot in self._pending_rows
+
+    def cancel_admit(self, slot: int) -> None:
+        """Undo a still-buffered admission (work stealing: a queued-but-
+        never-dispatched slot migrates as a plain waiting request).  Only
+        valid while :meth:`pending_admission` holds."""
+        if slot not in self._pending_rows:
+            raise ValueError(
+                f"slot {slot} has no pending admission to cancel")
+        self._pending_rows.pop(slot)
+        self._pending_idx.pop(slot, None)
+        self.pos[slot] = 0
+        self.budget[slot] = self.plan.total_steps
+        self.active[slot] = False
 
     def _flush_admissions(self) -> None:
         if not self._pending_rows:
             return
         slots = np.asarray(sorted(self._pending_rows), dtype=np.int32)
         rows = np.stack([self._pending_rows[int(s)] for s in slots])
+        # fresh admissions reset to the all-roots state; resumed (stolen)
+        # admissions install their exact prefix state — ONE fused scatter
+        # either way
+        idx_rows = np.zeros(
+            (len(slots), int(self.idx.shape[1])), dtype=self.idx.dtype)
+        for i, s in enumerate(slots):
+            resumed = self._pending_idx.get(int(s))
+            if resumed is not None:
+                idx_rows[i] = resumed
         self._pending_rows.clear()
+        self._pending_idx.clear()
         self.X = self.X.at[slots].set(jnp.asarray(rows))
-        self.idx = self.idx.at[slots].set(0)
+        self.idx = self.idx.at[slots].set(jnp.asarray(idx_rows))
         self.X, self.idx = self.executor.place_slots(self.X, self.idx)
 
     def advance_segment(self, readout: bool = False):

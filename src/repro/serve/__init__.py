@@ -19,7 +19,12 @@ requests multiplexed onto one device runtime.
   thread that owns that loop in threaded mode, plus
   :func:`as_completed` over tickets;
 * :mod:`repro.serve.metrics` — deadline-hit-rate, p50/p99
-  steps-at-deadline, slot occupancy, requests/sec, degraded requests.
+  steps-at-deadline, slot occupancy, requests/sec, degraded requests
+  (bounded-reservoir percentiles — snapshots stay O(reservoir));
+* :mod:`repro.serve.pool` / :mod:`repro.serve.router` — the multi-device
+  tier: :class:`PooledAnytimeServer` composes one device-pinned pool per
+  device behind a backlog-aware :class:`Router` with segment-boundary
+  work stealing.
 
 Quickstart (threaded — the loop runs on a background driver; callers
 overlap their own work with device execution)::
@@ -40,9 +45,11 @@ Cooperative (no thread — the caller pumps the loop)::
     print(server.metrics.snapshot())
 """
 from repro.serve.driver import DriverDead, ServeDriver, as_completed
-from repro.serve.metrics import ServeMetrics
+from repro.serve.metrics import Reservoir, ServeMetrics
+from repro.serve.pool import PooledAnytimeServer
 from repro.serve.queue import AdmissionQueue, AdmissionRejected, Request, Result
-from repro.serve.scheduler import ForestLane, Scheduler, SessionLane
+from repro.serve.router import Router
+from repro.serve.scheduler import ForestLane, Scheduler, SessionLane, StealRecord
 from repro.serve.server import AnytimeServer, Ticket
 
 __all__ = [
@@ -51,12 +58,16 @@ __all__ = [
     "AnytimeServer",
     "DriverDead",
     "ForestLane",
+    "PooledAnytimeServer",
     "Request",
+    "Reservoir",
     "Result",
+    "Router",
     "Scheduler",
     "ServeDriver",
     "ServeMetrics",
     "SessionLane",
+    "StealRecord",
     "Ticket",
     "as_completed",
 ]

@@ -12,11 +12,15 @@ semantics (``add_done_callback``, blocking ``result(timeout=)``, and
 
 The driver holds the server's lock only for the duration of one loop
 iteration, so submissions interleave with (at worst one segment of)
-device execution.  When the server goes idle the thread parks on the
-server's condition variable until the next submission — no busy spin.
-A driver that dies on an unexpected exception records it, wakes every
-blocked ``result()`` caller, and the error propagates to them (and to
-the next ``submit``) instead of silently stalling all deadlines.
+device execution.  When the server goes idle the thread first offers
+itself for **work stealing** (``server.on_idle`` — a pooled tier's
+router pulls a request over from an overloaded sibling pool), then
+parks on the server's dedicated wake condition (``server._wake``) until
+the next submission — no busy spin, and no contention with submitters
+on the main lock.  A driver that dies on an unexpected exception
+records it, wakes every blocked ``result()`` caller, and the error
+propagates to them (and to the next ``submit``) instead of silently
+stalling all deadlines.
 """
 from __future__ import annotations
 
@@ -73,6 +77,8 @@ class ServeDriver(threading.Thread):
         self._stop_requested.set()
         with self._server._cond:
             self._server._cond.notify_all()
+        with self._server._wake:
+            self._server._wake.notify_all()
 
     # -- the loop ----------------------------------------------------------
 
@@ -81,15 +87,25 @@ class ServeDriver(threading.Thread):
         try:
             while not self._stop_requested.is_set():
                 with server._cond:
-                    if not server.busy:
-                        if self._stop_requested.is_set():
-                            break
-                        # park until submit()/stop() notifies (timeout is
-                        # a backstop, not a poll — see IDLE_WAIT_S)
-                        server._cond.wait(self._idle_wait_s)
-                        if not server.busy:
-                            continue
-                server.step()
+                    busy = server.busy
+                if busy:
+                    server.step()
+                    continue
+                if self._stop_requested.is_set():
+                    break
+                # idle: offer this pool for work stealing before parking
+                # (called WITHOUT any lock held — the hook talks to
+                # sibling pools' locks)
+                on_idle = server.on_idle
+                if on_idle is not None and on_idle():
+                    continue
+                with server._wake:
+                    # re-check the lock-free queued hint under _wake: a
+                    # submit lands in the shard mirrors before it
+                    # notifies, so the wakeup cannot be lost (timeout is
+                    # a backstop for manual clocks, not a poll)
+                    if not server.has_queued and not self._stop_requested.is_set():
+                        server._wake.wait(self._idle_wait_s)
         except BaseException as e:  # noqa: BLE001 - must surface to callers
             self.exception = e
             with server._cond:

@@ -8,14 +8,24 @@ server under load.
   delivered requests: how deep into the step order requests get before
   their deadlines fire (the anytime-quality proxy the paper's NMA
   metric integrates).
+* **latency** — p50/p99/mean submit→delivery latency in ms, the y-axis
+  of the throughput-vs-p99 frontier the load generator sweeps.
 * **slot occupancy** — mean fraction of slot capacity doing useful work
   per dispatch (batching efficiency).
 * **requests/sec** — delivered requests over the first-submit →
   last-delivery wall span.
+
+Percentile populations are **bounded reservoirs** (Vitter's Algorithm
+R): below ``reservoir`` deliveries the sample IS the population and
+percentiles are exact; beyond it each delivery keeps a uniform
+probability of being represented and ``snapshot()`` stays O(reservoir)
+— a load generator can push millions of requests through one
+``ServeMetrics`` without snapshot cost or memory growing with traffic.
 """
 from __future__ import annotations
 
 import collections
+import random
 import threading
 from typing import Optional
 
@@ -24,14 +34,53 @@ import numpy as np
 from repro.obs.attribution import summarize as _summarize_attribution
 
 
-def _pctls(values: collections.deque) -> dict:
+class Reservoir:
+    """Bounded uniform sample of an unbounded delivery stream
+    (Algorithm R, seeded — identical streams give identical samples).
+
+    Not internally locked: every instance lives inside a
+    :class:`ServeMetrics` and is only touched under its lock.
+    """
+
+    __slots__ = ("capacity", "count", "_values", "_rng")
+
+    def __init__(self, capacity: int, seed: int = 0):
+        if capacity < 1:
+            raise ValueError(f"reservoir capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)   # guarded-by: ServeMetrics._lock
+        self.count = 0                  # guarded-by: ServeMetrics._lock
+        self._values: list[float] = []  # guarded-by: ServeMetrics._lock
+        self._rng = random.Random(seed)  # guarded-by: ServeMetrics._lock
+
+    def add(self, value: float) -> None:  # holds: ServeMetrics._lock
+        self.count += 1
+        if len(self._values) < self.capacity:
+            self._values.append(value)
+            return
+        j = self._rng.randrange(self.count)
+        if j < self.capacity:
+            self._values[j] = value
+
+    @property
+    def exact(self) -> bool:  # holds: ServeMetrics._lock
+        """True while every observation is still in the sample — below
+        capacity the reported percentiles are exact, not estimates."""
+        return self.count <= self.capacity
+
+    def values(self) -> list[float]:  # holds: ServeMetrics._lock
+        return list(self._values)
+
+    def __len__(self) -> int:  # holds: ServeMetrics._lock
+        return len(self._values)
+
+
+def _pctls(values: list) -> dict:
     """p50/p99/mean of a delivery population — well-defined at EVERY
-    window size: an empty window reports zeros (not NaN), a single
-    delivery reports that delivery at both percentiles (nearest-rank
-    semantics, no interpolation surprises)."""
+    population size: an empty population reports zeros (not NaN), a
+    single delivery reports that delivery at both percentiles."""
     if not values:
         return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
-    arr = np.asarray(list(values), dtype=np.float64)
+    arr = np.asarray(values, dtype=np.float64)
     return {
         "p50": float(np.percentile(arr, 50)),
         "p99": float(np.percentile(arr, 99)),
@@ -44,17 +93,23 @@ class ServeMetrics:
 
     ``reset()`` zeroes everything — call it after a warmup pass so
     snapshots describe the measured stream, not the jit compiles.  The
-    steps-at-deadline percentile population is a bounded window
-    (``window`` most recent deliveries) so a long-lived server's
-    memory stays flat; scalar counters run unbounded.
+    percentile populations (steps/budget-at-deadline, latency) are
+    bounded :class:`Reservoir` samples of ``reservoir`` elements each;
+    scalar counters run unbounded.  ``window`` bounds only the traced
+    attribution deque (those carry per-request span structure and are
+    summarized, not percentiled).
+
+    One ``ServeMetrics`` may be shared by every pool of a
+    :class:`~repro.serve.pool.PooledAnytimeServer` — its internal lock
+    is the only synchronization recorders need.
     """
 
-    def __init__(self, window: int = 100_000):
+    def __init__(self, window: int = 100_000, reservoir: int = 4096):
         self._window = int(window)  # unguarded: immutable after __init__
+        self._reservoir = int(reservoir)  # unguarded: immutable after __init__
         # internal lock: the threaded driver records deliveries while
-        # monitoring threads call snapshot() — deque iteration during a
-        # concurrent append raises, so all access serializes here (the
-        # server lock does NOT cover callers of snapshot())
+        # monitoring threads call snapshot() — all access serializes
+        # here (the server lock does NOT cover callers of snapshot())
         self._lock = threading.Lock()
         self.reset()
 
@@ -69,21 +124,24 @@ class ServeMetrics:
         self.deadline_hits = 0       # guarded-by: _lock
         self.degraded_requests = 0   # guarded-by: _lock
         self.dispatches = 0          # guarded-by: _lock
-        self.steps_at_deadline: collections.deque[int] = collections.deque(
-            maxlen=self._window)     # guarded-by: _lock
+        self.steps_at_deadline = Reservoir(self._reservoir, seed=1)   # guarded-by: _lock
         # effective step budgets of delivered requests (== total_steps
         # when not degraded): the admission="degrade" frontier metric
-        self.budget_at_deadline: collections.deque[int] = collections.deque(
-            maxlen=self._window)     # guarded-by: _lock
+        self.budget_at_deadline = Reservoir(self._reservoir, seed=2)  # guarded-by: _lock
+        # submit→delivery latency in ms — the frontier's p99 axis
+        self.latency_ms = Reservoir(self._reservoir, seed=3)          # guarded-by: _lock
         # sums of active-slot counts / capacities over dispatches
         self._occ_num = 0.0          # guarded-by: _lock
         self._occ_den = 0.0          # guarded-by: _lock
         self._t_first_submit: Optional[float] = None    # guarded-by: _lock
         self._t_last_delivery: Optional[float] = None   # guarded-by: _lock
         # deadline-budget attributions from a traced server (window-
-        # bounded like the percentile populations; empty when untraced)
+        # bounded; empty when untraced)
         self.attributions: collections.deque = collections.deque(
             maxlen=self._window)     # guarded-by: _lock
+        # deadline-aware router bookkeeping (multi-pool tier only)
+        self.routed = 0              # guarded-by: _lock
+        self.steals = 0              # guarded-by: _lock
 
     def record_submit(self, now: float) -> None:
         with self._lock:
@@ -97,15 +155,28 @@ class ServeMetrics:
             self._occ_num += n_active
             self._occ_den += capacity
 
+    def record_route(self) -> None:
+        """One request placed onto a pool by the multi-pool router."""
+        with self._lock:
+            self.routed += 1
+
+    def record_steal(self) -> None:
+        """One request migrated between pools by work stealing."""
+        with self._lock:
+            self.steals += 1
+
     def _record_delivery_locked(self, result, now: float) -> None:  # holds: _lock
         self.delivered += 1
         self.completed += bool(result.completed)
         self.deadline_hits += bool(result.deadline_hit)
         self.degraded_requests += bool(getattr(result, "degraded", False))
-        self.steps_at_deadline.append(int(result.steps_completed))
+        self.steps_at_deadline.add(int(result.steps_completed))
         budget = getattr(result, "budget_steps", None)
-        self.budget_at_deadline.append(
+        self.budget_at_deadline.add(
             int(budget) if budget is not None else int(result.total_steps))
+        latency = getattr(result, "latency_ms", None)
+        if latency is not None and np.isfinite(latency):
+            self.latency_ms.add(float(latency))
         self._t_last_delivery = now
 
     def record_delivery(self, result, now: float) -> None:
@@ -144,11 +215,17 @@ class ServeMetrics:
             "deadline_hit_rate": (
                 self.deadline_hits / self.delivered if self.delivered else 0.0
             ),
-            "steps_at_deadline": _pctls(self.steps_at_deadline),
-            "budget_at_deadline": _pctls(self.budget_at_deadline),
+            "steps_at_deadline": _pctls(self.steps_at_deadline.values()),
+            "budget_at_deadline": _pctls(self.budget_at_deadline.values()),
+            "latency_ms": _pctls(self.latency_ms.values()),
+            "percentiles_exact": (
+                self.steps_at_deadline.exact and self.latency_ms.exact
+            ),
             "slot_occupancy": self._occ_num / self._occ_den if self._occ_den else 0.0,
             "dispatches": self.dispatches,
             "wall_s": wall,
             "requests_per_sec": self.delivered / wall if wall > 0 else 0.0,
+            "routed": self.routed,
+            "steals": self.steals,
             "attribution": _summarize_attribution(self.attributions),
         }

@@ -1,0 +1,305 @@
+"""`PooledAnytimeServer` — the multi-device serving tier.
+
+One facade composes N independent :class:`~repro.serve.server.
+AnytimeServer` *pools*, each pinned to one device (``backend_opts
+["pin_device"]`` — forest tables, inputs, and slot state committed to
+that device; the ``sharded`` backend runs on a degenerate one-device
+mesh so every pool executes the same code path as the single-server
+tier).  Requests enter through a :class:`~repro.serve.router.Router`
+that places each submit on the least-backlogged pool, and idle pools
+*steal* whole requests from loaded siblings at segment-boundary-aligned
+points, so one hot pool cannot strand capacity elsewhere.
+
+Shared across pools — the properties that make N pools look like one
+server:
+
+* ONE request-id counter (ids stay globally unique, so EDF entries and
+  the pending-ticket registry never collide across pools);
+* ONE :class:`~repro.serve.metrics.ServeMetrics` (tier-wide hit rate /
+  percentiles / steal counts);
+* ONE pending-ticket map + lock, rebound onto every pool before serving
+  starts — a stolen request DELIVERS on a different pool than it was
+  submitted to, and its ticket must be found there;
+* ONE tracer (per-pool events disambiguate via ``track_prefix`` lane
+  tracks and the ``serve.steal``/``serve.route`` events);
+* this facade's condition variable: tickets are constructed with the
+  facade as owner, every pool notifies it after deliveries
+  (:meth:`AnytimeServer._notify_owner`), so ``Ticket.result`` /
+  ``as_completed`` / threaded ``drain`` block in one place.
+
+Per pool — the properties that remove cross-device serialization:
+
+* its own sharded admission queue, scheduler, lanes, and locks (a
+  submit or dispatch on pool 0 never touches pool 1's locks);
+* its own background driver thread in threaded mode, parking on its own
+  wake condition and stealing work before it parks.
+
+Both drive modes of the single server carry over: ``start()`` spawns
+one driver per pool; cooperative callers pump :meth:`step`, which
+round-robins the pools and rebalances idle ones.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.obs import NULL_TRACER
+from repro.schedule.runtime import AnytimeRuntime
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import PolicyLike, Request, Result
+from repro.serve.router import Router
+from repro.serve.server import AnytimeServer, Ticket
+
+
+class PooledAnytimeServer:
+    """N per-device serving pools behind one router — one logical
+    deadline-aware server whose capacity scales with device count.
+
+    ``pools`` defaults to one per visible jax device (``devices`` picks
+    an explicit subset; with fewer devices than pools, pools wrap —
+    useful for oversubscription tests).  ``queue_shards`` is forwarded
+    to every pool's admission queue.  ``steal=False`` disables work
+    stealing (placement only) for A/B measurement.
+    """
+
+    def __init__(
+        self,
+        runtime: Optional[AnytimeRuntime] = None,
+        *,
+        programs: Optional[dict] = None,
+        pools: Optional[int] = None,
+        devices: Optional[Sequence] = None,
+        capacity: int = 16,
+        chunk: int = 8,
+        clock=time.monotonic,
+        backend_opts: Optional[dict] = None,
+        admission: str = "edf",
+        admission_k: float = 2.0,
+        tracer=None,
+        queue_shards: int = 1,
+        steal: bool = True,
+    ):
+        if devices is None:
+            import jax
+
+            devices = list(jax.devices())
+        if not devices:
+            raise ValueError("PooledAnytimeServer needs at least one device")
+        n_pools = int(pools) if pools is not None else len(devices)
+        if n_pools < 1:
+            raise ValueError(f"pools must be >= 1, got {pools}")
+        self.clock = clock                    # unguarded: immutable callable
+        self.admission = admission            # unguarded: immutable config
+        self.steal = bool(steal)              # unguarded: immutable config
+        self.metrics = ServeMetrics()         # unguarded: internally locked
+        self.tracer = tracer if tracer is not None else NULL_TRACER  # unguarded: internally locked
+        # one id stream for the whole tier: request ids are globally
+        # unique, so shard routing, EDF entries, and the shared pending
+        # registry never collide across pools
+        self._ids = itertools.count()         # unguarded: atomic counter
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._pending_lock = threading.Lock()
+        self._pending: dict[int, Ticket] = {}  # guarded-by: _pending_lock
+        self._closed = False                  # unguarded: write-once latch
+        opts = dict(backend_opts or {})
+        built = []
+        for i in range(n_pools):
+            pool = AnytimeServer(
+                runtime,
+                programs=programs,
+                capacity=capacity,
+                chunk=chunk,
+                clock=clock,
+                backend_opts={**opts, "pin_device": devices[i % len(devices)]},
+                admission=admission,
+                admission_k=admission_k,
+                tracer=tracer,
+                queue_shards=queue_shards,
+                metrics=self.metrics,
+                ids=self._ids,
+                track_prefix=f"p{i}:",
+            )
+            # single-threaded setup rebinds (documented hooks on
+            # AnytimeServer): tickets resolve on the facade's condition,
+            # and all pools share ONE pending registry so a request can
+            # deliver on a different pool than it was submitted to
+            pool._ticket_owner = self
+            pool._pending = self._pending
+            pool._pending_lock = self._pending_lock
+            built.append(pool)
+        self.pools = tuple(built)             # unguarded: immutable after __init__
+        self.router = Router(self.pools, self.metrics, self.tracer)  # unguarded: immutable after __init__
+        if self.steal:
+            for pool in self.pools:
+                pool.on_idle = self._make_idle_hook(pool)
+
+    def _make_idle_hook(self, pool) -> Callable[[], bool]:
+        router = self.router
+        return lambda: router.steal_into(pool)
+
+    @property
+    def n_pools(self) -> int:
+        return len(self.pools)
+
+    # -- driver lifecycle --------------------------------------------------
+
+    @property
+    def driver_running(self) -> bool:
+        return any(p.driver_running for p in self.pools)
+
+    @property
+    def _driver_failed(self) -> bool:
+        return any(p._driver_failed for p in self.pools)
+
+    def _raise_if_driver_dead(self) -> None:
+        for pool in self.pools:
+            pool._raise_if_driver_dead()
+
+    def start(self) -> "PooledAnytimeServer":
+        """Spawn one background driver per pool (idempotent)."""
+        for pool in self.pools:
+            pool.start()
+        return self
+
+    def stop(self, timeout: Optional[float] = 10.0) -> list[Result]:
+        """Stop every pool's driver and flush every admitted request to
+        its last segment-boundary readout.  A request stolen mid-stop is
+        flushed by whichever pool holds it — the shared pending registry
+        resolves its ticket either way."""
+        flushed: list[Result] = []
+        for pool in self.pools:
+            flushed.extend(pool.stop(timeout))
+        with self._cond:
+            self._cond.notify_all()
+        return flushed
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+        for pool in self.pools:
+            pool.close()
+        with self._cond:
+            self._cond.notify_all()
+
+    def __enter__(self) -> "PooledAnytimeServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- submission --------------------------------------------------------
+
+    def submit(
+        self,
+        x,
+        deadline_ms: float,
+        policy: PolicyLike = "backward_squirrel",
+        backend: Optional[str] = None,
+        program: str = "default",
+    ) -> Ticket:
+        return self.submit_request(Request(
+            x=x, deadline_ms=deadline_ms, policy=policy,
+            backend=backend, program=program,
+        ))
+
+    def submit_request(self, request: Request) -> Ticket:
+        """Route to the least-backlogged pool and submit there.  The
+        chosen pool's own fast/slow submit path takes over — this layer
+        adds only the (lock-free) placement decision."""
+        if self._closed:  # racy hint; pool/shard closed flags authoritative
+            raise RuntimeError(
+                "submit on a closed PooledAnytimeServer (close() was called)")
+        i = self.router.place(request)
+        ticket = self.pools[i].submit_request(request)
+        self.metrics.record_route()
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "serve.route", request_id=ticket.request_id,
+                pool=self.pools[i].name,
+                deadline_ms=request.deadline_ms)
+        return ticket
+
+    # -- the cooperative loop ----------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        return any(p.busy for p in self.pools)
+
+    def step(self) -> bool:
+        """One round-robin pass: step every busy pool, then let idle
+        pools steal from loaded ones.  Returns whether work remains —
+        the cooperative analogue of N driver threads."""
+        for pool in self.pools:
+            if pool.busy:
+                pool.step()
+        if self.steal:
+            for pool in self.pools:
+                if not pool.busy:
+                    self.router.steal_into(pool)
+        return self.busy
+
+    def drain(self, max_steps: Optional[int] = None) -> list[Result]:
+        """Cooperative: pump :meth:`step` until every pool is idle;
+        returns results delivered during the drain (across pools, in
+        delivery order).  Threaded: block until the tier goes idle and
+        return ``[]`` (results live on the tickets)."""
+        if self.driver_running:
+            with self._cond:
+                seq0 = sum(p._step_seq for p in self.pools)
+                self._cond.wait_for(
+                    lambda: not self.busy or not self.driver_running
+                    or (max_steps is not None
+                        and sum(p._step_seq for p in self.pools) - seq0
+                        >= max_steps))
+            self._raise_if_driver_dead()
+            return []
+        buffer: list[Result] = []
+        for pool in self.pools:
+            with pool._lock:
+                pool._drain_buffer = buffer
+        try:
+            steps = 0
+            while self.busy:
+                self.step()
+                steps += 1
+                if max_steps is not None and steps >= max_steps:
+                    break
+        finally:
+            for pool in self.pools:
+                with pool._lock:
+                    pool._drain_buffer = None
+        return buffer
+
+    def serve(
+        self,
+        xs: Sequence,
+        deadline_ms: Union[float, Sequence[float]],
+        policy: PolicyLike = "backward_squirrel",
+        backend: Optional[str] = None,
+        program: str = "default",
+    ) -> list[Result]:
+        """Batch convenience mirroring :meth:`AnytimeServer.serve`."""
+        if np.isscalar(deadline_ms):
+            deadline_ms = [float(deadline_ms)] * len(xs)
+        if len(deadline_ms) != len(xs):
+            raise ValueError("deadline_ms must be scalar or match len(xs)")
+        tickets = [
+            self.submit(x, d, policy=policy, backend=backend, program=program)
+            for x, d in zip(xs, deadline_ms)
+        ]
+        self.drain()
+        return [t.result() for t in tickets]
+
+    def result(self, request_id: int) -> Optional[Result]:
+        """Result of a still-tracked request, or None while pending."""
+        with self._pending_lock:
+            ticket = self._pending.get(request_id)
+        return ticket._result if ticket is not None else None
+
+
+__all__ = ["PooledAnytimeServer"]

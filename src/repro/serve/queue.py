@@ -1,18 +1,33 @@
-"""Admission queue for deadline-bearing anytime requests.
+"""Sharded admission queue for deadline-bearing anytime requests.
 
 Monotonic-clock bookkeeping: :meth:`AdmissionQueue.submit` stamps each
 request with an id and an *absolute* deadline on the server's monotonic
 clock (``t_deadline = now + deadline_ms/1e3``), so downstream deadline
-checks are single comparisons immune to wall-clock adjustments.  The
-queue itself is earliest-deadline-first: :meth:`AdmissionQueue.pop`
-always yields the pending request with the nearest deadline, which is
-the order the scheduler admits requests into slot batches.
+checks are single comparisons immune to wall-clock adjustments.
+
+The queue is earliest-deadline-first and **internally sharded**: each
+request hashes (by id) onto one of ``shards`` independent EDF heaps,
+each behind its own mutex.  A submit therefore touches exactly ONE shard
+lock — never the server's global lock — which is what keeps the submit
+hot path cheap while the driver holds the global lock for a whole
+dispatch → admit → harvest iteration.  The scheduler drains arrivals
+with :meth:`AdmissionQueue.take_all`, the batched cross-shard merge at
+dispatch boundaries: every shard's heap is swapped out under its own
+lock and the union is EDF-sorted once, outside any lock.
+
+Shutdown discipline: :meth:`AdmissionQueue.close` marks every shard
+closed under its lock, so a submit racing ``AnytimeServer.close()``
+either lands before the shutdown flush (and is answered by it) or
+raises — a request can never slip silently between the flush and the
+closed flag.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import itertools
+import threading
 from typing import Any, Optional, Union
 
 from repro.schedule.policies import OrderPolicy
@@ -55,7 +70,7 @@ class Request:
     #: rejecting or starving; fresh submissions under cleared pressure
     #: get None again (budgets restore automatically).
     budget_steps: Optional[int] = None
-    # stamped by AdmissionQueue.submit (monotonic clock):
+    # stamped by AdmissionQueue.stamp/submit (monotonic clock):
     request_id: int = -1
     t_submit: float = float("nan")
     t_deadline: float = float("nan")
@@ -100,41 +115,142 @@ class Result:
     budget_steps: Optional[int] = None
 
 
-class AdmissionQueue:
-    """EDF admission queue with monotonic-clock bookkeeping."""
+class _QueueShard:
+    """One EDF heap behind its own mutex — the unit of submit-side
+    concurrency.  All heap/counter state lives under ``lock``; ``n`` is
+    a lock-free length mirror for busy-checks and router load hints."""
+
+    __slots__ = ("lock", "heap", "closed", "submitted", "n")
 
     def __init__(self):
-        # all queue state belongs to the owning AnytimeServer's lock: the
-        # server (and the Scheduler it drives) only touches the queue from
-        # locked sections, so the queue itself stays lock-free
-        self._heap: list[tuple[float, int, Request]] = []  # guarded-by: AnytimeServer._lock
-        self._ids = itertools.count()  # guarded-by: AnytimeServer._lock
-        self.submitted = 0             # guarded-by: AnytimeServer._lock
+        self.lock = threading.Lock()
+        self.heap: list[tuple[float, int, Request]] = []  # guarded-by: lock
+        self.closed = False    # guarded-by: lock
+        self.submitted = 0     # guarded-by: lock
+        # torn-free int: approximate reads steer parking/routing only —
+        # every correctness-bearing read happens under `lock`
+        self.n = 0             # unguarded: racy length mirror of heap
 
-    def submit(self, request: Request, now: float) -> Request:  # holds: AnytimeServer._lock
-        """Stamp and enqueue ``request``; returns it (id/deadline filled)."""
+    def push(self, entry: tuple, count: bool = False) -> None:
+        with self.lock:
+            if self.closed:
+                raise RuntimeError(
+                    "submit on a closed AnytimeServer (close() was called)")
+            heapq.heappush(self.heap, entry)
+            if count:
+                self.submitted += 1
+            self.n = len(self.heap)
+
+    def take(self) -> list[tuple]:
+        """Swap the heap out under the shard lock; merge outside it."""
+        with self.lock:
+            taken, self.heap = self.heap, []
+            self.n = 0
+            return taken
+
+    def close(self) -> None:
+        with self.lock:
+            self.closed = True
+
+
+class AdmissionQueue:
+    """Sharded EDF admission queue with monotonic-clock bookkeeping.
+
+    ``shards=1`` (the default) preserves exact single-heap EDF pop
+    semantics; serving tiers size shards to their submitter concurrency.
+    ``ids`` lets a multi-pool facade share ONE id counter across its
+    per-pool queues so request ids stay globally unique (shared pending
+    maps and steal bookkeeping key on them).
+    """
+
+    def __init__(self, shards: int = 1, ids: Optional[itertools.count] = None):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        # the shard list itself is immutable; each shard is internally
+        # locked (see _QueueShard)
+        self._shards = [_QueueShard() for _ in range(shards)]  # unguarded: immutable list of internally-locked shards
+        # itertools.count.__next__ is atomic under the GIL — id stamping
+        # needs no lock even from concurrent submitters
+        self._ids = ids if ids is not None else itertools.count()  # unguarded: atomic counter
+
+    @property
+    def n_shards(self) -> int:
+        return len(self._shards)
+
+    @property
+    def submitted(self) -> int:
+        """Total requests stamped+enqueued through :meth:`submit`
+        (lock-free sum of per-shard counters; exact when quiescent)."""
+        return sum(s.submitted for s in self._shards)
+
+    def stamp(self, request: Request, now: float) -> Request:
+        """Assign ``request`` its id and absolute deadlines — lock-free
+        (the id counter is GIL-atomic), so the submit fast path can
+        register the ticket BEFORE the request becomes poppable."""
         if request.deadline_ms < 0:
             raise ValueError(f"deadline_ms must be >= 0, got {request.deadline_ms}")
         request.request_id = next(self._ids)
         request.t_submit = now
         request.t_deadline = now + request.deadline_ms / 1e3
-        self.submitted += 1
-        self.push(request)
         return request
 
-    def push(self, request: Request) -> None:  # holds: AnytimeServer._lock
-        """(Re-)enqueue an already-stamped request (e.g. one that found
-        no free slot this round)."""
-        heapq.heappush(self._heap, (request.t_deadline, request.request_id, request))
+    def submit(self, request: Request, now: float) -> Request:
+        """Stamp and enqueue ``request``; returns it (id/deadline filled).
+        Raises RuntimeError once :meth:`close` has marked the shards."""
+        self.stamp(request, now)
+        self.push(request, _count=True)
+        return request
 
-    def pop(self) -> Optional[Request]:  # holds: AnytimeServer._lock
-        """Earliest-deadline pending request, or None when empty."""
-        if not self._heap:
-            return None
-        return heapq.heappop(self._heap)[2]
+    def push(self, request: Request, _count: bool = False) -> None:
+        """(Re-)enqueue an already-stamped request onto its id's shard —
+        one shard lock, never the server's."""
+        shard = self._shards[request.request_id % len(self._shards)]
+        shard.push((request.t_deadline, request.request_id, request),
+                   count=_count)
 
-    def __len__(self) -> int:  # holds: AnytimeServer._lock
-        return len(self._heap)
+    def pop(self) -> Optional[Request]:
+        """Globally earliest-deadline pending request, or None when
+        empty.  Takes every shard lock (ascending order — deadlock-free
+        vs single-shard submitters); the batched path schedulers should
+        prefer is :meth:`take_all`."""
+        with contextlib.ExitStack() as stack:
+            for shard in self._shards:
+                stack.enter_context(shard.lock)
+            best = None
+            for shard in self._shards:
+                if shard.heap and (best is None or shard.heap[0] < best.heap[0]):
+                    best = shard
+            if best is None:
+                return None
+            entry = heapq.heappop(best.heap)
+            best.n = len(best.heap)
+            return entry[2]
 
-    def __bool__(self) -> bool:  # holds: AnytimeServer._lock
-        return bool(self._heap)
+    def take_all(self) -> list[Request]:
+        """Drain EVERY shard and return the union in EDF order — the
+        batched cross-shard merge the scheduler runs once per dispatch
+        boundary.  Each shard's heap is swapped under its own lock; the
+        sort happens outside all locks."""
+        entries: list[tuple] = []
+        for shard in self._shards:
+            if shard.n:  # racy skip-hint; take() re-checks under the lock
+                entries.extend(shard.take())
+        if not entries:
+            return []
+        entries.sort()
+        return [e[2] for e in entries]
+
+    def close(self) -> None:
+        """Mark every shard closed (under its lock): subsequent pushes
+        raise.  Called by ``AnytimeServer.close()`` BEFORE the shutdown
+        flush drains, so no submit can land between flush and flag."""
+        for shard in self._shards:
+            shard.close()
+
+    def __len__(self) -> int:
+        # lock-free sum of shard mirrors: a busy-hint, exact when no
+        # submit is mid-flight
+        return sum(s.n for s in self._shards)
+
+    def __bool__(self) -> bool:
+        return any(s.n for s in self._shards)

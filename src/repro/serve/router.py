@@ -1,0 +1,121 @@
+"""Deadline-aware request routing and work stealing between pools.
+
+The :class:`Router` is the placement brain of a
+:class:`~repro.serve.pool.PooledAnytimeServer`: every submit picks the
+pool with the least backlog (queued + slot-waiting + in-flight, read
+from LOCK-FREE hints — the shard length mirrors and each scheduler's
+``load_hint`` tuple), so tight-deadline requests land where they wait
+least.  Ties rotate round-robin to spread warmup.
+
+Stealing runs from the CONSUMER side: an idle pool's driver, before
+parking, asks the router to pull one request over from the most-loaded
+sibling (``steal_into``).  The victim exports a whole request at a
+segment-boundary-aligned point (:meth:`~repro.serve.scheduler.
+Scheduler.export_request` — a waiting request at zero device cost, else
+the in-flight slot with the most deadline slack, its index row synced
+to the host), and the thief resumes it exactly like a mid-flight
+admission — so the bit-parity guarantee survives the migration.  The
+two pool locks are taken strictly one-at-a-time (victim's, released,
+then thief's): there is no lock order between pools to get wrong.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+
+def _backlog_score(pool) -> int:
+    """Lock-free load estimate of one pool: undrained submissions (shard
+    length mirrors) + slot-waiting + in-flight (scheduler load hint).
+    Approximate by design — routing quality, never correctness, depends
+    on it."""
+    waiting, active, _free = pool.scheduler.load_hint
+    return len(pool.queue) + waiting + active
+
+
+class Router:
+    """Backlog-aware placement + idle-pool work stealing over a fixed
+    pool list.  Stateless apart from a round-robin tiebreaker; every
+    decision reads lock-free hints, so routing never serializes
+    submitters behind pool locks."""
+
+    def __init__(self, pools, metrics, tracer):
+        self.pools = list(pools)  # unguarded: immutable after __init__
+        self.metrics = metrics    # unguarded: internally locked
+        self.tracer = tracer      # unguarded: internally locked
+        # itertools.count.__next__ is GIL-atomic: concurrent submitters
+        # may interleave tiebreaks but never corrupt the counter
+        self._rr = itertools.count()  # unguarded: atomic counter
+
+    def place(self, request) -> int:
+        """Index of the pool this request should join: least backlog,
+        round-robin among ties — the EDF queues inside the chosen pool
+        handle deadline ordering from there."""
+        n = len(self.pools)
+        if n == 1:
+            return 0
+        scores = [_backlog_score(p) for p in self.pools]
+        lo = min(scores)
+        candidates = [i for i, s in enumerate(scores) if s == lo]
+        return candidates[next(self._rr) % len(candidates)]
+
+    def _pick_victim(self, thief) -> Optional[object]:
+        """Most-loaded sibling worth stealing from, or None.  A victim
+        must have work beyond what occupies it RIGHT NOW: something
+        queued/waiting, or at least two in-flight requests — stealing a
+        pool's only running request migrates latency without adding
+        parallelism."""
+        victim, victim_score = None, 0
+        for pool in self.pools:
+            if pool is thief:
+                continue
+            waiting, active, _free = pool.scheduler.load_hint
+            backlog = len(pool.queue) + waiting
+            if backlog == 0 and active < 2:
+                continue
+            score = backlog + active
+            if score > victim_score:
+                victim, victim_score = pool, score
+        return victim
+
+    def steal_into(self, thief) -> bool:
+        """Pull one request from the most-loaded sibling into ``thief``.
+
+        Called by an idle pool's driver (lock-free) before it parks —
+        and by the cooperative facade loop for driverless pools.
+        Returns True when a request migrated (the caller should re-check
+        for work instead of parking)."""
+        # thief must look idle by its own hints; racy — worst case we
+        # steal into a pool that just got work, which is still progress
+        t_waiting, t_active, _ = thief.scheduler.load_hint
+        if len(thief.queue) or t_waiting or t_active:
+            return False
+        victim = self._pick_victim(thief)
+        if victim is None:
+            return False
+        tracer = self.tracer
+        if tracer.enabled:
+            with tracer.span("serve.steal", victim=victim.name,
+                             thief=thief.name) as sp:
+                moved = self._migrate(victim, thief)
+                sp.args["moved"] = moved
+        else:
+            moved = self._migrate(victim, thief)
+        return moved
+
+    def _migrate(self, victim, thief) -> bool:
+        """One request, victim → thief.  Pool locks strictly
+        one-at-a-time."""
+        with victim._cond:
+            rec = victim.scheduler.export_request(victim.clock())
+        if rec is None:
+            return False
+        with thief._cond:
+            thief.scheduler.inject(rec)
+        self.metrics.record_steal()
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "serve.route", request_id=rec.request.request_id,
+                pool=thief.name, stolen_from=victim.name, kind=rec.kind,
+                resumed_pos=rec.pos)
+        return True

@@ -31,10 +31,13 @@ first harvested boundary gets the program's prior (0-step) readout.
 from __future__ import annotations
 
 import heapq
+import threading
 from typing import NamedTuple, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.obs import NULL_TRACER
 from repro.schedule.backends import default_backend
 from repro.serve.queue import AdmissionQueue, Request
@@ -58,6 +61,33 @@ class _Boundary(NamedTuple):
     probs: object        # [capacity, C] (device until harvested)
     pos: np.ndarray      # plan cursor per slot at the boundary
     owner: np.ndarray    # request_id per slot at the boundary (-1 = free)
+
+
+class StealRecord(NamedTuple):
+    """A request exported from one scheduler for injection into another
+    (work stealing between pools).
+
+    ``kind="waiting"`` — the request never dispatched a step; it
+    migrates as a plain queued request (prior semantics unchanged).
+    ``kind="inflight"`` — the request ran ``pos`` plan steps on the
+    victim; ``idx_row`` is its exact index-array state at that
+    (dispatch-quantized) boundary, synced to the host at export time.
+    Because node indices are a deterministic function of (input row,
+    plan prefix), resuming from ``(idx_row, pos)`` on any pool sharing
+    the content-addressed plan yields boundary readouts bit-identical
+    to an unstolen run — the migration cost is one device→host row
+    sync, and the parity guarantee survives the steal.
+
+    ``budget`` is the degrade cap the request was admitted under
+    (None = the full plan), carried so a stolen degraded request still
+    stops at the same shorter prefix.
+    """
+
+    request: Request
+    kind: str
+    idx_row: Optional[np.ndarray]
+    pos: int
+    budget: Optional[int]
 
 
 class Delivery(NamedTuple):
@@ -138,6 +168,64 @@ class ForestLane:
                 "serve.slot_admit", track=self.label,
                 request_id=request.request_id, slot=slot)
         return True
+
+    def admit_resumed(self, rec: StealRecord) -> bool:  # holds: AnytimeServer._lock
+        """Place a stolen mid-flight request into a free slot, resuming
+        from its carried ``(idx_row, pos)`` boundary state; False when
+        the lane is full.  Identical to :meth:`admit` except the slot
+        starts at the migrated prefix instead of the all-roots state."""
+        slots = self.batch.open_slots()
+        if not slots:
+            return False
+        slot = slots[0]
+        self.batch.admit(
+            slot, rec.request.x, budget=rec.budget,
+            idx_row=rec.idx_row, pos=rec.pos,
+        )
+        self.requests[slot] = rec.request
+        tracer = self.tracer
+        if tracer.enabled:
+            tracer.request_slot(
+                rec.request.request_id, tracer.clock(), self.label,
+                self.batch.backend_name)
+            tracer.instant(
+                "serve.slot_admit", track=self.label,
+                request_id=rec.request.request_id, slot=slot,
+                resumed_pos=rec.pos)
+        return True
+
+    def export_slot(self, slot: int) -> StealRecord:  # holds: AnytimeServer._lock
+        """Remove ``slot``'s request from this lane and return it as a
+        :class:`StealRecord`.  Called strictly between dispatches (the
+        caller holds the pool lock), so the slot's device state is the
+        exact prefix of ``pos`` steps — a segment-boundary-aligned
+        migration.  A slot whose admission is still buffered (or that
+        never stepped) exports as a plain waiting request at zero device
+        cost; otherwise the index row syncs to the host here (the one
+        device round trip a steal pays)."""
+        req = self.requests[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} holds no request to export")
+        batch = self.batch
+        total = batch.total_steps
+        target = int(batch.budget[slot])
+        budget = target if target < total else None
+        pos = int(batch.pos[slot])
+        if batch.pending_admission(slot):
+            batch.cancel_admit(slot)
+            rec = StealRecord(req, "waiting", None, 0, budget)
+        elif pos == 0:
+            batch.retire(slot)
+            rec = StealRecord(req, "waiting", None, 0, budget)
+        else:
+            idx_row = np.asarray(batch.idx[slot])
+            batch.retire(slot)
+            rec = StealRecord(req, "inflight", idx_row, pos, budget)
+        # stale boundary snapshots (_front/_back/_host) may still carry
+        # this slot: their owner arrays no longer match any live request,
+        # so retire/harvest skip them — no flush needed
+        self.requests[slot] = None
+        return rec
 
     def _inflight_ids(self) -> list[int]:  # holds: AnytimeServer._lock
         return [r.request_id for r in self.requests if r is not None]
@@ -412,6 +500,7 @@ class Scheduler:
         backend_opts: Optional[dict] = None,
         max_idle_lanes: int = 32,
         tracer=None,
+        track_prefix: str = "",
     ):
         self.runtimes = dict(runtimes)   # unguarded: immutable after init
         self.metrics = metrics           # unguarded: internally locked
@@ -420,6 +509,10 @@ class Scheduler:
         self.chunk = int(chunk)          # unguarded: immutable config
         self.backend_opts = dict(backend_opts or {})  # unguarded: immutable config
         self.max_idle_lanes = int(max_idle_lanes)     # unguarded: immutable config
+        # per-pool trace namespace: pool i labels its lane swimlanes
+        # "p{i}:<program>:<policy>:<backend>" so a pooled tier's exported
+        # trace shows one track group per pool
+        self.track_prefix = str(track_prefix)         # unguarded: immutable config
         # all mutable scheduler state is owned by the server's lock; the
         # methods below carry `# holds: AnytimeServer._lock`
         self.lanes: dict[tuple, object] = {}          # guarded-by: AnytimeServer._lock
@@ -429,11 +522,20 @@ class Scheduler:
         # request leaves the admission queue exactly ONCE (no per-
         # iteration pop/re-push churn proportional to the backlog)
         self._waiting: dict[tuple, list] = {}         # guarded-by: AnytimeServer._lock
-        # still-queued requests per lane key, maintained at submit/pop —
+        # still-queued requests per lane key, under a DEDICATED mutex so
+        # the submit fast path can note_queued() without the server lock;
         # reject admission reads lane_backlog() in O(1) per submit
         # instead of scanning the queue at exactly the overload moment
-        self._queued_by_lane: dict[tuple, int] = {}   # guarded-by: AnytimeServer._lock
+        self._count_lock = threading.Lock()
+        self._queued_by_lane: dict[tuple, int] = {}   # guarded-by: _count_lock
         self._prior_cache: dict[str, np.ndarray] = {}  # guarded-by: AnytimeServer._lock
+        # stolen requests awaiting (re-)admission on THIS scheduler,
+        # processed ahead of queue arrivals each step
+        self._resume_pending: list[StealRecord] = []  # guarded-by: AnytimeServer._lock
+        # (waiting, active, free) occupancy snapshot refreshed once per
+        # step — the router's lock-free placement/victim-selection hint;
+        # tuple replacement is atomic, correctness never depends on it
+        self.load_hint = (0, 0, 0)  # unguarded: racy occupancy hint, atomic tuple swap
 
     # -- lane management ---------------------------------------------------
 
@@ -463,8 +565,9 @@ class Scheduler:
             order = rt.order(req.policy)
             backend = req.backend if req.backend is not None else rt.backend
             # trace display track: one swimlane per (program, policy,
-            # backend) lane in the exported Chrome trace
-            label = f"{key[0]}:{key[1]}:{key[2]}"
+            # backend) lane in the exported Chrome trace, namespaced by
+            # the pool's track prefix in a multi-pool tier
+            label = f"{self.track_prefix}{key[0]}:{key[1]}:{key[2]}"
             if hasattr(rt.program, "make_slot_batch"):
                 # prefer the program's own input width — a malformed
                 # first request must not define the lane for everyone
@@ -531,15 +634,17 @@ class Scheduler:
 
     @property
     def busy(self) -> bool:  # holds: AnytimeServer._lock
-        return bool(self._waiting) or any(
+        return bool(self._waiting) or bool(self._resume_pending) or any(
             lane.busy for lane in self.lanes.values()
         )
 
     @property
     def n_waiting(self) -> int:  # holds: AnytimeServer._lock
         """Requests admitted off the queue but still waiting for a free
-        slot, across all lanes."""
-        return sum(len(h) for h in self._waiting.values())
+        slot, across all lanes (stolen requests awaiting re-admission
+        included)."""
+        return sum(len(h) for h in self._waiting.values()) + len(
+            self._resume_pending)
 
     def lane_backlog(self, req: Request) -> int:  # holds: AnytimeServer._lock
         """How many requests are already queued or waiting for THIS
@@ -548,37 +653,73 @@ class Scheduler:
         one (program, policy, backend) lane must not shed load for an
         idle one.  O(1): counters, not a queue scan."""
         key = self._lane_key(req)
-        return len(self._waiting.get(key, ())) + self._queued_by_lane.get(key, 0)
+        with self._count_lock:
+            queued = self._queued_by_lane.get(key, 0)
+        return len(self._waiting.get(key, ())) + queued
 
-    def note_queued(self, req: Request) -> None:  # holds: AnytimeServer._lock
+    def note_queued(self, req: Request) -> None:
         """Record that ``req`` entered the admission queue (the server
-        calls this right after ``queue.submit``); balanced by
-        :meth:`_note_dequeued` when ``_admit`` pops it."""
+        calls this right after the queue push — fast path included, so
+        only the dedicated counter mutex is taken); balanced by
+        :meth:`_note_dequeued` when ``_admit`` drains it."""
         key = self._lane_key(req)
-        self._queued_by_lane[key] = self._queued_by_lane.get(key, 0) + 1
+        with self._count_lock:
+            self._queued_by_lane[key] = self._queued_by_lane.get(key, 0) + 1
 
-    def _note_dequeued(self, req: Request) -> None:  # holds: AnytimeServer._lock
+    def _note_dequeued(self, req: Request) -> None:
         try:
             key = self._lane_key(req)
         except Exception:  # noqa: BLE001 - never let bookkeeping crash a pop
             return
-        n = self._queued_by_lane.get(key, 0)
-        if n <= 1:
-            self._queued_by_lane.pop(key, None)
-        else:
-            self._queued_by_lane[key] = n - 1
+        with self._count_lock:
+            n = self._queued_by_lane.get(key, 0)
+            if n <= 1:
+                self._queued_by_lane.pop(key, None)
+            else:
+                self._queued_by_lane[key] = n - 1
+
+    def _admit_resumes(self, now: float,  # holds: AnytimeServer._lock
+                       deliveries: list[Delivery]) -> None:
+        """(Re-)admit stolen requests ahead of queue arrivals: waiting-
+        kind records rejoin the EDF waiting heaps, in-flight records go
+        straight into a free slot resuming at their carried boundary.
+        No free slot → the record stays pending for the next step (its
+        deadline keeps it honest: expiry delivers the carried
+        boundary)."""
+        if not self._resume_pending:
+            return
+        records, self._resume_pending = self._resume_pending, []
+        for rec in records:
+            req = rec.request
+            if req.t_deadline <= now:
+                deliveries.append(self._resume_delivery(rec))
+                continue
+            try:
+                key = self._lane_key(req)
+                lane = self.lane_for(req)
+            except Exception as e:  # noqa: BLE001 - isolate bad requests
+                deliveries.append(Delivery(req, None, 0, False, error=str(e)))
+                continue
+            if rec.kind != "inflight":
+                heapq.heappush(
+                    self._waiting.setdefault(key, []),
+                    (req.t_deadline, req.request_id, req),
+                )
+                continue
+            if not isinstance(lane, ForestLane) or not lane.admit_resumed(rec):
+                self._resume_pending.append(rec)  # retry next step
 
     def _admit(self, queue: AdmissionQueue, now: float,  # holds: AnytimeServer._lock
                deliveries: list[Delivery]) -> None:
         """Move arrivals into per-lane EDF waiting heaps (once each),
         then fill every lane's free slots earliest-deadline-first.
-        A request whose lane raises (unknown program, malformed input)
-        fails alone — an error delivery, never a crashed loop or a
-        dropped neighbor."""
-        while True:
-            req = queue.pop()
-            if req is None:
-                break
+        Arrivals drain through ``take_all`` — the batched cross-shard
+        merge: one swap per shard, one sort, instead of a heap pop per
+        request.  A request whose lane raises (unknown program,
+        malformed input) fails alone — an error delivery, never a
+        crashed loop or a dropped neighbor."""
+        self._admit_resumes(now, deliveries)
+        for req in queue.take_all():
             self._note_dequeued(req)
             if req.t_deadline <= now:
                 # already expired (zero-deadline or stale): the prior
@@ -623,6 +764,83 @@ class Scheduler:
             if not heap:
                 del self._waiting[key]
 
+    # -- work stealing (multi-pool tier) ----------------------------------
+
+    def export_request(self, now: float) -> Optional[StealRecord]:  # holds: AnytimeServer._lock
+        """Give up ONE request for an idle sibling pool to run.
+
+        Preference order: the earliest-deadline non-expired WAITING
+        request (migrates at zero device cost — it hasn't stepped), else
+        the in-flight forest slot with the LATEST deadline (most slack
+        to absorb the migration; its index row syncs to the host here).
+        Session lanes never export — their per-request solo sessions
+        hold backend-internal state that has no portable boundary form.
+        Returns None when there is nothing worth stealing."""
+        best_key = None
+        best = None
+        for key, heap in self._waiting.items():
+            if heap and heap[0][0] > now and (best is None or heap[0] < best):
+                best, best_key = heap[0], key
+        if best is not None:
+            heapq.heappop(self._waiting[best_key])
+            if not self._waiting[best_key]:
+                del self._waiting[best_key]
+            req = best[2]
+            return StealRecord(req, "waiting", None, 0, req.budget_steps)
+        victim = None  # (t_deadline, lane, slot)
+        for lane in self.lanes.values():
+            if not isinstance(lane, ForestLane):
+                continue
+            for slot, req in enumerate(lane.requests):
+                if req is None or req.t_deadline <= now:
+                    continue
+                if int(lane.batch.pos[slot]) >= int(lane.batch.budget[slot]):
+                    continue  # finished its budget; about to retire here
+                if victim is None or req.t_deadline > victim[0]:
+                    victim = (req.t_deadline, lane, slot)
+        if victim is None:
+            return None
+        return victim[1].export_slot(victim[2])
+
+    def inject(self, rec: StealRecord) -> None:  # holds: AnytimeServer._lock
+        """Accept a stolen request; it (re-)admits ahead of queue
+        arrivals on the next :meth:`step`."""
+        self._resume_pending.append(rec)
+
+    def _resume_delivery(self, rec: StealRecord) -> Delivery:  # holds: AnytimeServer._lock
+        """Deliver a stolen request at its carried boundary: the exact-
+        prefix readout of its resumed index row (``jnp-ref``'s
+        ``predict_from_state`` — the parity oracle itself), or the prior
+        when it never stepped."""
+        req = rec.request
+        if rec.kind != "inflight" or rec.idx_row is None or rec.pos == 0:
+            return Delivery(req, None, 0, False, budget=rec.budget)
+        try:
+            prog = self._runtime(req).program
+            proba = np.asarray(engine.predict_from_state(
+                prog.device, jnp.asarray(rec.idx_row)[None]))[0]
+        except Exception as e:  # noqa: BLE001 - isolate bad requests
+            return Delivery(req, None, 0, False, error=str(e))
+        total = self.total_steps(req)
+        target = rec.budget if rec.budget is not None else total
+        done = rec.pos >= target
+        return Delivery(
+            req, proba, rec.pos, done and rec.pos >= total,
+            budget=rec.budget,
+        )
+
+    def _refresh_load_hint(self) -> None:  # holds: AnytimeServer._lock
+        """Recompute the lock-free (waiting, active, free) occupancy
+        hint once per step — what the router reads when placing and the
+        steal trigger reads when picking victims."""
+        waiting = self.n_waiting
+        active = sum(lane.n_active for lane in self.lanes.values())
+        free = sum(
+            max(0, lane.capacity - lane.n_active)
+            for lane in self.lanes.values()
+        )
+        self.load_hint = (waiting, active, free)  # unguarded: atomic tuple swap
+
     def step(self, queue: AdmissionQueue, now: float) -> list[Delivery]:  # holds: AnytimeServer._lock
         """One scheduling iteration.
 
@@ -650,18 +868,17 @@ class Scheduler:
         for lane in self.lanes.values():
             deliveries.extend(lane.harvest(now))
         self._evict_idle_lanes()
+        self._refresh_load_hint()
         return deliveries
 
     def flush(self, queue: AdmissionQueue) -> list[Delivery]:  # holds: AnytimeServer._lock
         """Shutdown drain (``AnytimeServer.stop()``): answer EVERY
         admitted request now — queued and slot-waiting requests get the
-        prior (0-step) readout, in-flight slots their last segment
-        boundary.  No new work is dispatched."""
+        prior (0-step) readout, stolen requests their carried boundary,
+        in-flight slots their last segment boundary.  No new work is
+        dispatched."""
         deliveries: list[Delivery] = []
-        while True:
-            req = queue.pop()
-            if req is None:
-                break
+        for req in queue.take_all():
             self._note_dequeued(req)
             deliveries.append(
                 Delivery(req, None, 0, False, budget=req.budget_steps))
@@ -670,6 +887,9 @@ class Scheduler:
                 Delivery(req, None, 0, False, budget=req.budget_steps)
                 for _, _, req in heap)
         self._waiting.clear()
+        records, self._resume_pending = self._resume_pending, []
+        deliveries.extend(self._resume_delivery(rec) for rec in records)
         for lane in self.lanes.values():
             deliveries.extend(lane.flush())
+        self._refresh_load_hint()
         return deliveries

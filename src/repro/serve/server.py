@@ -82,15 +82,19 @@ class Ticket:
     collected via ``result()`` or via ``drain()``'s return value.
     """
 
-    __slots__ = ("_server", "request", "_result", "_callbacks")
+    __slots__ = ("_server", "request", "_result", "_cb_lock", "_callbacks")
 
-    def __init__(self, server: "AnytimeServer", request: Request):
+    def __init__(self, server, request: Request):
         self._server = server    # unguarded: bound once, never reassigned
         self.request = request   # unguarded: bound once, never reassigned
-        # write-once from _finalize under the server lock; racy reads see
+        # per-ticket lock: in a multi-pool tier delivery may come from
+        # ANY pool's driver thread, so the result/callback handoff
+        # cannot lean on one server's lock
+        self._cb_lock = threading.Lock()
+        # write-once from _finalize under _cb_lock; racy reads see
         # either None or the final value (both correct future semantics)
         self._result: Optional[Result] = None  # unguarded: write-once latch
-        self._callbacks: list[Callable] = []   # guarded-by: _server._lock
+        self._callbacks: list[Callable] = []   # guarded-by: _cb_lock
 
     @property
     def request_id(self) -> int:
@@ -103,7 +107,7 @@ class Ticket:
     def add_done_callback(self, fn: Callable) -> None:
         """Call ``fn(ticket)`` exactly once when the result lands —
         immediately if it already has."""
-        with self._server._lock:
+        with self._cb_lock:
             if self._result is None:
                 self._callbacks.append(fn)
                 return
@@ -201,6 +205,10 @@ class AnytimeServer:
         admission: str = "edf",
         admission_k: float = 2.0,
         tracer=None,
+        queue_shards: int = 1,
+        metrics: Optional[ServeMetrics] = None,
+        ids=None,
+        track_prefix: str = "",
     ):
         runtimes = dict(programs or {})
         if runtime is not None:
@@ -217,11 +225,15 @@ class AnytimeServer:
         self.admission = admission          # unguarded: immutable config
         self.admission_k = float(admission_k)  # unguarded: immutable config
         self.clock = clock                  # unguarded: immutable callable
-        # queue/scheduler references never change; their MUTABLE state is
-        # guarded by this server's lock via `# holds:`-marked methods on
-        # AdmissionQueue/Scheduler (see queue.py/scheduler.py)
-        self.queue = AdmissionQueue()       # unguarded: reference immutable
-        self.metrics = ServeMetrics()       # unguarded: internally locked
+        # display/trace identity; a pooled tier names its pools "p0".."pN"
+        self.name = track_prefix.rstrip(":") or "server"  # unguarded: immutable config
+        # queue/metrics are internally locked (sharded heap locks /
+        # one metrics mutex); the scheduler's MUTABLE state is guarded
+        # by this server's lock via `# holds:`-marked methods
+        # (see queue.py/scheduler.py).  A PooledAnytimeServer shares
+        # ONE metrics object and ONE id counter across its pools.
+        self.queue = AdmissionQueue(shards=queue_shards, ids=ids)  # unguarded: internally locked
+        self.metrics = metrics if metrics is not None else ServeMetrics()  # unguarded: internally locked
         self.tracer = tracer if tracer is not None else NULL_TRACER  # unguarded: internally locked
         if tracer is not None:
             # span timestamps and request deadlines must share ONE
@@ -231,22 +243,39 @@ class AnytimeServer:
         self.scheduler = Scheduler(         # unguarded: reference immutable
             runtimes, self.metrics, capacity=capacity, chunk=chunk,
             backend_opts=backend_opts, tracer=self.tracer,
+            track_prefix=track_prefix,
         )
-        self._pending: dict[int, Ticket] = {}   # guarded-by: _lock
+        self._pending: dict[int, Ticket] = {}   # guarded-by: _pending_lock
         self._drain_buffer: Optional[list[Result]] = None  # guarded-by: _lock
         # loop iterations served (threaded drain bound)
         self._step_seq = 0                  # guarded-by: _lock
-        # threading: ONE lock guards queue/scheduler/pending/metrics;
-        # the condition (same lock) signals deliveries and submissions
+        # threading: the server lock guards scheduler/drain state; the
+        # condition (same lock) signals deliveries.  The pending map has
+        # its OWN mutex so the submit fast path can register tickets
+        # without the server lock (order: _lock -> _pending_lock, never
+        # reversed).  _wake is a separate condition the driver parks on
+        # when idle — submitters notify it without touching _lock.
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
+        self._pending_lock = threading.Lock()
+        self._wake = threading.Condition()
+        # multi-pool hooks: the facade rebinds these before serving
+        # starts (single-threaded setup), then they are read-only
+        self._ticket_owner = self  # unguarded: bound before serving starts
+        # called by an idle driver before parking; returns True when it
+        # pulled work in (work stealing) and the loop should re-check
+        self.on_idle: Optional[Callable[[], bool]] = None  # unguarded: bound before serving starts
         # snapshot reads everywhere; writes serialized by the callers of
         # start()/stop() (stop() must NOT hold the lock while joining the
         # driver — the driver needs it to finish its iteration)
         self._driver: Optional[ServeDriver] = None  # unguarded: see above
         # write-once error latch (idempotent re-writes of the same value)
         self._driver_error: Optional[BaseException] = None  # unguarded: latch
-        self._closed = False                # guarded-by: _lock
+        # write-once latch: set True under _lock in close(); the submit
+        # fast path reads it racily as a hint — the authoritative
+        # closed-vs-submit race is resolved by the queue's per-shard
+        # closed flags (see AdmissionQueue.close)
+        self._closed = False                # unguarded: write-once latch
 
     # -- driver lifecycle --------------------------------------------------
 
@@ -317,17 +346,21 @@ class AnytimeServer:
             self._cond.notify_all()
         for fn, ticket in callbacks:
             _invoke_callback(fn, ticket)
+        self._notify_owner()
         return flushed
 
     def close(self) -> None:
         """``stop()`` + reject all future submissions.
 
-        The closed flag is set FIRST (under the lock), so no submit can
-        slip in between the shutdown flush and the flag — everything
-        admitted before close() is answered by the flush, everything
-        after raises."""
+        The closed flag is set FIRST (under the lock), then the queue
+        shards are marked closed (under their locks), so no submit can
+        slip in between the shutdown flush and the flags — everything
+        enqueued before close() is answered by the flush, everything
+        after raises (fast-path submits race against the shard flag,
+        slow-path submits against ``_closed``)."""
         with self._lock:
             self._closed = True
+        self.queue.close()
         self.stop()
 
     def __enter__(self) -> "AnytimeServer":
@@ -354,16 +387,55 @@ class AnytimeServer:
         ))
 
     def submit_request(self, request: Request) -> Ticket:
+        if request.program not in self.scheduler.runtimes:
+            raise ValueError(
+                f"unknown program {request.program!r}; serving: "
+                f"{', '.join(self.scheduler.runtimes)}"
+            )
+        # FAST PATH — the common serving case (EDF admission, untraced):
+        # no global-lock acquisition at all.  Reject/degrade read lane
+        # backlog and traced submits emit correlated instants, so those
+        # stay on the lock-serialized slow path.
+        if self.admission == "edf" and not self.tracer.enabled:
+            return self._submit_fast(request)
+        return self._submit_slow(request)
+
+    def _submit_fast(self, request: Request) -> Ticket:
+        """Lock-split submit: stamp (GIL-atomic id counter), register
+        the ticket under the small ``_pending_lock``, push onto ONE
+        queue-shard lock, bump internally-locked counters, notify the
+        driver's wake condition.  The server lock — which the driver
+        holds for a whole dispatch→admit→harvest iteration — is never
+        touched, so submitters don't stall behind device work."""
+        if self._closed:  # racy hint; the shard closed flag is authoritative
+            raise RuntimeError(
+                "submit on a closed AnytimeServer (close() was called)")
+        self._raise_if_driver_dead()
+        now = self.clock()
+        self.queue.stamp(request, now)
+        ticket = Ticket(self._ticket_owner, request)
+        # register BEFORE the request becomes poppable: the driver can
+        # never harvest a delivery whose ticket is missing
+        with self._pending_lock:
+            self._pending[request.request_id] = ticket
+        try:
+            self.queue.push(request, _count=True)
+        except BaseException:
+            with self._pending_lock:
+                self._pending.pop(request.request_id, None)
+            raise
+        self.scheduler.note_queued(request)
+        self.metrics.record_submit(now)
+        with self._wake:
+            self._wake.notify_all()
+        return ticket
+
+    def _submit_slow(self, request: Request) -> Ticket:
         with self._cond:
             if self._closed:
                 raise RuntimeError(
                     "submit on a closed AnytimeServer (close() was called)")
             self._raise_if_driver_dead()
-            if request.program not in self.scheduler.runtimes:
-                raise ValueError(
-                    f"unknown program {request.program!r}; serving: "
-                    f"{', '.join(self.scheduler.runtimes)}"
-                )
             tracer = self.tracer
             if self.admission == "reject":
                 # per-lane: flooding one (program, policy, backend) lane
@@ -406,10 +478,12 @@ class AnytimeServer:
                     "serve.admission", request_id=request.request_id,
                     decision=self.admission, backlog=trace_backlog,
                     budget=request.budget_steps)
-            ticket = Ticket(self, request)
-            self._pending[request.request_id] = ticket
-            self._cond.notify_all()   # wake a parked driver
-            return ticket
+            ticket = Ticket(self._ticket_owner, request)
+            with self._pending_lock:
+                self._pending[request.request_id] = ticket
+        with self._wake:
+            self._wake.notify_all()   # wake a parked driver
+        return ticket
 
     def _degrade_budget(self, request: Request) -> Optional[int]:
         """Effective step budget under ``admission="degrade"``: the full
@@ -431,8 +505,24 @@ class AnytimeServer:
     # -- the driver loop ---------------------------------------------------
 
     @property
+    def has_queued(self) -> bool:
+        """Lock-free: whether any shard holds undrained submissions —
+        the parked driver's re-check before waiting (a push is visible
+        in the shard mirrors before its wake notify fires)."""
+        return bool(self.queue)
+
+    @property
     def busy(self) -> bool:
         return bool(self.queue) or self.scheduler.busy
+
+    def _notify_owner(self) -> None:
+        """Wake waiters on the facade's condition after deliveries —
+        Ticket.result()/as_completed block on the TICKET owner's _cond,
+        which for a pooled tier is the facade, not this pool."""
+        owner = self._ticket_owner
+        if owner is not self:
+            with owner._cond:
+                owner._cond.notify_all()
 
     def step(self) -> bool:
         """One dispatch → admit → harvest iteration; returns whether any
@@ -460,6 +550,7 @@ class AnytimeServer:
             self._cond.notify_all()
         for fn, ticket in callbacks:
             _invoke_callback(fn, ticket)
+        self._notify_owner()
         return still_busy
 
     def drain(self, max_steps: Optional[int] = None) -> list[Result]:
@@ -521,7 +612,7 @@ class AnytimeServer:
 
     def result(self, request_id: int) -> Optional[Result]:
         """Result of a still-tracked request, or None while pending."""
-        with self._lock:
+        with self._pending_lock:
             ticket = self._pending.get(request_id)
         return ticket._result if ticket is not None else None
 
@@ -558,12 +649,14 @@ class AnytimeServer:
             degraded=d.budget is not None,
             budget_steps=int(d.budget) if d.budget is not None else total,
         )
-        ticket = self._pending.pop(req.request_id, None)
+        with self._pending_lock:
+            ticket = self._pending.pop(req.request_id, None)
         callbacks: list[tuple[Callable, Ticket]] = []
         if ticket is not None:
-            ticket._result = res
-            callbacks = [(fn, ticket) for fn in ticket._callbacks]
-            ticket._callbacks = []
+            with ticket._cb_lock:
+                ticket._result = res
+                callbacks = [(fn, ticket) for fn in ticket._callbacks]
+                ticket._callbacks = []
         if self._drain_buffer is not None:
             self._drain_buffer.append(res)
         self.metrics.record_delivery(res, now)

@@ -1,0 +1,103 @@
+"""benchmarks.loadgen: arrival-process statistics, request-stream
+synthesis, and one end-to-end virtual-time simulation point through the
+pooled tier (the frontier sweep's unit of work)."""
+import random
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import loadgen  # noqa: E402
+from repro.core import engine  # noqa: E402
+from repro.forest import make_dataset, split_dataset, train_forest  # noqa: E402
+from repro.schedule import AnytimeRuntime, ForestProgram  # noqa: E402
+
+
+def test_poisson_arrivals_mean_rate_and_monotonic():
+    rng = random.Random(0)
+    times = loadgen.poisson_arrivals(100.0, 4000, rng)
+    assert len(times) == 4000
+    assert all(b > a for a, b in zip(times, times[1:]))
+    # empirical rate within 10% of nominal at this sample size
+    assert times[-1] == pytest.approx(4000 / 100.0, rel=0.1)
+
+
+def test_mmpp_matches_mean_rate_but_burstier():
+    rng = random.Random(1)
+    n, rate = 6000, 100.0
+    mmpp = loadgen.mmpp_arrivals(rate, n, rng, burst_factor=4.0,
+                                 switch_hz=2.0)
+    assert len(mmpp) == n
+    assert all(b > a for a, b in zip(mmpp, mmpp[1:]))
+    assert mmpp[-1] == pytest.approx(n / rate, rel=0.15)  # same mean load
+    # burstiness: MMPP inter-arrival CoV must exceed the Poisson CoV (1)
+    gaps = np.diff(mmpp)
+    cov = float(gaps.std() / gaps.mean())
+    assert cov > 1.1
+
+
+def test_sample_mix_respects_weights():
+    rng = random.Random(2)
+    mix = ((0.8, "a"), (0.2, "b"))
+    draws = [p for (p,) in loadgen.sample_mix(mix, 2000, rng)]
+    frac_a = draws.count("a") / len(draws)
+    assert 0.72 < frac_a < 0.88
+
+
+def test_make_schedule_stamps_deadlines_in_service_units():
+    rows = [np.zeros(4), np.ones(4)]
+    sched = loadgen.make_schedule(
+        rows, rate_rps=50.0, n=64, svc_ms=10.0,
+        deadline_mix=((1.0, 2.0, 4.0),), arrival="poisson", seed=3)
+    assert len(sched) == 64
+    times = [t for t, _ in sched]
+    assert all(b > a for a, b in zip(times, times[1:]))
+    for _, req in sched:
+        assert 20.0 <= req.deadline_ms <= 40.0  # 2-4x the 10 ms svc time
+        assert req.policy == "backward_squirrel"
+    with pytest.raises(ValueError, match="arrival"):
+        loadgen.make_schedule(rows, rate_rps=1.0, n=1, svc_ms=1.0,
+                              arrival="weibull")
+
+
+def test_schedule_is_deterministic_per_seed():
+    rows = [np.zeros(4)]
+    a = loadgen.make_schedule(rows, rate_rps=20.0, n=32, svc_ms=5.0, seed=7)
+    b = loadgen.make_schedule(rows, rate_rps=20.0, n=32, svc_ms=5.0, seed=7)
+    assert [t for t, _ in a] == [t for t, _ in b]
+    assert [r.deadline_ms for _, r in a] == [r.deadline_ms for _, r in b]
+
+
+@pytest.fixture(scope="module")
+def small_runtime():
+    X, y = make_dataset("magic", seed=1)
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=1)
+    rf = train_forest(tr[:800], ytr[:800], 2, n_trees=4, max_depth=5, seed=1)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx[:200])
+    rt = AnytimeRuntime(
+        ForestProgram(fa, y_order=yor[:200], path_probs=pp, X_order=te[:8]))
+    return rt, te
+
+
+def test_sim_point_delivers_every_request(small_runtime):
+    """One virtual-time simulation point end-to-end: every scheduled
+    request is delivered, the stats are internally consistent, and
+    generous deadlines complete the full population."""
+    from repro.serve import PooledAnytimeServer
+
+    rt, te = small_runtime
+    clock = loadgen.ManualClock()
+    srv = PooledAnytimeServer(rt, pools=2, capacity=4, clock=clock)
+    loadgen._warm(srv, list(te[:4]), loadgen.POLICY_MIX, None)
+    stats = loadgen.run_sim_point(
+        srv, clock, list(te[:16]), rate_rps=200.0, n_requests=24,
+        svc_ms=1e6, step_cost_s=1e-4, seed=0)
+    assert stats["requests"] == 24
+    assert stats["hit_rate"] == pytest.approx(1.0)
+    assert stats["good_rate"] == pytest.approx(1.0)
+    assert stats["throughput_rps"] > 0
+    assert stats["latency_p99_ms"] >= stats["latency_p50_ms"] >= 0

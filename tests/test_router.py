@@ -1,0 +1,432 @@
+"""The multi-device serving tier: Router placement, segment-boundary
+work stealing, the PooledAnytimeServer facade, and the sharded
+admission queue's per-shard EDF invariants.
+
+The acceptance criterion mirrors the single-server suite: every
+delivered readout — stolen and re-routed requests included — is
+bit-identical to a solo ``jnp-ref`` session advanced the same number of
+steps, on all three backends."""
+import threading
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.forest import make_dataset, split_dataset, train_forest
+from repro.obs import NULL_TRACER, Tracer
+from repro.schedule import AnytimeRuntime, ForestProgram
+from repro.serve import (AdmissionQueue, PooledAnytimeServer, Request,
+                         Router, ServeMetrics)
+from repro.serve.router import _backlog_score
+
+#: generous per-result wait — a stuck driver fails the test, not the run
+WAIT_S = 120.0
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    X, y = make_dataset("magic", seed=1)
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=1)
+    rf = train_forest(tr[:800], ytr[:800], 2, n_trees=4, max_depth=5, seed=1)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx[:200])
+    return fa, pp, yor[:200], te, yte
+
+
+@pytest.fixture(scope="module")
+def runtime(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    return AnytimeRuntime(
+        ForestProgram(fa, y_order=yor, path_probs=pp, X_order=te[:8]))
+
+
+def _solo(runtime, x_row, order, steps):
+    """The jnp-ref oracle: a solo session advanced ``steps`` steps."""
+    sess = runtime.session(
+        np.asarray(x_row)[None, :], order=order, backend="jnp-ref")
+    sess.advance(steps)
+    return sess
+
+
+BACKEND_OPTS = {
+    "jnp-ref": {},
+    "pallas": {"block_b": 16, "block_m": 8},
+    "sharded": {},
+}
+
+
+def _assert_parity(runtime, order, x_row, result):
+    """One delivered result vs the solo oracle at the same step count."""
+    assert result.error is None
+    solo = _solo(runtime, x_row, order, result.steps_completed)
+    if result.steps_completed == 0:
+        return  # prior readout; no oracle state to compare against
+    np.testing.assert_array_equal(result.proba, solo.predict_proba()[0])
+
+
+# ---------------------------------------------------------------------------
+# Router unit behavior (stub pools — placement logic only)
+# ---------------------------------------------------------------------------
+
+
+class _StubScheduler:
+    def __init__(self, waiting=0, active=0, free=8):
+        self.load_hint = (waiting, active, free)
+
+
+class _StubPool:
+    def __init__(self, name, queued=0, waiting=0, active=0, free=8):
+        self.name = name
+        self.queue = [None] * queued  # the router only reads len()
+        self.scheduler = _StubScheduler(waiting, active, free)
+
+
+def _router(pools):
+    return Router(pools, ServeMetrics(), NULL_TRACER)
+
+
+def test_place_picks_least_backlogged_pool():
+    pools = [_StubPool("p0", queued=2, active=1),
+             _StubPool("p1"),
+             _StubPool("p2", waiting=2)]
+    assert _backlog_score(pools[0]) == 3
+    assert _backlog_score(pools[1]) == 0
+    assert _backlog_score(pools[2]) == 2
+    assert _router(pools).place(Request(x=None, deadline_ms=1.0)) == 1
+
+
+def test_place_rotates_round_robin_among_ties():
+    pools = [_StubPool(f"p{i}") for i in range(3)]
+    router = _router(pools)
+    req = Request(x=None, deadline_ms=1.0)
+    assert [router.place(req) for _ in range(4)] == [0, 1, 2, 0]
+
+
+def test_place_single_pool_shortcut():
+    router = _router([_StubPool("p0", queued=5)])
+    assert router.place(Request(x=None, deadline_ms=1.0)) == 0
+
+
+def test_steal_into_refuses_busy_thief():
+    thief = _StubPool("thief", queued=1)
+    victim = _StubPool("victim", queued=5)
+    assert not _router([thief, victim]).steal_into(thief)
+
+
+def test_steal_into_requires_a_worthwhile_victim():
+    thief = _StubPool("thief")
+    # a sibling running its ONLY request is not worth stealing from —
+    # migrating it moves latency without adding parallelism
+    solo_runner = _StubPool("busy", active=1)
+    assert not _router([thief, solo_runner]).steal_into(thief)
+    # two in-flight requests make it a victim
+    loaded = _StubPool("loaded", active=2)
+    router = _router([thief, loaded])
+    assert router._pick_victim(thief) is loaded
+
+
+def test_pick_victim_prefers_most_loaded_sibling():
+    thief = _StubPool("thief")
+    light = _StubPool("light", queued=1)
+    heavy = _StubPool("heavy", queued=3, waiting=2, active=1)
+    router = _router([light, thief, heavy])
+    assert router._pick_victim(thief) is heavy
+
+
+# ---------------------------------------------------------------------------
+# Sharded admission queue: per-shard EDF invariants (property-based)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25)
+@given(n=st.integers(1, 40), shards=st.integers(1, 4),
+       seed=st.integers(0, 10_000))
+def test_sharded_queue_pops_globally_edf(n, shards, seed):
+    rng = np.random.default_rng(seed)
+    q = AdmissionQueue(shards=shards)
+    for _ in range(n):
+        q.submit(Request(x=None, deadline_ms=float(rng.integers(0, 60))),
+                 now=float(rng.integers(0, 5)))
+    assert q.submitted == n and len(q) == n
+    popped = [q.pop() for _ in range(n)]
+    assert q.pop() is None
+    keys = [(r.t_deadline, r.request_id) for r in popped]
+    assert keys == sorted(keys)  # earliest deadline first, id tiebreak
+
+
+@settings(max_examples=25)
+@given(n=st.integers(1, 40), shards=st.integers(2, 5),
+       seed=st.integers(0, 10_000))
+def test_sharded_queue_take_all_merges_edf_and_respects_shard_hash(
+        n, shards, seed):
+    rng = np.random.default_rng(seed)
+    q = AdmissionQueue(shards=shards)
+    reqs = [q.submit(Request(x=None, deadline_ms=float(rng.integers(0, 60))),
+                     now=float(rng.integers(0, 5))) for _ in range(n)]
+    # each request hashes onto exactly the shard its id selects
+    for req in reqs:
+        shard = q._shards[req.request_id % q.n_shards]
+        assert any(e[1] == req.request_id for e in shard.heap)
+    drained = q.take_all()
+    assert len(drained) == n and not q
+    keys = [(r.t_deadline, r.request_id) for r in drained]
+    assert keys == sorted(keys)
+    assert q.take_all() == []
+
+
+def test_closed_queue_rejects_submits_on_every_shard():
+    q = AdmissionQueue(shards=3)
+    q.close()
+    for i in range(3):  # ids 0..2 cover every shard
+        with pytest.raises(RuntimeError, match="closed"):
+            q.submit(Request(x=None, deadline_ms=1.0), now=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Steal parity: stolen requests stay bit-identical to the solo oracle
+# on all three backends (the tier's acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp-ref", "pallas", "sharded"])
+def test_stolen_requests_match_solo_oracle(backend, runtime, pipeline):
+    """Force imbalance (every submit lands on pool 0), then drain: the
+    idle pool must steal, and every delivered readout — migrated or not
+    — must equal a solo jnp-ref session at the same step count."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    srv = PooledAnytimeServer(runtime, pools=2, capacity=2,
+                              backend_opts=BACKEND_OPTS[backend])
+    tickets = [srv.pools[0].submit_request(
+        Request(x=te[i], deadline_ms=60_000.0, backend=backend))
+        for i in range(10)]
+    srv.drain()
+    snap = srv.metrics.snapshot()
+    assert snap["steals"] > 0
+    assert snap["delivered"] == len(tickets)
+    for i, t in enumerate(tickets):
+        r = t.result()
+        assert r.completed and r.error is None
+        assert r.steps_completed == r.total_steps == len(order)
+        solo = _solo(runtime, te[i], order, r.steps_completed)
+        if backend == "pallas":
+            np.testing.assert_allclose(
+                r.proba, solo.predict_proba()[0], rtol=1e-5, atol=1e-5)
+        else:
+            np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+
+
+class _SpyRouter(Router):
+    """Router that records every exported StealRecord before injecting."""
+
+    def __init__(self, *args):
+        super().__init__(*args)
+        self.records = []
+
+    def _migrate(self, victim, thief):
+        with victim._cond:
+            rec = victim.scheduler.export_request(victim.clock())
+        if rec is None:
+            return False
+        self.records.append(rec)
+        with thief._cond:
+            thief.scheduler.inject(rec)
+        self.metrics.record_steal()
+        return True
+
+
+def test_steals_export_only_segment_boundary_state(runtime, pipeline):
+    """Every exported record is a clean segment-boundary prefix: a
+    waiting record never stepped (no device state), and an in-flight
+    record's carried index row reads out bit-identically to a solo
+    jnp-ref session advanced exactly ``pos`` steps — a torn mid-segment
+    export could not satisfy that equality."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    total = len(order)
+    srv = PooledAnytimeServer(runtime, pools=2, capacity=2)
+    spy = _SpyRouter(srv.pools, srv.metrics, srv.tracer)
+    srv.router = spy  # the cooperative step() reads this attribute
+    tickets = [srv.pools[0].submit_request(
+        Request(x=te[i], deadline_ms=60_000.0)) for i in range(12)]
+    srv.drain()
+    assert spy.records, "forced imbalance produced no steals"
+    by_id = {t.request_id: i for i, t in enumerate(tickets)}
+    for rec in spy.records:
+        if rec.kind == "waiting":
+            assert rec.pos == 0 and rec.idx_row is None
+            continue
+        assert rec.kind == "inflight"
+        assert 0 < rec.pos <= total
+        i = by_id[rec.request.request_id]
+        solo = _solo(runtime, te[i], order, rec.pos)
+        stolen_readout = np.asarray(engine.predict_from_state(
+            runtime.program.device, jnp.asarray(rec.idx_row)[None]))[0]
+        np.testing.assert_array_equal(
+            stolen_readout, solo.predict_proba()[0])
+    # delivered results resumed past their export point and stayed exact
+    for i, t in enumerate(tickets):
+        _assert_parity(runtime, order, te[i], t.result())
+
+
+def test_steal_disabled_still_serves_everything(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    srv = PooledAnytimeServer(runtime, pools=2, capacity=2, steal=False)
+    tickets = [srv.pools[0].submit_request(
+        Request(x=te[i], deadline_ms=60_000.0)) for i in range(8)]
+    srv.drain()
+    assert srv.metrics.snapshot()["steals"] == 0
+    for i, t in enumerate(tickets):
+        r = t.result()
+        assert r.completed
+        _assert_parity(runtime, order, te[i], r)
+
+
+# ---------------------------------------------------------------------------
+# PooledAnytimeServer facade: routing, drive modes, lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_pooled_routes_and_serves_cooperatively(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    srv = PooledAnytimeServer(runtime, pools=2, capacity=2)
+    results = srv.serve(list(te[:9]), deadline_ms=60_000.0)
+    snap = srv.metrics.snapshot()
+    assert snap["routed"] == 9 and snap["delivered"] == 9
+    assert len(results) == 9
+    for i, r in enumerate(results):
+        assert r.completed
+        _assert_parity(runtime, order, te[i], r)
+
+
+def test_pooled_threaded_drivers_deliver_across_pools(runtime, pipeline):
+    """One driver per pool; tickets resolve on the facade even when a
+    request is stolen and delivered by a different pool's driver."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    with PooledAnytimeServer(runtime, pools=2, capacity=2,
+                             queue_shards=2) as srv:
+        assert srv.driver_running
+        tickets = [srv.submit(te[i], 60_000.0) for i in range(8)]
+        results = [t.result(timeout=WAIT_S) for t in tickets]
+    assert not srv.driver_running
+    assert len({r.request_id for r in results}) == len(results)
+    for i, r in enumerate(results):
+        assert r.completed and r.error is None
+        _assert_parity(runtime, order, te[i], r)
+
+
+def test_pooled_submit_after_close_raises(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    srv = PooledAnytimeServer(runtime, pools=2, capacity=2)
+    with srv:
+        pass
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(te[0], 60_000.0)
+
+
+def test_pooled_stop_answers_every_admitted_request(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    srv = PooledAnytimeServer(runtime, pools=2, capacity=2)
+    tickets = [srv.submit(te[i], 60_000.0) for i in range(6)]
+    for _ in range(2):  # partial progress, then shutdown mid-flight
+        srv.step()
+    srv.stop()
+    for i, t in enumerate(tickets):
+        r = t.result()
+        assert 0 <= r.steps_completed <= r.total_steps
+        _assert_parity(runtime, order, te[i], r)
+
+
+def test_pooled_result_lookup_uses_shared_pending_registry(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    srv = PooledAnytimeServer(runtime, pools=2, capacity=2)
+    ticket = srv.submit(te[0], 60_000.0)
+    assert srv.result(ticket.request_id) is None  # still pending
+    srv.drain()
+    assert ticket.result().completed
+    assert srv.result(ticket.request_id) is None  # delivered ⇒ untracked
+    assert srv.result(10**9) is None              # unknown id
+
+
+def test_pooled_shares_one_id_stream_and_metrics(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    srv = PooledAnytimeServer(runtime, pools=3, capacity=2)
+    tickets = [srv.submit(te[i % te.shape[0]], 60_000.0) for i in range(9)]
+    ids = [t.request_id for t in tickets]
+    assert len(set(ids)) == len(ids)  # globally unique across pools
+    srv.drain()
+    snap = srv.metrics.snapshot()
+    assert snap["submitted"] == snap["delivered"] == 9
+
+
+def test_pooled_rejects_zero_pools(runtime):
+    with pytest.raises(ValueError, match="pools"):
+        PooledAnytimeServer(runtime, pools=0)
+
+
+def test_pooled_traced_run_emits_route_and_steal_events(runtime, pipeline):
+    """serve.route fires for every placement; forcing imbalance under a
+    strict tracer validates serve.steal against the span registry."""
+    fa, pp, yor, te, yte = pipeline
+    tracer = Tracer()
+    srv = PooledAnytimeServer(runtime, pools=2, capacity=2, tracer=tracer)
+    for i in range(8):
+        srv.pools[0].submit_request(
+            Request(x=te[i], deadline_ms=60_000.0))
+    for i in range(4):
+        srv.submit(te[i], 60_000.0)
+    srv.drain()
+    assert srv.metrics.snapshot()["steals"] > 0
+    names = {ev.name for ev in tracer.events()}
+    assert "serve.route" in names and "serve.steal" in names
+
+
+# ---------------------------------------------------------------------------
+# Concurrent submitters against the pooled tier (thread-stress target)
+# ---------------------------------------------------------------------------
+
+
+def test_pooled_concurrent_submitters_all_served_exactly_once(
+        runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    n_threads, per_thread = 4, 4
+    results: dict[int, list] = {}
+    errors: list[BaseException] = []
+
+    def submitter(tid: int) -> None:
+        try:
+            tickets = [srv.submit(
+                te[(tid * per_thread + j) % te.shape[0]], 60_000.0)
+                for j in range(per_thread)]
+            results[tid] = [t.result(timeout=WAIT_S) for t in tickets]
+        except BaseException as e:  # noqa: BLE001 - surfaced below
+            errors.append(e)
+
+    with PooledAnytimeServer(runtime, pools=2, capacity=3,
+                             queue_shards=2) as srv:
+        threads = [threading.Thread(target=submitter, args=(tid,))
+                   for tid in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(WAIT_S)
+        snap = srv.metrics.snapshot()
+    assert not errors
+    delivered = [r for rs in results.values() for r in rs]
+    assert len(delivered) == n_threads * per_thread
+    assert all(r.completed and r.error is None for r in delivered)
+    assert len({r.request_id for r in delivered}) == len(delivered)
+    assert snap["delivered"] == len(delivered)
+    for tid, rs in results.items():
+        for j, r in enumerate(rs):
+            _assert_parity(
+                runtime, order,
+                te[(tid * per_thread + j) % te.shape[0]], r)

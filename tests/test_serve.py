@@ -647,3 +647,90 @@ def test_multi_program_server(runtime, pipeline):
     assert tf.result().completed and tc.result().completed
     assert server.metrics.snapshot()["delivered"] == 2
     assert len(server.scheduler.lanes) == 2
+
+
+# ---------------------------------------------------------------------------
+# Metrics reservoirs: exact below capacity, bounded and uniform beyond
+# ---------------------------------------------------------------------------
+
+
+def test_reservoir_exact_below_capacity():
+    from repro.serve import Reservoir
+
+    r = Reservoir(capacity=100, seed=0)
+    values = [float(i) for i in range(60)]
+    for v in values:
+        r.add(v)
+    # below capacity the sample IS the population — no sampling at all
+    assert r.exact and r.count == 60 and len(r) == 60
+    assert r.values() == values
+
+
+def test_reservoir_bounded_beyond_capacity():
+    from repro.serve import Reservoir
+
+    r = Reservoir(capacity=64, seed=0)
+    for i in range(1000):
+        r.add(float(i))
+    assert not r.exact
+    assert r.count == 1000 and len(r) == 64  # memory stays O(capacity)
+    kept = r.values()
+    assert all(0.0 <= v < 1000.0 for v in kept)
+    # Algorithm R keeps late arrivals with uniform probability — a
+    # broken reservoir that stops replacing would hold only 0..63
+    assert max(kept) >= 64.0
+    # seeded: identical streams give identical samples
+    r2 = Reservoir(capacity=64, seed=0)
+    for i in range(1000):
+        r2.add(float(i))
+    assert r2.values() == kept
+
+
+def test_reservoir_rejects_nonpositive_capacity():
+    from repro.serve import Reservoir
+
+    with pytest.raises(ValueError, match="capacity"):
+        Reservoir(capacity=0)
+
+
+def test_metrics_percentiles_exact_below_reservoir():
+    """Below the reservoir bound, snapshot percentiles equal the exact
+    percentiles of the full delivery population, the snapshot says so
+    (``percentiles_exact``), and its cost is O(reservoir)."""
+    from repro.serve import Result, ServeMetrics
+
+    m = ServeMetrics(reservoir=256)
+    steps = [int(s) for s in np.random.default_rng(7).integers(0, 48, 100)]
+    lat = [float(v) for v in np.random.default_rng(8).uniform(0.1, 9.0, 100)]
+    for i, (s, ms) in enumerate(zip(steps, lat)):
+        m.record_delivery(Result(
+            request_id=i, prediction=0, proba=None, steps_completed=s,
+            total_steps=48, completed=False, deadline_hit=s > 0,
+            latency_ms=ms), now=float(i))
+    snap = m.snapshot()
+    assert snap["percentiles_exact"]
+    assert snap["steps_at_deadline"]["p50"] == pytest.approx(
+        float(np.percentile(steps, 50)))
+    assert snap["steps_at_deadline"]["p99"] == pytest.approx(
+        float(np.percentile(steps, 99)))
+    assert snap["latency_ms"]["p99"] == pytest.approx(
+        float(np.percentile(lat, 99)))
+    assert snap["latency_ms"]["mean"] == pytest.approx(
+        float(np.mean(lat)))
+
+
+def test_metrics_snapshot_bounded_under_heavy_traffic():
+    from repro.serve import Result, ServeMetrics
+
+    m = ServeMetrics(reservoir=128)
+    for i in range(5000):
+        m.record_delivery(Result(
+            request_id=i, prediction=0, proba=None, steps_completed=i % 48,
+            total_steps=48, completed=False, deadline_hit=True,
+            latency_ms=float(i % 7)), now=float(i))
+    snap = m.snapshot()
+    assert snap["delivered"] == 5000
+    assert not snap["percentiles_exact"]
+    assert len(m.steps_at_deadline) == 128  # O(reservoir), not O(traffic)
+    assert len(m.latency_ms) == 128
+    assert 0.0 <= snap["steps_at_deadline"]["p50"] < 48.0

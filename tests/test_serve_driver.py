@@ -392,3 +392,52 @@ def test_concurrent_submitters_all_served_exactly_once(runtime, pipeline):
                          te[(tid * per_thread + j) % te.shape[0]],
                          order, r.steps_completed)
             np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+
+
+def test_eight_submitters_on_sharded_queue_fast_path(runtime, pipeline):
+    """The lock-free submit fast path under real contention: 8 threads
+    hammer a 4-shard queue while the driver drains it.  Every ticket
+    must resolve exactly once with an exact-prefix readout, and the
+    shard counters must reconcile with the delivered population — the
+    regression test for the stamp → register → push ordering (a ticket
+    registered AFTER its request became poppable could be delivered
+    before its callback target exists)."""
+    fa, pp, yor, te, yte = pipeline
+    order = runtime.order("backward_squirrel")
+    n_threads, per_thread = 8, 6
+    barrier = threading.Barrier(n_threads)
+    results: dict[int, list] = {}
+    errors: list[BaseException] = []
+
+    def submitter(tid: int) -> None:
+        try:
+            barrier.wait(WAIT_S)  # maximize submit-path overlap
+            tickets = [server.submit(
+                te[(tid * per_thread + j) % te.shape[0]], 60_000.0)
+                for j in range(per_thread)]
+            results[tid] = [t.result(timeout=WAIT_S) for t in tickets]
+        except BaseException as e:  # noqa: BLE001 - surfaced below
+            errors.append(e)
+
+    with AnytimeServer(runtime, capacity=4, queue_shards=4) as server:
+        assert server.queue.n_shards == 4
+        threads = [threading.Thread(target=submitter, args=(tid,))
+                   for tid in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(WAIT_S)
+        snap = server.metrics.snapshot()
+    assert not errors
+    delivered = [r for rs in results.values() for r in rs]
+    assert len(delivered) == n_threads * per_thread
+    assert all(r.completed and r.error is None for r in delivered)
+    assert len({r.request_id for r in delivered}) == len(delivered)
+    assert snap["submitted"] == snap["delivered"] == len(delivered)
+    assert server.queue.submitted == len(delivered)
+    for tid, rs in results.items():
+        for j, r in enumerate(rs):
+            solo = _solo(runtime,
+                         te[(tid * per_thread + j) % te.shape[0]],
+                         order, r.steps_completed)
+            np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
