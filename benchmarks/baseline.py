@@ -36,6 +36,10 @@ HIT_RATE_TOL = 0.02
 WALL_CLOCK_FACTOR = 0.25
 #: the pooled-tier knee-scaling gate (4 pools vs 1 at equal good-rate)
 MIN_POOL_SCALING = 3.0
+#: certified serving is a proof, not a percentile: a guaranteed=True
+#: request that was admitted and then missed its deadline is a broken
+#: contract, so the budget is zero on every platform, absolutely
+GUARANTEED_MISS_BUDGET = 0
 
 
 def _load(path: str) -> Optional[dict]:
@@ -89,6 +93,35 @@ def check_serve(fresh: dict, base: dict, failures: list[str]) -> None:
         failures.append(
             f"serve: overload degrade hit-rate {degrade_hit:.3f} below "
             f"baseline {ref_degrade:.3f}")
+    # the certified contract: like MIN_POOL_SCALING this gates
+    # absolutely, not relative to the baseline — the section must exist,
+    # hold zero guaranteed misses, and prove the rejection side fired
+    f_g = fresh.get("guaranteed")
+    if f_g is None:
+        failures.append("serve: fresh run produced no guaranteed section")
+    else:
+        misses = int(f_g.get("misses", 1))
+        m_misses = int(f_g.get("metrics_misses", 1))
+        if misses > GUARANTEED_MISS_BUDGET or m_misses > GUARANTEED_MISS_BUDGET:
+            failures.append(
+                f"serve: guaranteed deadline misses {misses} "
+                f"(metrics {m_misses}) over the {GUARANTEED_MISS_BUDGET} "
+                f"budget — certified admission admitted a request it "
+                f"could not deliver")
+        if int(f_g.get("rejected_infeasible", 0)) < 1:
+            failures.append(
+                "serve: certified admission rejected no provably-"
+                "infeasible deadline — the pricing gate is not firing")
+        for name, gb in (f_g.get("backends") or {}).items():
+            if not gb.get("parity_vs_solo"):
+                failures.append(
+                    f"serve: guaranteed {name} deliveries lost bit-parity "
+                    f"with the solo jnp-ref oracle")
+            if gb.get("completed") != gb.get("requests"):
+                failures.append(
+                    f"serve: guaranteed {name} completed "
+                    f"{gb.get('completed')}/{gb.get('requests')} full "
+                    f"plans inside the certified deadline")
     # wall-clock — measured on every platform (this is real serving
     # throughput, not interpret-mode): generous factor, fail only on
     # order-of-magnitude regressions

@@ -24,6 +24,14 @@ Workloads over the same forest, order, and request stream:
   degrade's ``steps_p50`` shows the budget price paid for its
   hit-rate.  Gated: degrade must dominate reject on hit-rate at equal
   load.
+* **guaranteed** — the certified contract end-to-end on every backend
+  (jnp-ref, pallas, sharded): calibrate a fresh WCET cost model on
+  THIS machine, submit a slot-filling wave of ``guaranteed=True``
+  requests at a deadline derived from the priced worst case, and hold
+  the contract as a hard gate — zero deadline misses, every delivery
+  bit-identical to a solo jnp-ref session run to completion, and a
+  provably-infeasible deadline refused at submit with the priced bound
+  in the error.
 
 The serial baseline is the pre-``repro.serve`` deployment shape: one
 fresh :class:`~repro.schedule.runtime.Session` per request, advanced
@@ -40,8 +48,14 @@ import time
 import numpy as np
 
 from benchmarks.common import build_pipeline, runtime_for
+from benchmarks.loadgen import calibrate_cost_model
 from repro.obs import Tracer, write_chrome_trace
-from repro.serve import AdmissionRejected, AnytimeServer
+from repro.serve import (
+    AdmissionRejected,
+    AnytimeServer,
+    CertificationFailed,
+    QoS,
+)
 
 
 def _serial_loop(rt, order, rows, deadline_ms):
@@ -100,11 +114,13 @@ def _threaded_loop(rt, rows, deadline_ms, capacity, warmup: bool = False):
     fire-and-forgets submissions and blocks on tickets."""
     with AnytimeServer(rt, capacity=capacity) as server:
         if warmup:
-            for t in [server.submit(x, 300_000.0) for x in rows[:capacity]]:
+            warm_qos = QoS(deadline_ms=300_000.0)
+            for t in [server.submit(x, warm_qos) for x in rows[:capacity]]:
                 t.result(timeout=600.0)
             server.metrics.reset()
+        qos = QoS(deadline_ms=deadline_ms)
         t0 = time.perf_counter()
-        tickets = [server.submit(x, deadline_ms) for x in rows]
+        tickets = [server.submit(x, qos) for x in rows]
         results = [t.result(timeout=600.0) for t in tickets]
         dt = time.perf_counter() - t0
         snap = server.metrics.snapshot()
@@ -119,11 +135,12 @@ def _overload_loop(rt, rows, deadline_ms, capacity, n_requests,
                            admission=admission, admission_k=admission_k)
     server.serve(list(rows[:capacity]), deadline_ms=300_000.0)  # warm traces
     server.metrics.reset()
+    qos = QoS(deadline_ms=deadline_ms)
     tickets, rejected = [], 0
     t0 = time.perf_counter()
     for i in range(n_requests):
         try:
-            tickets.append(server.submit(rows[i % len(rows)], deadline_ms))
+            tickets.append(server.submit(rows[i % len(rows)], qos))
         except AdmissionRejected:
             rejected += 1
     server.drain()
@@ -145,6 +162,108 @@ def _overload_loop(rt, rows, deadline_ms, capacity, n_requests,
         "steps_p50": float(np.percentile(steps, 50)) if steps.size else 0.0,
         "steps_p99": float(np.percentile(steps, 99)) if steps.size else 0.0,
         "budget_p50": float(np.percentile(budgets, 50)) if budgets.size else 0.0,
+    }
+
+
+#: every backend the guaranteed=True contract is held on
+_GUARANTEED_BACKENDS = ("jnp-ref", "pallas", "sharded")
+
+
+def _guaranteed_wave(rt, rows, capacity, backend, ref_proba,
+                     margin: float = 3.0, slack: float = 6.0):
+    """One backend's certified wave.
+
+    Calibrates a fresh :class:`~repro.serve.CostModel` on this machine
+    (a certificate priced from another machine's maxima proves nothing
+    here), warms the certified server's own jit traces AND every
+    admission-flush width (certification prices steady state, so
+    nothing cold may land inside a timed deadline), then submits a
+    slot-filling wave of ``guaranteed=True`` requests at ``slack`` x
+    the priced full-plan worst case.  Returns the contract evidence:
+    completions, deadline misses (ticket-observed and metrics-counted),
+    bit-parity vs the solo jnp-ref oracle, and whether a provably
+    infeasible deadline was refused at submit with the priced bound in
+    the error message.
+    """
+    cost_model, total = calibrate_cost_model(
+        rt, rows, capacity=capacity, backend=backend, margin=margin)
+    server = AnytimeServer(rt, capacity=capacity, cost_model=cost_model)
+    server.serve(list(rows[:capacity]), deadline_ms=300_000.0,
+                 backend=backend)
+    for k in range(1, capacity + 1):
+        for j in range(k):
+            server.submit(rows[j % len(rows)], QoS(
+                deadline_ms=300_000.0, backend=backend, budget_steps=1))
+        server.drain()
+    server.metrics.reset()
+
+    wcet_full = cost_model.request_wcet_ms(total, backend=backend)
+    deadline_ms = slack * wcet_full
+    qos = QoS(deadline_ms=deadline_ms, backend=backend, guaranteed=True)
+    t0 = time.perf_counter()
+    tickets = [server.submit(row, qos) for row in rows[:capacity]]
+    server.drain()
+    dt = time.perf_counter() - t0
+    results = [t.result() for t in tickets]
+    misses = sum(1 for r in results
+                 if not r.completed or r.latency_ms > deadline_ms)
+    if backend == "pallas":
+        # prob_accum associates float sums differently; readout parity
+        # to kernel tolerance (same contract as tests/test_serve.py)
+        parity = all(np.allclose(np.asarray(r.proba), ref,
+                                 rtol=1e-5, atol=1e-5)
+                     for r, ref in zip(results, ref_proba))
+    else:
+        parity = all(np.array_equal(np.asarray(r.proba), ref)
+                     for r, ref in zip(results, ref_proba))
+    # the rejection side of the contract: a deadline the priced worst
+    # case provably cannot meet must be refused at submit, bound in hand
+    rejected_infeasible, priced_in_error = 0, False
+    try:
+        server.submit(rows[0], QoS(deadline_ms=0.001, backend=backend,
+                                   guaranteed=True))
+    except CertificationFailed as e:
+        rejected_infeasible = 1
+        priced_in_error = (e.wcet_ms is not None
+                           and f"{e.wcet_ms:.3f}" in str(e))
+    snap = server.metrics.snapshot()
+    return {
+        "backend": backend,
+        "requests": len(results),
+        "wall_s": dt,
+        "deadline_ms": deadline_ms,
+        "priced_full_wcet_ms": wcet_full,
+        "completed": sum(r.completed for r in results),
+        "misses": misses,
+        "metrics_misses": snap["guaranteed_misses"],
+        "certified_admitted": snap["certified_admitted"],
+        "certified_rejected": snap["certified_rejected"],
+        "parity_vs_solo": bool(parity),
+        "rejected_infeasible": rejected_infeasible,
+        "priced_bound_in_error": priced_in_error,
+    }
+
+
+def _guaranteed_loops(rt, order, rows, capacity):
+    """The certified contract on every backend, against one shared
+    solo-session oracle (jnp-ref, full plan — what a completed
+    guaranteed delivery must be bit-identical to)."""
+    ref_proba = []
+    for row in rows[:capacity]:
+        sess = rt.session(row[None, :], order=order, backend="jnp-ref")
+        sess.advance_until(300_000.0)
+        # [0]: a delivered Result carries the per-request row, not the
+        # solo session's singleton batch axis
+        ref_proba.append(np.asarray(sess.predict_proba())[0])
+    backends = {b: _guaranteed_wave(rt, rows, capacity, b, ref_proba)
+                for b in _GUARANTEED_BACKENDS}
+    return {
+        "backends": backends,
+        "misses": sum(b["misses"] for b in backends.values()),
+        "metrics_misses":
+            sum(b["metrics_misses"] for b in backends.values()),
+        "rejected_infeasible":
+            sum(b["rejected_infeasible"] for b in backends.values()),
     }
 
 
@@ -224,6 +343,8 @@ def run(dataset: str = "magic", n_trees: int = 10, depth: int = 6,
             "capacity": capacity, "n_requests": len(rows)})
         out["obs"]["trace_path"] = trace_path
         out["obs"]["trace_events"] = len(doc["traceEvents"])
+    # certified serving: the guaranteed=True contract on every backend
+    out["guaranteed"] = _guaranteed_loops(rt, order, rows, capacity)
     # overload frontier: reject sheds at submit, degrade shrinks budgets
     overload_n = 6 * capacity
     out["overload"] = {
@@ -254,6 +375,12 @@ def run(dataset: str = "magic", n_trees: int = 10, depth: int = 6,
             print(f"serve,overload_{mode},hit_rate,{o['hit_rate']:.3f},"
                   f"rejected,{o['rejected']},degraded,"
                   f"{o['degraded_requests']},steps_p50,{o['steps_p50']:.0f}")
+        for name, g in out["guaranteed"]["backends"].items():
+            print(f"serve,guaranteed_{name},completed,{g['completed']}/"
+                  f"{g['requests']},misses,{g['misses']},deadline_ms,"
+                  f"{g['deadline_ms']:.1f},parity,"
+                  f"{int(g['parity_vs_solo'])},rejected_infeasible,"
+                  f"{g['rejected_infeasible']}")
         ob = out["obs"]
         print(f"serve,obs,disabled_ratio,{ob['disabled_ratio']:.3f},"
               f"traced_rps,{ob['traced_rps']:.1f},attributions,"
@@ -276,6 +403,26 @@ def run(dataset: str = "magic", n_trees: int = 10, depth: int = 6,
         assert degrade_hit > reject_hit, (
             f"admission='degrade' hit-rate {degrade_hit:.3f} does not "
             f"dominate 'reject' {reject_hit:.3f} at equal load")
+        gg = out["guaranteed"]
+        assert gg["misses"] == 0 and gg["metrics_misses"] == 0, (
+            f"guaranteed deadline misses: {gg['misses']} ticket-observed, "
+            f"{gg['metrics_misses']} metrics-counted — a certified "
+            f"admission admitted a request it could not deliver")
+        assert gg["rejected_infeasible"] >= len(_GUARANTEED_BACKENDS), (
+            f"certified admission rejected only "
+            f"{gg['rejected_infeasible']} provably-infeasible deadlines "
+            f"across {len(_GUARANTEED_BACKENDS)} backends — the pricing "
+            f"gate is not firing")
+        for name, g in gg["backends"].items():
+            assert g["completed"] == g["requests"], (
+                f"guaranteed {name}: only {g['completed']}/{g['requests']} "
+                f"ran the full plan inside the certified deadline")
+            assert g["parity_vs_solo"], (
+                f"guaranteed {name} deliveries lost bit-parity with the "
+                f"solo jnp-ref oracle")
+            assert g["priced_bound_in_error"], (
+                f"guaranteed {name}: CertificationFailed did not carry "
+                f"the priced worst-case bound in its message")
         ob = out["obs"]
         assert ob["disabled_ratio"] >= min_trace_off_ratio, (
             f"disabled-tracer serving at {ob['disabled_ratio']:.2f}x the "

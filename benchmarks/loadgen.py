@@ -50,7 +50,13 @@ import time
 import numpy as np
 
 from benchmarks.common import build_pipeline, runtime_for
-from repro.serve import PooledAnytimeServer, Request
+from repro.serve import (
+    AdmissionRejected,
+    CertificationFailed,
+    PooledAnytimeServer,
+    QoS,
+    Request,
+)
 
 #: default deadline mix, in units of one request's calibrated solo
 #: service time: (weight, lo, hi) — a loose majority plus a tight tail,
@@ -181,8 +187,27 @@ def _warm(srv: PooledAnytimeServer, rows, policy_mix, backend) -> None:
     srv.metrics.reset()
 
 
+def _warm_admission_counts(srv: PooledAnytimeServer, rows, policy,
+                           backend) -> None:
+    """Warm the eager admission-flush shapes: the first k-row slot
+    admission compiles its own scatter/broadcast ops per distinct k.
+    Submits k single-step requests per count so every flush width a
+    paced stream can produce is compiled before anything is timed —
+    wall-clock blips of ~100 ms mid-storm would break real-mode
+    certificates that the steady-state cost model proved feasible."""
+    for pool in srv.pools:
+        for k in range(1, pool.scheduler.capacity + 1):
+            for j in range(k):
+                pool.submit_request(Request(
+                    x=rows[j % len(rows)], deadline_ms=300_000.0,
+                    policy=policy, backend=backend, budget_steps=1))
+            while srv.busy:
+                srv.step()
+    srv.metrics.reset()
+
+
 def drive_sim(srv: PooledAnytimeServer, clock: ManualClock, schedule,
-              step_cost_s: float) -> list:
+              step_cost_s: float, submit=None) -> list:
     """Event-driven virtual-time drive of one arrival schedule.
 
     Each pool owns a virtual timeline: a ``pool.step()`` — one real
@@ -192,7 +217,13 @@ def drive_sim(srv: PooledAnytimeServer, clock: ManualClock, schedule,
     would give.  Arrivals interleave at their stamped offsets; work
     stealing runs whenever a pool goes idle, charged one step cost on
     the thief's timeline (the migration sync).  Returns the tickets.
+
+    ``submit`` overrides the per-arrival submit call (default:
+    ``srv.submit_request``) — a callback may catch
+    :class:`~repro.serve.AdmissionRejected` and return ``None``, in
+    which case no ticket is recorded for that arrival.
     """
+    do_submit = submit if submit is not None else srv.submit_request
     t0 = clock.t
     next_t = {p: t0 for p in srv.pools}
     tickets = []
@@ -214,7 +245,9 @@ def drive_sim(srv: PooledAnytimeServer, clock: ManualClock, schedule,
             break
         if t_arr <= t_pool:
             clock.t = max(clock.t, t_arr)
-            tickets.append(srv.submit_request(schedule[i][1]))
+            ticket = do_submit(schedule[i][1])
+            if ticket is not None:
+                tickets.append(ticket)
             i += 1
             continue
         clock.t = t_pool
@@ -305,6 +338,64 @@ def calibrate(rt, rows, *, capacity: int, backend=None,
         # one pool's sustainable rate: capacity requests per batch time
         "base_rate_rps": capacity / wall_s,
     }
+
+
+def calibrate_cost_model(rt, rows, *, capacity: int = 8, backend="jnp-ref",
+                         policy: str = "backward_squirrel",
+                         margin: float = 3.0, platform=None,
+                         repeats: int = 2):
+    """Calibrate a fresh :class:`~repro.serve.CostModel` on THIS machine.
+
+    Runs a budget sweep on a real single server — full-batch serves
+    plus single requests at every pow2 step budget, so the dispatcher
+    visits every pow2 segment length certification may price.  The
+    first sweep runs UNTRACED as warmup: it absorbs the jit compiles
+    AND the eager admission-op compiles (the first k-row slot-batch
+    admission flush compiles its own scatter shapes — wall time that is
+    warmup, not recurring cost, and must not leak into a steady cell's
+    max).  The ``repeats`` traced sweeps after it sample pure steady
+    state; the trace folds into a WCET table
+    (:func:`repro.obs.worst_case_table`) priced by
+    :class:`~repro.serve.CostModel`.  The storm and bench gates
+    calibrate fresh rather than loading the committed table: a
+    certificate priced from another machine's maxima proves nothing
+    about this one.
+
+    Returns ``(cost_model, total_steps)`` — the priced model and the
+    full plan length, so callers can price a full-plan request.
+    """
+    import jax
+
+    from repro.obs import Tracer, worst_case_table
+    from repro.serve import AnytimeServer, CostModel
+
+    tracer = Tracer(enabled=False)
+    server = AnytimeServer(rt, capacity=capacity, tracer=tracer)
+    batch = list(rows[:capacity])
+
+    def sweep() -> int:
+        results = server.serve(batch, deadline_ms=300_000.0,
+                               policy=policy, backend=backend)
+        n_steps = results[0].total_steps
+        b = 1
+        while b < n_steps:
+            ticket = server.submit(rows[0], QoS(
+                deadline_ms=300_000.0, policy=policy, backend=backend,
+                budget_steps=b))
+            server.drain()
+            ticket.result()
+            b *= 2
+        return n_steps
+
+    total = sweep()  # warmup: jit traces + eager admission shapes
+    tracer.enable()
+    for _ in range(max(1, repeats)):
+        total = sweep()
+    tracer.disable()
+    table = worst_case_table(
+        tracer.events(),
+        platform=platform or jax.default_backend(), margin=margin)
+    return CostModel(table), total
 
 
 # ---------------------------------------------------------------------------
@@ -403,6 +494,7 @@ def run_real(rt, rows, *, pools: int, capacity: int = 8,
                               queue_shards=queue_shards)
     with srv:
         _warm(srv, rows, ((1.0, "backward_squirrel"),), backend)
+        qos = QoS(deadline_ms=deadline_ms, backend=backend)
         t0 = time.perf_counter()
         tickets = []
         if loop == "open":
@@ -411,15 +503,13 @@ def run_real(rt, rows, *, pools: int, capacity: int = 8,
                 lag = t0 + t_arr - time.perf_counter()
                 if lag > 0:
                     time.sleep(lag)
-                tickets.append(srv.submit(
-                    rows[i % len(rows)], deadline_ms, backend=backend))
+                tickets.append(srv.submit(rows[i % len(rows)], qos))
             results = [t.result(timeout=120.0) for t in tickets]
         elif loop == "closed":
             results, inflight, i = [], [], 0
             while i < n_requests or inflight:
                 while i < n_requests and len(inflight) < concurrency:
-                    inflight.append(srv.submit(
-                        rows[i % len(rows)], deadline_ms, backend=backend))
+                    inflight.append(srv.submit(rows[i % len(rows)], qos))
                     i += 1
                 results.append(inflight.pop(0).result(timeout=120.0))
         else:
@@ -438,6 +528,179 @@ def run_real(rt, rows, *, pools: int, capacity: int = 8,
         "routed": snap["routed"],
         "errors": sum(1 for r in results if r.error is not None),
     }
+
+
+# ---------------------------------------------------------------------------
+# The adversarial deadline storm: guaranteed + best-effort mixed traffic
+# ---------------------------------------------------------------------------
+
+
+def make_storm_schedule(rows, *, rate_rps: float, n: int, svc_ms: float,
+                        guaranteed_wcet_ms: float,
+                        guaranteed_frac: float = 0.25,
+                        guaranteed_slack: float = 4.0,
+                        best_effort_band=(0.4, 1.5),
+                        policy: str = "backward_squirrel", backend=None,
+                        arrival: str = "mmpp", seed: int = 0,
+                        ) -> list[tuple[float, Request]]:
+    """An adversarial mixed stream: a ``guaranteed_frac`` minority of
+    ``guaranteed=True`` requests with deadlines ``guaranteed_slack`` x
+    the priced idle-pool worst case, interleaved with best-effort
+    traffic whose deadlines sit BELOW one solo service time
+    (``best_effort_band`` x ``svc_ms``) — tight enough that under the
+    bursty arrival process the best-effort lanes must degrade while the
+    certified minority still has to land every deadline."""
+    rng = random.Random(seed)
+    if arrival == "mmpp":
+        times = mmpp_arrivals(rate_rps, n, rng)
+    else:
+        times = poisson_arrivals(rate_rps, n, rng)
+    out = []
+    for i in range(n):
+        if rng.random() < guaranteed_frac:
+            req = Request(
+                x=rows[i % len(rows)],
+                deadline_ms=guaranteed_slack * guaranteed_wcet_ms,
+                policy=policy, backend=backend, guaranteed=True)
+        else:
+            req = Request(
+                x=rows[i % len(rows)],
+                deadline_ms=rng.uniform(*best_effort_band) * svc_ms,
+                policy=policy, backend=backend)
+        out.append((times[i], req))
+    return out
+
+
+def run_storm(rt, rows, *, mode: str = "sim", pools: int = 2,
+              capacity: int = 8, n_requests: int = 64,
+              rate_multiplier=None, guaranteed_frac: float = 0.25,
+              margin: float = 3.0, backend="jnp-ref",
+              policy: str = "backward_squirrel", queue_shards: int = 2,
+              gate: bool = True, seed: int = 0, verbose: bool = True,
+              ) -> dict:
+    """Deadline storm: certified guaranteed traffic through an
+    overloaded degrade-mode pooled server.
+
+    Calibrates a fresh cost model on this machine, then offers
+    ``rate_multiplier`` x one pool's sustainable rate of mixed traffic
+    (``--mode sim`` drives virtual time, ``--mode real`` paces wall
+    clock through the threaded drivers).  The gate is the PR's hard
+    guarantee: **every admitted guaranteed request completes its full
+    plan inside its deadline — zero misses** — while the best-effort
+    majority visibly degrades (shrunken step budgets) and
+    non-admissible guaranteed requests are rejected at submit, never
+    silently missed."""
+    cal = calibrate(rt, rows, capacity=capacity, backend=backend,
+                    policy=policy)
+    cost_model, total_steps = calibrate_cost_model(
+        rt, rows, capacity=capacity, backend=backend, policy=policy,
+        margin=margin)
+    wcet_full = cost_model.request_wcet_ms(total_steps, backend=backend)
+    # default offered load: 3x the AGGREGATE capacity, whatever the pool
+    # count — the storm must actually overload the tier deep enough that
+    # per-pool backlog crosses the degrade threshold even while EDF
+    # retires expired best-effort requests out of the queue
+    if rate_multiplier is None:
+        rate_multiplier = 3.0 * pools
+    rate = rate_multiplier * cal["base_rate_rps"]
+    # real mode breathes wall-clock jitter the virtual drive never sees:
+    # give the certified minority proportionally more slack
+    slack = 4.0 if mode == "sim" else 6.0
+    schedule = make_storm_schedule(
+        rows, rate_rps=rate, n=n_requests, svc_ms=cal["svc_ms"],
+        guaranteed_wcet_ms=wcet_full, guaranteed_frac=guaranteed_frac,
+        guaranteed_slack=slack, policy=policy, backend=backend, seed=seed)
+    rejections = {"certified": 0, "overload": 0}
+
+    clock = ManualClock() if mode == "sim" else None
+    srv = PooledAnytimeServer(
+        rt, pools=pools, capacity=capacity, admission="degrade",
+        admission_k=1.0, queue_shards=queue_shards,
+        cost_model=cost_model, **({"clock": clock} if clock else {}))
+
+    def submit(req):
+        try:
+            return srv.submit_request(req)
+        except CertificationFailed:
+            rejections["certified"] += 1
+        except AdmissionRejected:
+            rejections["overload"] += 1
+        return None
+
+    if mode == "sim":
+        _warm(srv, rows, ((1.0, policy),), backend)
+        _warm_admission_counts(srv, rows, policy, backend)
+        t_start = clock.t
+        tickets = drive_sim(srv, clock, schedule, cal["step_cost_s"],
+                            submit=submit)
+        span_s = max(clock.t - t_start, 1e-9)
+        results = [t.result() for t in tickets]
+        snap = srv.metrics.snapshot()
+    elif mode == "real":
+        with srv:
+            _warm(srv, rows, ((1.0, policy),), backend)
+            _warm_admission_counts(srv, rows, policy, backend)
+            t0 = time.perf_counter()
+            tickets = []
+            for t_arr, req in schedule:
+                lag = t0 + t_arr - time.perf_counter()
+                if lag > 0:
+                    time.sleep(lag)
+                ticket = submit(req)
+                if ticket is not None:
+                    tickets.append(ticket)
+            results = [t.result(timeout=120.0) for t in tickets]
+            span_s = max(time.perf_counter() - t0, 1e-9)
+            snap = srv.metrics.snapshot()
+    else:
+        raise ValueError(f"mode must be 'sim' or 'real', got {mode!r}")
+
+    guaranteed = [(t, t.result()) for t in tickets if t.request.guaranteed]
+    misses = [
+        (t, r) for t, r in guaranteed
+        if not r.completed or r.latency_ms > t.request.deadline_ms]
+    best_effort = [r for r in results if not r.guaranteed]
+    out = {
+        "mode": mode, "pools": pools, "offered_rps": rate,
+        "requests": n_requests, "delivered": len(results),
+        "span_s": span_s,
+        "guaranteed_admitted": len(guaranteed),
+        "guaranteed_misses": len(misses),
+        "metrics_guaranteed_misses": snap["guaranteed_misses"],
+        "certified_rejected": rejections["certified"],
+        "overload_rejected": rejections["overload"],
+        "degraded_requests": snap["degraded_requests"],
+        "best_effort_delivered": len(best_effort),
+        "best_effort_good_rate": (
+            float(np.mean([r.completed for r in best_effort]))
+            if best_effort else 0.0),
+        "priced_full_wcet_ms": wcet_full,
+    }
+    if verbose:
+        print(f"loadgen,storm,{mode},pools,{pools},"
+              f"guaranteed,{out['guaranteed_admitted']},misses,"
+              f"{out['guaranteed_misses']},certified_rejected,"
+              f"{out['certified_rejected']},degraded,"
+              f"{out['degraded_requests']},be_good_rate,"
+              f"{out['best_effort_good_rate']:.3f}", flush=True)
+    if gate:
+        assert out["guaranteed_admitted"] > 0, (
+            "storm admitted no guaranteed requests — the certified lane "
+            "was never exercised (deadline slack too tight for the "
+            "priced worst case?)")
+        assert not misses and snap["guaranteed_misses"] == 0, (
+            f"{len(misses)} certified guaranteed request(s) missed their "
+            f"deadline (metrics counted {snap['guaranteed_misses']}) — "
+            "a certificate was issued and then broken: "
+            + "; ".join(
+                f"req {t.request.request_id}: completed={r.completed}, "
+                f"latency {r.latency_ms:.3f} ms vs deadline "
+                f"{t.request.deadline_ms:.3f} ms"
+                for t, r in misses[:5]))
+        assert out["degraded_requests"] > 0, (
+            "storm never degraded best-effort traffic — the offered "
+            "rate is not actually adversarial for this capacity")
+    return out
 
 
 def run(dataset: str = "magic", n_trees: int = 6, depth: int = 5,
@@ -470,11 +733,16 @@ def run(dataset: str = "magic", n_trees: int = 6, depth: int = 5,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="sim", choices=("sim", "real"))
+    ap.add_argument("--scenario", default="frontier",
+                    choices=("frontier", "storm"),
+                    help="frontier: throughput-vs-p99 sweep + pool-"
+                         "scaling gate; storm: adversarial guaranteed + "
+                         "best-effort mix + zero-certified-miss gate")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CI-sized)")
     ap.add_argument("--dataset", default="magic")
     ap.add_argument("--pools", type=int, default=4,
-                    help="real mode: pool count")
+                    help="real mode / storm: pool count")
     ap.add_argument("--loop", default="open", choices=("open", "closed"),
                     help="real mode: open- vs closed-loop pacing")
     ap.add_argument("--rate", type=float, default=50.0,
@@ -482,6 +750,25 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.scenario == "storm":
+        fa, pp, yor, te, yte = build_pipeline(
+            args.dataset, 6, 5, seed=args.seed, n_order=200, n_test=128)
+        rt = runtime_for(fa, pp, yor)
+        # 48 even for smoke: the guaranteed minority is a Bernoulli draw
+        # per request, and smaller populations can leave the certified
+        # lane (and the degrade threshold) unexercised
+        n = args.requests or (48 if args.smoke else 96)
+        pools = min(args.pools, 2) if args.smoke else args.pools
+        # real smoke shrinks the slot count too: the degrade threshold
+        # scales with capacity, and real threads drain the smoke-sized
+        # stream fast enough that 8-wide pools never build a backlog
+        cap = 4 if (args.smoke and args.mode == "real") else 8
+        out = run_storm(rt, te, mode=args.mode, pools=pools, capacity=cap,
+                        n_requests=n, seed=args.seed)
+        print(f"loadgen,storm,gate,ok,guaranteed,"
+              f"{out['guaranteed_admitted']},misses,0,"
+              f"certified_rejected,{out['certified_rejected']}")
+        return
     if args.mode == "sim":
         n = args.requests or (64 if args.smoke else 96)
         out = run(dataset=args.dataset, n_requests=n, seed=args.seed)

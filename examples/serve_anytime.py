@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import AnytimeRuntime, AnytimeServer, ForestProgram, as_completed
+from repro.serve import QoS
 from repro.configs.registry import get_config
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.models import model as MD
@@ -87,7 +88,7 @@ def threaded_serving():
     tracer = Tracer(margins=True)
     with AnytimeServer(rt, capacity=8, admission="degrade",
                        admission_k=1.0, tracer=tracer) as server:
-        tickets = [server.submit(x, deadline_ms=60_000.0) for x in Xte[:32]]
+        tickets = [server.submit(x, QoS(deadline_ms=60_000.0)) for x in Xte[:32]]
         tickets[0].add_done_callback(
             lambda t: print(f"  first completion callback: request "
                             f"{t.request_id} after "
@@ -152,7 +153,7 @@ def transformer_serving():
     tb = {"tokens": jnp.asarray(test["tokens"])}
     tl = np.asarray(test["labels"][:, -1])
     for deadline_ms in (3_000.0, 1e9):
-        ticket = server.submit(tb, deadline_ms=deadline_ms)
+        ticket = server.submit(tb, QoS(deadline_ms=deadline_ms))
         server.drain()
         r = ticket.result()
         acc = float(np.mean(r.prediction == tl))

@@ -19,6 +19,13 @@ the summary then also reports routed/stolen counts.  Pair with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU to
 emulate a multi-device host.
 
+With ``--admission certified`` (or ``--guaranteed``) admission prices
+every request's worst case from the calibrated WCET table
+(``python -m tools.obs calibrate``, ``--wcet`` to point elsewhere):
+provably-infeasible deadlines are rejected at submit and reported as
+``certified-rejected``; admitted guaranteed requests must complete
+their full plan inside the deadline.
+
 With ``--trace PATH`` the run records the full span timeline
 (:mod:`repro.obs`) and writes Chrome trace-event JSON on exit — load it
 at https://ui.perfetto.dev, or feed it to ``python -m tools.obs report``
@@ -27,13 +34,23 @@ for the deadline-budget attribution and segment-latency tables.
 from __future__ import annotations
 
 import argparse
+import sys
 
 import numpy as np
 
 from repro.forest import make_dataset, split_dataset, train_forest
 from repro.obs import Tracer, write_chrome_trace
 from repro.schedule import AnytimeRuntime, ForestProgram
-from repro.serve import AdmissionRejected, AnytimeServer, PooledAnytimeServer
+from repro.serve import (
+    AdmissionRejected,
+    AnytimeServer,
+    CertificationFailed,
+    CostModel,
+    CostModelError,
+    PooledAnytimeServer,
+    QoS,
+    list_admissions,
+)
 
 
 def main():
@@ -54,12 +71,22 @@ def main():
     ap.add_argument("--backend", default=None,
                     help="jnp-ref | pallas | sharded (default: auto)")
     ap.add_argument("--admission", default="edf",
-                    choices=("edf", "reject", "degrade"),
+                    choices=list_admissions(),
                     help="overload policy: starve (edf) / shed at submit "
                          "(reject) / shrink per-request step budgets "
-                         "(degrade)")
+                         "(degrade) / admit only provably-feasible "
+                         "deadlines (certified)")
     ap.add_argument("--admission-k", type=float, default=2.0,
                     help="backlog bound = capacity * k")
+    ap.add_argument("--guaranteed", action="store_true",
+                    help="submit every request guaranteed=True: WCET-"
+                         "certified at admission, full-plan completion "
+                         "inside the deadline or rejection at submit "
+                         "(needs a calibrated cost model)")
+    ap.add_argument("--wcet", default=None, metavar="PATH",
+                    help="WCET table for certified admission (default: "
+                         "reports/obs/wcet_<platform>.json via "
+                         "CostModel.load)")
     ap.add_argument("--threaded", action="store_true",
                     help="serve through the background driver thread "
                          "(fire-and-forget submits) instead of the "
@@ -79,19 +106,29 @@ def main():
     rt = AnytimeRuntime(
         ForestProgram(rf.as_arrays(), y_order=yor[:300], X_order=orx[:300]))
     tracer = Tracer(margins=True) if args.trace else None
+    cost_model = None
+    if args.wcet or args.guaranteed or args.admission == "certified":
+        try:
+            cost_model = (CostModel.from_file(args.wcet) if args.wcet
+                          else CostModel.load())
+        except CostModelError as e:
+            print(f"cannot price certified admission: {e}", file=sys.stderr)
+            sys.exit(2)
     if args.pools > 1:
         server = PooledAnytimeServer(rt, pools=args.pools,
                                      capacity=args.capacity,
                                      admission=args.admission,
                                      admission_k=args.admission_k,
                                      tracer=tracer,
-                                     queue_shards=args.queue_shards)
+                                     queue_shards=args.queue_shards,
+                                     cost_model=cost_model)
     else:
         server = AnytimeServer(rt, capacity=args.capacity,
                                admission=args.admission,
                                admission_k=args.admission_k,
                                tracer=tracer,
-                               queue_shards=args.queue_shards)
+                               queue_shards=args.queue_shards,
+                               cost_model=cost_model)
     if args.threaded:
         server.start()
 
@@ -103,39 +140,55 @@ def main():
     server.metrics.reset()  # report the measured stream, not the warmup
 
     n = min(args.requests, len(te))
-    tickets, rejected = [], 0
+    qos = QoS(deadline_ms=args.deadline_ms, policy=args.policy,
+              backend=args.backend, guaranteed=args.guaranteed)
+    tickets, rejected, uncertifiable = [], 0, 0
     kept_labels = []
     for i in range(n):
         try:
-            tickets.append(server.submit(
-                te[i], args.deadline_ms,
-                policy=args.policy, backend=args.backend))
+            tickets.append(server.submit(te[i], qos))
             kept_labels.append(yte[i])
+        except CertificationFailed:
+            uncertifiable += 1  # deadline provably infeasible right now
         except AdmissionRejected:
             rejected += 1   # --admission reject sheds load at submit
     server.drain()
     results = [t.result() for t in tickets]
     if args.threaded:
         server.close()
+    if uncertifiable:
+        print(f"certified-rejected at submit: {uncertifiable}/{n} "
+              f"(priced worst case exceeded the {args.deadline_ms} ms "
+              f"deadline)")
     if rejected:
         print(f"rejected at submit: {rejected}/{n} "
               f"(admission={args.admission}, backlog bound = capacity x "
               f"{args.admission_k})")
-    preds = np.asarray([int(r.prediction) for r in results])
-    acc = float((preds == np.asarray(kept_labels)).mean())
     snap = server.metrics.snapshot()
     mode = "threaded driver" if args.threaded else "cooperative loop"
     tier = f"{args.pools} pools, " if args.pools > 1 else ""
     print(f"served {len(results)} requests @ {args.deadline_ms} ms deadline "
           f"(policy={args.policy}, capacity={args.capacity}, {tier}{mode}, "
-          f"admission={args.admission})")
+          f"admission={args.admission}"
+          f"{', guaranteed' if args.guaranteed else ''})")
     if args.pools > 1:
         print(f"  routed / stolen       {snap['routed']} / {snap['steals']}")
-    print(f"  accuracy-at-deadline  {acc:.4f}")
-    print(f"  deadline-hit-rate     {snap['deadline_hit_rate']:.3f}")
-    print(f"  steps-at-deadline     p50={snap['steps_at_deadline']['p50']:.0f} "
-          f"p99={snap['steps_at_deadline']['p99']:.0f} "
-          f"of {results[0].total_steps}")
+    if not results:
+        print("  (every request was rejected at submit — nothing served)")
+    else:
+        preds = np.asarray([int(r.prediction) for r in results])
+        acc = float((preds == np.asarray(kept_labels)).mean())
+        print(f"  accuracy-at-deadline  {acc:.4f}")
+        print(f"  deadline-hit-rate     {snap['deadline_hit_rate']:.3f}")
+        print(f"  steps-at-deadline     "
+              f"p50={snap['steps_at_deadline']['p50']:.0f} "
+              f"p99={snap['steps_at_deadline']['p99']:.0f} "
+              f"of {results[0].total_steps}")
+    if snap["guaranteed_delivered"]:
+        print(f"  guaranteed            {snap['guaranteed_delivered']} "
+              f"delivered, {snap['guaranteed_misses']} misses "
+              f"({snap['certified_admitted']} certified, "
+              f"{snap['certified_rejected']} certified-rejected)")
     if snap["degraded_requests"]:
         print(f"  degraded requests     {snap['degraded_requests']} "
               f"(budget p50 {snap['budget_at_deadline']['p50']:.0f})")

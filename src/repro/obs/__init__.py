@@ -18,6 +18,7 @@ from repro.obs.attribution import Attribution, summarize
 from repro.obs.export import (
     export_chrome_trace,
     segment_histograms,
+    worst_case_table,
     write_chrome_trace,
 )
 from repro.obs.names import ATTRIBUTION_FIELDS, CATEGORIES, SPAN_NAMES
@@ -35,6 +36,7 @@ __all__ = [
     "summarize",
     "export_chrome_trace",
     "segment_histograms",
+    "worst_case_table",
     "write_chrome_trace",
     "ATTRIBUTION_FIELDS",
     "CATEGORIES",

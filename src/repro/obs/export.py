@@ -16,6 +16,10 @@ pow2-length) segment-latency histograms.
 latency histogram per ``backend/impl/L<length>`` cell, with jit-compile
 dispatches tabulated separately (compiles are warmup, and folding their
 wall time into a worst-case estimate would poison it).
+:func:`worst_case_table` folds those histograms (plus the harvest-span
+population) into the persisted per-platform worst-case table that
+:class:`repro.serve.cost.CostModel` prices certified admission from —
+the same structure ``python -m tools.obs calibrate`` writes.
 """
 from __future__ import annotations
 
@@ -24,7 +28,12 @@ from typing import Optional
 
 from repro.obs.names import ATTRIBUTION_FIELDS, SPAN_NAMES
 
-__all__ = ["export_chrome_trace", "segment_histograms", "write_chrome_trace"]
+__all__ = [
+    "export_chrome_trace",
+    "segment_histograms",
+    "worst_case_table",
+    "write_chrome_trace",
+]
 
 _PID = 1
 
@@ -71,6 +80,51 @@ def segment_histograms(events) -> dict[str, dict]:
         }
         out[key] = row
     return out
+
+
+def worst_case_table(events, *, platform: str, margin: float = 2.0) -> dict:
+    """Fold a traced run into the persisted per-platform WCET table.
+
+    ``cells`` carries one row per calibrated ``backend/impl/L<len>``
+    dispatch cell — steady-state statistics only (compile-only cells
+    are dropped: a cell whose every sample jit-compiled has no steady
+    worst case to certify against) — with ``wcet_ms = margin *
+    max_ms``.  ``harvest`` prices the per-iteration boundary
+    materialization the same way from the ``serve.harvest`` span
+    population.  The structure is byte-identical to what
+    ``tools.obs.wcet.fold`` recomputes from exported trace JSON, so the
+    two sides cross-validate.
+    """
+    if margin < 1.0:
+        raise ValueError(
+            f"wcet margin must be >= 1 (a headroom factor), got {margin}")
+    cells: dict[str, dict] = {}
+    for key, row in segment_histograms(events).items():
+        if row["count"] < 1:
+            continue
+        cells[key] = {
+            "count": row["count"],
+            "mean_ms": row["mean_ms"],
+            "p95_ms": row["p95_ms"],
+            "max_ms": row["max_ms"],
+            "wcet_ms": margin * row["max_ms"],
+        }
+    harvests = sorted(
+        ev.dur_s * 1e3 for ev in events
+        if ev.name == "serve.harvest" and ev.ph == "X" and ev.t1 is not None)
+    harvest = {
+        "count": len(harvests),
+        "mean_ms": sum(harvests) / len(harvests) if harvests else 0.0,
+        "max_ms": harvests[-1] if harvests else 0.0,
+        "wcet_ms": margin * harvests[-1] if harvests else 0.0,
+    }
+    return {
+        "schema_version": 1,
+        "platform": platform,
+        "margin": margin,
+        "cells": cells,
+        "harvest": harvest,
+    }
 
 
 def export_chrome_trace(tracer, meta: Optional[dict] = None) -> dict:

@@ -24,41 +24,80 @@ requests multiplexed onto one device runtime.
 * :mod:`repro.serve.pool` / :mod:`repro.serve.router` — the multi-device
   tier: :class:`PooledAnytimeServer` composes one device-pinned pool per
   device behind a backlog-aware :class:`Router` with segment-boundary
-  work stealing.
+  work stealing;
+* :mod:`repro.serve.qos` — the frozen :class:`QoS` request spec every
+  ``submit`` accepts (deadline, policy, backend, program, budget,
+  ``guaranteed``);
+* :mod:`repro.serve.admission` — the admission-policy registry
+  (:func:`register_admission`/:func:`get_admission_policy`/
+  :func:`list_admissions`; ``edf``/``reject``/``degrade``/
+  ``certified``);
+* :mod:`repro.serve.cost` — :class:`CostModel`, pricing a request's
+  worst case from the calibrated per-platform WCET table
+  (``python -m tools.obs calibrate``) for certified admission and
+  predicted-pressure degrade budgets.
 
 Quickstart (threaded — the loop runs on a background driver; callers
 overlap their own work with device execution)::
 
-    from repro.serve import AnytimeServer, as_completed
+    from repro.serve import AnytimeServer, QoS, as_completed
 
     with AnytimeServer(runtime, capacity=16) as server:
-        tickets = [server.submit(x, deadline_ms=2.0) for x in rows]
+        tickets = [server.submit(x, QoS(deadline_ms=2.0)) for x in rows]
         for t in as_completed(tickets):
             print(t.result().prediction)
 
 Cooperative (no thread — the caller pumps the loop)::
 
     server = AnytimeServer(runtime, capacity=16)
-    tickets = [server.submit(x, deadline_ms=2.0) for x in rows]
+    tickets = [server.submit(x, QoS(deadline_ms=2.0)) for x in rows]
     server.drain()
     preds = [t.result().prediction for t in tickets]
     print(server.metrics.snapshot())
 """
+from repro.serve.admission import (
+    AdmissionPolicy,
+    CertifiedAdmission,
+    DegradeAdmission,
+    EdfAdmission,
+    RejectAdmission,
+    get_admission_policy,
+    list_admissions,
+    register_admission,
+)
+from repro.serve.cost import LAG_ITERATIONS, CostModel, CostModelError
 from repro.serve.driver import DriverDead, ServeDriver, as_completed
 from repro.serve.metrics import Reservoir, ServeMetrics
 from repro.serve.pool import PooledAnytimeServer
-from repro.serve.queue import AdmissionQueue, AdmissionRejected, Request, Result
+from repro.serve.qos import QoS, resolve_qos
+from repro.serve.queue import (
+    AdmissionQueue,
+    AdmissionRejected,
+    CertificationFailed,
+    Request,
+    Result,
+)
 from repro.serve.router import Router
 from repro.serve.scheduler import ForestLane, Scheduler, SessionLane, StealRecord
 from repro.serve.server import AnytimeServer, Ticket
 
 __all__ = [
+    "AdmissionPolicy",
     "AdmissionQueue",
     "AdmissionRejected",
     "AnytimeServer",
+    "CertificationFailed",
+    "CertifiedAdmission",
+    "CostModel",
+    "CostModelError",
+    "DegradeAdmission",
     "DriverDead",
+    "EdfAdmission",
     "ForestLane",
+    "LAG_ITERATIONS",
     "PooledAnytimeServer",
+    "QoS",
+    "RejectAdmission",
     "Request",
     "Reservoir",
     "Result",
@@ -70,4 +109,8 @@ __all__ = [
     "StealRecord",
     "Ticket",
     "as_completed",
+    "get_admission_policy",
+    "list_admissions",
+    "register_admission",
+    "resolve_qos",
 ]

@@ -1,0 +1,184 @@
+"""Admission-policy registry — the single place submit-time gating
+comes from.
+
+Mirrors the order/backend/impl registries: each policy is a small
+:class:`AdmissionPolicy` dataclass registered by name via
+:func:`register_admission`, discovered with :func:`list_admissions`,
+instantiated with :func:`get_admission_policy`.  This replaces the
+``admission="edf"|"reject"|"degrade"`` string-dispatch chain that used
+to live inline in ``AnytimeServer._submit_slow``; the new ``certified``
+mode registers through the same door instead of growing the chain.
+
+A policy's :meth:`~AdmissionPolicy.on_submit` runs on the submit slow
+path under the server lock, AFTER any ``guaranteed=True`` request has
+been certified and BEFORE the request is stamped/enqueued — it may
+reject (raise), stamp a degrade budget, or pass.  Two class-level traits
+shape the surrounding flow: ``fast_path`` marks a policy as a no-op so
+eligible submits skip the server lock entirely (the sharded-queue fast
+path), and ``certify_all`` marks a policy that upgrades EVERY request to
+the certified contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+from repro.serve.queue import AdmissionRejected
+
+__all__ = [
+    "AdmissionPolicy",
+    "register_admission",
+    "list_admissions",
+    "get_admission_policy",
+    "EdfAdmission",
+    "RejectAdmission",
+    "DegradeAdmission",
+    "CertifiedAdmission",
+]
+
+
+@dataclasses.dataclass
+class AdmissionPolicy:
+    """Base class for submit-time admission policies.
+
+    Subclasses implement :meth:`on_submit`; the server calls it holding
+    its global lock, so implementations may read scheduler backlog and
+    stamp request fields but must not block or call back into submit.
+    ``name`` is filled in by the registry at construction time.
+    """
+
+    name: str = dataclasses.field(default="", repr=True, compare=False)
+
+    #: True = this policy never inspects or mutates a best-effort
+    #: request at submit, so eligible submits may take the lock-free
+    #: sharded-queue fast path.  Guaranteed requests always take the
+    #: slow path (certification needs the server lock).
+    fast_path: ClassVar[bool] = False
+    #: True = every request submitted under this policy is upgraded to
+    #: the certified contract (``guaranteed=True`` + WCET admission).
+    certify_all: ClassVar[bool] = False
+
+    def on_submit(self, server, request) -> None:
+        """Gate ``request`` at submit time (holding ``server._lock``):
+        raise :class:`AdmissionRejected` to shed it, stamp fields (e.g.
+        ``budget_steps``) to shape it, or return to admit as-is."""
+        raise NotImplementedError
+
+
+# name -> (policy class, pre-bound config fields)
+_REGISTRY: dict[str, tuple[type, dict]] = {}
+
+
+def register_admission(name: str, **bound):
+    """Class decorator registering an :class:`AdmissionPolicy` under
+    ``name``.  ``bound`` pre-binds dataclass fields so one class can
+    serve a family of registered names.  Returns the class unchanged.
+    """
+
+    def deco(cls):
+        if name in _REGISTRY:
+            raise ValueError(f"admission policy {name!r} already registered")
+        field_names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(bound) - field_names
+        if unknown:
+            raise TypeError(
+                f"{cls.__name__} has no config field(s) {sorted(unknown)}"
+            )
+        _REGISTRY[name] = (cls, dict(bound))
+        return cls
+
+    return deco
+
+
+def list_admissions() -> tuple[str, ...]:
+    """Every registered admission-policy name, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def get_admission_policy(name, **overrides) -> AdmissionPolicy:
+    """Instantiate the policy registered under ``name``.
+
+    Passes an already-built :class:`AdmissionPolicy` through unchanged,
+    so server constructors accept either a name or an instance.
+    """
+    if isinstance(name, AdmissionPolicy):
+        return name
+    try:
+        cls, bound = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown admission policy: {name!r} — registered: "
+            f"{', '.join(_REGISTRY)}"
+        ) from None
+    known = {f.name for f in dataclasses.fields(cls)}
+    kept = {k: v for k, v in overrides.items() if k in known}
+    return cls(name=name, **{**bound, **kept})
+
+
+# ---------------------------------------------------------------------------
+# Concrete policies, registered in the historical string-dispatch order.
+# ---------------------------------------------------------------------------
+
+
+@register_admission("edf")
+@dataclasses.dataclass
+class EdfAdmission(AdmissionPolicy):
+    """Admit everything; the EDF queue and deadline retirement do the
+    triage.  A pure no-op at submit, so best-effort submits ride the
+    lock-free fast path."""
+
+    fast_path: ClassVar[bool] = True
+
+    def on_submit(self, server, request) -> None:
+        return None
+
+
+@register_admission("reject")
+@dataclasses.dataclass
+class RejectAdmission(AdmissionPolicy):
+    """Shed load at submit: reject once the request's lane backlog
+    exceeds ``capacity * admission_k`` (the PR 5 depth bound)."""
+
+    def on_submit(self, server, request) -> None:
+        backlog = server.scheduler.lane_backlog(request)
+        bound = server.scheduler.capacity * server.admission_k
+        if backlog >= bound:
+            if server.tracer.enabled:
+                server.tracer.instant(
+                    "serve.admission", request_id=-1, decision="reject",
+                    backlog=backlog, bound=bound, program=request.program,
+                )
+            raise AdmissionRejected(
+                f"backlog {backlog} >= {bound:.0f} "
+                f"(capacity {server.scheduler.capacity} x "
+                f"admission_k {server.admission_k})"
+            )
+
+
+@register_admission("degrade")
+@dataclasses.dataclass
+class DegradeAdmission(AdmissionPolicy):
+    """Admit everything, but shrink best-effort step budgets under
+    pressure (predicted pressure when the server carries a calibrated
+    cost model, observed backlog depth otherwise).  Guaranteed requests
+    are never degraded — their certificate priced the full plan."""
+
+    def on_submit(self, server, request) -> None:
+        if request.guaranteed:
+            return None
+        request.budget_steps = server._degrade_budget(request)
+
+
+@register_admission("certified")
+@dataclasses.dataclass
+class CertifiedAdmission(AdmissionPolicy):
+    """Every request is guaranteed: admission prices the worst case
+    from the calibrated table and admits only what provably fits its
+    deadline; everything else raises ``CertificationFailed`` at submit
+    with the priced bound."""
+
+    certify_all: ClassVar[bool] = True
+
+    def on_submit(self, server, request) -> None:
+        request.guaranteed = True
+        server._certify(request)

@@ -1,0 +1,217 @@
+"""`CostModel` — pricing requests against a calibrated WCET table.
+
+The certification half of ROADMAP item 3.  ``python -m tools.obs
+calibrate`` folds a traced serving run's steady-state segment histograms
+(compiles split out) into a persisted per-platform worst-case table
+``reports/obs/wcet_<platform>.json``; this module loads that table and
+prices a request's :class:`~repro.schedule.backends.StepPlan` execution
+from it, which is what certified admission consults at submit time.
+
+Why a *per-step rate*, not per-segment sums: the scheduler's dispatch
+rule fuses ``L = pow2_floor(min remaining across stepping slots)`` steps
+per launch, so one request's segments fragment into data-dependent pow2
+compositions (staggered admissions and degrade budgets knock slots out
+of phase).  For ANY composition of ``T`` steps into dispatches of
+lengths ``p_i``::
+
+    sum_i (wcet(p_i) + harvest)  <=  T * max_p (wcet(p) + harvest) / p
+
+so charging every step the worst *per-step* cost over the lengths the
+plan can emit is sound regardless of how the fragmentation falls.  The
+model additionally assumes dispatch worst cases are non-decreasing in
+segment length (longer fused segments do strictly more device work), so
+an uncalibrated length may be priced at the next calibrated length
+above it; a length with no calibrated cell at or above it is
+*unpriceable* and certification must reject.
+
+The constant tail ``LAG_ITERATIONS`` covers the loop's structural lag:
+a submitted request is admitted at the next segment boundary, its final
+boundary rides the double buffer one harvest behind the dispatch, and
+retirement happens at the harvest after completion — three loop
+iterations at worst-case per-iteration cost.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Optional
+
+__all__ = ["CostModel", "CostModelError", "LAG_ITERATIONS", "WCET_DIR_ENV"]
+
+#: loop iterations of structural lag priced into every request: buffered
+#: admission (join at the next boundary) + double-buffered harvest lag +
+#: retirement at the harvest after completion.
+LAG_ITERATIONS = 3
+
+#: environment override for the directory WCET tables are loaded from
+#: (default: ``reports/obs`` relative to the working directory).
+WCET_DIR_ENV = "REPRO_WCET_DIR"
+
+_DEFAULT_WCET_DIR = Path("reports/obs")
+
+
+class CostModelError(RuntimeError):
+    """A request's worst case cannot be priced from the loaded table —
+    the backend has no calibrated cells, or the plan emits a dispatch
+    length with no calibrated cell at or above it.  Certified admission
+    turns this into a rejection: *cannot certify* is a reject, never a
+    silent admit."""
+
+
+def _parse_cell_key(key: str) -> tuple[str, str, int]:
+    """``"<backend>/<impl>/L<len>"`` -> (backend, impl, length)."""
+    parts = key.split("/")
+    if len(parts) != 3 or not parts[2].startswith("L"):
+        raise CostModelError(f"malformed wcet cell key {key!r} "
+                             "(want '<backend>/<impl>/L<len>')")
+    try:
+        length = int(parts[2][1:])
+    except ValueError:
+        raise CostModelError(f"malformed wcet cell key {key!r}") from None
+    if length < 1:
+        raise CostModelError(f"wcet cell {key!r} has non-positive length")
+    return parts[0], parts[1], length
+
+
+class CostModel:
+    """Worst-case pricing of anytime requests from a calibrated table.
+
+    ``table`` is the parsed ``wcet_<platform>.json`` document (see
+    :mod:`tools.obs.wcet` for the persisted shape).  Per backend the
+    model keeps the worst case per calibrated pow2 dispatch length —
+    maximized across impls, since the tuner may pick any of them at
+    dispatch time — plus the global harvest worst case (the boundary
+    materialization sync, where asynchronously-dispatched device work
+    surfaces as wall time).
+    """
+
+    def __init__(self, table: dict):
+        if not isinstance(table, dict) or "cells" not in table:
+            raise CostModelError("wcet table must be a dict with 'cells'")
+        margin = float(table.get("margin", 0.0))
+        if margin < 1.0:
+            raise CostModelError(
+                f"wcet table margin must be >= 1.0, got {margin}")
+        self.platform = str(table.get("platform", "?"))  # unguarded: immutable config
+        self.margin = margin                             # unguarded: immutable config
+        self.table = table                               # unguarded: immutable config
+        # backend -> {length: wcet_ms}, maximized across impls
+        cells: dict[str, dict[int, float]] = {}
+        for key, row in table["cells"].items():
+            backend, _impl, length = _parse_cell_key(key)
+            wcet = float(row.get("wcet_ms", 0.0))
+            if wcet <= 0.0:
+                raise CostModelError(f"wcet cell {key!r} has wcet_ms <= 0")
+            per = cells.setdefault(backend, {})
+            per[length] = max(per.get(length, 0.0), wcet)
+        self._cells = cells                              # unguarded: immutable config
+        harvest = table.get("harvest", {})
+        self.harvest_wcet_ms = float(harvest.get("wcet_ms", 0.0))  # unguarded: immutable config
+        if int(harvest.get("count", 0)) < 1 or self.harvest_wcet_ms <= 0.0:
+            raise CostModelError(
+                "wcet table has no calibrated harvest worst case — "
+                "recalibrate from a traced serving run")
+
+    # -- table access ------------------------------------------------------
+
+    def backends(self) -> tuple[str, ...]:
+        """Backends with at least one calibrated cell."""
+        return tuple(sorted(self._cells))
+
+    def lengths(self, backend: str) -> tuple[int, ...]:
+        """Calibrated dispatch lengths for ``backend``, ascending."""
+        try:
+            return tuple(sorted(self._cells[backend]))
+        except KeyError:
+            raise CostModelError(
+                f"no calibrated wcet cells for backend {backend!r} "
+                f"(calibrated: {', '.join(self.backends()) or 'none'})"
+            ) from None
+
+    def segment_wcet_ms(self, backend: str, length: int) -> float:
+        """Worst case of one fused dispatch of ``length`` steps: the
+        calibrated cell, or — dispatch cost being non-decreasing in
+        length — the smallest calibrated length at or above it."""
+        per = self._cells.get(backend)
+        if not per:
+            raise CostModelError(
+                f"no calibrated wcet cells for backend {backend!r}")
+        above = [ln for ln in per if ln >= length]
+        if not above:
+            raise CostModelError(
+                f"backend {backend!r} has no calibrated cell at or above "
+                f"length {length} (calibrated: {sorted(per)}) — this "
+                "dispatch length is unpriceable")
+        return per[min(above)]
+
+    # -- pricing -----------------------------------------------------------
+
+    def step_rate_ms(self, backend: str,
+                     lengths: Optional[tuple] = None) -> float:
+        """Sound per-step worst-case rate over the dispatch lengths the
+        plan can emit (default: every calibrated length): the max of
+        ``(segment_wcet(L) + harvest_wcet) / L``.  Any fragmentation of
+        ``T`` steps into pow2 dispatches costs at most ``T`` times
+        this."""
+        if lengths is None:
+            lengths = self.lengths(backend)
+        if not lengths:
+            raise CostModelError("step_rate_ms needs at least one length")
+        return max(
+            (self.segment_wcet_ms(backend, int(L)) + self.harvest_wcet_ms)
+            / int(L)
+            for L in lengths
+        )
+
+    def iteration_wcet_ms(self, backend: str) -> float:
+        """Worst case of one loop iteration's share for one lane on
+        ``backend``: its most expensive dispatch plus a harvest."""
+        per_len = self.lengths(backend)
+        return max(
+            self.segment_wcet_ms(backend, L) for L in per_len
+        ) + self.harvest_wcet_ms
+
+    def request_wcet_ms(self, steps: int, backend: str,
+                        lengths: Optional[tuple] = None,
+                        interference_ms: float = 0.0,
+                        wait_ms: float = 0.0) -> float:
+        """Worst-case submit-to-delivery bound of a ``steps``-step
+        request: slot wait + per-step worst rate (each step may ride its
+        own iteration, each iteration delayed ``interference_ms`` by
+        sibling lanes busy at admission time) + the structural lag tail
+        (:data:`LAG_ITERATIONS` iterations)."""
+        rate = self.step_rate_ms(backend, lengths)
+        it = self.iteration_wcet_ms(backend)
+        return (
+            wait_ms
+            + int(steps) * (rate + interference_ms)
+            + LAG_ITERATIONS * (it + interference_ms)
+        )
+
+    # -- persistence -------------------------------------------------------
+
+    @classmethod
+    def from_file(cls, path) -> "CostModel":
+        with open(path) as fh:
+            return cls(json.load(fh))
+
+    @classmethod
+    def load(cls, platform: Optional[str] = None,
+             root=None) -> "CostModel":
+        """Load ``wcet_<platform>.json`` from ``root`` (default:
+        ``reports/obs``, overridable via :data:`WCET_DIR_ENV`).
+        ``platform`` defaults to the active jax backend."""
+        if platform is None:
+            import jax
+
+            platform = jax.default_backend()
+        if root is None:
+            root = Path(os.environ.get(WCET_DIR_ENV, _DEFAULT_WCET_DIR))
+        path = Path(root) / f"wcet_{platform}.json"
+        if not path.exists():
+            raise CostModelError(
+                f"no calibrated wcet table at {path} — run a traced "
+                "serving sweep and `python -m tools.obs calibrate "
+                f"--platform {platform}` first")
+        return cls.from_file(path)

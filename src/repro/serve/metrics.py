@@ -142,6 +142,14 @@ class ServeMetrics:
         # deadline-aware router bookkeeping (multi-pool tier only)
         self.routed = 0              # guarded-by: _lock
         self.steals = 0              # guarded-by: _lock
+        # WCET-certified admission (guaranteed=True / admission=
+        # "certified"): submit-time certificate decisions, delivered
+        # guaranteed requests, and the number that FAILED to complete
+        # their full plan — the hard-failure count bench/CI gate at zero
+        self.certified_admitted = 0   # guarded-by: _lock
+        self.certified_rejected = 0   # guarded-by: _lock
+        self.guaranteed_delivered = 0  # guarded-by: _lock
+        self.guaranteed_misses = 0    # guarded-by: _lock
 
     def record_submit(self, now: float) -> None:
         with self._lock:
@@ -165,6 +173,16 @@ class ServeMetrics:
         with self._lock:
             self.steals += 1
 
+    def record_certified(self, admitted: bool) -> None:
+        """One submit-time certification decision: the worst case was
+        either proven to fit the deadline (admitted) or the request was
+        rejected with the priced bound."""
+        with self._lock:
+            if admitted:
+                self.certified_admitted += 1
+            else:
+                self.certified_rejected += 1
+
     def _record_delivery_locked(self, result, now: float) -> None:  # holds: _lock
         self.delivered += 1
         self.completed += bool(result.completed)
@@ -177,6 +195,11 @@ class ServeMetrics:
         latency = getattr(result, "latency_ms", None)
         if latency is not None and np.isfinite(latency):
             self.latency_ms.add(float(latency))
+        if getattr(result, "guaranteed", False):
+            self.guaranteed_delivered += 1
+            # a guaranteed delivery that did not run its FULL plan
+            # broke its certificate — the hard-failure counter
+            self.guaranteed_misses += not result.completed
         self._t_last_delivery = now
 
     def record_delivery(self, result, now: float) -> None:
@@ -227,5 +250,9 @@ class ServeMetrics:
             "requests_per_sec": self.delivered / wall if wall > 0 else 0.0,
             "routed": self.routed,
             "steals": self.steals,
+            "certified_admitted": self.certified_admitted,
+            "certified_rejected": self.certified_rejected,
+            "guaranteed_delivered": self.guaranteed_delivered,
+            "guaranteed_misses": self.guaranteed_misses,
             "attribution": _summarize_attribution(self.attributions),
         }

@@ -49,8 +49,10 @@ import numpy as np
 
 from repro.obs import NULL_TRACER
 from repro.schedule.runtime import AnytimeRuntime
+from repro.serve.cost import CostModel
 from repro.serve.metrics import ServeMetrics
-from repro.serve.queue import PolicyLike, Request, Result
+from repro.serve.qos import QoS, resolve_qos
+from repro.serve.queue import AdmissionRejected, PolicyLike, Request, Result
 from repro.serve.router import Router
 from repro.serve.server import AnytimeServer, Ticket
 
@@ -79,6 +81,7 @@ class PooledAnytimeServer:
         backend_opts: Optional[dict] = None,
         admission: str = "edf",
         admission_k: float = 2.0,
+        cost_model: Optional[CostModel] = None,
         tracer=None,
         queue_shards: int = 1,
         steal: bool = True,
@@ -94,6 +97,10 @@ class PooledAnytimeServer:
             raise ValueError(f"pools must be >= 1, got {pools}")
         self.clock = clock                    # unguarded: immutable callable
         self.admission = admission            # unguarded: immutable config
+        # one calibrated table prices every pool (they share the
+        # platform); the router reads each POOL's cost_model when
+        # deciding whether a guarantee may migrate there
+        self.cost_model = cost_model          # unguarded: immutable config
         self.steal = bool(steal)              # unguarded: immutable config
         self.metrics = ServeMetrics()         # unguarded: internally locked
         self.tracer = tracer if tracer is not None else NULL_TRACER  # unguarded: internally locked
@@ -118,6 +125,7 @@ class PooledAnytimeServer:
                 backend_opts={**opts, "pin_device": devices[i % len(devices)]},
                 admission=admission,
                 admission_k=admission_k,
+                cost_model=cost_model,
                 tracer=tracer,
                 queue_shards=queue_shards,
                 metrics=self.metrics,
@@ -133,6 +141,9 @@ class PooledAnytimeServer:
             pool._pending_lock = self._pending_lock
             built.append(pool)
         self.pools = tuple(built)             # unguarded: immutable after __init__
+        # certify_all admission (e.g. "certified"): every submit takes
+        # the guaranteed multi-pool placement path
+        self._certify_all = built[0]._admission_policy.certify_all  # unguarded: immutable config
         self.router = Router(self.pools, self.metrics, self.tracer)  # unguarded: immutable after __init__
         if self.steal:
             for pool in self.pools:
@@ -197,25 +208,36 @@ class PooledAnytimeServer:
     def submit(
         self,
         x,
-        deadline_ms: float,
-        policy: PolicyLike = "backward_squirrel",
+        qos: Union[QoS, float, None] = None,
+        deadline_ms: Optional[float] = None,
+        policy: Optional[PolicyLike] = None,
         backend: Optional[str] = None,
-        program: str = "default",
+        program: Optional[str] = None,
+        budget_steps: Optional[int] = None,
+        guaranteed: Optional[bool] = None,
     ) -> Ticket:
-        return self.submit_request(Request(
-            x=x, deadline_ms=deadline_ms, policy=policy,
-            backend=backend, program=program,
-        ))
+        """Mirror of :meth:`AnytimeServer.submit`: ``submit(x, QoS(...))``
+        (the legacy kwarg surface works through the same deprecation
+        shim)."""
+        spec = resolve_qos(qos, deadline_ms, policy, backend, program,
+                           budget_steps, guaranteed)
+        return self.submit_request(spec.request(x))
 
     def submit_request(self, request: Request) -> Ticket:
         """Route to the least-backlogged pool and submit there.  The
         chosen pool's own fast/slow submit path takes over — this layer
-        adds only the (lock-free) placement decision."""
+        adds only the (lock-free) placement decision.  Guaranteed
+        requests instead try pools in placement-preference order until
+        one CERTIFIES the deadline; if none can, the last pool's
+        :class:`~repro.serve.queue.CertificationFailed` propagates."""
         if self._closed:  # racy hint; pool/shard closed flags authoritative
             raise RuntimeError(
                 "submit on a closed PooledAnytimeServer (close() was called)")
-        i = self.router.place(request)
-        ticket = self.pools[i].submit_request(request)
+        if request.guaranteed or self._certify_all:
+            i, ticket = self._submit_guaranteed(request)
+        else:
+            i = self.router.place(request)
+            ticket = self.pools[i].submit_request(request)
         self.metrics.record_route()
         if self.tracer.enabled:
             self.tracer.instant(
@@ -223,6 +245,22 @@ class PooledAnytimeServer:
                 pool=self.pools[i].name,
                 deadline_ms=request.deadline_ms)
         return ticket
+
+    def _submit_guaranteed(self, request: Request) -> tuple[int, Ticket]:
+        """Certified placement: each candidate pool prices the request
+        against ITS slot occupancy under its own lock (ascending-backlog
+        order, so the cheapest certificate is tried first); the first
+        pool that certifies wins.  One pool's rejection never commits
+        the request anywhere — a guarantee is either proven on the pool
+        that will run it, or the submit fails."""
+        last_error: Optional[AdmissionRejected] = None
+        for i in self.router.order(request):
+            try:
+                return i, self.pools[i].submit_request(request)
+            except AdmissionRejected as e:
+                last_error = e
+        assert last_error is not None  # n_pools >= 1
+        raise last_error
 
     # -- the cooperative loop ----------------------------------------------
 
@@ -289,7 +327,8 @@ class PooledAnytimeServer:
         if len(deadline_ms) != len(xs):
             raise ValueError("deadline_ms must be scalar or match len(xs)")
         tickets = [
-            self.submit(x, d, policy=policy, backend=backend, program=program)
+            self.submit(x, QoS(deadline_ms=float(d), policy=policy,
+                               backend=backend, program=program))
             for x, d in zip(xs, deadline_ms)
         ]
         self.drain()

@@ -1,0 +1,129 @@
+"""`QoS` — the one request-shaping spec ``submit`` accepts.
+
+Before this module, per-request service parameters were a kwarg sprawl
+across ``AnytimeServer.submit`` / ``PooledAnytimeServer.submit`` /
+``Request`` (deadline, policy, backend, program, degrade budget — and
+now ``guaranteed``).  :class:`QoS` collapses them into one frozen,
+validated value: build it once, submit it with many inputs, compare it,
+print it.
+
+    >>> spec = QoS(deadline_ms=50.0, backend="pallas", guaranteed=True)
+    >>> ticket = server.submit(x, spec)
+
+The legacy kwarg surface (``submit(x, deadline_ms, policy=...,
+backend=..., program=...)``) still works through a deprecation shim
+(:func:`resolve_qos`) that builds the identical ``QoS`` — byte-parity
+with the new path is tested, mirroring the ``generate_order`` registry
+migration — and emits a :class:`DeprecationWarning`.  Mixing a ``QoS``
+with legacy kwargs in one call is a :class:`TypeError`, never a silent
+precedence rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional, Union
+
+from repro.serve.queue import PolicyLike, Request
+
+__all__ = ["QoS", "resolve_qos"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QoS:
+    """Per-request quality-of-service spec.
+
+    ``deadline_ms`` is relative to submission.  ``guaranteed=True``
+    requests the certified contract: admission prices the worst case
+    against the server's calibrated cost model and either proves the
+    deadline or rejects at submit (``CertificationFailed``); admitted
+    guaranteed requests run their FULL plan — ``budget_steps`` cannot be
+    combined with it, and degrade-mode never shrinks it.
+    """
+
+    deadline_ms: float
+    policy: PolicyLike = "backward_squirrel"
+    backend: Optional[str] = None
+    program: str = "default"
+    #: explicit anytime step cap (None = full plan).  Degrade-mode
+    #: admission may stamp its own cap on best-effort requests; an
+    #: explicit cap here is honored as-is.
+    budget_steps: Optional[int] = None
+    guaranteed: bool = False
+
+    def __post_init__(self):
+        if self.deadline_ms < 0:
+            raise ValueError(
+                f"deadline_ms must be >= 0, got {self.deadline_ms}")
+        if self.budget_steps is not None and self.budget_steps < 1:
+            raise ValueError(
+                f"budget_steps must be >= 1, got {self.budget_steps}")
+        if self.guaranteed and self.budget_steps is not None:
+            raise ValueError(
+                "guaranteed requests run the full plan; budget_steps "
+                "cannot be combined with guaranteed=True")
+
+    def request(self, x: Any) -> Request:
+        """Materialize one :class:`Request` carrying this spec."""
+        return Request(
+            x=x,
+            deadline_ms=float(self.deadline_ms),
+            policy=self.policy,
+            backend=self.backend,
+            program=self.program,
+            budget_steps=self.budget_steps,
+            guaranteed=self.guaranteed,
+        )
+
+
+_LEGACY_HINT = (
+    "submit(x, deadline_ms, policy=..., backend=..., program=...) is "
+    "deprecated; pass a QoS spec instead: "
+    "submit(x, QoS(deadline_ms=..., policy=..., backend=..., "
+    "program=..., guaranteed=...))"
+)
+
+
+def resolve_qos(qos: Union[QoS, float, None],
+                deadline_ms: Optional[float],
+                policy: Optional[PolicyLike],
+                backend: Optional[str],
+                program: Optional[str],
+                budget_steps: Optional[int],
+                guaranteed: Optional[bool],
+                stacklevel: int = 3) -> QoS:
+    """Shared ``submit`` shim: one ``QoS`` from either surface.
+
+    Accepts the new surface (``qos`` is a :class:`QoS`, every legacy
+    kwarg None), or the legacy one (``qos`` positionally a bare deadline
+    number, or ``deadline_ms=``, plus the old kwargs) — the latter
+    emits a DeprecationWarning attributed to the caller's call site.
+    Mixing both surfaces raises TypeError.
+    """
+    if isinstance(qos, QoS):
+        if (deadline_ms is not None or policy is not None
+                or backend is not None or program is not None
+                or budget_steps is not None or guaranteed is not None):
+            raise TypeError(
+                "pass either a QoS spec or the legacy kwargs, not both")
+        return qos
+    if qos is not None and not isinstance(qos, (int, float)):
+        raise TypeError(
+            f"qos must be a QoS spec (or a legacy deadline_ms number), "
+            f"got {type(qos).__name__}")
+    if qos is not None and deadline_ms is not None:
+        raise TypeError(
+            "deadline given twice (positionally and as deadline_ms=)")
+    deadline = qos if qos is not None else deadline_ms
+    if deadline is None:
+        raise TypeError(
+            "submit needs a deadline: submit(x, QoS(deadline_ms=...))")
+    warnings.warn(_LEGACY_HINT, DeprecationWarning, stacklevel=stacklevel)
+    return QoS(
+        deadline_ms=float(deadline),
+        policy=policy if policy is not None else "backward_squirrel",
+        backend=backend,
+        program=program if program is not None else "default",
+        budget_steps=budget_steps,
+        guaranteed=bool(guaranteed) if guaranteed is not None else False,
+    )

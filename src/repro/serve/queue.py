@@ -47,6 +47,29 @@ class AdmissionRejected(RuntimeError):
     """
 
 
+class CertificationFailed(AdmissionRejected):
+    """Raised at submit time when a ``guaranteed=True`` request (or any
+    request under ``admission="certified"``) cannot be *proven* to fit
+    its deadline from the calibrated worst-case table — the priced bound
+    exceeds the deadline, the plan emits an unpriceable dispatch length,
+    or no :class:`~repro.serve.cost.CostModel` is configured.
+
+    Subclasses :class:`AdmissionRejected` so existing shed-handling
+    callers keep working; carries the priced worst case so the caller
+    can see exactly how infeasible the request was.
+    """
+
+    def __init__(self, message: str,
+                 wcet_ms: Optional[float] = None,
+                 deadline_ms: Optional[float] = None):
+        super().__init__(message)
+        #: priced worst-case completion bound (ms), when pricing got far
+        #: enough to produce one; None for structural failures (no cost
+        #: model, unpriceable length, no certifiable slot).
+        self.wcet_ms = wcet_ms  # unguarded: written once before raise
+        self.deadline_ms = deadline_ms  # unguarded: written once before raise
+
+
 @dataclasses.dataclass
 class Request:
     """One deadline-bearing inference request.
@@ -70,6 +93,16 @@ class Request:
     #: rejecting or starving; fresh submissions under cleared pressure
     #: get None again (budgets restore automatically).
     budget_steps: Optional[int] = None
+    #: ``guaranteed=True`` requests are certified at admission against
+    #: the server's calibrated :class:`~repro.serve.cost.CostModel`:
+    #: either the worst-case completion provably fits the deadline (and
+    #: the bound is stamped into ``wcet_ms``) or submit raises
+    #: :class:`CertificationFailed`.  Guaranteed requests outrank
+    #: best-effort traffic in slot admission and are never degraded.
+    guaranteed: bool = False
+    #: priced worst-case completion bound stamped by certified admission
+    #: (None for best-effort requests).
+    wcet_ms: Optional[float] = None
     # stamped by AdmissionQueue.stamp/submit (monotonic clock):
     request_id: int = -1
     t_submit: float = float("nan")
@@ -113,6 +146,12 @@ class Result:
     #: shorter prefix of the order.
     degraded: bool = False
     budget_steps: Optional[int] = None
+    #: the request was admitted under certification (``guaranteed=True``
+    #: or ``admission="certified"``): ``completed`` must be True for
+    #: such a result — a guaranteed delivery with ``completed=False`` is
+    #: a certification miss, counted as ``guaranteed_misses`` in metrics
+    #: and a hard failure in bench/CI.
+    guaranteed: bool = False
 
 
 class _QueueShard:

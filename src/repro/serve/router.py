@@ -23,6 +23,8 @@ from __future__ import annotations
 import itertools
 from typing import Optional
 
+from repro.serve.queue import CertificationFailed
+
 
 def _backlog_score(pool) -> int:
     """Lock-free load estimate of one pool: undrained submissions (shard
@@ -58,6 +60,18 @@ class Router:
         lo = min(scores)
         candidates = [i for i, s in enumerate(scores) if s == lo]
         return candidates[next(self._rr) % len(candidates)]
+
+    def order(self, request) -> list[int]:
+        """Every pool index in placement-preference order (ascending
+        backlog, round-robin rotation among ties).  The guaranteed
+        submit path tries each in turn until one pool's admission
+        certifies the request's deadline."""
+        n = len(self.pools)
+        if n == 1:
+            return [0]
+        scores = [_backlog_score(p) for p in self.pools]
+        start = next(self._rr)
+        return sorted(range(n), key=lambda i: (scores[i], (i - start) % n))
 
     def _pick_victim(self, thief) -> Optional[object]:
         """Most-loaded sibling worth stealing from, or None.  A victim
@@ -105,13 +119,45 @@ class Router:
 
     def _migrate(self, victim, thief) -> bool:
         """One request, victim → thief.  Pool locks strictly
-        one-at-a-time."""
+        one-at-a-time.
+
+        Guaranteed requests only migrate onto a pool that can PROVE the
+        remaining work still fits the remaining deadline: a thief with
+        no cost model never receives one (``guaranteed_ok=False``
+        excludes them at export), and a thief that fails to re-certify
+        gives the request straight back to the victim — whose own
+        certificate still holds, since losing a racing steal only ever
+        DECREASES the victim's load."""
+        guaranteed_ok = thief.cost_model is not None
         with victim._cond:
-            rec = victim.scheduler.export_request(victim.clock())
+            rec = victim.scheduler.export_request(
+                victim.clock(), guaranteed_ok=guaranteed_ok)
         if rec is None:
             return False
-        with thief._cond:
-            thief.scheduler.inject(rec)
+        if rec.request.guaranteed:
+            req = rec.request
+            now = thief.clock()
+            total = thief.scheduler.total_steps(req)
+            target = rec.budget if rec.budget is not None else total
+            remaining = max(1, int(target) - int(rec.pos))
+            left_ms = max(0.0, (req.t_deadline - now) * 1e3)
+            with thief._cond:
+                try:
+                    thief.scheduler.certify(
+                        req, thief.cost_model, now,
+                        steps=remaining, deadline_ms=left_ms)
+                except CertificationFailed:
+                    certified = False
+                else:
+                    thief.scheduler.inject(rec)
+                    certified = True
+            if not certified:
+                with victim._cond:
+                    victim.scheduler.inject(rec)
+                return False
+        else:
+            with thief._cond:
+                thief.scheduler.inject(rec)
         self.metrics.record_steal()
         if self.tracer.enabled:
             self.tracer.instant(

@@ -40,7 +40,30 @@ import numpy as np
 from repro.core import engine
 from repro.obs import NULL_TRACER
 from repro.schedule.backends import default_backend
-from repro.serve.queue import AdmissionQueue, Request
+from repro.serve.cost import LAG_ITERATIONS, CostModel, CostModelError
+from repro.serve.queue import AdmissionQueue, CertificationFailed, Request
+
+
+def _waiting_entry(req: Request) -> tuple:
+    """Per-lane waiting-heap entry.  Guaranteed requests outrank every
+    best-effort one (their admission certificate priced the wait of at
+    most the guaranteed queue ahead of them — best-effort arrivals must
+    not push them back), then EDF within each class."""
+    return (0 if req.guaranteed else 1, req.t_deadline, req.request_id, req)
+
+
+def _plan_lengths(plan) -> tuple[int, ...]:
+    """Every pow2 dispatch length ``plan`` can emit.  The dispatch rule
+    fuses ``pow2_floor(min remaining)`` steps, so out-of-phase slots and
+    degrade budgets can fragment any segment down to 1 — the reachable
+    set is every power of two up to the longest planned segment."""
+    max_seg = int(max(plan.seg_lens)) if len(plan.seg_lens) else 1
+    lengths = []
+    length = 1
+    while length <= max_seg:
+        lengths.append(length)
+        length *= 2
+    return tuple(lengths)
 
 
 def _readout_margin(row: np.ndarray) -> float:
@@ -528,6 +551,10 @@ class Scheduler:
         # instead of scanning the queue at exactly the overload moment
         self._count_lock = threading.Lock()
         self._queued_by_lane: dict[tuple, int] = {}   # guarded-by: _count_lock
+        # guaranteed requests queued but not yet in a waiting heap —
+        # certify() must count them as waiters ahead, or back-to-back
+        # guaranteed submits would each price a wait of zero
+        self._queued_guaranteed: dict[tuple, int] = {}  # guarded-by: _count_lock
         self._prior_cache: dict[str, np.ndarray] = {}  # guarded-by: AnytimeServer._lock
         # stolen requests awaiting (re-)admission on THIS scheduler,
         # processed ahead of queue arrivals each step
@@ -630,6 +657,132 @@ class Scheduler:
         sess = rt.session(req.x, order=rt.order(req.policy))
         return np.asarray(sess.predict_proba())
 
+    # -- WCET certification (admission="certified" / guaranteed=True) ------
+
+    def certify(self, request: Request, cost_model: CostModel,  # holds: AnytimeServer._lock
+                now: float, *, steps: Optional[int] = None,
+                deadline_ms: Optional[float] = None) -> float:
+        """Prove ``request`` fits its deadline from the calibrated
+        worst-case table, or raise :class:`CertificationFailed`.
+
+        The certificate is ``wait + E <= deadline`` where
+
+        * ``E = steps*(rate + I) + LAG_ITERATIONS*(iter + I)`` prices the
+          request's own execution: ``rate`` is the sound per-step worst
+          rate over the pow2 dispatch lengths its plan can emit, ``iter``
+          the lane's worst single iteration, and ``I`` the cross-lane
+          interference — the summed per-iteration worst case of every
+          OTHER currently-busy lane, since the loop round-robins busy
+          lanes within one iteration.  Lanes opened AFTER admission are
+          outside the model (certificates hold for the lane population
+          at admission time; single-lane deployments — the certified
+          norm — are unaffected).
+        * ``wait`` is the k-th smallest slot free-time bound, k being
+          the number of certified requests already waiting for this
+          lane: a free slot is 0; an occupied slot frees within
+          ``min(its remaining deadline, remaining steps * (rate + I))``
+          plus one iteration (the retire→readmit boundary).
+
+        ``steps``/``deadline_ms`` override the request's own full plan
+        and relative deadline — the router passes the REMAINING steps
+        and deadline when re-certifying a stolen request mid-flight.
+        Returns the priced worst case (ms); the server stamps it into
+        ``request.wcet_ms``.
+        """
+        budget_ms = (float(request.deadline_ms)
+                     if deadline_ms is None else float(deadline_ms))
+
+        def fail(why: str, wcet_ms: Optional[float] = None):
+            raise CertificationFailed(
+                f"cannot certify request (deadline {budget_ms:.3f} ms): "
+                f"{why}", wcet_ms=wcet_ms, deadline_ms=budget_ms)
+
+        try:
+            key = self._lane_key(request)
+            lane = self.lane_for(request)
+        except Exception as e:  # noqa: BLE001 - bad request == not certifiable
+            fail(str(e))
+        if not isinstance(lane, ForestLane):
+            fail("session-lane programs have no certifiable slot batch")
+        total = self.total_steps(request)
+        if steps is None:
+            steps = total
+        steps = max(1, min(int(steps), total))
+        try:
+            lengths = _plan_lengths(lane.batch.plan)
+            rate = cost_model.step_rate_ms(key[2], lengths)
+            iter_ms = cost_model.iteration_wcet_ms(key[2])
+            # cross-lane interference: every other busy lane costs at
+            # most its own worst iteration per loop iteration
+            interference = 0.0
+            for other_key, other in self.lanes.items():
+                if other_key == key or not other.busy:
+                    continue
+                interference += cost_model.iteration_wcet_ms(other_key[2])
+        except CostModelError as e:
+            fail(str(e))
+        exec_ms = (steps * (rate + interference)
+                   + LAG_ITERATIONS * (iter_ms + interference))
+        # certified requests already committed to this lane, ahead of us:
+        # waiting-heap entries, stolen requests pending re-admission, AND
+        # guaranteed submits still in the admission queue (certified
+        # before us but not yet admitted into a heap)
+        k = sum(1 for e in self._waiting.get(key, ()) if e[0] == 0)
+        k += sum(
+            1 for rec in self._resume_pending
+            if rec.request.guaranteed and self._lane_key(rec.request) == key
+        )
+        with self._count_lock:
+            k += self._queued_guaranteed.get(key, 0)
+        bounds = []
+        batch = lane.batch
+        for slot, occupant in enumerate(lane.requests):
+            if occupant is None:
+                bounds.append(0.0)
+                continue
+            remaining = max(
+                0, int(batch.budget[slot]) - int(batch.pos[slot]))
+            left_ms = max(0.0, (occupant.t_deadline - now) * 1e3)
+            bounds.append(
+                min(left_ms, remaining * (rate + interference))
+                + (iter_ms + interference))
+        if k >= len(bounds):
+            fail(f"{k} certified requests already waiting for "
+                 f"{len(bounds)} slots")
+        bounds.sort()
+        wcet_ms = bounds[k] + exec_ms
+        if wcet_ms > budget_ms:
+            fail(f"priced worst case {wcet_ms:.3f} ms exceeds it "
+                 f"(slot wait {bounds[k]:.3f} ms + execution "
+                 f"{exec_ms:.3f} ms)", wcet_ms=wcet_ms)
+        return wcet_ms
+
+    def predicted_budget(self, request: Request,  # holds: AnytimeServer._lock
+                         cost_model: CostModel,
+                         backlog: int) -> Optional[int]:
+        """Degrade-mode step budget from PREDICTED pressure: price the
+        backlog ahead of this request (its queue position amortized over
+        capacity slots, each backlog entry costing a full plan at the
+        lane's worst per-step rate) and grant whatever steps fit in the
+        deadline time that remains.  None when the lane's rate is not
+        priceable — the caller falls back to the observed-depth
+        formula."""
+        key = self._lane_key(request)
+        lane = self.lanes.get(key)
+        lengths = None
+        if isinstance(lane, ForestLane):
+            lengths = _plan_lengths(lane.batch.plan)
+        try:
+            rate = cost_model.step_rate_ms(key[2], lengths)
+        except CostModelError:
+            return None
+        if rate <= 0.0:
+            return None
+        total = self.total_steps(request)
+        wait_ms = (backlog / max(1, self.capacity)) * total * rate
+        left_ms = float(request.deadline_ms) - wait_ms
+        return max(1, int(left_ms / rate)) if left_ms > 0 else 1
+
     # -- the serving iteration --------------------------------------------
 
     @property
@@ -665,6 +818,9 @@ class Scheduler:
         key = self._lane_key(req)
         with self._count_lock:
             self._queued_by_lane[key] = self._queued_by_lane.get(key, 0) + 1
+            if req.guaranteed:
+                self._queued_guaranteed[key] = (
+                    self._queued_guaranteed.get(key, 0) + 1)
 
     def _note_dequeued(self, req: Request) -> None:
         try:
@@ -677,6 +833,12 @@ class Scheduler:
                 self._queued_by_lane.pop(key, None)
             else:
                 self._queued_by_lane[key] = n - 1
+            if req.guaranteed:
+                g = self._queued_guaranteed.get(key, 0)
+                if g <= 1:
+                    self._queued_guaranteed.pop(key, None)
+                else:
+                    self._queued_guaranteed[key] = g - 1
 
     def _admit_resumes(self, now: float,  # holds: AnytimeServer._lock
                        deliveries: list[Delivery]) -> None:
@@ -702,9 +864,7 @@ class Scheduler:
                 continue
             if rec.kind != "inflight":
                 heapq.heappush(
-                    self._waiting.setdefault(key, []),
-                    (req.t_deadline, req.request_id, req),
-                )
+                    self._waiting.setdefault(key, []), _waiting_entry(req))
                 continue
             if not isinstance(lane, ForestLane) or not lane.admit_resumed(rec):
                 self._resume_pending.append(rec)  # retry next step
@@ -735,14 +895,12 @@ class Scheduler:
                 deliveries.append(Delivery(req, None, 0, False, error=str(e)))
                 continue
             heapq.heappush(
-                self._waiting.setdefault(key, []),
-                (req.t_deadline, req.request_id, req),
-            )
+                self._waiting.setdefault(key, []), _waiting_entry(req))
         for key in list(self._waiting):
             heap = self._waiting[key]
             lane = self.lanes[key]
             while heap:
-                t_deadline, _, head = heap[0]
+                _, t_deadline, _, head = heap[0]
                 if t_deadline <= now:
                     # expired while queued (or zero-deadline): prior
                     # readout, 0 steps
@@ -766,7 +924,8 @@ class Scheduler:
 
     # -- work stealing (multi-pool tier) ----------------------------------
 
-    def export_request(self, now: float) -> Optional[StealRecord]:  # holds: AnytimeServer._lock
+    def export_request(self, now: float,  # holds: AnytimeServer._lock
+                       guaranteed_ok: bool = True) -> Optional[StealRecord]:
         """Give up ONE request for an idle sibling pool to run.
 
         Preference order: the earliest-deadline non-expired WAITING
@@ -775,17 +934,29 @@ class Scheduler:
         to absorb the migration; its index row syncs to the host here).
         Session lanes never export — their per-request solo sessions
         hold backend-internal state that has no portable boundary form.
-        Returns None when there is nothing worth stealing."""
+        ``guaranteed_ok=False`` excludes certified requests entirely —
+        the router passes it when the thief cannot re-certify them (no
+        cost model), so a guarantee never migrates onto a pool that
+        cannot prove it.  Returns None when there is nothing worth
+        stealing."""
         best_key = None
         best = None
         for key, heap in self._waiting.items():
-            if heap and heap[0][0] > now and (best is None or heap[0] < best):
-                best, best_key = heap[0], key
+            for entry in heap:
+                if entry[1] <= now:
+                    continue  # expired; the admit loop will deliver it
+                if not guaranteed_ok and entry[3].guaranteed:
+                    continue
+                if best is None or entry < best:
+                    best, best_key = entry, key
         if best is not None:
-            heapq.heappop(self._waiting[best_key])
-            if not self._waiting[best_key]:
+            heap = self._waiting[best_key]
+            heap.remove(best)
+            if heap:
+                heapq.heapify(heap)
+            else:
                 del self._waiting[best_key]
-            req = best[2]
+            req = best[3]
             return StealRecord(req, "waiting", None, 0, req.budget_steps)
         victim = None  # (t_deadline, lane, slot)
         for lane in self.lanes.values():
@@ -793,6 +964,8 @@ class Scheduler:
                 continue
             for slot, req in enumerate(lane.requests):
                 if req is None or req.t_deadline <= now:
+                    continue
+                if not guaranteed_ok and req.guaranteed:
                     continue
                 if int(lane.batch.pos[slot]) >= int(lane.batch.budget[slot]):
                     continue  # finished its budget; about to retire here
@@ -885,7 +1058,7 @@ class Scheduler:
         for heap in self._waiting.values():
             deliveries.extend(
                 Delivery(req, None, 0, False, budget=req.budget_steps)
-                for _, _, req in heap)
+                for _, _, _, req in heap)
         self._waiting.clear()
         records, self._resume_pending = self._resume_pending, []
         deliveries.extend(self._resume_delivery(rec) for rec in records)

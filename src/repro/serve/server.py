@@ -16,7 +16,7 @@ Two ways to drive the loop:
 *cooperative* (the PR-3 shape) — the caller pumps it::
 
     server = AnytimeServer(runtime, capacity=16)
-    tickets = [server.submit(x, deadline_ms=2.0) for x in rows]
+    tickets = [server.submit(x, QoS(deadline_ms=2.0)) for x in rows]
     server.drain()
     preds = [t.result().prediction for t in tickets]
 
@@ -27,7 +27,7 @@ becomes a thread-safe fire-and-forget enqueue, and tickets behave like
 ``result(timeout=)``, :func:`~repro.serve.driver.as_completed`)::
 
     with AnytimeServer(runtime, capacity=16) as server:
-        tickets = [server.submit(x, deadline_ms=2.0) for x in rows]
+        tickets = [server.submit(x, QoS(deadline_ms=2.0)) for x in rows]
         ...caller's own work overlaps device execution here...
         preds = [t.result(timeout=5.0).prediction for t in tickets]
 
@@ -47,11 +47,14 @@ import numpy as np
 
 from repro.obs import NULL_TRACER
 from repro.schedule.runtime import AnytimeRuntime
+from repro.serve.admission import get_admission_policy
+from repro.serve.cost import CostModel
 from repro.serve.driver import DriverDead, ServeDriver
 from repro.serve.metrics import ServeMetrics
+from repro.serve.qos import QoS, resolve_qos
 from repro.serve.queue import (
     AdmissionQueue,
-    AdmissionRejected,
+    CertificationFailed,
     PolicyLike,
     Request,
     Result,
@@ -163,7 +166,10 @@ class AnytimeServer:
     step granularity of session lanes (slot lanes use plan segments);
     ``clock`` must be monotonic — injectable for deterministic tests.
 
-    ``admission`` picks the overload policy:
+    ``admission`` names a policy from the admission registry
+    (:func:`repro.serve.admission.list_admissions`; an
+    :class:`~repro.serve.admission.AdmissionPolicy` instance is also
+    accepted):
 
     * ``"edf"`` (default) accepts everything and lets the EDF queue
       starve whoever it must — a starved request is delivered its prior
@@ -180,10 +186,24 @@ class AnytimeServer:
       ``capacity * admission_k`` bound — slots stop at a shorter exact
       prefix boundary and recycle early, trading steps-at-deadline
       against hit-rate smoothly instead of starving or rejecting.
-      Budgets are stamped from the instantaneous backlog at submit, so
-      they restore to the full plan as soon as pressure clears.
-      Delivered results carry ``degraded``/``budget_steps``; metrics
-      grow ``degraded_requests`` and budget-at-deadline percentiles.
+      Budgets are stamped from the instantaneous backlog at submit
+      (priced against the calibrated cost model when one is configured,
+      observed backlog depth otherwise), so they restore to the full
+      plan as soon as pressure clears.  Delivered results carry
+      ``degraded``/``budget_steps``; metrics grow ``degraded_requests``
+      and budget-at-deadline percentiles.
+    * ``"certified"`` upgrades EVERY submit to the guaranteed contract:
+      admission prices the request's worst-case completion from the
+      calibrated :class:`~repro.serve.cost.CostModel` (``cost_model=``,
+      see ``tools.obs calibrate``) and admits only what provably fits
+      its deadline — everything else raises
+      :class:`~repro.serve.queue.CertificationFailed` at submit with
+      the priced bound.  Under any policy, a ``QoS(guaranteed=True)``
+      submit gets the same certification individually; admitted
+      guaranteed requests outrank best-effort traffic in slot admission
+      and are never degraded, and a guaranteed delivery that missed its
+      deadline counts as ``guaranteed_misses`` in metrics (a hard
+      bench/CI failure, not a percentile).
 
     Threaded serving: ``start()``/``stop()``/``close()`` (or the context
     manager) run the dispatch → admit → harvest loop on a background
@@ -204,6 +224,7 @@ class AnytimeServer:
         backend_opts: Optional[dict] = None,
         admission: str = "edf",
         admission_k: float = 2.0,
+        cost_model: Optional[CostModel] = None,
         tracer=None,
         queue_shards: int = 1,
         metrics: Optional[ServeMetrics] = None,
@@ -215,15 +236,18 @@ class AnytimeServer:
             runtimes.setdefault("default", runtime)
         if not runtimes:
             raise ValueError("AnytimeServer needs a runtime or a programs dict")
-        if admission not in ("edf", "reject", "degrade"):
-            raise ValueError(
-                "admission must be 'edf', 'reject' or 'degrade', "
-                f"got {admission!r}"
-            )
+        # resolve eagerly: an unknown admission name must fail at
+        # construction (ValueError), not at the first overloaded submit
+        policy = get_admission_policy(admission)
         if admission_k <= 0:
             raise ValueError(f"admission_k must be > 0, got {admission_k}")
-        self.admission = admission          # unguarded: immutable config
+        self._admission_policy = policy     # unguarded: immutable config
+        self.admission = policy.name        # unguarded: immutable config
         self.admission_k = float(admission_k)  # unguarded: immutable config
+        # calibrated WCET pricing for certified/guaranteed admission and
+        # predicted-pressure degrade budgets (None = best-effort only:
+        # guaranteed submits raise CertificationFailed)
+        self.cost_model = cost_model        # unguarded: immutable config
         self.clock = clock                  # unguarded: immutable callable
         # display/trace identity; a pooled tier names its pools "p0".."pN"
         self.name = track_prefix.rstrip(":") or "server"  # unguarded: immutable config
@@ -374,17 +398,25 @@ class AnytimeServer:
     def submit(
         self,
         x,
-        deadline_ms: float,
-        policy: PolicyLike = "backward_squirrel",
+        qos: Union[QoS, float, None] = None,
+        deadline_ms: Optional[float] = None,
+        policy: Optional[PolicyLike] = None,
         backend: Optional[str] = None,
-        program: str = "default",
+        program: Optional[str] = None,
+        budget_steps: Optional[int] = None,
+        guaranteed: Optional[bool] = None,
     ) -> Ticket:
         """Enqueue one request; returns a :class:`Ticket` immediately.
-        Thread-safe; wakes the background driver if one is running."""
-        return self.submit_request(Request(
-            x=x, deadline_ms=deadline_ms, policy=policy,
-            backend=backend, program=program,
-        ))
+        Thread-safe; wakes the background driver if one is running.
+
+        ``qos`` is the request spec: ``submit(x, QoS(deadline_ms=2.0,
+        backend="pallas", guaranteed=True))``.  The legacy kwarg surface
+        (``submit(x, deadline_ms, policy=..., backend=...,
+        program=...)``) still works through a deprecation shim building
+        the identical spec."""
+        spec = resolve_qos(qos, deadline_ms, policy, backend, program,
+                           budget_steps, guaranteed)
+        return self.submit_request(spec.request(x))
 
     def submit_request(self, request: Request) -> Ticket:
         if request.program not in self.scheduler.runtimes:
@@ -392,11 +424,13 @@ class AnytimeServer:
                 f"unknown program {request.program!r}; serving: "
                 f"{', '.join(self.scheduler.runtimes)}"
             )
-        # FAST PATH — the common serving case (EDF admission, untraced):
-        # no global-lock acquisition at all.  Reject/degrade read lane
-        # backlog and traced submits emit correlated instants, so those
-        # stay on the lock-serialized slow path.
-        if self.admission == "edf" and not self.tracer.enabled:
+        # FAST PATH — the common serving case (no-op admission policy,
+        # best-effort, untraced): no global-lock acquisition at all.
+        # Reject/degrade read lane backlog, certification prices slot
+        # occupancy, and traced submits emit correlated instants, so
+        # those stay on the lock-serialized slow path.
+        if (self._admission_policy.fast_path and not request.guaranteed
+                and not self.tracer.enabled):
             return self._submit_fast(request)
         return self._submit_slow(request)
 
@@ -437,26 +471,13 @@ class AnytimeServer:
                     "submit on a closed AnytimeServer (close() was called)")
             self._raise_if_driver_dead()
             tracer = self.tracer
-            if self.admission == "reject":
-                # per-lane: flooding one (program, policy, backend) lane
-                # must not shed load for an idle one
-                backlog = self.scheduler.lane_backlog(request)
-                bound = self.scheduler.capacity * self.admission_k
-                if backlog >= bound:
-                    if tracer.enabled:
-                        # no request id yet (never enters the queue)
-                        tracer.instant(
-                            "serve.admission", request_id=-1,
-                            decision="reject", backlog=backlog,
-                            program=request.program)
-                    raise AdmissionRejected(
-                        f"lane backlog {backlog} >= capacity "
-                        f"{self.scheduler.capacity} x admission_k "
-                        f"{self.admission_k}; shed load instead of starving "
-                        "admitted requests to prior readouts"
-                    )
-            elif self.admission == "degrade":
-                request.budget_steps = self._degrade_budget(request)
+            admission = self._admission_policy
+            # a guaranteed submit is certified whatever the admission
+            # policy; certify_all policies certify inside on_submit
+            # (after stamping guaranteed=True on the request)
+            if request.guaranteed and not admission.certify_all:
+                self._certify(request)
+            admission.on_submit(self, request)
             # the backlog the admission decision actually saw — before
             # this request itself is counted
             trace_backlog = (
@@ -485,12 +506,50 @@ class AnytimeServer:
             self._wake.notify_all()   # wake a parked driver
         return ticket
 
-    def _degrade_budget(self, request: Request) -> Optional[int]:
+    def _certify(self, request: Request) -> None:  # holds: _lock
+        """Price ``request``'s worst case against the calibrated cost
+        model and stamp the certificate (``request.wcet_ms``), or raise
+        :class:`~repro.serve.queue.CertificationFailed` with the priced
+        bound.  Either way the decision lands in metrics and (traced) a
+        ``serve.admission`` instant."""
+        tracer = self.tracer
+        try:
+            if self.cost_model is None:
+                raise CertificationFailed(
+                    "guaranteed submit needs a calibrated cost model — "
+                    "construct the server with cost_model=CostModel.load() "
+                    "(see `python -m tools.obs calibrate`)",
+                    deadline_ms=request.deadline_ms)
+            request.wcet_ms = self.scheduler.certify(
+                request, self.cost_model, self.clock())
+        except CertificationFailed as e:
+            self.metrics.record_certified(False)
+            if tracer.enabled:
+                # no request id yet (never enters the queue)
+                tracer.instant(
+                    "serve.admission", request_id=-1,
+                    decision="certified-reject",
+                    wcet_ms=e.wcet_ms if e.wcet_ms is not None else -1.0,
+                    deadline_ms=request.deadline_ms,
+                    program=request.program)
+            raise
+        self.metrics.record_certified(True)
+        if tracer.enabled:
+            tracer.instant(
+                "serve.admission", request_id=-1, decision="certified",
+                wcet_ms=request.wcet_ms, deadline_ms=request.deadline_ms,
+                program=request.program)
+
+    def _degrade_budget(self, request: Request) -> Optional[int]:  # holds: _lock
         """Effective step budget under ``admission="degrade"``: the full
-        plan while the lane backlog is under ``capacity * admission_k``,
-        then shrinking as ``bound / backlog`` — with a floor of one
-        unit's steps so every admitted request can complete at least one
-        whole tree.  Computed from the INSTANTANEOUS backlog, so budgets
+        plan while the lane backlog is under ``capacity * admission_k``.
+        Past the bound, with a calibrated cost model the budget is the
+        step count that PREDICTED pressure leaves room for — the priced
+        backlog wait subtracted from the deadline, divided by the lane's
+        worst per-step rate — and without one it shrinks by observed
+        depth as ``bound / backlog``.  Both keep a floor of one unit's
+        steps so every admitted request can complete at least one whole
+        tree, and both read the INSTANTANEOUS backlog, so budgets
         restore automatically when pressure clears."""
         backlog = self.scheduler.lane_backlog(request)
         bound = self.scheduler.capacity * self.admission_k
@@ -499,6 +558,11 @@ class AnytimeServer:
         total = self.scheduler.total_steps(request)
         program = self.scheduler.runtimes[request.program].program
         floor_steps = max(1, int(program.unit_steps))
+        if self.cost_model is not None:
+            budget = self.scheduler.predicted_budget(
+                request, self.cost_model, backlog)
+            if budget is not None:
+                return max(floor_steps, min(budget, total))
         budget = int(total * bound / (backlog + 1))
         return max(floor_steps, min(budget, total))
 
@@ -604,7 +668,8 @@ class AnytimeServer:
         if len(deadline_ms) != len(xs):
             raise ValueError("deadline_ms must be scalar or match len(xs)")
         tickets = [
-            self.submit(x, d, policy=policy, backend=backend, program=program)
+            self.submit(x, QoS(deadline_ms=float(d), policy=policy,
+                               backend=backend, program=program))
             for x, d in zip(xs, deadline_ms)
         ]
         self.drain()
@@ -648,6 +713,7 @@ class AnytimeServer:
             error=d.error,
             degraded=d.budget is not None,
             budget_steps=int(d.budget) if d.budget is not None else total,
+            guaranteed=req.guaranteed,
         )
         with self._pending_lock:
             ticket = self._pending.pop(req.request_id, None)

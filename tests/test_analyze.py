@@ -368,6 +368,26 @@ def test_registry_covers_kernel_impl_registrations():
     # no missing-all/missing-export: every target is private
 
 
+def test_registry_covers_admission_registrations():
+    """Admission policies register like every other named family: the
+    checker sees @register_admission sites, so duplicate policy names,
+    undocumented policies, and unexported public policies are flagged."""
+    text = """
+        __all__ = ["Good"]
+
+        @register_admission("fx-adm")
+        class Good:
+            \"\"\"doc.\"\"\"
+
+        @register_admission("fx-adm")
+        class Clash:
+            pass
+    """
+    findings = run_on("src/repro/serve/fx_adm_reg.py", text)
+    assert sorted(rules(findings)) == [
+        "duplicate-name", "missing-docstring", "missing-export"]
+
+
 # ---------------------------------------------------------------------------
 # obs: tracing-call hygiene
 # ---------------------------------------------------------------------------

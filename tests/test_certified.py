@@ -1,0 +1,520 @@
+"""Certified serving: the WCET cost model, the admission-policy
+registry, deadline certification at submit, the guaranteed priority /
+steal rules, predicted-pressure degrade budgets, and the unified QoS
+submit surface (with its legacy-kwarg deprecation shim)."""
+import dataclasses
+import heapq
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.forest import make_dataset, split_dataset, train_forest
+from repro.obs import NULL_TRACER
+from repro.schedule import AnytimeRuntime, ForestProgram
+from repro.serve import (
+    LAG_ITERATIONS,
+    AdmissionPolicy,
+    AnytimeServer,
+    CertificationFailed,
+    CostModel,
+    CostModelError,
+    PooledAnytimeServer,
+    QoS,
+    Request,
+    get_admission_policy,
+    list_admissions,
+    register_admission,
+    resolve_qos,
+)
+from repro.serve.admission import _REGISTRY
+from repro.serve.cost import WCET_DIR_ENV
+from repro.serve.router import Router
+from repro.serve.scheduler import _plan_lengths, _waiting_entry
+
+
+class ManualClock:
+    """Monotonic clock under test control (seconds)."""
+
+    def __init__(self, t: float = 100.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance_ms(self, ms: float) -> None:
+        self.t += ms / 1e3
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    X, y = make_dataset("magic", seed=1)
+    (tr, ytr), (orx, yor), (te, yte) = split_dataset(X, y, seed=1)
+    rf = train_forest(tr[:800], ytr[:800], 2, n_trees=4, max_depth=5, seed=1)
+    fa = rf.as_arrays()
+    pp = engine.path_probs_np(fa, orx[:200])
+    return fa, pp, yor[:200], te, yte
+
+
+@pytest.fixture(scope="module")
+def runtime(pipeline):
+    fa, pp, yor, te, yte = pipeline
+    return AnytimeRuntime(
+        ForestProgram(fa, y_order=yor, path_probs=pp, X_order=te[:8]))
+
+
+def make_table(margin=2.0, platform="cpu", backends=("jnp-ref",),
+               lengths=(1, 2, 4, 8, 16, 32, 64), base=8.0, harvest=4.0):
+    """Synthetic WCET table: wcet_ms = base * L per cell (non-decreasing
+    in length, as the model assumes), covering every pow2 dispatch
+    length a small test plan can emit."""
+    cells = {}
+    for b in backends:
+        for length in lengths:
+            w = base * length
+            cells[f"{b}/{b}/L{length}"] = {
+                "count": 3, "mean_ms": w / margin, "p95_ms": w / margin,
+                "max_ms": w / margin, "wcet_ms": w,
+            }
+    return {
+        "schema_version": 1, "platform": platform, "margin": margin,
+        "cells": cells,
+        "harvest": {"count": 3, "mean_ms": harvest / margin,
+                    "max_ms": harvest / margin, "wcet_ms": harvest},
+    }
+
+
+# ---------------------------------------------------------------------------
+# CostModel: pricing from the calibrated table
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_maxes_cells_across_impls():
+    table = make_table()
+    table["cells"]["jnp-ref/tuned/L4"] = {
+        "count": 1, "mean_ms": 50.0, "p95_ms": 50.0, "max_ms": 50.0,
+        "wcet_ms": 99.0}
+    cm = CostModel(table)
+    # the tuner may pick any impl at dispatch time: worst across impls
+    assert cm.segment_wcet_ms("jnp-ref", 4) == 99.0
+    assert cm.backends() == ("jnp-ref",)
+    assert cm.lengths("jnp-ref") == (1, 2, 4, 8, 16, 32, 64)
+
+
+def test_cost_model_monotone_fallback_and_unpriceable():
+    cm = CostModel(make_table(lengths=(1, 4)))
+    # an uncalibrated length prices at the smallest calibrated length
+    # at or above it (dispatch cost non-decreasing in length)
+    assert cm.segment_wcet_ms("jnp-ref", 3) == cm.segment_wcet_ms("jnp-ref", 4)
+    with pytest.raises(CostModelError, match="unpriceable"):
+        cm.segment_wcet_ms("jnp-ref", 8)
+    with pytest.raises(CostModelError, match="no calibrated"):
+        cm.segment_wcet_ms("pallas", 1)
+    with pytest.raises(CostModelError, match="no calibrated"):
+        cm.lengths("pallas")
+
+
+def test_cost_model_pricing_formula():
+    cm = CostModel(make_table(base=8.0, harvest=4.0))
+    # rate = max over L of (8L + 4)/L, maximized at L=1
+    assert cm.step_rate_ms("jnp-ref") == 12.0
+    assert cm.step_rate_ms("jnp-ref", lengths=(4,)) == (8 * 4 + 4) / 4
+    # one iteration: the worst dispatch (L=64) plus a harvest
+    assert cm.iteration_wcet_ms("jnp-ref") == 8 * 64 + 4
+    expect = 10 * 12.0 + LAG_ITERATIONS * (8 * 64 + 4)
+    assert cm.request_wcet_ms(10, backend="jnp-ref") == expect
+    # wait adds linearly; interference charges every step AND lag iter
+    assert cm.request_wcet_ms(
+        10, backend="jnp-ref", interference_ms=1.0, wait_ms=5.0
+    ) == pytest.approx(5.0 + expect + (10 + LAG_ITERATIONS) * 1.0)
+
+
+def test_cost_model_rejects_broken_tables():
+    with pytest.raises(CostModelError, match="margin"):
+        CostModel(make_table(margin=0.5))
+    bad = make_table()
+    bad["harvest"] = {"count": 0, "wcet_ms": 0.0}
+    with pytest.raises(CostModelError, match="harvest"):
+        CostModel(bad)
+    bad = make_table()
+    bad["cells"]["garbage-key"] = {"wcet_ms": 1.0}
+    with pytest.raises(CostModelError, match="malformed"):
+        CostModel(bad)
+    bad = make_table()
+    bad["cells"]["jnp-ref/jnp-ref/L2"]["wcet_ms"] = 0.0
+    with pytest.raises(CostModelError, match="wcet_ms"):
+        CostModel(bad)
+
+
+def test_cost_model_load_uses_env_dir_and_fails_with_hint(
+        tmp_path, monkeypatch):
+    table = make_table(platform="fpga")
+    (tmp_path / "wcet_fpga.json").write_text(json.dumps(table))
+    monkeypatch.setenv(WCET_DIR_ENV, str(tmp_path))
+    cm = CostModel.load(platform="fpga")
+    assert cm.platform == "fpga" and cm.step_rate_ms("jnp-ref") == 12.0
+    with pytest.raises(CostModelError, match="tools.obs calibrate"):
+        CostModel.load(platform="missing")
+
+
+# ---------------------------------------------------------------------------
+# Admission-policy registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_policies_in_registration_order():
+    assert list_admissions() == ("edf", "reject", "degrade", "certified")
+
+
+def test_registry_instantiates_stamps_name_and_passes_instances_through():
+    pol = get_admission_policy("degrade")
+    assert pol.name == "degrade" and not pol.fast_path
+    assert get_admission_policy("edf").fast_path
+    assert get_admission_policy("certified").certify_all
+    assert get_admission_policy(pol) is pol  # instance passthrough
+
+
+def test_registry_unknown_name_lists_registered():
+    with pytest.raises(ValueError, match="unknown admission.*edf"):
+        get_admission_policy("nope")
+
+
+def test_registry_rejects_duplicates_and_unknown_bound_fields():
+    with pytest.raises(ValueError, match="already registered"):
+        register_admission("edf")(AdmissionPolicy)
+    with pytest.raises(TypeError, match="no config field"):
+
+        @register_admission("fx-bad-bound", nope=1)
+        @dataclasses.dataclass
+        class _Bad(AdmissionPolicy):
+            """doc."""
+
+    assert "fx-bad-bound" not in _REGISTRY
+
+
+def test_server_resolves_admission_at_construction(runtime):
+    with pytest.raises(ValueError, match="unknown admission"):
+        AnytimeServer(runtime, capacity=2, admission="typo")
+
+
+# ---------------------------------------------------------------------------
+# Certification at submit
+# ---------------------------------------------------------------------------
+
+
+def test_guaranteed_submit_without_cost_model_fails_fast(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    with pytest.raises(CertificationFailed, match="CostModel.load"):
+        server.submit(te[0], QoS(deadline_ms=1e6, guaranteed=True))
+    assert server.metrics.snapshot()["certified_rejected"] == 1
+
+
+def test_certified_wave_completes_and_stamps_certificates(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    clk = ManualClock()
+    cm = CostModel(make_table())
+    server = AnytimeServer(runtime, capacity=4, clock=clk, cost_model=cm)
+    qos = QoS(deadline_ms=1e9, backend="jnp-ref", guaranteed=True)
+    tickets = [server.submit(te[i], qos) for i in range(4)]
+    for t in tickets:
+        assert t.request.wcet_ms is not None and t.request.wcet_ms > 0
+    server.drain()
+    order = runtime.order("backward_squirrel")
+    for i, t in enumerate(tickets):
+        r = t.result()
+        assert r.guaranteed and r.completed
+        solo = runtime.session(np.asarray(te[i])[None, :], order=order,
+                               backend="jnp-ref")
+        solo.advance(r.steps_completed)
+        np.testing.assert_array_equal(r.proba, solo.predict_proba()[0])
+    snap = server.metrics.snapshot()
+    assert snap["certified_admitted"] == 4
+    assert snap["guaranteed_delivered"] == 4
+    assert snap["guaranteed_misses"] == 0
+
+
+def test_infeasible_deadline_rejected_with_priced_bound(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    cm = CostModel(make_table())
+    server = AnytimeServer(
+        runtime, capacity=2, clock=ManualClock(), cost_model=cm)
+    with pytest.raises(CertificationFailed, match="priced worst case") as ei:
+        server.submit(te[0], QoS(deadline_ms=0.5, backend="jnp-ref",
+                                 guaranteed=True))
+    e = ei.value
+    assert e.wcet_ms is not None and e.wcet_ms > e.deadline_ms == 0.5
+    assert f"{e.wcet_ms:.3f}" in str(e)  # the priced bound, caller-visible
+    snap = server.metrics.snapshot()
+    assert snap["certified_rejected"] == 1 and snap["certified_admitted"] == 0
+
+
+def test_certify_formula_prices_wait_interference_and_lag(runtime, pipeline):
+    """The stamped certificate is exactly wait + steps*(rate+I) +
+    LAG_ITERATIONS*(iter+I) — cross-lane interference from the busy
+    sibling lane, zero slot wait on the fresh lane."""
+    fa, pp, yor, te, yte = pipeline
+    clk = ManualClock()
+    cm = CostModel(make_table())
+    server = AnytimeServer(runtime, capacity=2, clock=clk, cost_model=cm)
+    # make the backward_squirrel lane busy
+    server.submit(te[0], QoS(deadline_ms=1e9, backend="jnp-ref",
+                             guaranteed=True))
+    server.step()
+    # certify onto a DIFFERENT (fresh) lane: the depth-order plan
+    t2 = server.submit(te[1], QoS(deadline_ms=1e9, policy="depth",
+                                  backend="jnp-ref", guaranteed=True))
+    lane = server.scheduler.lane_for(t2.request)
+    steps = server.scheduler.total_steps(t2.request)
+    rate = cm.step_rate_ms("jnp-ref", _plan_lengths(lane.batch.plan))
+    interference = cm.iteration_wcet_ms("jnp-ref")  # the busy sibling
+    iter_ms = cm.iteration_wcet_ms("jnp-ref")
+    expect = (steps * (rate + interference)
+              + LAG_ITERATIONS * (iter_ms + interference))
+    assert t2.request.wcet_ms == pytest.approx(expect)
+    server.drain()
+
+
+def test_certify_counts_queued_guarantees_ahead(runtime, pipeline):
+    """Back-to-back guaranteed submits must see each other: with one
+    slot, the second certificate cannot pretend the slot is free."""
+    fa, pp, yor, te, yte = pipeline
+    cm = CostModel(make_table())
+    server = AnytimeServer(
+        runtime, capacity=1, clock=ManualClock(), cost_model=cm)
+    server.submit(te[0], QoS(deadline_ms=1e9, backend="jnp-ref",
+                             guaranteed=True))
+    with pytest.raises(CertificationFailed, match="already waiting"):
+        server.submit(te[1], QoS(deadline_ms=1e9, backend="jnp-ref",
+                                 guaranteed=True))
+    server.drain()
+    # the slot freed: the same submit certifies now
+    t = server.submit(te[1], QoS(deadline_ms=1e9, backend="jnp-ref",
+                                 guaranteed=True))
+    server.drain()
+    assert t.result().completed
+
+
+def test_certify_prices_occupied_slot_wait(runtime, pipeline):
+    """With the only slot mid-flight, the occupant's remaining worst
+    case is the floor of the wait: a deadline below wait+E rejects, one
+    above admits."""
+    fa, pp, yor, te, yte = pipeline
+    clk = ManualClock()
+    cm = CostModel(make_table())
+    server = AnytimeServer(runtime, capacity=1, clock=clk, cost_model=cm)
+    t1 = server.submit(te[0], QoS(deadline_ms=1e9, backend="jnp-ref",
+                                  guaranteed=True))
+    server.step()  # t1 occupies the slot
+    lane = server.scheduler.lane_for(t1.request)
+    assert lane.requests[0] is t1.request
+    steps = server.scheduler.total_steps(t1.request)
+    rate = cm.step_rate_ms("jnp-ref", _plan_lengths(lane.batch.plan))
+    iter_ms = cm.iteration_wcet_ms("jnp-ref")
+    exec_ms = steps * rate + LAG_ITERATIONS * iter_ms
+    # wait >= one iteration (retire->readmit boundary): E + iter/2 is
+    # provably infeasible, E + occupant's full remainder is provably fine
+    with pytest.raises(CertificationFailed):
+        server.submit(te[1], QoS(deadline_ms=exec_ms + iter_ms / 2,
+                                 backend="jnp-ref", guaranteed=True))
+    t2 = server.submit(
+        te[1], QoS(deadline_ms=exec_ms + steps * rate + iter_ms + 1.0,
+                   backend="jnp-ref", guaranteed=True))
+    server.drain()
+    assert t1.result().completed and t2.result().completed
+
+
+def test_certified_admission_upgrades_every_request(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    cm = CostModel(make_table())
+    server = AnytimeServer(runtime, capacity=2, clock=ManualClock(),
+                           admission="certified", cost_model=cm)
+    t = server.submit(te[0], QoS(deadline_ms=1e9, backend="jnp-ref"))
+    assert t.request.guaranteed and t.request.wcet_ms is not None
+    server.drain()
+    r = t.result()
+    assert r.guaranteed and r.completed
+    assert server.metrics.snapshot()["certified_admitted"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Guaranteed priority + steal rules
+# ---------------------------------------------------------------------------
+
+
+def test_guaranteed_outranks_best_effort_in_waiting_order():
+    g = Request(x=None, deadline_ms=100.0, guaranteed=True)
+    b = Request(x=None, deadline_ms=1.0)
+    g.request_id, g.t_deadline = 1, 10.0   # later deadline...
+    b.request_id, b.t_deadline = 0, 1.0
+    assert _waiting_entry(g) < _waiting_entry(b)  # ...still outranks
+    g2 = Request(x=None, deadline_ms=1.0, guaranteed=True)
+    g2.request_id, g2.t_deadline = 2, 1.0
+    assert _waiting_entry(g2) < _waiting_entry(g)  # EDF within the class
+
+
+def _inject_waiting(server, req, request_id, t_deadline):
+    req.request_id, req.t_deadline = request_id, t_deadline
+    key = server.scheduler._lane_key(req)
+    heapq.heappush(
+        server.scheduler._waiting.setdefault(key, []), _waiting_entry(req))
+
+
+def test_export_request_skips_guarantees_for_uncertified_thief(
+        runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    clk = ManualClock()
+    cm = CostModel(make_table())
+    server = AnytimeServer(runtime, capacity=1, clock=clk, cost_model=cm)
+    greq = QoS(deadline_ms=1e6, backend="jnp-ref",
+               guaranteed=True).request(te[0])
+    _inject_waiting(server, greq, 7, clk.t + 100.0)
+    # a thief with no cost model may not receive a guarantee
+    assert server.scheduler.export_request(clk.t, guaranteed_ok=False) is None
+    rec = server.scheduler.export_request(clk.t, guaranteed_ok=True)
+    assert rec is not None and rec.request is greq and rec.kind == "waiting"
+
+
+def test_router_migrates_guarantee_only_onto_certifying_pool(
+        runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    clk = ManualClock()
+    cm = CostModel(make_table())
+    victim = AnytimeServer(runtime, capacity=1, clock=clk, cost_model=cm)
+    thief = AnytimeServer(runtime, capacity=1, clock=clk)  # no cost model
+    router = Router([victim, thief], victim.metrics, NULL_TRACER)
+    greq = QoS(deadline_ms=1e9, backend="jnp-ref",
+               guaranteed=True).request(te[0])
+    _inject_waiting(victim, greq, 11, clk.t + 1e6)
+    # thief cannot price the remaining work: the guarantee stays home
+    assert router._migrate(victim, thief) is False
+    assert victim.scheduler.n_waiting == 1 and thief.scheduler.n_waiting == 0
+    # a certifying thief re-proves the REMAINING deadline and takes it
+    thief.cost_model = cm
+    assert router._migrate(victim, thief) is True
+    assert victim.scheduler.n_waiting == 0 and thief.scheduler.n_waiting == 1
+
+
+def test_router_gives_guarantee_back_when_recertification_fails(
+        runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    clk = ManualClock()
+    cm = CostModel(make_table())
+    victim = AnytimeServer(runtime, capacity=1, clock=clk, cost_model=cm)
+    thief = AnytimeServer(runtime, capacity=1, clock=clk, cost_model=cm)
+    router = Router([victim, thief], victim.metrics, NULL_TRACER)
+    greq = QoS(deadline_ms=1e9, backend="jnp-ref",
+               guaranteed=True).request(te[0])
+    # nearly expired: exportable (deadline ahead of now) but the thief
+    # cannot re-certify the remaining milliseconds
+    _inject_waiting(victim, greq, 12, clk.t + 0.001)
+    assert router._migrate(victim, thief) is False
+    assert victim.scheduler.n_waiting == 1 and thief.scheduler.n_waiting == 0
+
+
+def test_pooled_guaranteed_submits_complete_with_zero_misses(
+        runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    cm = CostModel(make_table())
+    srv = PooledAnytimeServer(runtime, pools=2, capacity=2,
+                              clock=ManualClock(), cost_model=cm)
+    qos = QoS(deadline_ms=1e9, backend="jnp-ref", guaranteed=True)
+    tickets = [srv.submit(te[i], qos) for i in range(4)]
+    srv.drain()
+    assert all(t.result().completed and t.result().guaranteed
+               for t in tickets)
+    snap = srv.metrics.snapshot()
+    assert snap["guaranteed_delivered"] == 4
+    assert snap["guaranteed_misses"] == 0
+    assert snap["certified_admitted"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Predicted-pressure degrade budgets
+# ---------------------------------------------------------------------------
+
+
+def test_predicted_budget_prices_backlog_not_depth(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    cm = CostModel(make_table())
+    server = AnytimeServer(runtime, capacity=2, clock=ManualClock(),
+                           admission="degrade", cost_model=cm)
+    req = QoS(deadline_ms=5_000.0, backend="jnp-ref").request(te[0])
+    total = server.scheduler.total_steps(req)
+    rate = cm.step_rate_ms("jnp-ref")
+
+    def expect(backlog):
+        wait = (backlog / 2) * total * rate
+        left = 5_000.0 - wait
+        return max(1, int(left / rate)) if left > 0 else 1
+
+    for backlog in (2, 8, 50, 10_000):
+        got = server.scheduler.predicted_budget(req, cm, backlog)
+        assert got == expect(backlog)
+    assert server.scheduler.predicted_budget(req, cm, 10_000) == 1
+    # unpriceable lane -> None (caller falls back to observed depth)
+    bad = QoS(deadline_ms=5_000.0, backend="jnp-ref").request(te[0])
+    assert server.scheduler.predicted_budget(
+        bad, CostModel(make_table(backends=("pallas",))), 8) is None
+
+
+def test_degrade_never_touches_guaranteed_requests(runtime, pipeline):
+    fa, pp, yor, te, yte = pipeline
+    policy = get_admission_policy("degrade")
+    req = QoS(deadline_ms=1.0, backend="jnp-ref",
+              guaranteed=True).request(te[0])
+    policy.on_submit(None, req)  # early-out: never reads the server
+    assert req.budget_steps is None
+
+
+# ---------------------------------------------------------------------------
+# QoS + the legacy-kwarg deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def test_qos_validates():
+    with pytest.raises(ValueError, match="deadline_ms"):
+        QoS(deadline_ms=-1.0)
+    with pytest.raises(ValueError, match="budget_steps"):
+        QoS(deadline_ms=1.0, budget_steps=0)
+    with pytest.raises(ValueError, match="guaranteed"):
+        QoS(deadline_ms=1.0, budget_steps=5, guaranteed=True)
+
+
+def test_resolve_qos_surfaces():
+    spec = QoS(deadline_ms=2.0, backend="pallas")
+    assert resolve_qos(spec, None, None, None, None, None, None) is spec
+    with pytest.raises(TypeError, match="not both"):
+        resolve_qos(spec, None, "depth", None, None, None, None)
+    with pytest.raises(TypeError, match="twice"):
+        resolve_qos(3.0, 4.0, None, None, None, None, None)
+    with pytest.raises(TypeError, match="deadline"):
+        resolve_qos(None, None, None, None, None, None, None)
+    with pytest.raises(TypeError, match="QoS"):
+        resolve_qos(object(), None, None, None, None, None, None)
+    with pytest.warns(DeprecationWarning, match="QoS"):
+        built = resolve_qos(None, 7.0, "depth", "jnp-ref", None, 3, None)
+    assert built == QoS(deadline_ms=7.0, policy="depth", backend="jnp-ref",
+                        budget_steps=3)
+    with pytest.warns(DeprecationWarning):
+        bare = resolve_qos(9.0, None, None, None, None, None, None)
+    assert bare == QoS(deadline_ms=9.0)
+
+
+def test_legacy_submit_shim_byte_parity(runtime, pipeline):
+    """The deprecated kwarg surface must serve byte-identical results
+    to the QoS spec it shims onto."""
+    fa, pp, yor, te, yte = pipeline
+    server = AnytimeServer(runtime, capacity=2)
+    with pytest.warns(DeprecationWarning, match="QoS"):
+        t_old = server.submit(te[0], 60_000.0, policy="backward_squirrel",
+                              backend="jnp-ref")
+    t_new = server.submit(
+        te[0], QoS(deadline_ms=60_000.0, backend="jnp-ref"))
+    server.drain()
+    r_old, r_new = t_old.result(), t_new.result()
+    assert r_old.completed and r_new.completed
+    assert r_old.steps_completed == r_new.steps_completed
+    np.testing.assert_array_equal(r_old.proba, r_new.proba)
+    np.testing.assert_array_equal(r_old.prediction, r_new.prediction)

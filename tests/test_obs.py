@@ -7,7 +7,10 @@ The thread-safety cases here ride the CI ``thread-stress`` loop next to
 ``test_serve_driver.py`` — keep them deterministic under repetition
 (generous deadlines, explicit timeouts)."""
 import json
+import subprocess
+import sys
 import threading
+from pathlib import Path
 
 import numpy as np
 import pytest
@@ -543,6 +546,89 @@ def test_untraced_server_snapshot_has_empty_attribution(runtime, pipeline):
     snap = server.metrics.snapshot()
     assert snap["attribution"]["count"] == 0
     assert snap["delivered"] == 2
+
+
+def _wcet_traced_run():
+    """Three steady + one compile dispatch and three harvests: enough to
+    fold a certifiable one-cell WCET table."""
+    clock = ManualClock()
+    tr = Tracer(clock=clock, margins=True)
+    for i in range(4):
+        with tr.span("serve.dispatch", track="laneA"):
+            annotate(backend="jnp-ref", impl="jnp-ref", length=4,
+                     compile=(i == 0))
+            clock.advance(0.002 + 0.0003 * i)
+        if i:
+            with tr.span("serve.harvest", track="laneA"):
+                clock.advance(0.0005 + 0.0001 * i)
+    return tr
+
+
+def test_wcet_live_table_cross_validates_against_cli_fold(tmp_path):
+    """`worst_case_table` (live events) and `tools.obs.wcet.fold`
+    (exported JSON) are two codepaths over the same run — same cells,
+    same counts; float fields agree to the µs round-trip."""
+    from repro.obs.export import worst_case_table
+    from tools.obs import wcet
+
+    tr = _wcet_traced_run()
+    live = worst_case_table(tr.events(), platform="cpu", margin=2.5)
+    doc = write_chrome_trace(tr, tmp_path / "trace.json")
+    tr.disable()
+    folded = wcet.fold([json.loads(json.dumps(doc))],
+                       platform="cpu", margin=2.5)
+    assert wcet.wcet_failures(live) == []
+    assert wcet.wcet_failures(folded) == []
+    assert live["cells"].keys() == folded["cells"].keys() == {
+        "jnp-ref/jnp-ref/L4"}
+    lc, fc = live["cells"]["jnp-ref/jnp-ref/L4"], \
+        folded["cells"]["jnp-ref/jnp-ref/L4"]
+    assert lc["count"] == fc["count"] == 3  # the compile sample is out
+    for field in ("mean_ms", "p95_ms", "max_ms", "wcet_ms"):
+        assert fc[field] == pytest.approx(lc[field])
+    assert live["harvest"]["count"] == folded["harvest"]["count"] == 3
+    for field in ("mean_ms", "max_ms", "wcet_ms"):
+        assert folded["harvest"][field] == pytest.approx(
+            live["harvest"][field])
+
+
+def test_calibrate_cli_roundtrip_and_check_gate(tmp_path):
+    """`python -m tools.obs calibrate` writes a table `--check` accepts;
+    a corrupted table fails the structural gate."""
+    from tools.obs import wcet
+
+    tr = _wcet_traced_run()
+    trace_path = tmp_path / "trace.json"
+    write_chrome_trace(tr, trace_path)
+    tr.disable()
+    out = tmp_path / "wcet_cpu.json"
+    repo = Path(__file__).resolve().parents[1]
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.obs", "calibrate",
+         "--trace", str(trace_path), "--platform", "cpu",
+         "--margin", "2.0", "--out", str(out)],
+        cwd=repo, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    table = json.loads(out.read_text())
+    assert wcet.wcet_failures(table) == []
+    assert table["sources"] == [str(trace_path)]  # provenance ride-along
+    # the served CostModel accepts the CLI's output directly
+    from repro.serve import CostModel
+
+    cm = CostModel(table)
+    assert cm.segment_wcet_ms("jnp-ref", 4) == pytest.approx(
+        2.0 * table["cells"]["jnp-ref/jnp-ref/L4"]["max_ms"])
+    # corruption is caught: a zero-sample harvest cannot price the lag
+    table["harvest"] = {"count": 0, "mean_ms": 0.0, "max_ms": 0.0,
+                        "wcet_ms": 0.0}
+    failures = wcet.wcet_failures(table)
+    assert failures and any("lag" in f for f in failures)
+    # calibrating with no platform is a usage error, not a crash
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.obs", "calibrate",
+         "--trace", str(trace_path)],
+        cwd=repo, capture_output=True, text=True)
+    assert proc.returncode == 2
 
 
 def test_span_names_registry_is_closed_and_categorized():

@@ -40,6 +40,9 @@ _REGISTER_FNS = {
     # adapters the tuning records select between
     "register_solo_impl",
     "register_slot_impl",
+    # serving admission policies (repro.serve.admission): overload
+    # behavior the server resolves by name at construction
+    "register_admission",
 }
 
 

@@ -2,10 +2,14 @@
 
 Pure stdlib (no jax) — runnable in the same environment as the lint
 job.  ``report`` renders the attribution + calibration tables for a
-trace; ``--check`` exits non-zero unless the trace validates against
+trace; ``calibrate`` folds one or more traces' steady-state segment
+histograms into the persisted per-platform worst-case table
+(``reports/obs/wcet_<platform>.json``) that certified admission prices
+from; ``--check`` exits non-zero unless the trace validates against
 the committed schema AND every attribution's components sum to its
-end-to-end latency within tolerance (the CI bench-smoke job runs this
-against a freshly exported trace and against the committed sample).
+end-to-end latency within tolerance AND every committed WCET table is
+structurally sound (the CI bench-smoke job runs this against a freshly
+exported trace and against the committed sample).
 """
 from __future__ import annotations
 
@@ -15,6 +19,58 @@ import sys
 from pathlib import Path
 
 from tools.obs import report as report_mod
+from tools.obs import wcet as wcet_mod
+
+
+def _check_wcet_tables(root: Path) -> tuple[int, list[str]]:
+    """Validate every committed ``wcet_*.json`` under ``root``.
+    Returns (tables seen, failures)."""
+    failures: list[str] = []
+    paths = sorted(root.glob("wcet_*.json")) if root.is_dir() else []
+    for path in paths:
+        try:
+            with open(path) as fh:
+                table = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(f"{path}: unreadable ({e})")
+            continue
+        failures.extend(f"{path}: {f}" for f in wcet_mod.wcet_failures(table))
+    return len(paths), failures
+
+
+def _calibrate(args) -> int:
+    traces = args.trace or [str(report_mod.SAMPLE_PATH)]
+    docs = []
+    for trace in traces:
+        path = Path(trace)
+        if not path.exists():
+            print(f"no trace at {path}", file=sys.stderr)
+            return 2
+        docs.append(report_mod.load_trace(path))
+    table = wcet_mod.fold(docs, platform=args.platform, margin=args.margin)
+    failures = wcet_mod.wcet_failures(table)
+    if failures:
+        print(f"tools.obs calibrate: folded table is not certifiable "
+              f"({len(failures)} failure(s)):")
+        for f in failures:
+            print(f"  FAIL {f}")
+        print("  hint: the traces must contain steady-state "
+              "serve.dispatch AND serve.harvest spans (run the traced "
+              "workload for a second pass after jit warmup)")
+        return 1
+    # provenance ride-along: which traces fed the fold.  Added AFTER
+    # validation so fold outputs stay byte-identical between the tools
+    # and repro sides.
+    table["sources"] = [str(t) for t in traces]
+    out = Path(args.out) if args.out else wcet_mod.wcet_path(args.platform)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(table, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"tools.obs calibrate: wrote {out} "
+          f"({len(table['cells'])} cells, harvest n="
+          f"{table['harvest']['count']}, margin {table['margin']})")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -22,16 +78,21 @@ def main(argv=None) -> int:
         prog="python -m tools.obs",
         description="Serving-trace analysis: deadline-budget attribution "
         "report, per-(backend, impl, pow2-length) segment-latency "
-        "calibration table, schema + accounting CI gate.",
+        "calibration table, WCET-table calibration for certified "
+        "admission, schema + accounting CI gate.",
     )
     parser.add_argument(
-        "command", nargs="?", choices=["report"], default="report",
-        help="what to do (default: report)",
+        "command", nargs="?", choices=["report", "calibrate"],
+        default="report",
+        help="what to do (default: report).  'calibrate' folds the "
+        "given --trace file(s) into a per-platform worst-case table "
+        "for repro.serve.CostModel",
     )
     parser.add_argument(
-        "--trace", default=str(report_mod.SAMPLE_PATH),
-        help="trace JSON to analyze "
-        "(default: the committed sample, reports/obs/serve_trace_sample.json)",
+        "--trace", action="append", default=None,
+        help="trace JSON to analyze; repeatable for 'calibrate' "
+        "(default: the committed sample, "
+        "reports/obs/serve_trace_sample.json)",
     )
     parser.add_argument(
         "--schema", default=str(report_mod.SCHEMA_PATH),
@@ -39,9 +100,26 @@ def main(argv=None) -> int:
         "(default: reports/obs/serve_trace_schema.json)",
     )
     parser.add_argument(
+        "--platform", default=None,
+        help="calibrate: platform tag the table is keyed by "
+        "(cpu/gpu/tpu — what jax.default_backend() reports at serve "
+        "time)",
+    )
+    parser.add_argument(
+        "--margin", type=float, default=2.0,
+        help="calibrate: worst-case headroom factor, wcet_ms = margin "
+        "* observed steady max (default: 2.0)",
+    )
+    parser.add_argument(
+        "--out", default=None,
+        help="calibrate: output path "
+        "(default: reports/obs/wcet_<platform>.json)",
+    )
+    parser.add_argument(
         "--check", action="store_true",
-        help="gate: fail unless the trace validates against the schema "
-        "and attribution components sum to end-to-end latency",
+        help="gate: fail unless the trace validates against the schema, "
+        "attribution components sum to end-to-end latency, and every "
+        "committed reports/obs/wcet_*.json table is structurally sound",
     )
     parser.add_argument(
         "--json", action="store_true",
@@ -49,7 +127,14 @@ def main(argv=None) -> int:
     )
     args = parser.parse_args(argv)
 
-    trace_path = Path(args.trace)
+    if args.command == "calibrate":
+        if not args.platform:
+            print("calibrate requires --platform", file=sys.stderr)
+            return 2
+        return _calibrate(args)
+
+    traces = args.trace or [str(report_mod.SAMPLE_PATH)]
+    trace_path = Path(traces[0])
     if not trace_path.exists():
         print(f"no trace at {trace_path}", file=sys.stderr)
         return 2
@@ -58,6 +143,8 @@ def main(argv=None) -> int:
     if args.check:
         schema = report_mod.load_schema(Path(args.schema))
         failures = report_mod.check(doc, schema)
+        n_tables, wcet_fails = _check_wcet_tables(report_mod.REPORTS_DIR)
+        failures = failures + wcet_fails
         if failures:
             print(f"tools.obs --check: {len(failures)} failure(s) "
                   f"in {trace_path}:")
@@ -66,7 +153,8 @@ def main(argv=None) -> int:
             return 1
         n = len(doc.get("otherData", {}).get("attributions", []))
         print(f"tools.obs --check: OK ({trace_path}: schema valid, "
-              f"{n} attribution records sum within tolerance)")
+              f"{n} attribution records sum within tolerance, "
+              f"{n_tables} WCET table(s) structurally sound)")
         return 0
 
     if args.json:

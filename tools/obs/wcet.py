@@ -1,0 +1,176 @@
+"""Worst-case execution-time table: fold, validate, locate.
+
+The certification half of ROADMAP item 3 lives on two sides of the
+export boundary.  :func:`repro.obs.export.worst_case_table` folds a
+LIVE tracer's spans; this module folds EXPORTED Chrome trace JSON
+(``traceEvents`` with ``ts``/``dur`` in microseconds) — pure stdlib,
+runnable in the jax-free lint environment — into the *identical*
+structure, so tests can cross-validate the two implementations cell by
+cell.  ``python -m tools.obs calibrate`` drives :func:`fold` over one
+or more trace files and persists the result at :func:`wcet_path`;
+``python -m tools.obs --check`` gates every committed table through
+:func:`wcet_failures`.
+
+Table structure (schema_version 1)::
+
+    {
+      "schema_version": 1,
+      "platform": "cpu",
+      "margin": 2.0,
+      "cells": {
+        "<backend>/<impl>/L<len>": {count, mean_ms, p95_ms, max_ms,
+                                    wcet_ms},   # steady samples only
+        ...
+      },
+      "harvest": {count, mean_ms, max_ms, wcet_ms},
+    }
+
+``wcet_ms = margin * max_ms`` over steady-state samples — jit-compile
+dispatches are excluded (they are warmup, not recurring cost), and a
+cell with only compiles is dropped entirely.
+"""
+from __future__ import annotations
+
+import math
+import re
+from pathlib import Path
+
+REPORTS_DIR = Path("reports/obs")
+
+#: every dispatch cell keys as ``<backend>/<impl>/L<pow2-length>``
+CELL_KEY_RE = re.compile(r"^[^/]+/[^/]+/L\d+$")
+
+SCHEMA_VERSION = 1
+
+
+def wcet_path(platform: str, root: Path | str = REPORTS_DIR) -> Path:
+    """Canonical committed location of one platform's table."""
+    return Path(root) / f"wcet_{platform}.json"
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank percentile — same rule as tools.obs.report."""
+    idx = min(len(sorted_vals) - 1, max(0, round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def fold(docs, *, platform: str, margin: float = 2.0) -> dict:
+    """Pool steady dispatch + harvest durations across exported trace
+    docs into one WCET table.
+
+    ``docs`` is an iterable of parsed trace JSON objects (each with a
+    ``traceEvents`` list).  Durations pool across docs BEFORE the
+    statistics, so folding two traces is the same as tracing one run
+    twice as long.  Output structure is byte-identical to
+    :func:`repro.obs.export.worst_case_table` on the same spans.
+    """
+    if margin < 1.0:
+        raise ValueError(
+            f"wcet margin must be >= 1 (a headroom factor), got {margin}")
+    dispatch: dict[str, list[float]] = {}
+    harvests: list[float] = []
+    for doc in docs:
+        for ev in doc.get("traceEvents", []):
+            if ev.get("ph") != "X":
+                continue
+            name = ev.get("name")
+            dur_ms = float(ev.get("dur", 0.0)) / 1e3  # µs -> ms
+            if name == "serve.dispatch":
+                args = ev.get("args", {})
+                if args.get("compile"):
+                    continue  # warmup, not recurring worst case
+                backend = args.get("backend", "?")
+                impl = args.get("impl", backend)
+                key = f"{backend}/{impl}/L{args.get('length', 0)}"
+                dispatch.setdefault(key, []).append(dur_ms)
+            elif name == "serve.harvest":
+                harvests.append(dur_ms)
+    cells: dict[str, dict] = {}
+    for key in sorted(dispatch):
+        steady = sorted(dispatch[key])
+        cells[key] = {
+            "count": len(steady),
+            "mean_ms": sum(steady) / len(steady),
+            "p95_ms": _percentile(steady, 0.95),
+            "max_ms": steady[-1],
+            "wcet_ms": margin * steady[-1],
+        }
+    harvests.sort()
+    harvest = {
+        "count": len(harvests),
+        "mean_ms": sum(harvests) / len(harvests) if harvests else 0.0,
+        "max_ms": harvests[-1] if harvests else 0.0,
+        "wcet_ms": margin * harvests[-1] if harvests else 0.0,
+    }
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "platform": platform,
+        "margin": margin,
+        "cells": cells,
+        "harvest": harvest,
+    }
+
+
+def _finite_positive(row: dict, field: str) -> bool:
+    v = row.get(field)
+    return isinstance(v, (int, float)) and math.isfinite(v) and v > 0
+
+
+def wcet_failures(table: dict) -> list[str]:
+    """Every structural gate a committed WCET table must pass, as
+    human-readable failure strings (empty list = valid).  Unknown extra
+    keys are tolerated — the contract is a floor, not a ceiling."""
+    failures: list[str] = []
+    if table.get("schema_version") != SCHEMA_VERSION:
+        failures.append(
+            f"schema_version must be {SCHEMA_VERSION}, "
+            f"got {table.get('schema_version')!r}")
+    platform = table.get("platform")
+    if not isinstance(platform, str) or not platform:
+        failures.append(f"platform must be a non-empty string, "
+                        f"got {platform!r}")
+    margin = table.get("margin")
+    if not isinstance(margin, (int, float)) or margin < 1.0:
+        failures.append(f"margin must be a number >= 1, got {margin!r}")
+    cells = table.get("cells")
+    if not isinstance(cells, dict) or not cells:
+        failures.append("cells must be a non-empty object")
+        cells = {}
+    for key, row in cells.items():
+        if not CELL_KEY_RE.match(key):
+            failures.append(
+                f"cell key {key!r} does not match <backend>/<impl>/L<len>")
+        if not isinstance(row, dict):
+            failures.append(f"cell {key}: must be an object")
+            continue
+        count = row.get("count")
+        if not isinstance(count, int) or count < 1:
+            failures.append(f"cell {key}: count must be an int >= 1, "
+                            f"got {count!r}")
+        for field in ("mean_ms", "p95_ms", "max_ms", "wcet_ms"):
+            if not _finite_positive(row, field):
+                failures.append(
+                    f"cell {key}: {field} must be a finite positive "
+                    f"number, got {row.get(field)!r}")
+        if (_finite_positive(row, "max_ms")
+                and _finite_positive(row, "wcet_ms")
+                and row["wcet_ms"] < row["max_ms"]):
+            failures.append(
+                f"cell {key}: wcet_ms {row['wcet_ms']} below observed "
+                f"max_ms {row['max_ms']}")
+    harvest = table.get("harvest")
+    if not isinstance(harvest, dict):
+        failures.append("harvest must be an object")
+    else:
+        count = harvest.get("count")
+        if not isinstance(count, int) or count < 1:
+            failures.append(
+                f"harvest: count must be an int >= 1, got {count!r} "
+                "(a table without harvest samples cannot price the "
+                "per-iteration lag)")
+        for field in ("mean_ms", "max_ms", "wcet_ms"):
+            if not _finite_positive(harvest, field):
+                failures.append(
+                    f"harvest: {field} must be a finite positive number, "
+                    f"got {harvest.get(field)!r}")
+    return failures
